@@ -1,0 +1,79 @@
+//! Recommendation-style serving scenario (the paper's intro motivates
+//! extreme classification with recommender systems and ranking).
+//!
+//! Trains the proposed method on the Amazon-670K stand-in, then serves a
+//! stream of "user" queries: each query scores all C labels (chunked
+//! through the MXU eval kernel, bias-corrected per Eq. 5) and returns the
+//! top-1 "product". Reports serving latency percentiles and accuracy —
+//! the numbers a deployment would care about.
+//!
+//! Run with: AMAZON_SECONDS=60 cargo run --release --example amazon_recsys
+
+use adv_softmax::eval::Evaluator;
+use adv_softmax::prelude::*;
+use anyhow::Result;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let seconds: f64 = std::env::var("AMAZON_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(45.0);
+
+    let syn = SyntheticConfig::preset(DatasetPreset::AmazonSim);
+    let splits = Splits::synthetic(&syn);
+    println!(
+        "amazon-sim: N={} C={} K={}",
+        splits.train.len(),
+        splits.train.num_classes,
+        splits.train.feat_dim
+    );
+    let registry = Registry::open_default()?;
+
+    // --- train ---
+    let mut cfg = RunConfig::new(DatasetPreset::AmazonSim, Method::Adversarial);
+    cfg.max_seconds = seconds;
+    cfg.max_steps = 100_000;
+    cfg.eval_points = 1024;
+    println!("training adversarial method for {seconds}s ...");
+    let mut run = TrainRun::prepare(&registry, &splits, &cfg)?;
+    let curve = run.train()?;
+    let last = curve.last().expect("at least one checkpoint");
+    println!(
+        "trained {} steps in {:.1}s (incl. {:.1}s aux fit): acc {:.3}, loglik {:.3}",
+        last.step, last.wall_s, curve.aux_fit_seconds, last.accuracy, last.log_likelihood
+    );
+
+    // --- serve: batched top-1 queries over the full catalog ---
+    let evaluator = Evaluator::new(&registry)?;
+    let batch = evaluator.eval_b;
+    let mut rng = Rng::new(99);
+    let n_batches = 16;
+    let mut latencies = Vec::with_capacity(n_batches);
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for _ in 0..n_batches {
+        let queries = splits.test.subsample(batch, &mut rng);
+        let t0 = Instant::now();
+        let r = evaluator.evaluate(&run.params, &queries, run.aux.as_deref())?;
+        latencies.push(t0.elapsed().as_secs_f64());
+        hits += (r.accuracy * r.n as f64).round() as usize;
+        total += r.n;
+    }
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    println!("\n=== serving report ===");
+    println!("catalog size          : {} labels", splits.train.num_classes);
+    println!("query batch           : {batch}");
+    println!(
+        "batch latency p50/p90 : {:.1}ms / {:.1}ms",
+        1e3 * p(0.5),
+        1e3 * p(0.9)
+    );
+    println!(
+        "throughput            : {:.0} queries/s",
+        batch as f64 / p(0.5)
+    );
+    println!("top-1 hit rate        : {:.3}", hits as f64 / total as f64);
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Theorem 2 demo: the gradient signal-to-noise ratio η̄ is maximal when
+//! negative samples come from the data distribution itself.
+//!
+//! Reproduces the theory section's claim empirically: for a family of
+//! noise distributions p_λ(y|x) ∝ p_D(y|x)^λ interpolating from uniform
+//! (λ=0) to adversarial (λ=1), both the closed-form η̄ (Eq. 15) and a
+//! Monte-Carlo estimate from actual stochastic gradients increase
+//! monotonically in λ and peak at p_n = p_D.
+//!
+//! Run with: cargo run --release --example snr_demo
+
+use adv_softmax::exp::snr::{run, SnrOpts};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let opts = SnrOpts::default();
+    let points = run(&opts)?;
+
+    let best = points
+        .iter()
+        .max_by(|a, b| a.analytic.total_cmp(&b.analytic))
+        .unwrap();
+    println!("\nmaximum eta-bar at: {}", best.name);
+    assert!(
+        best.name.contains("adversarial"),
+        "Theorem 2 violated?! best was {}",
+        best.name
+    );
+
+    // relative gain over uniform — the quantitative version of "drastically
+    // enhanced gradient signal" from the abstract
+    let uniform = &points[0];
+    println!(
+        "SNR gain over uniform negative sampling: {:.1}x (analytic), {:.1}x (monte-carlo)",
+        best.analytic / uniform.analytic,
+        best.monte_carlo / uniform.monte_carlo
+    );
+    Ok(())
+}

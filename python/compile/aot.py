@@ -1,0 +1,179 @@
+"""AOT lowering: jit entry points -> HLO text artifacts + manifest.json.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each entry point is lowered once per shape listed in the spec; the rust
+runtime (`rust/src/runtime/`) loads `manifest.json`, compiles every module
+on the PJRT CPU client at startup, and exposes typed wrappers keyed by
+artifact name.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--train-b 256]
+        [--feat-k 64] [--aux-k 16] [--eval-c 2048] [--softmax-c 4096]
+
+The shape defaults are the ones every experiment preset in the rust config
+system uses; changing them requires re-running `make artifacts` (the
+Makefile tracks the python sources as prerequisites).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_spec(train_b: int, feat_k: int, aux_k: int, eval_b: int,
+               eval_c: int, softmax_c: int, eval_ca: int):
+    """The artifact table: name -> (fn, example_args).
+
+    Shapes must respect the kernels' tiling contracts (batch a multiple of
+    128 per neg_sampling.DEFAULT_BLOCK_B, chunk a multiple of 128).
+    """
+    for nm, v in [("train-b", train_b), ("eval-b", eval_b),
+                  ("eval-c", eval_c), ("softmax-c", softmax_c),
+                  ("eval-ca", eval_ca)]:
+        if v % 128 != 0:
+            raise ValueError(f"--{nm}={v} must be a multiple of 128")
+    if softmax_c * feat_k * 4 > 12 * 2**20:
+        raise ValueError("softmax artifact would exceed the 12 MiB W budget")
+
+    gathered = [
+        _spec((train_b, feat_k)),  # x
+        _spec((train_b, feat_k)),  # wp
+        _spec((train_b,)),         # bp
+        _spec((train_b, feat_k)),  # wn
+        _spec((train_b,)),         # bn
+        _spec((train_b,)),         # lpn_p / zeros
+        _spec((train_b,)),         # lpn_n / scale
+        _spec((1,)),               # lam
+    ]
+    pairwise = gathered[:5] + [gathered[6], gathered[7]]  # x..bn, scale, lam
+
+    table = {
+        f"ns_grad_B{train_b}_K{feat_k}": (model.ns_step, gathered),
+        f"nce_grad_B{train_b}_K{feat_k}": (model.nce_step, gathered),
+        f"ove_grad_B{train_b}_K{feat_k}": (model.ove_step, pairwise),
+        f"softmax_grad_B{train_b}_K{feat_k}_C{softmax_c}": (
+            model.softmax_step,
+            [
+                _spec((train_b, feat_k)),
+                _spec((softmax_c, feat_k)),
+                _spec((softmax_c,)),
+                _spec((train_b,), I32),
+                _spec((1,)),
+            ],
+        ),
+        f"eval_chunk_B{eval_b}_K{feat_k}_C{eval_c}": (
+            model.eval_chunk,
+            [
+                _spec((eval_b, feat_k)),
+                _spec((eval_c, feat_k)),
+                _spec((eval_c,)),
+                _spec((eval_b, eval_c)),
+                _spec((eval_b,), I32),
+            ],
+        ),
+        f"eval_chunk_plain_B{eval_b}_K{feat_k}_C{eval_c}": (
+            model.eval_chunk_plain,
+            [
+                _spec((eval_b, feat_k)),
+                _spec((eval_c, feat_k)),
+                _spec((eval_c,)),
+                _spec((eval_b,), I32),
+            ],
+        ),
+        # aux-tree node projection at eval time: X_proj[B,k] @ Wnodes[Ca,k]^T
+        f"scores_B{eval_b}_K{aux_k}_C{eval_ca}": (
+            model.scores_chunk,
+            [
+                _spec((eval_b, aux_k)),
+                _spec((eval_ca, aux_k)),
+                _spec((eval_ca,)),
+            ],
+        ),
+    }
+    return table
+
+
+def lower_all(table, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": {}}
+    for name, (fn, args) in sorted(table.items()):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *args)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": o.dtype.name} for o in outs
+            ],
+        }
+        print(f"  {name}: {len(text)} chars, {len(args)} in / {len(outs)} out")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--train-b", type=int, default=256)
+    p.add_argument("--eval-b", type=int, default=256)
+    p.add_argument("--feat-k", type=int, default=64)
+    p.add_argument("--aux-k", type=int, default=16)
+    p.add_argument("--eval-c", type=int, default=2048)
+    p.add_argument("--eval-ca", type=int, default=2048,
+                   help="aux-tree node-projection chunk size")
+    p.add_argument("--softmax-c", type=int, default=4096)
+    args = p.parse_args()
+
+    table = build_spec(args.train_b, args.feat_k, args.aux_k, args.eval_b,
+                       args.eval_c, args.softmax_c, args.eval_ca)
+    print(f"lowering {len(table)} artifacts -> {args.out_dir}")
+    manifest = lower_all(table, args.out_dir)
+    manifest["shapes"] = {
+        "train_b": args.train_b, "eval_b": args.eval_b, "feat_k": args.feat_k,
+        "aux_k": args.aux_k, "eval_c": args.eval_c, "eval_ca": args.eval_ca,
+        "softmax_c": args.softmax_c,
+    }
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+
+def pick_block(n: int, preferred: int) -> int:
+    """Largest tile size that divides `n`, trying `preferred`, then 128,
+    then whole-`n` (single block). Keeps kernels usable for any batch that
+    is a multiple of 128 — and for smaller/odd sizes via one big block —
+    while the AOT artifacts use the preferred (perf-tuned) tiling."""
+    for cand in (preferred, 128):
+        if n >= cand and n % cand == 0:
+            return cand
+    return n

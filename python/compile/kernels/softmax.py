@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: full-softmax loss core (Eq. 1), small label sets only.
+
+Used by the `softmax` baseline for the Appendix A.2 comparison (EURLex-like
+scale, C ~ 4k), where an O(NCK) epoch is tractable. The kernel fuses the
+batch-tile score matmul with the stable log-sum-exp and the softmax
+residual ds = softmax(s) - onehot(y) (+ the regularizer term on xi_y); the
+dense parameter gradients gw = ds^T X and gb = sum(ds) are left to the L2
+graph where XLA fuses them into a single matmul.
+
+TPU mapping: grid tiles the batch; each step does a (BB, K)x(K, C) MXU
+matmul with the full W resident in VMEM (C=4096, K=512 fp32 -> 8 MiB; the
+aot manifest caps softmax artifacts at C*K*4B <= 12 MiB) followed by VPU
+row reductions. The label id enters as an int32 vector; one-hot is formed
+in-kernel via iota comparison so the host never materializes a [B, C]
+one-hot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _softmax_kernel(x_ref, w_ref, b_ref, y_ref, lam_ref, loss_ref, ds_ref):
+    x = x_ref[...]          # [BB, K]
+    w = w_ref[...]          # [C, K]
+    bias = b_ref[...]       # [C]
+    y = y_ref[...]          # [BB] int32
+    lam = lam_ref[0]
+
+    s = jnp.dot(x, w.T, preferred_element_type=jnp.float32) + bias[None, :]  # [BB, C]
+    smax = jnp.max(s, axis=1)
+    z = jnp.exp(s - smax[:, None])
+    sumz = jnp.sum(z, axis=1)
+    lse = jnp.log(sumz) + smax
+
+    c = s.shape[1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (y.shape[0], c), 1)
+              == y[:, None]).astype(s.dtype)  # [BB, C]
+    xi_y = jnp.sum(s * onehot, axis=1)
+
+    loss_ref[...] = -xi_y + lse + lam * xi_y * xi_y
+    p = z / sumz[:, None]
+    ds_ref[...] = p - onehot + 2.0 * lam * xi_y[:, None] * onehot
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def softmax_core(x, w, b, y, lam, *, block_b: int = DEFAULT_BLOCK_B):
+    """Fused softmax loss + score-space residual.
+
+    Args:
+      x:   [B, K] feature batch.
+      w:   [C, K] full label weight matrix.
+      b:   [C] label biases.
+      y:   [B] int32 true-label ids.
+      lam: [1] regularizer strength on the true-label score.
+
+    Returns:
+      (loss[B], ds[B, C]) where ds = d loss_i / d s_ic. The caller forms
+      gw = ds^T @ x and gb = sum_i ds_i.
+    """
+    bsz, k = x.shape
+    c = w.shape[0]
+    from . import pick_block
+    bb = pick_block(bsz, block_b)
+    grid = (bsz // bb,)
+
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((c, k), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, b, y, lam)

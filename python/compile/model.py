@@ -1,0 +1,116 @@
+"""L2: the paper's compute graphs, composing the L1 Pallas kernels.
+
+Every public function here is a jit-able entry point that `aot.py` lowers
+to one HLO-text artifact per shape. The rust coordinator (L3) owns the
+parameters, the data, the auxiliary tree model and the training loop; these
+graphs are pure functions of their operands (no state, no host callbacks),
+so a step is exactly one PJRT execute.
+
+Entry points
+------------
+  ns_step / nce_step / ove_step   sampling-based training-step gradients
+                                  (grad_core kernel; gathered-row layout)
+  softmax_step                    full-softmax loss + dense gradients
+  scores_chunk                    raw dense score block (also reused for the
+                                  aux-tree node projection at eval time)
+  eval_chunk / eval_chunk_plain   fused chunked evaluation reduction:
+                                  streaming-LSE partials + chunk top-1 +
+                                  true-label score, with (without) the
+                                  Eq. 5 bias correction matrix
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.neg_sampling import grad_core
+from .kernels.scores import scores_block
+from .kernels.softmax import softmax_core
+
+NEG_INF = -3.0e38  # sentinel for "true label not in this chunk"
+
+
+# ---------------------------------------------------------------------------
+# training steps (gathered-row layout; L3 scatters the returned row grads)
+# ---------------------------------------------------------------------------
+
+def ns_step(x, wp, bp, wn, bn, lpn_p, lpn_n, lam):
+    """Adversarial / uniform / frequency negative sampling (Eq. 6; Eq. 2 at lam=0)."""
+    return grad_core(x, wp, bp, wn, bn, lpn_p, lpn_n, lam, mode="ns")
+
+
+def nce_step(x, wp, bp, wn, bn, lpn_p, lpn_n, lam):
+    """NCE with non-uniform base distribution."""
+    return grad_core(x, wp, bp, wn, bn, lpn_p, lpn_n, lam, mode="nce")
+
+
+def ove_step(x, wp, bp, wn, bn, scale, lam):
+    """One-vs-each / sampled softmax-bound pairwise step.
+
+    `scale` [B] is the per-example importance weight ((C-1)/S for A&R, 1
+    for OVE); it rides in the lpn_n operand slot of the fused kernel.
+    """
+    zeros = jnp.zeros_like(bp)
+    return grad_core(x, wp, bp, wn, bn, zeros, scale, lam, mode="ove")
+
+
+def softmax_step(x, w, b, y, lam):
+    """Full softmax (Eq. 1): per-example loss + dense parameter gradients.
+
+    Returns (loss[B], gw[C,K], gb[C]). The score-space residual comes from
+    the fused Pallas kernel; the two dense contractions below are left to
+    XLA, which fuses them with the kernel's output layout.
+    """
+    loss, ds = softmax_core(x, w, b, y, lam)
+    gw = jnp.dot(ds.T, x, preferred_element_type=jnp.float32)  # [C, K]
+    gb = jnp.sum(ds, axis=0)                                   # [C]
+    return loss, gw, gb
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def scores_chunk(x, wc, bc):
+    """Raw dense scores for one label chunk: [B, Cc]."""
+    return scores_block(x, wc, bc)
+
+
+def _eval_reduce(s, y_rel):
+    """Chunk-local reduction for streaming evaluation.
+
+    s:      [B, Cc] (possibly bias-corrected) scores.
+    y_rel:  [B] int32, index of the true label inside this chunk, or -1.
+
+    Returns (chunk_max[B], chunk_argmax[B] i32, chunk_sumexp[B],
+    true_score[B]). `chunk_sumexp` is sum(exp(s - chunk_max)); the rust
+    side merges chunks with the standard streaming log-sum-exp update, so
+    no global pass over C is ever materialized.
+    """
+    chunk_max = jnp.max(s, axis=1)
+    chunk_argmax = jnp.argmax(s, axis=1).astype(jnp.int32)
+    chunk_sumexp = jnp.sum(jnp.exp(s - chunk_max[:, None]), axis=1)
+    in_chunk = y_rel >= 0
+    safe_rel = jnp.maximum(y_rel, 0)
+    true_score = jnp.where(
+        in_chunk, jnp.take_along_axis(s, safe_rel[:, None], axis=1)[:, 0], NEG_INF
+    )
+    return chunk_max, chunk_argmax, chunk_sumexp, true_score
+
+
+def eval_chunk(x, wc, bc, lpn, y_rel):
+    """Bias-corrected evaluation chunk (paper Eq. 5).
+
+    lpn: [B, Cc] log p_n(y|x) correction matrix for this chunk, computed by
+    the rust tree sweep. Scores used for both ranking and likelihood are
+    xi + log p_n.
+    """
+    s = scores_block(x, wc, bc) + lpn
+    return _eval_reduce(s, y_rel)
+
+
+def eval_chunk_plain(x, wc, bc, y_rel):
+    """Uncorrected evaluation chunk (all baselines predict with raw xi)."""
+    s = scores_block(x, wc, bc)
+    return _eval_reduce(s, y_rel)

@@ -1,0 +1,154 @@
+"""L2 graph checks: analytic kernel gradients vs jax.grad autodiff, and the
+eval-chunk reduction vs a brute-force oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+B, K, C = 256, 64, 512
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(42)
+    r = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)  # noqa: E731
+    return dict(
+        x=r(B, K), wp=r(B, K), bp=r(B), wn=r(B, K), bn=r(B),
+        lpn_p=r(B) - 3.0, lpn_n=r(B) - 3.0,
+        wc=r(C, K), bc=r(C),
+        y=jnp.asarray(rng.integers(0, C, size=B), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic gradients == autodiff of the ref loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lam", [0.0, 0.01])
+@pytest.mark.parametrize(
+    "step,reflossfn",
+    [(model.ns_step, ref.ns_loss), (model.nce_step, ref.nce_loss)],
+)
+def test_step_grads_match_autodiff(batch, step, reflossfn, lam):
+    d = batch
+    lam_arr = jnp.array([lam], jnp.float32)
+    loss, gwp, gbp, gwn, gbn = step(
+        d["x"], d["wp"], d["bp"], d["wn"], d["bn"], d["lpn_p"], d["lpn_n"], lam_arr
+    )
+
+    def total(wp, bp, wn, bn):
+        return jnp.sum(reflossfn(d["x"], wp, bp, wn, bn,
+                                 d["lpn_p"], d["lpn_n"], lam))
+
+    agwp, agbp, agwn, agbn = jax.grad(total, argnums=(0, 1, 2, 3))(
+        d["wp"], d["bp"], d["wn"], d["bn"]
+    )
+    for got, exp in [(gwp, agwp), (gbp, agbp), (gwn, agwn), (gbn, agbn)]:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("scale", [1.0, 100.0])
+def test_ove_step_grads_match_autodiff(batch, scale):
+    d = batch
+    scale_v = jnp.full((B,), scale, jnp.float32)
+    lam_arr = jnp.array([0.001], jnp.float32)
+    loss, gwp, gbp, gwn, gbn = model.ove_step(
+        d["x"], d["wp"], d["bp"], d["wn"], d["bn"], scale_v, lam_arr
+    )
+
+    def total(wp, bp, wn, bn):
+        return jnp.sum(ref.ove_loss(d["x"], wp, bp, wn, bn, scale_v, 0.001))
+
+    grads = jax.grad(total, argnums=(0, 1, 2, 3))(
+        d["wp"], d["bp"], d["wn"], d["bn"]
+    )
+    for got, exp in zip((gwp, gbp, gwn, gbn), grads):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_softmax_step_grads_match_autodiff(batch):
+    d = batch
+    lam = 0.01
+    onehot = jnp.eye(C, dtype=jnp.float32)[d["y"]]
+    loss, gw, gb = model.softmax_step(d["x"], d["wc"], d["bc"], d["y"],
+                                      jnp.array([lam], jnp.float32))
+
+    def total(w, b):
+        return jnp.sum(ref.softmax_loss(d["x"], w, b, onehot, lam))
+
+    agw, agb = jax.grad(total, argnums=(0, 1))(d["wc"], d["bc"])
+    np.testing.assert_allclose(np.asarray(loss),
+                               np.asarray(ref.softmax_loss(d["x"], d["wc"], d["bc"], onehot, lam)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(agw), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(agb), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# eval chunk reductions vs brute force
+# ---------------------------------------------------------------------------
+
+def _brute(s, y_rel):
+    m = s.max(axis=1)
+    am = s.argmax(axis=1)
+    se = np.exp(s - m[:, None]).sum(axis=1)
+    ts = np.where(y_rel >= 0, s[np.arange(s.shape[0]), np.maximum(y_rel, 0)],
+                  model.NEG_INF)
+    return m, am, se, ts
+
+
+def test_eval_chunk_plain_matches_brute(batch):
+    d = batch
+    rng = np.random.default_rng(7)
+    y_rel = jnp.asarray(
+        np.where(rng.random(B) < 0.5, rng.integers(0, C, size=B), -1), jnp.int32
+    )
+    got = model.eval_chunk_plain(d["x"], d["wc"], d["bc"], y_rel)
+    s = np.asarray(ref.scores_matrix(d["x"], d["wc"], d["bc"]))
+    exp = _brute(s, np.asarray(y_rel))
+    for g, e, tol in zip(got, exp, (1e-4, 0, 1e-3, 1e-4)):
+        if tol == 0:
+            assert (np.asarray(g) == e).all()
+        else:
+            np.testing.assert_allclose(np.asarray(g), e, rtol=tol, atol=tol)
+
+
+def test_eval_chunk_bias_correction_applied(batch):
+    """Corrected chunk == plain chunk run on (s + lpn)."""
+    d = batch
+    rng = np.random.default_rng(8)
+    lpn = jnp.asarray(rng.normal(size=(B, C)).astype(np.float32) - 5.0)
+    y_rel = jnp.asarray(rng.integers(-1, C, size=B), jnp.int32)
+    got = model.eval_chunk(d["x"], d["wc"], d["bc"], lpn, y_rel)
+    s = np.asarray(ref.scores_matrix(d["x"], d["wc"], d["bc"])) + np.asarray(lpn)
+    exp = _brute(s, np.asarray(y_rel))
+    for g, e, tol in zip(got, exp, (1e-4, 0, 1e-3, 1e-4)):
+        if tol == 0:
+            assert (np.asarray(g) == e).all()
+        else:
+            np.testing.assert_allclose(np.asarray(g), e, rtol=tol, atol=tol)
+
+
+def test_streaming_lse_merge_equals_global():
+    """The rust-side merge rule reproduces a global log-sum-exp: merging the
+    per-chunk (max, sumexp) pairs over chunks == lse over the whole row."""
+    rng = np.random.default_rng(9)
+    s = rng.normal(size=(8, 6 * C)).astype(np.float32)
+    m_run = np.full(8, -np.inf)
+    se_run = np.zeros(8)
+    for j in range(6):
+        blk = s[:, j * C:(j + 1) * C]
+        m = blk.max(axis=1)
+        se = np.exp(blk - m[:, None]).sum(axis=1)
+        m_new = np.maximum(m_run, m)
+        se_run = se_run * np.exp(m_run - m_new) + se * np.exp(m - m_new)
+        m_run = m_new
+    lse = m_run + np.log(se_run)
+    exp = m_run + np.log(np.exp(s - m_run[:, None]).sum(axis=1))
+    np.testing.assert_allclose(lse, exp, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,87 @@
+//! Component micro-benchmarks for the L3 hot path (perf pass, DESIGN.md §7).
+//!
+//! Measures each stage of a training step in isolation: batch assembly
+//! (tree descents), parameter gather, literal creation, PJRT execute,
+//! gradient scatter (Adagrad). The sum should roughly match the end-to-end
+//! step time measured in figure1_convergence; discrepancies localize
+//! overheads.
+
+use adv_softmax::config::{DatasetPreset, Method, RunConfig, SyntheticConfig, TreeConfig};
+use adv_softmax::data::Splits;
+use adv_softmax::model::ParamStore;
+use adv_softmax::runtime::{lit_f32, Registry};
+use adv_softmax::sampler::{AdversarialSampler, NoiseSampler};
+use adv_softmax::train::{BatchGen, BatchMode, SamplerKind, TrainRun};
+use adv_softmax::utils::bench::{black_box, Bench};
+use adv_softmax::utils::Rng;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::default();
+    let syn = SyntheticConfig::preset(DatasetPreset::Tiny);
+    let splits = Splits::synthetic(&syn);
+    let data = Arc::new(splits.train.clone());
+    let (b, k, c) = (256usize, data.feat_dim, data.num_classes);
+    let mut rng = Rng::new(1);
+
+    // --- linalg ---
+    let va: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+    let vb: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+    bench.run("linalg/dot_64", || {
+        black_box(adv_softmax::linalg::dot(black_box(&va), black_box(&vb)));
+    });
+
+    // --- tree sampling / log-prob ---
+    let tcfg = TreeConfig { aux_dim: 16, ..Default::default() };
+    let (adv, _) = AdversarialSampler::fit(&data, &tcfg, 1);
+    let x0 = data.x(0).to_vec();
+    let mut srng = Rng::new(2);
+    bench.run("sampler/adversarial_sample(C=256)", || {
+        black_box(adv.sample(black_box(&x0), &mut srng));
+    });
+    bench.run("sampler/adversarial_log_prob", || {
+        black_box(adv.log_prob(black_box(&x0), 17));
+    });
+    let mut lps = vec![0f32; c];
+    bench.run("sampler/log_prob_all(C=256)", || {
+        adv.log_prob_all(black_box(&x0), &mut lps);
+        black_box(&lps);
+    });
+
+    // --- batch assembly (the pipelined worker's unit of work) ---
+    let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
+    let sk = SamplerKind::Adversarial { sampler: Arc::new(adv.clone()), x_proj };
+    let mut gen = BatchGen::new(data.clone(), sk, BatchMode::NsLike, b, 1.0, Rng::new(3));
+    bench.run("batcher/next_batch(B=256,adversarial)", || {
+        black_box(gen.next_batch());
+    });
+
+    // --- parameter gather + Adagrad scatter ---
+    let mut params = ParamStore::zeros(c, k, 0.05);
+    let labels: Vec<u32> = (0..b).map(|_| srng.below(c) as u32).collect();
+    let mut wbuf = vec![0f32; b * k];
+    let mut bbuf = vec![0f32; b];
+    bench.run("params/gather(B=256,K=64)", || {
+        params.gather(black_box(&labels), &mut wbuf, &mut bbuf);
+        black_box(&wbuf);
+    });
+    let gw: Vec<f32> = (0..b * k).map(|_| srng.normal() * 0.01).collect();
+    let gb: Vec<f32> = (0..b).map(|_| srng.normal() * 0.01).collect();
+    bench.run("params/adagrad_scatter(B=256,K=64)", || {
+        params.apply_sparse(black_box(&labels), black_box(&gw), black_box(&gb));
+    });
+
+    // --- literal creation + PJRT execute ---
+    let registry = Registry::open_default()?;
+    bench.run("runtime/lit_f32(B*K=16k)", || {
+        black_box(lit_f32(black_box(&gw), &[b, k]).unwrap());
+    });
+    let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
+    cfg.pipelined = false;
+    let mut run = TrainRun::prepare(&registry, &splits, &cfg)?;
+    bench.run("train/step_once(adversarial,B=256)", || {
+        black_box(run.step_once().unwrap());
+    });
+
+    Ok(())
+}

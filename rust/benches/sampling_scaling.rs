@@ -1,0 +1,82 @@
+//! E6 — the Sec. 3 complexity claim: drawing an adversarial negative costs
+//! O(k log C), i.e. sampling time grows logarithmically in the label-set
+//! size while uniform/alias sampling is O(1) and a full conditional
+//! (softmax-style) pass is O(kC).
+//!
+//! Regenerates the scaling series: per-draw latency for C = 2^10 .. 2^16,
+//! plus the O(kC) full-sweep for contrast. The printed series is the
+//! figure; the final check asserts the log-vs-linear separation.
+
+use adv_softmax::config::TreeConfig;
+use adv_softmax::sampler::{AdversarialSampler, NoiseSampler, UniformSampler};
+use adv_softmax::utils::bench::{black_box, Bench};
+use adv_softmax::utils::Rng;
+
+fn synthetic(c: usize, n: usize, k: usize, rng: &mut Rng) -> adv_softmax::data::Dataset {
+    let mut x = vec![0f32; n * k];
+    let mut y = vec![0u32; n];
+    for i in 0..n {
+        let lbl = rng.below(c) as u32;
+        y[i] = lbl;
+        for j in 0..k {
+            x[i * k + j] = ((lbl as usize >> (j % 16)) & 1) as f32 + 0.3 * rng.normal();
+        }
+    }
+    adv_softmax::data::Dataset::new(x, y, k, c)
+}
+
+fn main() {
+    let bench = Bench::new(3, 30, 0.5);
+    let k = 16;
+    let mut rng = Rng::new(1);
+    println!("# per-draw cost vs C (adversarial tree = O(k log C))");
+    let mut tree_medians = Vec::new();
+    let mut sweep_medians = Vec::new();
+    for exp in [10usize, 12, 14, 16] {
+        let c = 1usize << exp;
+        let n = (4 * c).min(100_000).max(8192);
+        let data = synthetic(c, n, k, &mut rng);
+        let tcfg = TreeConfig {
+            aux_dim: k,
+            fit_subsample: 30_000,
+            ..Default::default()
+        };
+        let (adv, _) = AdversarialSampler::fit(&data, &tcfg, 7);
+        let x0 = data.x(0).to_vec();
+        let mut proj = vec![0f32; k];
+        adv.pca.project(&x0, &mut proj);
+        let mut srng = Rng::new(2);
+        // batch 1024 draws per iteration so timer noise stays small
+        let s = bench.run(&format!("tree_sample x1024 (C=2^{exp})"), || {
+            for _ in 0..1024 {
+                black_box(adv.tree.sample(black_box(&proj), &mut srng));
+            }
+        });
+        tree_medians.push(s.median_ns / 1024.0);
+
+        let mut lps = vec![0f32; c];
+        let s2 = bench.run(&format!("full_sweep_logp  (C=2^{exp})"), || {
+            adv.tree.log_prob_all(black_box(&proj), &mut lps);
+            black_box(&lps);
+        });
+        sweep_medians.push(s2.median_ns);
+
+        let uni = UniformSampler::new(c);
+        bench.run(&format!("uniform_sample x1024 (C=2^{exp})"), || {
+            for _ in 0..1024 {
+                black_box(uni.sample(&[], &mut srng));
+            }
+        });
+    }
+
+    // shape check: tree draw cost grows ~ log C (ratio over the 64x C range
+    // far below the O(C) sweep's growth)
+    let tree_growth = tree_medians.last().unwrap() / tree_medians.first().unwrap();
+    let sweep_growth = sweep_medians.last().unwrap() / sweep_medians.first().unwrap();
+    println!("\ntree-draw growth over 64x C: {tree_growth:.2}x (log-like)");
+    println!("full-sweep growth over 64x C: {sweep_growth:.2}x (linear-like)");
+    assert!(
+        tree_growth < sweep_growth / 4.0,
+        "expected O(k log C) sampling to grow far slower than the O(kC) sweep"
+    );
+}

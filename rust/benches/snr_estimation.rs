@@ -1,0 +1,45 @@
+//! E5 — Theorem 2 harness: regenerates the SNR-vs-noise-distribution table
+//! and measures the cost of the analytic vs Monte-Carlo estimators.
+
+use adv_softmax::exp::snr::{analytic_snr, monte_carlo_snr, run, SnrOpts};
+use adv_softmax::utils::bench::{black_box, Bench};
+use adv_softmax::utils::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // regenerate the table (also writes results/snr.csv)
+    let opts = SnrOpts::default();
+    let points = run(&opts)?;
+    let best = points
+        .iter()
+        .max_by(|a, b| a.analytic.total_cmp(&b.analytic))
+        .unwrap();
+    assert!(best.name.contains("adversarial"), "Theorem 2 shape violated");
+
+    // estimator costs
+    let bench = Bench::new(2, 10, 1.0);
+    let (g, c) = (opts.num_contexts, opts.num_classes);
+    let mut rng = Rng::new(3);
+    let p_d: Vec<f64> = {
+        // same construction as exp::snr::make_p_d but local to the bench
+        let mut p = vec![0f64; g * c];
+        for row in p.chunks_exact_mut(c) {
+            let mut z = 0.0;
+            for v in row.iter_mut() {
+                *v = (2.0 * rng.normal() as f64).exp();
+                z += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= z;
+            }
+        }
+        p
+    };
+    let uni = vec![1.0 / c as f64; g * c];
+    bench.run("snr/analytic(G=8,C=16)", || {
+        black_box(analytic_snr(&p_d, &uni, g, c));
+    });
+    bench.run("snr/monte_carlo(20k samples)", || {
+        black_box(monte_carlo_snr(&p_d, &uni, g, c, 20_000, &mut rng));
+    });
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! E1 — Table 1 regeneration + the cost of the data substrate itself
+//! (synthetic generation and preprocessing are part of the harness; they
+//! must stay negligible next to training).
+
+use adv_softmax::config::{DatasetPreset, SyntheticConfig};
+use adv_softmax::data::Splits;
+use adv_softmax::exp::table1;
+use adv_softmax::utils::bench::{black_box, Bench};
+
+fn main() -> anyhow::Result<()> {
+    // regenerate the table rows (also writes results/table1.csv)
+    table1::run(&[DatasetPreset::WikiSim, DatasetPreset::AmazonSim])?;
+
+    let bench = Bench::new(1, 3, 1.0);
+    for p in [DatasetPreset::Tiny, DatasetPreset::EurlexSim, DatasetPreset::AmazonSim] {
+        let cfg = SyntheticConfig::preset(p);
+        bench.run(&format!("generate/{p}"), || {
+            black_box(Splits::synthetic(&cfg));
+        });
+    }
+    let splits = Splits::synthetic(&SyntheticConfig::preset(DatasetPreset::AmazonSim));
+    bench.run("label_counts/amazon-sim", || {
+        black_box(splits.train.label_counts());
+    });
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! E7 — auxiliary-model fit cost (Sec. 3 requirement (i): "subleading
+//! computational overhead"). Measures greedy tree fitting across label-set
+//! sizes and reports per-point-per-level cost, plus the quality (train
+//! log-likelihood vs the uniform floor).
+
+use adv_softmax::config::TreeConfig;
+use adv_softmax::tree::fit::fit_tree;
+use adv_softmax::utils::bench::Bench;
+use adv_softmax::utils::Rng;
+
+fn main() {
+    let bench = Bench::new(0, 2, 0.5);
+    let k = 16;
+    let mut rng = Rng::new(1);
+    for (c, n) in [(256usize, 8_192usize), (1024, 16_384), (4096, 32_768)] {
+        let mut x = vec![0f32; n * k];
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let lbl = rng.below(c) as u32;
+            y[i] = lbl;
+            for j in 0..k {
+                x[i * k + j] = ((lbl as usize >> (j % 12)) & 1) as f32 * 2.0 - 1.0
+                    + 0.4 * rng.normal();
+            }
+        }
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let mut loglik = 0.0;
+        let stats = bench.run(&format!("tree_fit C={c} N={n}"), || {
+            let mut frng = Rng::new(9);
+            let (_, s) = fit_tree(&x, &y, n, k, c, &cfg, &mut frng);
+            loglik = s.train_mean_loglik;
+        });
+        let levels = (c as f64).log2();
+        println!(
+            "  -> {:.0} ns/point/level, train loglik {:.3} (uniform floor {:.3})",
+            stats.median_ns / (n as f64 * levels),
+            loglik,
+            -(c as f64).ln()
+        );
+        assert!(loglik > -(c as f64).ln(), "tree must beat uniform");
+    }
+}

@@ -1,0 +1,435 @@
+//! Typed configuration system: dataset presets, method hyperparameters and
+//! experiment settings, serializable to/from JSON so runs are fully
+//! reproducible from a config file (`repro train --config cfg.json`).
+//!
+//! The preset hyperparameters mirror the paper's Table 1 tuning grid
+//! (Adagrad learning rate rho, regularizer lambda, auxiliary dimension
+//! k=16, aux regularizer lambda_n=0.1), re-tuned for the simulated
+//! datasets (see EXPERIMENTS.md E1).
+
+use crate::utils::json::Json;
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+
+/// The seven training methods of Sec. 5 (proposed + baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Proposed: adversarial negative sampling + Eq. 5 bias removal.
+    Adversarial,
+    /// Baseline (i): uniform negative sampling.
+    Uniform,
+    /// Baseline (ii): empirical label-frequency negative sampling.
+    Frequency,
+    /// Baseline (iii): NCE with the tree as base distribution.
+    Nce,
+    /// Baseline (iv): Augment & Reduce (sampled softmax bound).
+    AugmentReduce,
+    /// Baseline (v): One-vs-Each.
+    OneVsEach,
+    /// Full softmax (Eq. 1); small label sets only (Appendix A.2).
+    Softmax,
+}
+
+impl Method {
+    pub const ALL_SAMPLING: [Method; 6] = [
+        Method::Adversarial,
+        Method::Uniform,
+        Method::Frequency,
+        Method::Nce,
+        Method::AugmentReduce,
+        Method::OneVsEach,
+    ];
+
+    /// Does this method need the fitted auxiliary tree?
+    pub fn needs_tree(self) -> bool {
+        matches!(self, Method::Adversarial | Method::Nce)
+    }
+
+    /// Does prediction apply the Eq. 5 bias correction (+ log p_n(y|x))?
+    pub fn corrects_bias(self) -> bool {
+        matches!(self, Method::Adversarial)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Adversarial => "adversarial",
+            Method::Uniform => "uniform",
+            Method::Frequency => "frequency",
+            Method::Nce => "nce",
+            Method::AugmentReduce => "augment-reduce",
+            Method::OneVsEach => "one-vs-each",
+            Method::Softmax => "softmax",
+        }
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "adversarial" | "adv" => Method::Adversarial,
+            "uniform" => Method::Uniform,
+            "frequency" | "freq" => Method::Frequency,
+            "nce" => Method::Nce,
+            "augment-reduce" | "ar" => Method::AugmentReduce,
+            "one-vs-each" | "ove" => Method::OneVsEach,
+            "softmax" => Method::Softmax,
+            other => anyhow::bail!(
+                "unknown method {other:?} (adv|uniform|freq|nce|ar|ove|softmax)"
+            ),
+        })
+    }
+}
+
+/// Per-method optimizer hyperparameters (the paper's Table 1 columns).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    /// Adagrad learning rate (paper's rho).
+    pub lr: f32,
+    /// Regularizer strength (paper's lambda; Eq. 6 for NS-family,
+    /// L2-on-scores elsewhere).
+    pub lambda: f32,
+    /// Negatives per positive for AugmentReduce (importance weight
+    /// (C-1)/S); 1 everywhere else.
+    pub num_negatives: usize,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self { lr: 0.01, lambda: 1e-3, num_negatives: 1 }
+    }
+}
+
+/// Auxiliary-model (Sec. 3) settings.
+#[derive(Clone, Copy, Debug)]
+pub struct TreeConfig {
+    /// PCA dimension k (paper: 16).
+    pub aux_dim: usize,
+    /// Node regularizer lambda_n (paper: 0.1).
+    pub lambda_n: f64,
+    /// Max Newton iterations per continuous phase.
+    pub newton_iters: usize,
+    /// Max (continuous, discrete) alternations per node.
+    pub max_alternations: usize,
+    /// Optional cap on training points used for fitting (0 = all).
+    pub fit_subsample: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        Self {
+            aux_dim: 16,
+            lambda_n: 0.1,
+            newton_iters: 8,
+            max_alternations: 4,
+            fit_subsample: 0,
+        }
+    }
+}
+
+/// Dataset presets simulating the paper's benchmarks at laptop scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetPreset {
+    /// Wikipedia-500K stand-in: larger N, deeper label hierarchy.
+    WikiSim,
+    /// Amazon-670K stand-in: fewer points per label.
+    AmazonSim,
+    /// EURLex-4K stand-in: small C where full softmax is tractable.
+    EurlexSim,
+    /// Tiny smoke-test preset for unit/integration tests.
+    Tiny,
+}
+
+impl FromStr for DatasetPreset {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "wiki-sim" | "wiki" => DatasetPreset::WikiSim,
+            "amazon-sim" | "amazon" => DatasetPreset::AmazonSim,
+            "eurlex-sim" | "eurlex" => DatasetPreset::EurlexSim,
+            "tiny" => DatasetPreset::Tiny,
+            other => anyhow::bail!("unknown dataset preset {other:?}"),
+        })
+    }
+}
+
+impl fmt::Display for DatasetPreset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DatasetPreset::WikiSim => "wiki-sim",
+            DatasetPreset::AmazonSim => "amazon-sim",
+            DatasetPreset::EurlexSim => "eurlex-sim",
+            DatasetPreset::Tiny => "tiny",
+        })
+    }
+}
+
+/// Synthetic generator parameters (see `data::synthetic`).
+#[derive(Clone, Copy, Debug)]
+pub struct SyntheticConfig {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub n_valid: usize,
+    pub num_classes: usize,
+    pub feat_dim: usize,
+    /// Depth of the generative label hierarchy.
+    pub hierarchy_depth: usize,
+    /// Per-level centroid scale decay (cluster tightness).
+    pub level_decay: f32,
+    /// Observation noise around the label centroid.
+    pub noise: f32,
+    /// Zipf exponent for label frequencies.
+    pub zipf_exponent: f64,
+    pub seed: u64,
+}
+
+impl SyntheticConfig {
+    pub fn preset(p: DatasetPreset) -> Self {
+        match p {
+            DatasetPreset::WikiSim => Self {
+                n_train: 200_000,
+                n_test: 4096,
+                n_valid: 4096,
+                num_classes: 16_384,
+                feat_dim: 64,
+                hierarchy_depth: 8,
+                level_decay: 0.7,
+                noise: 0.45,
+                zipf_exponent: 1.05,
+                seed: 2020,
+            },
+            DatasetPreset::AmazonSim => Self {
+                n_train: 60_000,
+                n_test: 4096,
+                n_valid: 2048,
+                num_classes: 12_288,
+                feat_dim: 64,
+                hierarchy_depth: 7,
+                level_decay: 0.72,
+                noise: 0.5,
+                zipf_exponent: 0.95,
+                seed: 670,
+            },
+            DatasetPreset::EurlexSim => Self {
+                n_train: 13_952, // ~paper's N=13,960, rounded to batch grid
+                n_test: 2048,
+                n_valid: 1536,
+                num_classes: 4096,
+                feat_dim: 64,
+                hierarchy_depth: 6,
+                level_decay: 0.7,
+                noise: 0.5,
+                zipf_exponent: 1.0,
+                seed: 4000,
+            },
+            DatasetPreset::Tiny => Self {
+                n_train: 4096,
+                n_test: 512,
+                n_valid: 512,
+                num_classes: 256,
+                feat_dim: 64,
+                hierarchy_depth: 4,
+                level_decay: 0.7,
+                noise: 0.4,
+                zipf_exponent: 1.0,
+                seed: 7,
+            },
+        }
+    }
+}
+
+/// Tuned hyperparameters per (dataset, method) — our Table 1.
+pub fn tuned_hyper(p: DatasetPreset, m: Method) -> Hyper {
+    use DatasetPreset::*;
+    use Method::*;
+    let (lr, lambda, num_negatives) = match (p, m) {
+        (WikiSim, Adversarial) => (0.05, 1e-3, 1),
+        (WikiSim, Uniform) => (0.05, 1e-4, 1),
+        (WikiSim, Frequency) => (0.05, 1e-4, 1),
+        (WikiSim, Nce) => (0.05, 1e-4, 1),
+        (WikiSim, AugmentReduce) => (0.01, 1e-5, 1),
+        (WikiSim, OneVsEach) => (0.02, 1e-5, 1),
+        (WikiSim, Softmax) => (0.3, 3e-4, 1),
+
+        (AmazonSim, Adversarial) => (0.05, 1e-3, 1),
+        (AmazonSim, Uniform) => (0.05, 1e-4, 1),
+        (AmazonSim, Frequency) => (0.05, 1e-4, 1),
+        (AmazonSim, Nce) => (0.05, 1e-4, 1),
+        (AmazonSim, AugmentReduce) => (0.01, 1e-5, 1),
+        (AmazonSim, OneVsEach) => (0.03, 1e-5, 1),
+        (AmazonSim, Softmax) => (0.3, 3e-4, 1),
+
+        (EurlexSim, Softmax) => (0.3, 3e-4, 1),
+        (EurlexSim, Uniform) => (0.03, 3e-4, 1),
+        (EurlexSim, _) => (0.03, 1e-3, 1),
+
+        (Tiny, Softmax) => (0.3, 3e-4, 1),
+        (Tiny, _) => (0.05, 1e-3, 1),
+    };
+    Hyper { lr, lambda, num_negatives }
+}
+
+/// A full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetPreset,
+    pub method: Method,
+    pub hyper: Hyper,
+    pub tree: TreeConfig,
+    /// Training batch size; must match the AOT artifact B.
+    pub batch_size: usize,
+    pub max_steps: usize,
+    /// Hard wallclock budget for training (seconds, excl. eval).
+    pub max_seconds: f64,
+    /// Evaluate every `eval_every` steps (0 = log-spaced schedule).
+    pub eval_every: usize,
+    /// Number of eval points (subsampled from the test split).
+    pub eval_points: usize,
+    pub seed: u64,
+    /// Pipelined batch generation (worker thread) on/off.
+    pub pipelined: bool,
+}
+
+impl RunConfig {
+    pub fn new(dataset: DatasetPreset, method: Method) -> Self {
+        Self {
+            dataset,
+            method,
+            hyper: tuned_hyper(dataset, method),
+            tree: TreeConfig::default(),
+            batch_size: 256,
+            max_steps: 20_000,
+            max_seconds: 120.0,
+            eval_every: 0,
+            eval_points: 2048,
+            seed: 1,
+            pipelined: true,
+        }
+    }
+
+    /// Serialize to JSON (reproducible experiment configs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.to_string())),
+            ("method", Json::Str(self.method.to_string())),
+            ("lr", Json::Num(self.hyper.lr as f64)),
+            ("lambda", Json::Num(self.hyper.lambda as f64)),
+            ("num_negatives", Json::Num(self.hyper.num_negatives as f64)),
+            ("aux_dim", Json::Num(self.tree.aux_dim as f64)),
+            ("lambda_n", Json::Num(self.tree.lambda_n)),
+            ("newton_iters", Json::Num(self.tree.newton_iters as f64)),
+            ("max_alternations", Json::Num(self.tree.max_alternations as f64)),
+            ("fit_subsample", Json::Num(self.tree.fit_subsample as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("max_steps", Json::Num(self.max_steps as f64)),
+            ("max_seconds", Json::Num(self.max_seconds)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("eval_points", Json::Num(self.eval_points as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("pipelined", Json::Bool(self.pipelined)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let dataset: DatasetPreset = v.get("dataset")?.as_str()?.parse()?;
+        let method: Method = v.get("method")?.as_str()?.parse()?;
+        let mut cfg = RunConfig::new(dataset, method);
+        cfg.hyper.lr = v.get("lr")?.as_f32()?;
+        cfg.hyper.lambda = v.get("lambda")?.as_f32()?;
+        cfg.hyper.num_negatives = v.get("num_negatives")?.as_usize()?;
+        cfg.tree.aux_dim = v.get("aux_dim")?.as_usize()?;
+        cfg.tree.lambda_n = v.get("lambda_n")?.as_f64()?;
+        cfg.tree.newton_iters = v.get("newton_iters")?.as_usize()?;
+        cfg.tree.max_alternations = v.get("max_alternations")?.as_usize()?;
+        cfg.tree.fit_subsample = v.get("fit_subsample")?.as_usize()?;
+        cfg.batch_size = v.get("batch_size")?.as_usize()?;
+        cfg.max_steps = v.get("max_steps")?.as_usize()?;
+        cfg.max_seconds = v.get("max_seconds")?.as_f64()?;
+        cfg.eval_every = v.get("eval_every")?.as_usize()?;
+        cfg.eval_points = v.get("eval_points")?.as_usize()?;
+        cfg.seed = v.get("seed")?.as_u64()?;
+        cfg.pipelined = v.get("pipelined")?.as_bool()?;
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        Ok(std::fs::write(path, self.to_json().to_string())?)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL_SAMPLING.iter().chain([Method::Softmax].iter()) {
+            let parsed: Method = m.name().parse().unwrap();
+            assert_eq!(parsed, *m);
+        }
+        assert!("bogus".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn method_aliases() {
+        assert_eq!("adv".parse::<Method>().unwrap(), Method::Adversarial);
+        assert_eq!("ar".parse::<Method>().unwrap(), Method::AugmentReduce);
+        assert_eq!("ove".parse::<Method>().unwrap(), Method::OneVsEach);
+    }
+
+    #[test]
+    fn tree_flags() {
+        assert!(Method::Adversarial.needs_tree());
+        assert!(Method::Nce.needs_tree());
+        assert!(!Method::Uniform.needs_tree());
+        assert!(Method::Adversarial.corrects_bias());
+        assert!(!Method::Nce.corrects_bias());
+    }
+
+    #[test]
+    fn run_config_json_roundtrip() {
+        let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
+        cfg.hyper.lr = 0.123;
+        cfg.max_seconds = 7.5;
+        cfg.pipelined = false;
+        let back = RunConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.method, cfg.method);
+        assert_eq!(back.batch_size, cfg.batch_size);
+        assert_eq!(back.hyper.lr, cfg.hyper.lr);
+        assert_eq!(back.max_seconds, cfg.max_seconds);
+        assert!(!back.pipelined);
+    }
+
+    #[test]
+    fn presets_have_sane_shapes() {
+        for p in [
+            DatasetPreset::WikiSim,
+            DatasetPreset::AmazonSim,
+            DatasetPreset::EurlexSim,
+            DatasetPreset::Tiny,
+        ] {
+            let c = SyntheticConfig::preset(p);
+            assert!(c.n_train >= 1024, "need at least a few batches of data");
+            assert!(c.num_classes >= 128);
+            assert_eq!(c.feat_dim, 64, "feat dim must match AOT artifacts");
+        }
+    }
+
+    #[test]
+    fn eurlex_fits_softmax_artifact() {
+        let c = SyntheticConfig::preset(DatasetPreset::EurlexSim);
+        assert_eq!(c.num_classes, 4096, "must match softmax_grad artifact C");
+    }
+}

@@ -1,0 +1,155 @@
+//! Datasets: container, synthetic extreme-classification generator, and a
+//! loader for the Extreme Classification Repository sparse format (so real
+//! Wikipedia-500K / Amazon-670K / EURLex data can drop in when available).
+
+pub mod synthetic;
+pub mod xc_format;
+
+pub use synthetic::generate;
+
+use crate::config::SyntheticConfig;
+use crate::utils::Rng;
+
+/// A dense single-label classification dataset.
+///
+/// Features are row-major `[n, feat_dim]` f32; one label per point (the
+/// paper keeps only the first label of each multi-label point, Sec. 5).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(features: Vec<f32>, labels: Vec<u32>, feat_dim: usize, num_classes: usize) -> Self {
+        assert_eq!(features.len() % feat_dim, 0);
+        assert_eq!(features.len() / feat_dim, labels.len());
+        debug_assert!(labels.iter().all(|&l| (l as usize) < num_classes));
+        Self { features, labels, feat_dim, num_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Borrow the feature row of point `i`.
+    #[inline]
+    pub fn x(&self, i: usize) -> &[f32] {
+        &self.features[i * self.feat_dim..(i + 1) * self.feat_dim]
+    }
+
+    /// Label of point `i`.
+    #[inline]
+    pub fn y(&self, i: usize) -> u32 {
+        self.labels[i]
+    }
+
+    /// Empirical label counts (length `num_classes`).
+    pub fn label_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.num_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Number of labels that actually occur.
+    pub fn populated_classes(&self) -> usize {
+        self.label_counts().iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Random subset of `n` points (without replacement if n <= len).
+    pub fn subsample(&self, n: usize, rng: &mut Rng) -> Dataset {
+        let n = n.min(self.len());
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(n);
+        self.take(&idx)
+    }
+
+    /// Materialize the subset given by `idx`.
+    pub fn take(&self, idx: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(idx.len() * self.feat_dim);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            features.extend_from_slice(self.x(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset::new(features, labels, self.feat_dim, self.num_classes)
+    }
+}
+
+/// Train/validation/test triple.
+#[derive(Clone, Debug)]
+pub struct Splits {
+    pub train: Dataset,
+    pub valid: Dataset,
+    pub test: Dataset,
+}
+
+impl Splits {
+    /// Generate the synthetic splits for a preset config.
+    pub fn synthetic(cfg: &SyntheticConfig) -> Splits {
+        synthetic::generate(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![0, 2, 1],
+            2,
+            3,
+        )
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.x(1), &[3.0, 4.0]);
+        assert_eq!(d.y(2), 1);
+    }
+
+    #[test]
+    fn label_counts_sum_to_n() {
+        let d = tiny();
+        let c = d.label_counts();
+        assert_eq!(c.iter().sum::<u64>() as usize, d.len());
+        assert_eq!(c, vec![1, 1, 1]);
+        assert_eq!(d.populated_classes(), 3);
+    }
+
+    #[test]
+    fn take_preserves_rows() {
+        let d = tiny();
+        let s = d.take(&[2, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.x(0), &[5.0, 6.0]);
+        assert_eq!(s.y(1), 0);
+    }
+
+    #[test]
+    fn subsample_bounds() {
+        let d = tiny();
+        let mut rng = Rng::new(1);
+        assert_eq!(d.subsample(10, &mut rng).len(), 3);
+        assert_eq!(d.subsample(2, &mut rng).len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_rows_panic() {
+        Dataset::new(vec![1.0, 2.0, 3.0], vec![0], 2, 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Loader for the Extreme Classification Repository sparse format.
+//!
+//! Format (manikvarma.org XC repo):
+//!
+//! ```text
+//! num_points num_features num_labels
+//! l1,l2,... f1:v1 f2:v2 ...
+//! ```
+//!
+//! Multi-label points are reduced to single-label by keeping the label with
+//! the smallest id (the paper's preprocessing, Sec. 5 / Appendix A.2), and
+//! points without labels are dropped. Sparse features are densified into a
+//! fixed `feat_dim` via feature hashing (sign-hashed, as in Vowpal Wabbit)
+//! so the AOT artifact shapes stay fixed regardless of the source
+//! vocabulary. Rows are L2-normalized to keep scales comparable to the
+//! synthetic generator.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+use std::path::Path;
+
+/// Hash a source feature index to (bucket, sign).
+#[inline]
+fn hash_feature(idx: u64, feat_dim: usize) -> (usize, f32) {
+    // splitmix64 finalizer as the hash
+    let mut z = idx.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let bucket = (z % feat_dim as u64) as usize;
+    let sign = if (z >> 63) == 0 { 1.0 } else { -1.0 };
+    (bucket, sign)
+}
+
+/// Parse an XC-format reader into a dense single-label [`Dataset`].
+pub fn parse_xc<R: BufRead>(reader: R, feat_dim: usize) -> Result<Dataset> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .context("xc file is empty")?
+        .context("cannot read header")?;
+    let mut hp = header.split_whitespace();
+    let n: usize = hp.next().context("header: missing N")?.parse()?;
+    let _f: usize = hp.next().context("header: missing F")?.parse()?;
+    let l: usize = hp.next().context("header: missing L")?.parse()?;
+    if l == 0 {
+        bail!("header declares zero labels");
+    }
+
+    let mut features = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut row = vec![0f32; feat_dim];
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line.with_context(|| format!("line {}", lineno + 2))?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_field = parts.next().unwrap_or("");
+        // keep the smallest label id (paper's "first label" after sorting)
+        let y = label_field
+            .split(',')
+            .filter_map(|t| t.parse::<u32>().ok())
+            .min();
+        let Some(y) = y else { continue }; // unlabeled -> drop
+        if y as usize >= l {
+            bail!("line {}: label {} out of range (L={})", lineno + 2, y, l);
+        }
+
+        row.iter_mut().for_each(|v| *v = 0.0);
+        for tok in parts {
+            let Some((f, v)) = tok.split_once(':') else {
+                bail!("line {}: bad feature token {:?}", lineno + 2, tok);
+            };
+            let f: u64 = f.parse().with_context(|| format!("line {}", lineno + 2))?;
+            let v: f32 = v.parse().with_context(|| format!("line {}", lineno + 2))?;
+            let (bucket, sign) = hash_feature(f, feat_dim);
+            row[bucket] += sign * v;
+        }
+        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            row.iter_mut().for_each(|v| *v /= norm);
+        }
+        features.extend_from_slice(&row);
+        labels.push(y);
+    }
+
+    if labels.is_empty() {
+        bail!("no labeled points in file (declared N={n})");
+    }
+    Ok(Dataset::new(features, labels, feat_dim, l))
+}
+
+/// Load an XC-format file from disk.
+pub fn load_xc(path: &Path, feat_dim: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    parse_xc(std::io::BufReader::new(f), feat_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "4 100 10\n\
+        3,1 0:1.5 7:2.0\n\
+        5 1:1.0\n\
+        \n\
+        2,9,4 50:0.5 51:0.5 52:0.5\n";
+
+    #[test]
+    fn parses_and_keeps_smallest_label() {
+        let d = parse_xc(Cursor::new(SAMPLE), 16).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.labels, vec![1, 5, 2]);
+        assert_eq!(d.feat_dim, 16);
+        assert_eq!(d.num_classes, 10);
+    }
+
+    #[test]
+    fn rows_are_l2_normalized() {
+        let d = parse_xc(Cursor::new(SAMPLE), 16).unwrap();
+        for i in 0..d.len() {
+            let n: f32 = d.x(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn hashing_is_deterministic() {
+        let a = parse_xc(Cursor::new(SAMPLE), 32).unwrap();
+        let b = parse_xc(Cursor::new(SAMPLE), 32).unwrap();
+        assert_eq!(a.features, b.features);
+    }
+
+    #[test]
+    fn drops_unlabeled_points() {
+        let s = "2 10 5\n 0:1.0\n3 1:1.0\n";
+        let d = parse_xc(Cursor::new(s), 8).unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.labels, vec![3]);
+    }
+
+    #[test]
+    fn rejects_label_out_of_range() {
+        let s = "1 10 5\n7 0:1.0\n";
+        assert!(parse_xc(Cursor::new(s), 8).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_token() {
+        let s = "1 10 5\n1 zzz\n";
+        assert!(parse_xc(Cursor::new(s), 8).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_xc(Cursor::new(""), 8).is_err());
+        assert!(parse_xc(Cursor::new("0 10 5\n"), 8).is_err());
+    }
+
+    #[test]
+    fn hash_buckets_cover_range() {
+        let dim = 64;
+        let mut seen = vec![false; dim];
+        for f in 0..10_000u64 {
+            let (b, s) = hash_feature(f, dim);
+            assert!(b < dim);
+            assert!(s == 1.0 || s == -1.0);
+            seen[b] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

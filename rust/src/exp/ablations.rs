@@ -1,0 +1,113 @@
+//! A1-A3 — ablations of the design choices DESIGN.md calls out:
+//!
+//! * **A1 bias removal** (Eq. 5): train the adversarial method once, score
+//!   the test set with and without the + log p_n(y|x) correction.
+//! * **A2 auxiliary dimension k**: quality/speed trade-off of the PCA
+//!   projection (paper fixes k = 16).
+//! * **A3 regularizer** (Eq. 6 vs plain Eq. 2): lambda = tuned vs 0.
+
+use super::{print_table, write_csv};
+use crate::config::{DatasetPreset, Method, RunConfig, SyntheticConfig};
+use crate::data::Splits;
+use crate::runtime::Registry;
+use crate::train::TrainRun;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct AblationOpts {
+    pub dataset: DatasetPreset,
+    pub seconds: f64,
+    pub max_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for AblationOpts {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetPreset::Tiny,
+            seconds: 30.0,
+            max_steps: 3_000,
+            seed: 1,
+        }
+    }
+}
+
+fn base_cfg(o: &AblationOpts) -> RunConfig {
+    let mut cfg = RunConfig::new(o.dataset, Method::Adversarial);
+    cfg.max_seconds = o.seconds;
+    cfg.max_steps = o.max_steps;
+    cfg.seed = o.seed;
+    cfg
+}
+
+/// A1: bias correction on/off after one adversarial training run.
+pub fn bias_removal(registry: &Registry, o: &AblationOpts) -> Result<(f64, f64)> {
+    let splits = Splits::synthetic(&SyntheticConfig::preset(o.dataset));
+    let cfg = base_cfg(o);
+    let mut run = TrainRun::prepare(registry, &splits, &cfg)?;
+    run.train()?;
+    let with = run.evaluate_with(true)?;
+    let without = run.evaluate_with(false)?;
+    let rows = vec![
+        vec!["with Eq.5 correction".into(), format!("{:.4}", with.accuracy),
+             format!("{:.4}", with.log_likelihood)],
+        vec!["without (raw xi)".into(), format!("{:.4}", without.accuracy),
+             format!("{:.4}", without.log_likelihood)],
+    ];
+    print_table(
+        "Ablation A1: bias removal (adversarial method)",
+        &["scoring", "accuracy", "loglik"],
+        &rows,
+    );
+    write_csv("ablation_bias.csv", &["scoring", "accuracy", "loglik"], &rows)?;
+    Ok((with.accuracy, without.accuracy))
+}
+
+/// A2: auxiliary dimension sweep.
+pub fn aux_dim_sweep(registry: &Registry, o: &AblationOpts, ks: &[usize]) -> Result<Vec<(usize, f64, f64)>> {
+    let splits = Splits::synthetic(&SyntheticConfig::preset(o.dataset));
+    let mut out = Vec::new();
+    for &k in ks {
+        let mut cfg = base_cfg(o);
+        cfg.tree.aux_dim = k;
+        let mut run = TrainRun::prepare(registry, &splits, &cfg)?;
+        let curve = run.train()?;
+        out.push((k, curve.best_accuracy(), run.aux_fit_seconds));
+    }
+    let rows: Vec<Vec<String>> = out
+        .iter()
+        .map(|(k, acc, fit)| vec![k.to_string(), format!("{acc:.4}"), format!("{fit:.2}s")])
+        .collect();
+    print_table(
+        "Ablation A2: auxiliary PCA dimension k",
+        &["k", "best_accuracy", "aux_fit_time"],
+        &rows,
+    );
+    write_csv("ablation_k.csv", &["k", "best_accuracy", "aux_fit_seconds"], &rows)?;
+    Ok(out)
+}
+
+/// A3: Eq. 6 regularizer vs plain Eq. 2 (lambda = 0).
+pub fn regularizer(registry: &Registry, o: &AblationOpts) -> Result<Vec<(f32, f64, f64)>> {
+    let splits = Splits::synthetic(&SyntheticConfig::preset(o.dataset));
+    let tuned = base_cfg(o).hyper.lambda;
+    let mut out = Vec::new();
+    for lam in [0.0f32, tuned, tuned * 10.0] {
+        let mut cfg = base_cfg(o);
+        cfg.hyper.lambda = lam;
+        let mut run = TrainRun::prepare(registry, &splits, &cfg)?;
+        let curve = run.train()?;
+        out.push((lam, curve.best_accuracy(), curve.best_log_likelihood()));
+    }
+    let rows: Vec<Vec<String>> = out
+        .iter()
+        .map(|(l, acc, ll)| vec![format!("{l}"), format!("{acc:.4}"), format!("{ll:.4}")])
+        .collect();
+    print_table(
+        "Ablation A3: Eq. 6 regularizer strength",
+        &["lambda", "best_accuracy", "best_loglik"],
+        &rows,
+    );
+    write_csv("ablation_reg.csv", &["lambda", "best_accuracy", "best_loglik"], &rows)?;
+    Ok(out)
+}

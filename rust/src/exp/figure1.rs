@@ -1,0 +1,112 @@
+//! E2/E3 — Figure 1: learning curves (predictive log-likelihood and
+//! accuracy vs training wallclock) for the proposed method and the five
+//! baselines.
+//!
+//! The paper's claim has a *shape*, not absolute numbers: the adversarial
+//! method converges roughly an order of magnitude faster and tops the
+//! accuracy panel; on the smaller dataset plain NS may edge out the final
+//! log-likelihood (Sec. 5, Results). `summarize` extracts exactly those
+//! statistics.
+
+use super::{print_table, results_dir};
+use crate::config::{DatasetPreset, Method, RunConfig, SyntheticConfig};
+use crate::data::Splits;
+use crate::runtime::Registry;
+use crate::train::{LearningCurve, TrainRun};
+use anyhow::Result;
+
+/// Options for one Figure 1 panel-pair (one dataset, many methods).
+#[derive(Clone, Debug)]
+pub struct Figure1Opts {
+    pub dataset: DatasetPreset,
+    pub methods: Vec<Method>,
+    /// Per-method training budget in seconds (excl. eval, incl. aux fit).
+    pub seconds_per_method: f64,
+    pub max_steps: usize,
+    pub eval_points: usize,
+    pub seed: u64,
+}
+
+impl Default for Figure1Opts {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetPreset::WikiSim,
+            methods: Method::ALL_SAMPLING.to_vec(),
+            seconds_per_method: 60.0,
+            max_steps: 200_000,
+            eval_points: 2048,
+            seed: 1,
+        }
+    }
+}
+
+/// Run all methods on one dataset; returns the curves and writes
+/// `results/figure1_<dataset>.csv`.
+pub fn run(registry: &Registry, opts: &Figure1Opts) -> Result<Vec<LearningCurve>> {
+    let syn = SyntheticConfig::preset(opts.dataset);
+    let splits = Splits::synthetic(&syn);
+    let csv = results_dir().join(format!("figure1_{}.csv", opts.dataset));
+    std::fs::remove_file(&csv).ok();
+
+    let mut curves = Vec::new();
+    for &m in &opts.methods {
+        let mut cfg = RunConfig::new(opts.dataset, m);
+        cfg.max_seconds = opts.seconds_per_method;
+        cfg.max_steps = opts.max_steps;
+        cfg.eval_points = opts.eval_points;
+        cfg.seed = opts.seed;
+        eprintln!("[figure1] {} / {} ...", opts.dataset, m);
+        let mut run = TrainRun::prepare(registry, &splits, &cfg)?;
+        let curve = run.train()?;
+        curve.append_csv(&csv)?;
+        curves.push(curve);
+    }
+    summarize(&curves);
+    Ok(curves)
+}
+
+/// Print the paper-shape summary: best metrics + time-to-accuracy.
+pub fn summarize(curves: &[LearningCurve]) {
+    // target = 80% of the best accuracy any method reached
+    let best_acc = curves.iter().map(|c| c.best_accuracy()).fold(0.0, f64::max);
+    let target = 0.8 * best_acc;
+    let rows: Vec<Vec<String>> = curves
+        .iter()
+        .map(|c| {
+            vec![
+                c.method.to_string(),
+                format!("{:.4}", c.best_accuracy()),
+                format!("{:.4}", c.best_log_likelihood()),
+                c.time_to_accuracy(target)
+                    .map(|t| format!("{t:.1}s"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.1}s", c.aux_fit_seconds),
+                c.points
+                    .last()
+                    .map(|p| p.step.to_string())
+                    .unwrap_or_default(),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "Figure 1 summary ({}) — time-to-acc target {:.3}",
+            curves.first().map(|c| c.dataset.as_str()).unwrap_or("?"),
+            target
+        ),
+        &["method", "best_acc", "best_loglik", "t_to_target", "aux_fit", "steps"],
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_opts_cover_all_sampling_methods() {
+        let o = Figure1Opts::default();
+        assert_eq!(o.methods.len(), 6);
+        assert!(!o.methods.contains(&Method::Softmax));
+    }
+}

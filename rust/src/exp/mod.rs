@@ -1,0 +1,92 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (see DESIGN.md §5 for the experiment index E1-E7/A1-A3).
+
+pub mod ablations;
+pub mod appendix_a2;
+pub mod figure1;
+pub mod snr;
+pub mod table1;
+pub mod tree_quality;
+
+use std::path::{Path, PathBuf};
+
+/// Results directory (created on demand): `$REPRO_RESULTS` or `results/`.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("REPRO_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Render an aligned plain-text table (paper-style) to stdout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    println!("\n== {title} ==");
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Write rows as CSV under the results dir; returns the path.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> anyhow::Result<PathBuf> {
+    let path = results_dir().join(name);
+    write_csv_to(&path, header, rows)?;
+    Ok(path)
+}
+
+/// Write rows as CSV to an explicit path.
+pub fn write_csv_to(path: &Path, header: &[&str], rows: &[Vec<String>]) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("adv_softmax_exp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        write_csv_to(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        print_table(
+            "test",
+            &["col1", "longer-column"],
+            &[vec!["x".into(), "y".into()]],
+        );
+    }
+}

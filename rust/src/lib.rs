@@ -1,0 +1,56 @@
+//! # adv-softmax
+//!
+//! Production-oriented reproduction of **"Extreme Classification via
+//! Adversarial Softmax Approximation"** (Bamler & Mandt, ICLR 2020) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — Pallas kernels and JAX graphs in
+//!   `python/compile/`, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3 (this crate)** — the coordinator: auxiliary adversarial tree
+//!   model ([`tree`], [`sampler`]), training loop and baselines
+//!   ([`train`]), chunked evaluation with Eq. 5 bias removal ([`eval`]),
+//!   the PJRT runtime ([`runtime`]), datasets ([`data`]) and the
+//!   experiment harness ([`exp`]) that regenerates every table and figure
+//!   of the paper.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use adv_softmax::prelude::*;
+//!
+//! let splits = Splits::synthetic(&SyntheticConfig::preset(DatasetPreset::Tiny));
+//! let registry = Registry::open_default().unwrap();
+//! let cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
+//! let mut run = TrainRun::prepare(&registry, &splits, &cfg).unwrap();
+//! let curve = run.train().unwrap();
+//! println!("final accuracy: {:.3}", curve.points.last().unwrap().accuracy);
+//! ```
+
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod train;
+pub mod tree;
+pub mod utils;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{
+        DatasetPreset, Hyper, Method, RunConfig, SyntheticConfig, TreeConfig,
+    };
+    pub use crate::data::{Dataset, Splits};
+    pub use crate::eval::{EvalResult, Evaluator};
+    pub use crate::model::ParamStore;
+    pub use crate::runtime::Registry;
+    pub use crate::sampler::{
+        AdversarialSampler, FrequencySampler, NoiseSampler, UniformSampler,
+    };
+    pub use crate::train::{LearningCurve, TrainRun};
+    pub use crate::tree::Tree;
+    pub use crate::utils::Rng;
+}

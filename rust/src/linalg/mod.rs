@@ -1,0 +1,149 @@
+//! Small dense linear algebra used by the auxiliary model and preprocessing.
+//!
+//! Dimensions here are tiny (k ≤ 64 for the auxiliary model, K ≤ a few
+//! hundred for PCA covariances), so plain row-major loops beat any BLAS
+//! round-trip; the heavy O(N·C·K) work lives in the HLO artifacts instead.
+
+pub mod pca;
+pub mod solve;
+
+pub use pca::Pca;
+pub use solve::solve_spd;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the compiler auto-vectorizing and
+    // reduces sequential FP dependency. See benches/hot_path.rs.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(a: &mut [f32], alpha: f32) {
+    for v in a.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Numerically stable log(sigma(z)).
+#[inline]
+pub fn log_sigmoid(z: f32) -> f32 {
+    z.min(0.0) - (-z.abs()).exp().ln_1p()
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Streaming log-sum-exp merge: combine (m1, s1) and (m2, s2) where each
+/// pair represents max and sum(exp(x - max)) over disjoint sets.
+#[inline]
+pub fn lse_merge(m1: f32, s1: f32, m2: f32, s2: f32) -> (f32, f32) {
+    if s1 == 0.0 && m1 == f32::NEG_INFINITY {
+        return (m2, s2);
+    }
+    if s2 == 0.0 && m2 == f32::NEG_INFINITY {
+        return (m1, s1);
+    }
+    let m = m1.max(m2);
+    (m, s1 * (m1 - m).exp() + s2 * (m2 - m).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..131).map(|i| (i as f32) * 0.1 - 3.0).collect();
+        let b: Vec<f32> = (0..131).map(|i| (i as f32) * -0.05 + 1.0).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn log_sigmoid_stable_at_extremes() {
+        assert!(log_sigmoid(100.0).abs() < 1e-6);
+        assert!((log_sigmoid(-100.0) + 100.0).abs() < 1e-3);
+        assert!(log_sigmoid(0.0) + std::f32::consts::LN_2 < 1e-6);
+        assert!(log_sigmoid(-1e30).is_finite() || log_sigmoid(-1e30) == f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for z in [-5.0f32, -1.0, 0.0, 2.0, 7.0] {
+            assert!((sigmoid(z) + sigmoid(-z) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lse_merge_equals_global() {
+        let xs: Vec<f32> = vec![-3.0, 0.5, 2.0, -1.0, 4.0, 4.0, -10.0];
+        // global
+        let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let s: f32 = xs.iter().map(|x| (x - m).exp()).sum();
+        let global = m + s.ln();
+        // streamed in two chunks
+        let (m1, s1) = {
+            let c = &xs[..3];
+            let m = c.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            (m, c.iter().map(|x| (x - m).exp()).sum::<f32>())
+        };
+        let (m2, s2) = {
+            let c = &xs[3..];
+            let m = c.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            (m, c.iter().map(|x| (x - m).exp()).sum::<f32>())
+        };
+        let (mm, ss) = lse_merge(m1, s1, m2, s2);
+        assert!((mm + ss.ln() - global).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lse_merge_identity_element() {
+        let (m, s) = lse_merge(f32::NEG_INFINITY, 0.0, 1.5, 2.0);
+        assert_eq!((m, s), (1.5, 2.0));
+        let (m, s) = lse_merge(1.5, 2.0, f32::NEG_INFINITY, 0.0);
+        assert_eq!((m, s), (1.5, 2.0));
+    }
+}

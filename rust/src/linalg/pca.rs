@@ -1,0 +1,232 @@
+//! PCA by covariance + power iteration with deflation.
+//!
+//! The paper (Sec. 3, "Technical Details") projects features to a small
+//! k-dimensional space before fitting the auxiliary model; sampling then
+//! costs O(k log C). Feature dims here are modest (K ≤ a few hundred), so
+//! an explicit K×K covariance plus power iteration is exact enough and has
+//! no dependencies. Also used to initialize tree-node weights with the
+//! dominant eigenvector of per-label sum vectors (paper's init).
+
+use super::{axpy, dot, scale};
+use crate::utils::json::Json;
+use crate::utils::Rng;
+
+/// A fitted PCA projection: x -> (x - mean) @ components^T, [K] -> [k].
+#[derive(Clone, Debug)]
+pub struct Pca {
+    pub mean: Vec<f32>,
+    /// k rows of length K, orthonormal.
+    pub components: Vec<Vec<f32>>,
+    pub input_dim: usize,
+    pub output_dim: usize,
+}
+
+/// Dominant eigenvector of a symmetric PSD matrix (row-major n×n) by power
+/// iteration. Returns a unit vector; arbitrary unit vector if the matrix is
+/// (near) zero.
+pub fn dominant_eigenvector(m: &[f64], n: usize, iters: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+    let mut tmp = vec![0f64; n];
+    for _ in 0..iters {
+        for i in 0..n {
+            let row = &m[i * n..(i + 1) * n];
+            tmp[i] = row.iter().zip(v.iter()).map(|(a, b)| a * b).sum();
+        }
+        let nrm = tmp.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nrm < 1e-30 {
+            break;
+        }
+        for i in 0..n {
+            v[i] = tmp[i] / nrm;
+        }
+    }
+    let nrm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if nrm < 1e-30 {
+        let mut e = vec![0f32; n];
+        e[0] = 1.0;
+        return e;
+    }
+    v.iter().map(|x| (*x / nrm) as f32).collect()
+}
+
+impl Pca {
+    /// Fit `out_dim` principal components of `data` ([n, in_dim] row-major).
+    ///
+    /// Power iteration with deflation; each component gets `iters`
+    /// iterations (30 is plenty at these scales — see unit tests, which
+    /// check recovery of a planted low-rank structure).
+    pub fn fit(data: &[f32], n: usize, in_dim: usize, out_dim: usize, seed: u64) -> Self {
+        assert!(n > 0 && in_dim > 0 && out_dim > 0 && out_dim <= in_dim);
+        assert_eq!(data.len(), n * in_dim);
+        let mut rng = Rng::new(seed ^ 0x9ca);
+        // mean
+        let mut mean = vec![0f32; in_dim];
+        for row in data.chunks_exact(in_dim) {
+            axpy(1.0, row, &mut mean);
+        }
+        scale(&mut mean, 1.0 / n as f32);
+        // covariance in f64 (K ≤ few hundred -> K² ≤ ~100k entries)
+        let mut cov = vec![0f64; in_dim * in_dim];
+        let mut centered = vec![0f32; in_dim];
+        for row in data.chunks_exact(in_dim) {
+            for (c, (r, m)) in centered.iter_mut().zip(row.iter().zip(mean.iter())) {
+                *c = r - m;
+            }
+            for i in 0..in_dim {
+                let ci = centered[i] as f64;
+                if ci == 0.0 {
+                    continue;
+                }
+                let dst = &mut cov[i * in_dim..(i + 1) * in_dim];
+                for (d, c) in dst.iter_mut().zip(centered.iter()) {
+                    *d += ci * *c as f64;
+                }
+            }
+        }
+        for v in cov.iter_mut() {
+            *v /= n as f64;
+        }
+
+        let mut components: Vec<Vec<f32>> = Vec::with_capacity(out_dim);
+        for _ in 0..out_dim {
+            let v = dominant_eigenvector(&cov, in_dim, 50, &mut rng);
+            // deflate: cov -= lambda v v^T, lambda = v^T cov v
+            let vf: Vec<f64> = v.iter().map(|x| *x as f64).collect();
+            let cv: Vec<f64> = (0..in_dim)
+                .map(|i| {
+                    cov[i * in_dim..(i + 1) * in_dim]
+                        .iter()
+                        .zip(vf.iter())
+                        .map(|(a, b)| a * b)
+                        .sum()
+                })
+                .collect();
+            let lambda: f64 = vf.iter().zip(cv.iter()).map(|(a, b)| a * b).sum();
+            for i in 0..in_dim {
+                for j in 0..in_dim {
+                    cov[i * in_dim + j] -= lambda * vf[i] * vf[j];
+                }
+            }
+            components.push(v);
+        }
+        Self { mean, components, input_dim: in_dim, output_dim: out_dim }
+    }
+
+    /// Project one feature vector into the PCA space.
+    pub fn project(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.input_dim);
+        debug_assert_eq!(out.len(), self.output_dim);
+        // (x - mean) . c  ==  x.c - mean.c ; precomputing mean.c per
+        // component would save a dot, but this runs off the hot path.
+        for (o, c) in out.iter_mut().zip(self.components.iter()) {
+            *o = dot(x, c) - dot(&self.mean, c);
+        }
+    }
+
+    /// Serialize to JSON (model checkpointing).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::arr_f32(&self.mean)),
+            (
+                "components",
+                Json::Arr(self.components.iter().map(|c| Json::arr_f32(c)).collect()),
+            ),
+            ("input_dim", Json::Num(self.input_dim as f64)),
+            ("output_dim", Json::Num(self.output_dim as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let components: Vec<Vec<f32>> = v
+            .get("components")?
+            .as_arr()?
+            .iter()
+            .map(|c| c.to_vec_f32())
+            .collect::<anyhow::Result<_>>()?;
+        let s = Self {
+            mean: v.get("mean")?.to_vec_f32()?,
+            components,
+            input_dim: v.get("input_dim")?.as_usize()?,
+            output_dim: v.get("output_dim")?.as_usize()?,
+        };
+        anyhow::ensure!(s.components.len() == s.output_dim, "component count mismatch");
+        anyhow::ensure!(
+            s.components.iter().all(|c| c.len() == s.input_dim),
+            "component dim mismatch"
+        );
+        Ok(s)
+    }
+
+    /// Project a whole row-major matrix [n, K] -> [n, k].
+    pub fn project_all(&self, data: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(data.len(), n * self.input_dim);
+        let mut out = vec![0f32; n * self.output_dim];
+        for (i, row) in data.chunks_exact(self.input_dim).enumerate() {
+            self.project(row, &mut out[i * self.output_dim..(i + 1) * self.output_dim]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm2;
+
+    /// Planted 2-factor data in 8 dims: PCA must put nearly all variance in
+    /// the first two components.
+    #[test]
+    fn recovers_planted_subspace() {
+        let (n, kin) = (2000usize, 8usize);
+        let mut rng = Rng::new(1);
+        let mut data = vec![0f32; n * kin];
+        let dir1: Vec<f32> = (0..kin).map(|i| if i < 4 { 0.5 } else { 0.0 }).collect();
+        let dir2: Vec<f32> = (0..kin).map(|i| if i >= 4 { 0.5 } else { 0.0 }).collect();
+        for r in 0..n {
+            let a = 5.0 * rng.normal();
+            let b = 3.0 * rng.normal();
+            for c in 0..kin {
+                data[r * kin + c] = a * dir1[c] + b * dir2[c] + 0.05 * rng.normal() + 1.0;
+            }
+        }
+        let pca = Pca::fit(&data, n, kin, 2, 7);
+        // components should be orthonormal
+        let c0 = &pca.components[0];
+        let c1 = &pca.components[1];
+        assert!((norm2(c0) - 1.0).abs() < 1e-4);
+        assert!((norm2(c1) - 1.0).abs() < 1e-4);
+        assert!(dot(c0, c1).abs() < 1e-3);
+        // c0 should align with dir1 (the higher-variance direction)
+        let d1n: Vec<f32> = dir1.iter().map(|x| x / norm2(&dir1)).collect();
+        assert!(dot(c0, &d1n).abs() > 0.99, "c0 misaligned: {:?}", c0);
+        // projection variance along comp0 >= comp1
+        let proj = pca.project_all(&data, n);
+        let var = |j: usize| -> f32 {
+            let m: f32 = (0..n).map(|i| proj[i * 2 + j]).sum::<f32>() / n as f32;
+            (0..n).map(|i| (proj[i * 2 + j] - m).powi(2)).sum::<f32>() / n as f32
+        };
+        assert!(var(0) > var(1));
+        assert!(var(0) > 5.0); // ~25 * |dir1|^2
+    }
+
+    #[test]
+    fn projection_is_centered() {
+        let (n, kin) = (500usize, 5usize);
+        let mut rng = Rng::new(2);
+        let data: Vec<f32> = (0..n * kin).map(|_| rng.normal() + 10.0).collect();
+        let pca = Pca::fit(&data, n, kin, 3, 3);
+        let proj = pca.project_all(&data, n);
+        for j in 0..3 {
+            let m: f32 = (0..n).map(|i| proj[i * 3 + j]).sum::<f32>() / n as f32;
+            assert!(m.abs() < 0.2, "component {j} mean {m}");
+        }
+    }
+
+    #[test]
+    fn dominant_eigenvector_of_diagonal() {
+        let mut rng = Rng::new(3);
+        let m = vec![4.0, 0.0, 0.0, 1.0];
+        let v = dominant_eigenvector(&m, 2, 100, &mut rng);
+        assert!(v[0].abs() > 0.999, "{v:?}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Dense symmetric positive-definite solver (Cholesky) for the auxiliary
+//! model's Newton steps, (k+1)×(k+1) with k ≤ 64.
+
+/// Solve `A x = b` for symmetric positive-definite `A` (row-major, n×n).
+/// Returns `None` if the factorization hits a non-positive pivot (A not
+/// SPD within tolerance). `A` and `b` are consumed as scratch copies.
+pub fn solve_spd(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    let mut l = a.to_vec();
+    // in-place Cholesky: L stored in lower triangle
+    for j in 0..n {
+        let mut d = l[j * n + j];
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[j * n + j] = dj;
+        for i in (j + 1)..n {
+            let mut s = l[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = s / dj;
+        }
+    }
+    // forward substitution: L y = b
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            y[i] -= l[i * n + k] * y[k];
+        }
+        y[i] /= l[i * n + i];
+    }
+    // back substitution: L^T x = y
+    let mut x = y;
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            x[i] -= l[k * n + i] * x[k];
+        }
+        x[i] /= l[i * n + i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matvec(a: &[f64], x: &[f64], n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn solves_identity() {
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let x = solve_spd(&a, &b, n).unwrap();
+        assert_eq!(x, b);
+    }
+
+    #[test]
+    fn solves_random_spd() {
+        // A = M^T M + I is SPD
+        let n = 6;
+        let m: Vec<f64> = (0..n * n).map(|i| ((i * 37 % 11) as f64) / 7.0 - 0.6).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += m[k * n + i] * m[k * n + j];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|i| i as f64 - 2.0).collect();
+        let x = solve_spd(&a, &b, n).unwrap();
+        let ax = matvec(&a, &x, n);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-9, "{} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = vec![1.0, 0.0, 0.0, -1.0]; // eigenvalues 1, -1
+        assert!(solve_spd(&a, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let a = vec![f64::NAN, 0.0, 0.0, 1.0];
+        assert!(solve_spd(&a, &[1.0, 1.0], 2).is_none());
+    }
+}

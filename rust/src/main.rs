@@ -1,0 +1,238 @@
+//! `repro` — CLI for the adversarial-softmax reproduction.
+//!
+//! The leader entrypoint: loads the AOT artifacts once, then runs
+//! training, evaluation, or any of the paper's experiments (DESIGN.md §5).
+//!
+//! ```text
+//! repro data-stats   --dataset tiny
+//! repro tree-fit     --dataset wiki-sim --aux-dim 16 [--save tree.json]
+//! repro train        --dataset tiny --method adversarial --seconds 30
+//! repro exp table1
+//! repro exp figure1  --dataset wiki-sim --seconds 60 [--methods adv,uniform]
+//! repro exp appendix-a2 --seconds 60
+//! repro exp snr      --mc-samples 200000
+//! repro exp tree-quality --dataset wiki-sim
+//! repro exp ablation-bias|ablation-k|ablation-reg --dataset tiny
+//! ```
+
+use adv_softmax::config::{DatasetPreset, Method, RunConfig, SyntheticConfig};
+use adv_softmax::data::Splits;
+use adv_softmax::exp;
+use adv_softmax::runtime::Registry;
+use adv_softmax::sampler::AdversarialSampler;
+use adv_softmax::train::TrainRun;
+use adv_softmax::utils::cli::Args;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+const USAGE: &str = "usage: repro <data-stats|tree-fit|train|exp> [options]
+  global: --artifacts <dir>
+  run `repro help` for the full command list (also in rust/src/main.rs)";
+
+fn open_registry(args: &Args) -> Result<Registry> {
+    match args.get_opt::<PathBuf>("artifacts")? {
+        Some(dir) => Registry::open(&dir),
+        None => Registry::open_default(),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.pos(0) {
+        Some("data-stats") => data_stats(&args),
+        Some("tree-fit") => tree_fit(&args),
+        Some("train") => train(&args),
+        Some("exp") => run_exp(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn data_stats(args: &Args) -> Result<()> {
+    let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
+    args.finish()?;
+    let syn = SyntheticConfig::preset(dataset);
+    let splits = Splits::synthetic(&syn);
+    let counts = splits.train.label_counts();
+    let max_c = counts.iter().max().copied().unwrap_or(0);
+    println!("dataset          : {dataset}");
+    println!(
+        "train/valid/test : {} / {} / {}",
+        splits.train.len(),
+        splits.valid.len(),
+        splits.test.len()
+    );
+    println!("feat dim K       : {}", splits.train.feat_dim);
+    println!("classes C        : {}", splits.train.num_classes);
+    println!("populated classes: {}", splits.train.populated_classes());
+    println!("max label count  : {max_c}");
+    Ok(())
+}
+
+fn tree_fit(args: &Args) -> Result<()> {
+    let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
+    let aux_dim: usize = args.get("aux-dim", 16)?;
+    let seed: u64 = args.get("seed", 1)?;
+    let save: Option<PathBuf> = args.get_opt("save")?;
+    args.finish()?;
+
+    let syn = SyntheticConfig::preset(dataset);
+    let splits = Splits::synthetic(&syn);
+    let cfg = adv_softmax::config::TreeConfig { aux_dim, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let (adv, stats) = AdversarialSampler::fit(&splits.train, &cfg, seed);
+    println!(
+        "fitted {} nodes in {:.2}s ({} newton iters, {} alternations, {} forced)",
+        stats.nodes_fitted,
+        t0.elapsed().as_secs_f64(),
+        stats.newton_iters_total,
+        stats.alternations_total,
+        stats.forced_nodes,
+    );
+    println!("train mean log p_n(y|x): {:.4}", stats.train_mean_loglik);
+    println!(
+        "uniform baseline        : {:.4}",
+        -(splits.train.num_classes as f64).ln()
+    );
+    if let Some(path) = save {
+        adv.save(&path)?;
+        println!("saved sampler to {path:?}");
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let registry = open_registry(args)?;
+    let cfg = match args.get_opt::<PathBuf>("config")? {
+        Some(p) => RunConfig::load(&p)?,
+        None => {
+            let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
+            let method: Method = args.get("method", Method::Adversarial)?;
+            let mut c = RunConfig::new(dataset, method);
+            c.max_seconds = args.get("seconds", 30.0)?;
+            c.max_steps = args.get("max-steps", 100_000)?;
+            c.seed = args.get("seed", 1)?;
+            c.eval_points = args.get("eval-points", 2048)?;
+            c.pipelined = !args.flag("no-pipeline")?;
+            c
+        }
+    };
+    let out: Option<PathBuf> = args.get_opt("out")?;
+    args.finish()?;
+
+    let splits = Splits::synthetic(&SyntheticConfig::preset(cfg.dataset));
+    let mut run = TrainRun::prepare(&registry, &splits, &cfg)?;
+    let curve = run.train()?;
+    println!("step      wall_s   train_loss   test_loglik   test_acc");
+    for p in &curve.points {
+        println!(
+            "{:>8} {:>8.1} {:>12.4} {:>13.4} {:>10.4}",
+            p.step, p.wall_s, p.train_loss, p.log_likelihood, p.accuracy
+        );
+    }
+    if let Some(path) = out {
+        curve.append_csv(&path)?;
+        println!("curve appended to {path:?}");
+    }
+    Ok(())
+}
+
+fn run_exp(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        Some("table1") => {
+            args.finish()?;
+            exp::table1::run(&[DatasetPreset::WikiSim, DatasetPreset::AmazonSim])?;
+        }
+        Some("figure1") => {
+            let registry = open_registry(args)?;
+            let dataset: DatasetPreset = args.get("dataset", DatasetPreset::WikiSim)?;
+            let seconds: f64 = args.get("seconds", 60.0)?;
+            let seed: u64 = args.get("seed", 1)?;
+            let methods = match args.get_opt::<String>("methods")? {
+                Some(s) => s
+                    .split(',')
+                    .map(|m| m.trim().parse())
+                    .collect::<Result<Vec<Method>>>()?,
+                None => Method::ALL_SAMPLING.to_vec(),
+            };
+            args.finish()?;
+            let opts = exp::figure1::Figure1Opts {
+                dataset,
+                methods,
+                seconds_per_method: seconds,
+                seed,
+                ..Default::default()
+            };
+            exp::figure1::run(&registry, &opts)?;
+        }
+        Some("appendix-a2") => {
+            let registry = open_registry(args)?;
+            let opts = exp::appendix_a2::A2Opts {
+                seconds_per_method: args.get("seconds", 60.0)?,
+                seed: args.get("seed", 1)?,
+                ..Default::default()
+            };
+            args.finish()?;
+            let r = exp::appendix_a2::run(&registry, &opts)?;
+            println!(
+                "\npaper (EURLex-4K): softmax 33.6% vs uniform-NS 26.4%; \
+                 here: {:.1}% vs {:.1}%",
+                100.0 * r.softmax_acc,
+                100.0 * r.uniform_acc
+            );
+        }
+        Some("snr") => {
+            let opts = exp::snr::SnrOpts {
+                mc_samples: args.get("mc-samples", 200_000)?,
+                seed: args.get("seed", 1)?,
+                ..Default::default()
+            };
+            args.finish()?;
+            exp::snr::run(&opts)?;
+        }
+        Some("tree-quality") => {
+            let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
+            let aux_dim: usize = args.get("aux-dim", 16)?;
+            let seed: u64 = args.get("seed", 1)?;
+            args.finish()?;
+            exp::tree_quality::run(dataset, aux_dim, seed)?;
+        }
+        Some("ablation-bias") => {
+            let registry = open_registry(args)?;
+            let opts = ablation_opts(args)?;
+            args.finish()?;
+            exp::ablations::bias_removal(&registry, &opts)?;
+        }
+        Some("ablation-k") => {
+            let registry = open_registry(args)?;
+            let opts = ablation_opts(args)?;
+            let ks: Vec<usize> = args
+                .get::<String>("ks", "2,4,8,16,32".into())?
+                .split(',')
+                .map(|s| s.trim().parse())
+                .collect::<Result<_, _>>()?;
+            args.finish()?;
+            exp::ablations::aux_dim_sweep(&registry, &opts, &ks)?;
+        }
+        Some("ablation-reg") => {
+            let registry = open_registry(args)?;
+            let opts = ablation_opts(args)?;
+            args.finish()?;
+            exp::ablations::regularizer(&registry, &opts)?;
+        }
+        other => bail!("unknown experiment {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn ablation_opts(args: &Args) -> Result<exp::ablations::AblationOpts> {
+    Ok(exp::ablations::AblationOpts {
+        dataset: args.get("dataset", DatasetPreset::Tiny)?,
+        seconds: args.get("seconds", 30.0)?,
+        max_steps: args.get("max-steps", 3_000)?,
+        seed: args.get("seed", 1)?,
+    })
+}

@@ -1,0 +1,110 @@
+//! Per-coordinate Adagrad (Duchi et al., 2011), the optimizer used for the
+//! proposed method and baselines (i)-(iii) in the paper's experiments.
+//!
+//! State is one accumulator per parameter: G += g²; θ -= ρ g / (√G + ε).
+//! Kept separate from [`super::ParamStore`] so trainers can reset or swap
+//! optimizer state without touching parameters.
+
+/// Adagrad accumulators for a [C, K] weight matrix + [C] bias vector.
+#[derive(Clone, Debug)]
+pub struct Adagrad {
+    pub lr: f32,
+    pub eps: f32,
+    gw2: Vec<f32>,
+    gb2: Vec<f32>,
+    feat_dim: usize,
+}
+
+impl Adagrad {
+    pub fn new(num_classes: usize, feat_dim: usize, lr: f32) -> Self {
+        Self {
+            lr,
+            eps: 1e-8,
+            gw2: vec![0f32; num_classes * feat_dim],
+            gb2: vec![0f32; num_classes],
+            feat_dim,
+        }
+    }
+
+    /// Apply one row update: g is the gradient of row `y`, gb the bias grad.
+    #[inline]
+    pub fn update_row(&mut self, y: usize, g: &[f32], gb: f32, w: &mut [f32], b: &mut [f32]) {
+        let k = self.feat_dim;
+        debug_assert_eq!(g.len(), k);
+        let acc = &mut self.gw2[y * k..(y + 1) * k];
+        let row = &mut w[y * k..(y + 1) * k];
+        let lr = self.lr;
+        let eps = self.eps;
+        for j in 0..k {
+            let gj = g[j];
+            acc[j] += gj * gj;
+            row[j] -= lr * gj / (acc[j].sqrt() + eps);
+        }
+        self.gb2[y] += gb * gb;
+        b[y] -= lr * gb / (self.gb2[y].sqrt() + eps);
+    }
+
+    /// Reset all accumulators (e.g. between experiment repetitions).
+    pub fn reset(&mut self) {
+        self.gw2.iter_mut().for_each(|v| *v = 0.0);
+        self.gb2.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // With G = g², the first update is -lr * g/|g| = -lr * sign(g).
+        let mut opt = Adagrad::new(1, 2, 0.1);
+        let mut w = vec![0f32; 2];
+        let mut b = vec![0f32; 1];
+        opt.update_row(0, &[4.0, -0.25], 1.0, &mut w, &mut b);
+        assert!((w[0] + 0.1).abs() < 1e-4);
+        assert!((w[1] - 0.1).abs() < 1e-4);
+        assert!((b[0] + 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn steps_shrink_over_time() {
+        let mut opt = Adagrad::new(1, 1, 0.1);
+        let mut w = vec![0f32; 1];
+        let mut b = vec![0f32; 1];
+        let mut prev = 0f32;
+        let mut deltas = vec![];
+        for _ in 0..5 {
+            opt.update_row(0, &[1.0], 0.0, &mut w, &mut b);
+            deltas.push((w[0] - prev).abs());
+            prev = w[0];
+        }
+        for i in 1..deltas.len() {
+            assert!(deltas[i] < deltas[i - 1]);
+        }
+    }
+
+    #[test]
+    fn reset_restores_first_step_size() {
+        let mut opt = Adagrad::new(1, 1, 0.1);
+        let mut w = vec![0f32; 1];
+        let mut b = vec![0f32; 1];
+        for _ in 0..10 {
+            opt.update_row(0, &[1.0], 0.0, &mut w, &mut b);
+        }
+        opt.reset();
+        let before = w[0];
+        opt.update_row(0, &[1.0], 0.0, &mut w, &mut b);
+        assert!((w[0] - before + 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_gradient_is_noop() {
+        let mut opt = Adagrad::new(1, 2, 0.1);
+        let mut w = vec![1f32, 2.0];
+        let mut b = vec![3f32];
+        opt.update_row(0, &[0.0, 0.0], 0.0, &mut w, &mut b);
+        assert_eq!(w, vec![1.0, 2.0]);
+        assert_eq!(b, vec![3.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! The main model's parameter store and sparse Adagrad optimizer.
+//!
+//! The classifier is affine-linear (paper Sec. 5): ξ_y(x, φ) = w_y·x + b_y
+//! with φ = {W ∈ R^{C×K}, b ∈ R^C}. Rust owns the parameters; the HLO
+//! training step consumes *gathered* rows and returns row gradients, which
+//! are scattered back here with Adagrad state (Duchi et al., 2011) kept
+//! per-coordinate. Sampling-based methods touch only 2B rows per step, so
+//! updates are O(B·K) regardless of C.
+
+pub mod adagrad;
+
+pub use adagrad::Adagrad;
+
+use crate::utils::Rng;
+
+/// Dense parameter matrix (W, b) with per-coordinate Adagrad accumulators.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub num_classes: usize,
+    pub feat_dim: usize,
+    /// Row-major [C, K].
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub opt: Adagrad,
+}
+
+impl ParamStore {
+    /// Zero-initialized parameters (the convex objective needs no random
+    /// init; zero scores mean σ(ξ)=1/2 everywhere).
+    pub fn zeros(num_classes: usize, feat_dim: usize, lr: f32) -> Self {
+        Self {
+            num_classes,
+            feat_dim,
+            w: vec![0f32; num_classes * feat_dim],
+            b: vec![0f32; num_classes],
+            opt: Adagrad::new(num_classes, feat_dim, lr),
+        }
+    }
+
+    /// Small random init (used by the SNR experiment to start near but not
+    /// at the symmetric point).
+    pub fn random(num_classes: usize, feat_dim: usize, lr: f32, scale: f32, rng: &mut Rng) -> Self {
+        let mut s = Self::zeros(num_classes, feat_dim, lr);
+        for v in s.w.iter_mut() {
+            *v = scale * rng.normal();
+        }
+        s
+    }
+
+    #[inline]
+    pub fn row(&self, y: u32) -> &[f32] {
+        let y = y as usize;
+        &self.w[y * self.feat_dim..(y + 1) * self.feat_dim]
+    }
+
+    /// Gather label rows into a dense [B, K] buffer + [B] bias buffer.
+    pub fn gather(&self, labels: &[u32], w_out: &mut [f32], b_out: &mut [f32]) {
+        debug_assert_eq!(w_out.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(b_out.len(), labels.len());
+        for (i, &y) in labels.iter().enumerate() {
+            w_out[i * self.feat_dim..(i + 1) * self.feat_dim].copy_from_slice(self.row(y));
+            b_out[i] = self.b[y as usize];
+        }
+    }
+
+    /// Scatter row gradients back with an Adagrad update. Duplicate labels
+    /// in the batch are applied sequentially (equivalent to processing the
+    /// batch as B independent SGD examples).
+    pub fn apply_sparse(&mut self, labels: &[u32], gw: &[f32], gb: &[f32]) {
+        debug_assert_eq!(gw.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(gb.len(), labels.len());
+        let k = self.feat_dim;
+        for (i, &y) in labels.iter().enumerate() {
+            self.opt.update_row(
+                y as usize,
+                &gw[i * k..(i + 1) * k],
+                gb[i],
+                &mut self.w,
+                &mut self.b,
+            );
+        }
+    }
+
+    /// Dense update over all rows (full-softmax baseline).
+    pub fn apply_dense(&mut self, gw: &[f32], gb: &[f32]) {
+        debug_assert_eq!(gw.len(), self.w.len());
+        debug_assert_eq!(gb.len(), self.b.len());
+        let k = self.feat_dim;
+        for y in 0..self.num_classes {
+            self.opt.update_row(y, &gw[y * k..(y + 1) * k], gb[y], &mut self.w, &mut self.b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_roundtrip() {
+        let mut p = ParamStore::zeros(4, 3, 0.1);
+        p.w.copy_from_slice(&[
+            0.0, 0.1, 0.2, //
+            1.0, 1.1, 1.2, //
+            2.0, 2.1, 2.2, //
+            3.0, 3.1, 3.2,
+        ]);
+        p.b.copy_from_slice(&[0.5, 1.5, 2.5, 3.5]);
+        let labels = [2u32, 0, 2];
+        let mut w = vec![0f32; 9];
+        let mut b = vec![0f32; 3];
+        p.gather(&labels, &mut w, &mut b);
+        assert_eq!(&w[0..3], &[2.0, 2.1, 2.2]);
+        assert_eq!(&w[3..6], &[0.0, 0.1, 0.2]);
+        assert_eq!(b, vec![2.5, 0.5, 2.5]);
+    }
+
+    #[test]
+    fn sparse_update_only_touches_given_rows() {
+        let mut p = ParamStore::zeros(4, 2, 0.5);
+        let labels = [1u32];
+        p.apply_sparse(&labels, &[1.0, -1.0], &[2.0]);
+        assert_eq!(&p.w[0..2], &[0.0, 0.0]);
+        assert_ne!(&p.w[2..4], &[0.0, 0.0]);
+        assert_eq!(&p.w[4..8], &[0.0; 4]);
+        assert_eq!(p.b[0], 0.0);
+        assert_ne!(p.b[1], 0.0);
+    }
+
+    #[test]
+    fn update_moves_against_gradient() {
+        let mut p = ParamStore::zeros(2, 2, 0.1);
+        p.apply_sparse(&[0], &[1.0, -2.0], &[3.0]);
+        assert!(p.w[0] < 0.0);
+        assert!(p.w[1] > 0.0);
+        assert!(p.b[0] < 0.0);
+    }
+
+    #[test]
+    fn duplicate_labels_accumulate() {
+        let mut a = ParamStore::zeros(2, 1, 0.1);
+        let mut b = ParamStore::zeros(2, 1, 0.1);
+        a.apply_sparse(&[0, 0], &[1.0, 1.0], &[0.0, 0.0]);
+        b.apply_sparse(&[0], &[1.0], &[0.0]);
+        assert!(a.w[0] < b.w[0], "{} vs {}", a.w[0], b.w[0]);
+    }
+
+    #[test]
+    fn dense_update_touches_all_rows() {
+        let mut p = ParamStore::zeros(3, 1, 0.1);
+        p.apply_dense(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]);
+        assert!(p.w.iter().all(|&v| v < 0.0));
+        assert!(p.b.iter().all(|&v| v < 0.0));
+    }
+}

@@ -1,0 +1,77 @@
+//! Literal construction/extraction helpers.
+//!
+//! `Literal::create_from_shape_and_untyped_data` copies straight from the
+//! host slice (no element-wise conversion), which keeps the hot path's
+//! literal creation at memcpy speed.
+
+use anyhow::{Context, Result};
+
+/// f32 literal with the given dims from a host slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "lit_f32: {} elements for dims {dims:?}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .context("create f32 literal")
+}
+
+/// i32 literal with the given dims from a host slice.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "lit_i32: {} elements for dims {dims:?}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .context("create i32 literal")
+}
+
+/// Copy a literal out as f32s.
+pub fn read_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("read f32 literal")
+}
+
+/// Copy a literal out as i32s.
+pub fn read_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("read i32 literal")
+}
+
+/// Copy a literal into an existing f32 buffer (avoids an allocation).
+pub fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to::<f32>(out).context("copy f32 literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(read_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(read_i32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn read_into_buffer() {
+        let data = vec![7.0f32; 8];
+        let lit = lit_f32(&data, &[8]).unwrap();
+        let mut out = vec![0f32; 8];
+        read_f32_into(&lit, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+}

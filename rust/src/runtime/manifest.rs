@@ -1,0 +1,170 @@
+//! Typed view of `artifacts/manifest.json` written by `aot.py`.
+
+use crate::utils::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape + dtype of one tensor operand.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: v.get("shape")?.to_vec_usize()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: v.get("file")?.as_str()?.to_string(),
+            sha256: v
+                .opt("sha256")
+                .and_then(|s| s.as_str().ok())
+                .unwrap_or("")
+                .to_string(),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+        })
+    }
+}
+
+/// Shape constants the artifacts were lowered with.
+#[derive(Clone, Debug, Default)]
+pub struct ManifestShapes {
+    pub train_b: usize,
+    pub eval_b: usize,
+    pub feat_k: usize,
+    pub aux_k: usize,
+    pub eval_c: usize,
+    pub eval_ca: usize,
+    pub softmax_c: usize,
+}
+
+impl ManifestShapes {
+    fn from_json(v: &Json) -> Result<Self> {
+        let g = |k: &str| -> Result<usize> { v.get(k)?.as_usize() };
+        Ok(Self {
+            train_b: g("train_b")?,
+            eval_b: g("eval_b")?,
+            feat_k: g("feat_k")?,
+            aux_k: g("aux_k")?,
+            eval_ca: v.opt("eval_ca").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            eval_c: g("eval_c")?,
+            softmax_c: g("softmax_c")?,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub version: u64,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub shapes: ManifestShapes,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parse manifest.json")?;
+        let format = v.get("format")?.as_str()?.to_string();
+        anyhow::ensure!(format == "hlo-text", "unsupported format {format:?}");
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta::from_json(meta).with_context(|| format!("artifact {name}"))?,
+            );
+        }
+        Ok(Self {
+            format,
+            version: v.get("version")?.as_u64()?,
+            artifacts,
+            shapes: ManifestShapes::from_json(v.get("shapes")?)?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text",
+        "version": 1,
+        "artifacts": {
+            "ns_grad_B256_K64": {
+                "file": "ns_grad_B256_K64.hlo.txt",
+                "sha256": "abc",
+                "inputs": [{"shape": [256, 64], "dtype": "float32"},
+                           {"shape": [1], "dtype": "float32"}],
+                "outputs": [{"shape": [256], "dtype": "float32"}]
+            }
+        },
+        "shapes": {"train_b": 256, "eval_b": 256, "feat_k": 64,
+                   "aux_k": 16, "eval_c": 2048, "eval_ca": 2048,
+                   "softmax_c": 4096}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let a = &m.artifacts["ns_grad_B256_K64"];
+        assert_eq!(a.inputs[0].shape, vec![256, 64]);
+        assert_eq!(a.inputs[0].num_elements(), 256 * 64);
+        assert_eq!(a.outputs.len(), 1);
+        assert_eq!(m.shapes.feat_k, 64);
+        assert_eq!(m.shapes.eval_ca, 2048);
+    }
+
+    #[test]
+    fn scalar_tensor_has_one_element() {
+        let t = TensorMeta { shape: vec![], dtype: "float32".into() };
+        assert_eq!(t.num_elements(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_file_fails_gracefully() {
+        assert!(Manifest::load(Path::new("/nonexistent/manifest.json")).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Python is never involved at runtime; the [`Registry`] compiles every
+//! artifact once per process and hands out shape-checked handles.
+
+pub mod literal;
+pub mod manifest;
+
+pub use literal::{lit_f32, lit_i32, read_f32, read_i32};
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One compiled executable plus its manifest metadata.
+pub struct Executable {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape-checked literals; returns the flattened output
+    /// tuple in manifest order.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        #[cfg(debug_assertions)]
+        for (i, (lit, spec)) in inputs.iter().zip(self.meta.inputs.iter()).enumerate() {
+            let n: usize = spec.shape.iter().product::<usize>().max(1);
+            if lit.element_count() != n {
+                bail!(
+                    "{}: input {i} has {} elements, expected {} (shape {:?})",
+                    self.name,
+                    lit.element_count(),
+                    n,
+                    spec.shape
+                );
+            }
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        let outs = result
+            .to_tuple()
+            .with_context(|| format!("untuple result of {}", self.name))?;
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name,
+                outs.len(),
+                self.meta.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Loads the manifest, compiles all artifacts once, and serves handles.
+pub struct Registry {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, Arc<Executable>>,
+    dir: PathBuf,
+}
+
+impl Registry {
+    /// Open `artifacts/` (or another directory) and compile everything in
+    /// its manifest eagerly. Compilation is a one-time per-process cost.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("load manifest from {dir:?} — run `make artifacts`?"))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, meta) in &manifest.artifacts {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            executables.insert(
+                name.clone(),
+                Arc::new(Executable { name: name.clone(), meta: meta.clone(), exe }),
+            );
+        }
+        Ok(Self { client, manifest, executables, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact directory: `$REPRO_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("REPRO_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // walk up from cwd looking for artifacts/manifest.json
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Handle for a named artifact.
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        self.executables
+            .get(name)
+            .cloned()
+            .with_context(|| {
+                format!(
+                    "artifact {name:?} not in manifest (have: {:?})",
+                    self.executables.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Find the unique artifact whose name starts with `prefix`.
+    pub fn get_by_prefix(&self, prefix: &str) -> Result<Arc<Executable>> {
+        let mut hits: Vec<&String> = self
+            .executables
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .collect();
+        match hits.len() {
+            1 => self.get(hits.pop().unwrap()),
+            0 => bail!("no artifact matching prefix {prefix:?}"),
+            _ => bail!("ambiguous prefix {prefix:?}: {hits:?}"),
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}

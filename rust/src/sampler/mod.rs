@@ -1,0 +1,327 @@
+//! Noise distributions p_n for negative sampling.
+//!
+//! Three families from the paper's Sec. 5 comparison:
+//! * [`UniformSampler`] — baseline (i): p_n(y') = 1/C.
+//! * [`FrequencySampler`] — baseline (ii): p_n(y') ∝ empirical label
+//!   frequency (word2vec-style), O(1) draws via an alias table.
+//! * [`AdversarialSampler`] — the proposed conditional model
+//!   p_n(y'|x): PCA projection + the fitted probabilistic decision tree,
+//!   O(k log C) draws (Sec. 3). Also serves as the NCE base distribution.
+//!
+//! All samplers expose exact `log_prob`, which the training losses (Eq. 6,
+//! NCE) and the Eq. 5 bias correction consume.
+
+use crate::config::TreeConfig;
+use crate::data::Dataset;
+use crate::linalg::Pca;
+use crate::tree::{fit::fit_tree, FitStats, Tree};
+use crate::utils::json::Json;
+use crate::utils::{AliasTable, Rng};
+use std::path::Path;
+
+/// A conditional noise distribution over labels.
+///
+/// `x` is the *raw* feature vector; conditional samplers project it
+/// internally. Unconditional samplers ignore it.
+pub trait NoiseSampler: Send + Sync {
+    /// Draw y' ~ p_n(·|x); returns (label, log p_n(label|x)).
+    fn sample(&self, x: &[f32], rng: &mut Rng) -> (u32, f32);
+
+    /// log p_n(y|x).
+    fn log_prob(&self, x: &[f32], y: u32) -> f32;
+
+    /// Fill `out[c] = log p_n(c|x)` for all labels. Default loops over
+    /// `log_prob`; conditional samplers override with an O(kC) sweep.
+    fn log_prob_all(&self, x: &[f32], out: &mut [f32]) {
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = self.log_prob(x, c as u32);
+        }
+    }
+
+    /// Is p_n conditional on x?
+    fn is_conditional(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// uniform
+// ---------------------------------------------------------------------------
+
+/// p_n(y') = 1/C.
+#[derive(Clone, Debug)]
+pub struct UniformSampler {
+    num_classes: usize,
+    log_p: f32,
+}
+
+impl UniformSampler {
+    pub fn new(num_classes: usize) -> Self {
+        assert!(num_classes > 0);
+        Self { num_classes, log_p: -(num_classes as f32).ln() }
+    }
+}
+
+impl NoiseSampler for UniformSampler {
+    fn sample(&self, _x: &[f32], rng: &mut Rng) -> (u32, f32) {
+        (rng.below(self.num_classes) as u32, self.log_p)
+    }
+
+    fn log_prob(&self, _x: &[f32], _y: u32) -> f32 {
+        self.log_p
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// empirical frequency
+// ---------------------------------------------------------------------------
+
+/// p_n(y') ∝ count(y') with optional additive smoothing so every label has
+/// nonzero probability (needed for finite log-probs in Eq. 6).
+#[derive(Clone, Debug)]
+pub struct FrequencySampler {
+    table: AliasTable,
+}
+
+impl FrequencySampler {
+    pub fn from_dataset(data: &Dataset, smoothing: f64) -> anyhow::Result<Self> {
+        let counts = data.label_counts();
+        let weights: Vec<f64> = counts.iter().map(|&c| c as f64 + smoothing).collect();
+        Ok(Self { table: AliasTable::new(&weights)? })
+    }
+}
+
+impl NoiseSampler for FrequencySampler {
+    fn sample(&self, _x: &[f32], rng: &mut Rng) -> (u32, f32) {
+        let y = self.table.sample(rng);
+        (y as u32, self.table.log_prob(y))
+    }
+
+    fn log_prob(&self, _x: &[f32], y: u32) -> f32 {
+        self.table.log_prob(y as usize)
+    }
+
+    fn name(&self) -> &'static str {
+        "frequency"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// adversarial (PCA + tree)
+// ---------------------------------------------------------------------------
+
+/// The paper's auxiliary model: PCA to k dims, then the probabilistic
+/// decision tree of Sec. 3.
+#[derive(Clone, Debug)]
+pub struct AdversarialSampler {
+    pub pca: Pca,
+    pub tree: Tree,
+}
+
+impl AdversarialSampler {
+    /// Fit PCA + tree on the training set. Returns fit diagnostics.
+    pub fn fit(data: &Dataset, cfg: &TreeConfig, seed: u64) -> (Self, FitStats) {
+        let k = cfg.aux_dim.min(data.feat_dim);
+        let pca = Pca::fit(&data.features, data.len(), data.feat_dim, k, seed);
+        let x_proj = pca.project_all(&data.features, data.len());
+        let mut rng = Rng::new(seed ^ 0x7ee);
+        let (tree, stats) = fit_tree(
+            &x_proj,
+            &data.labels,
+            data.len(),
+            k,
+            data.num_classes,
+            cfg,
+            &mut rng,
+        );
+        (Self { pca, tree }, stats)
+    }
+
+    /// Projected feature dimension k.
+    pub fn aux_dim(&self) -> usize {
+        self.tree.aux_dim
+    }
+
+    /// Project raw features into the tree's input space.
+    pub fn project(&self, x: &[f32], out: &mut [f32]) {
+        self.pca.project(x, out);
+    }
+
+    /// Serialize to JSON (PCA + tree in one checkpoint).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pca", self.pca.to_json()),
+            ("tree", self.tree.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            pca: Pca::from_json(v.get("pca")?)?,
+            tree: Tree::from_json(v.get("tree")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        Ok(std::fs::write(path, self.to_json().to_string())?)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+impl NoiseSampler for AdversarialSampler {
+    fn sample(&self, x: &[f32], rng: &mut Rng) -> (u32, f32) {
+        let mut proj = [0f32; 64];
+        let k = self.aux_dim();
+        debug_assert!(k <= 64);
+        self.pca.project(x, &mut proj[..k]);
+        self.tree.sample(&proj[..k], rng)
+    }
+
+    fn log_prob(&self, x: &[f32], y: u32) -> f32 {
+        let mut proj = [0f32; 64];
+        let k = self.aux_dim();
+        self.pca.project(x, &mut proj[..k]);
+        self.tree.log_prob(&proj[..k], y)
+    }
+
+    fn log_prob_all(&self, x: &[f32], out: &mut [f32]) {
+        let mut proj = [0f32; 64];
+        let k = self.aux_dim();
+        self.pca.project(x, &mut proj[..k]);
+        self.tree.log_prob_all(&proj[..k], out);
+    }
+
+    fn is_conditional(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "adversarial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetPreset, SyntheticConfig};
+    use crate::data::Splits;
+
+    fn tiny_splits() -> Splits {
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 4096;
+        Splits::synthetic(&cfg)
+    }
+
+    #[test]
+    fn uniform_sampler_covers_labels() {
+        let s = UniformSampler::new(16);
+        let mut rng = Rng::new(1);
+        let mut seen = vec![false; 16];
+        for _ in 0..2000 {
+            let (y, lp) = s.sample(&[], &mut rng);
+            assert!((lp + (16f32).ln()).abs() < 1e-6);
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn frequency_sampler_matches_counts() {
+        let d = tiny_splits().train;
+        let s = FrequencySampler::from_dataset(&d, 0.0).unwrap();
+        let counts = d.label_counts();
+        let n = d.len() as f64;
+        let mut rng = Rng::new(2);
+        // empirical check on the most frequent label
+        let top = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .unwrap()
+            .0;
+        let draws = 200_000;
+        let mut hits = 0usize;
+        for _ in 0..draws {
+            if s.sample(&[], &mut rng).0 as usize == top {
+                hits += 1;
+            }
+        }
+        let expect = counts[top] as f64 / n;
+        let got = hits as f64 / draws as f64;
+        assert!((got - expect).abs() < 0.01, "got {got}, expect {expect}");
+        assert!((s.log_prob(&[], top as u32) - (expect as f32).ln()).abs() < 0.01);
+    }
+
+    #[test]
+    fn frequency_smoothing_gives_finite_logprob_to_unseen() {
+        let d = tiny_splits().train;
+        let counts = d.label_counts();
+        if let Some(unseen) = counts.iter().position(|&c| c == 0) {
+            let s0 = FrequencySampler::from_dataset(&d, 0.0).unwrap();
+            let s1 = FrequencySampler::from_dataset(&d, 1.0).unwrap();
+            assert_eq!(s0.log_prob(&[], unseen as u32), f32::NEG_INFINITY);
+            assert!(s1.log_prob(&[], unseen as u32).is_finite());
+        }
+    }
+
+    #[test]
+    fn adversarial_sampler_fits_and_normalizes() {
+        let splits = tiny_splits();
+        let cfg = TreeConfig { aux_dim: 8, ..Default::default() };
+        let (s, stats) = AdversarialSampler::fit(&splits.train, &cfg, 5);
+        assert!(stats.nodes_fitted > 0);
+        assert!(s.is_conditional());
+        let x = splits.test.x(0);
+        let mut lps = vec![0f32; splits.train.num_classes];
+        s.log_prob_all(x, &mut lps);
+        let total: f64 = lps.iter().map(|&l| (l as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-4, "total {total}");
+        // sample/log_prob consistency
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let (y, lp) = s.sample(x, &mut rng);
+            assert!((lp - s.log_prob(x, y)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn adversarial_beats_frequency_loglik() {
+        // The conditional model must explain held-out labels better than
+        // the best unconditional model — the premise of the whole paper.
+        let splits = tiny_splits();
+        let cfg = TreeConfig { aux_dim: 8, ..Default::default() };
+        let (adv, _) = AdversarialSampler::fit(&splits.train, &cfg, 5);
+        let freq = FrequencySampler::from_dataset(&splits.train, 1.0).unwrap();
+        let d = &splits.test;
+        let (mut la, mut lf) = (0f64, 0f64);
+        for i in 0..d.len() {
+            la += adv.log_prob(d.x(i), d.y(i)) as f64;
+            lf += freq.log_prob(d.x(i), d.y(i)) as f64;
+        }
+        la /= d.len() as f64;
+        lf /= d.len() as f64;
+        assert!(la > lf + 0.2, "adv {la:.3} vs freq {lf:.3}");
+    }
+
+    #[test]
+    fn adversarial_save_load_roundtrip() {
+        let splits = tiny_splits();
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let (s, _) = AdversarialSampler::fit(&splits.train, &cfg, 5);
+        let dir = std::env::temp_dir().join("adv_softmax_test_sampler.json");
+        s.save(&dir).unwrap();
+        let back = AdversarialSampler::load(&dir).unwrap();
+        let x = splits.test.x(3);
+        assert_eq!(s.log_prob(x, 7), back.log_prob(x, 7));
+        std::fs::remove_file(dir).ok();
+    }
+}

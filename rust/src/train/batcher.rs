@@ -1,0 +1,276 @@
+//! Batch assembly: positives from the (shuffled) training stream, negatives
+//! from the configured noise distribution.
+//!
+//! Negative generation is the paper's O(k log C) hot loop (tree descents),
+//! and it depends only on features — never on the evolving parameters — so
+//! the [`super::pipeline`] module can run it on a worker thread fully
+//! overlapped with PJRT execution and the Adagrad scatter.
+
+use crate::config::Method;
+use crate::data::Dataset;
+use crate::sampler::{AdversarialSampler, FrequencySampler, NoiseSampler, UniformSampler};
+use crate::utils::Rng;
+use std::sync::Arc;
+
+/// One assembled raw batch (parameter rows are gathered later, on the
+/// thread that owns the parameters).
+#[derive(Clone, Debug)]
+pub struct RawBatch {
+    /// Features, [B, K] row-major.
+    pub x: Vec<f32>,
+    /// Positive labels, [B].
+    pub pos: Vec<u32>,
+    /// Negative labels, [B] (unused for softmax).
+    pub neg: Vec<u32>,
+    /// log p_n(y|x) for positives (NS/NCE) — zeros for pairwise/softmax.
+    pub lpn_p: Vec<f32>,
+    /// log p_n(y'|x) for negatives (NS/NCE) or the importance weight
+    /// `scale` (OVE/A&R).
+    pub lpn_n: Vec<f32>,
+}
+
+/// Which operand layout the method's HLO step consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchMode {
+    /// x, wp, bp, wn, bn, lpn_p, lpn_n (ns_grad / nce_grad artifacts).
+    NsLike,
+    /// x, wp, bp, wn, bn, scale (ove_grad artifact).
+    Pairwise,
+    /// x, y only (softmax_grad artifact).
+    Softmax,
+}
+
+impl BatchMode {
+    pub fn of(method: Method) -> BatchMode {
+        match method {
+            Method::Adversarial | Method::Uniform | Method::Frequency | Method::Nce => {
+                BatchMode::NsLike
+            }
+            Method::AugmentReduce | Method::OneVsEach => BatchMode::Pairwise,
+            Method::Softmax => BatchMode::Softmax,
+        }
+    }
+}
+
+/// Concrete sampler dispatch with cached PCA projections for the
+/// adversarial tree (the projection of every training point is computed
+/// once at prepare time instead of per draw).
+pub enum SamplerKind {
+    Uniform(UniformSampler),
+    Frequency(FrequencySampler),
+    Adversarial {
+        sampler: Arc<AdversarialSampler>,
+        /// Cached projections of the training features, [N, k].
+        x_proj: Arc<Vec<f32>>,
+    },
+}
+
+impl SamplerKind {
+    /// Draw a negative for training point `i`; returns (label, log p_n).
+    /// Unconditional samplers ignore `i`; the adversarial sampler looks up
+    /// the cached projection of point `i`.
+    #[inline]
+    pub fn sample_for(&self, i: usize, rng: &mut Rng) -> (u32, f32) {
+        match self {
+            SamplerKind::Uniform(s) => s.sample(&[], rng),
+            SamplerKind::Frequency(s) => s.sample(&[], rng),
+            SamplerKind::Adversarial { sampler, x_proj } => {
+                let k = sampler.aux_dim();
+                sampler.tree.sample(&x_proj[i * k..(i + 1) * k], rng)
+            }
+        }
+    }
+
+    /// log p_n(y | x_i).
+    #[inline]
+    pub fn log_prob_for(&self, i: usize, y: u32) -> f32 {
+        match self {
+            SamplerKind::Uniform(s) => s.log_prob(&[], y),
+            SamplerKind::Frequency(s) => s.log_prob(&[], y),
+            SamplerKind::Adversarial { sampler, x_proj } => {
+                let k = sampler.aux_dim();
+                sampler.tree.log_prob(&x_proj[i * k..(i + 1) * k], y)
+            }
+        }
+    }
+}
+
+/// Streaming batch generator: epoch-shuffled positives + sampled negatives.
+pub struct BatchGen {
+    data: Arc<Dataset>,
+    sampler: SamplerKind,
+    mode: BatchMode,
+    batch_size: usize,
+    /// Importance weight for Pairwise mode ((C-1)/S for A&R, 1 for OVE).
+    pub scale: f32,
+    rng: Rng,
+    order: Vec<u32>,
+    cursor: usize,
+    pub epochs_completed: usize,
+}
+
+impl BatchGen {
+    pub fn new(
+        data: Arc<Dataset>,
+        sampler: SamplerKind,
+        mode: BatchMode,
+        batch_size: usize,
+        scale: f32,
+        mut rng: Rng,
+    ) -> Self {
+        assert!(data.len() >= batch_size, "dataset smaller than one batch");
+        let mut order: Vec<u32> = (0..data.len() as u32).collect();
+        rng.shuffle(&mut order);
+        Self {
+            data,
+            sampler,
+            mode,
+            batch_size,
+            scale,
+            rng,
+            order,
+            cursor: 0,
+            epochs_completed: 0,
+        }
+    }
+
+    /// Next training point index from the shuffled stream.
+    #[inline]
+    fn next_index(&mut self) -> usize {
+        if self.cursor >= self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epochs_completed += 1;
+        }
+        let i = self.order[self.cursor] as usize;
+        self.cursor += 1;
+        i
+    }
+
+    /// Assemble the next batch.
+    pub fn next_batch(&mut self) -> RawBatch {
+        let b = self.batch_size;
+        let k = self.data.feat_dim;
+        let mut out = RawBatch {
+            x: vec![0f32; b * k],
+            pos: vec![0u32; b],
+            neg: vec![0u32; b],
+            lpn_p: vec![0f32; b],
+            lpn_n: vec![0f32; b],
+        };
+        for j in 0..b {
+            let i = self.next_index();
+            out.x[j * k..(j + 1) * k].copy_from_slice(self.data.x(i));
+            let y = self.data.y(i);
+            out.pos[j] = y;
+            match self.mode {
+                BatchMode::NsLike => {
+                    let (neg, lpn) = self.sampler.sample_for(i, &mut self.rng);
+                    out.neg[j] = neg;
+                    out.lpn_n[j] = lpn;
+                    out.lpn_p[j] = self.sampler.log_prob_for(i, y);
+                }
+                BatchMode::Pairwise => {
+                    // uniform y' != y
+                    let c = self.data.num_classes;
+                    let mut neg = self.rng.below(c) as u32;
+                    while neg == y && c > 1 {
+                        neg = self.rng.below(c) as u32;
+                    }
+                    out.neg[j] = neg;
+                    out.lpn_n[j] = self.scale;
+                }
+                BatchMode::Softmax => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetPreset, SyntheticConfig, TreeConfig};
+    use crate::data::Splits;
+
+    fn tiny_data() -> Arc<Dataset> {
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 2048;
+        Arc::new(Splits::synthetic(&cfg).train)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let data = tiny_data();
+        let s = SamplerKind::Uniform(UniformSampler::new(data.num_classes));
+        let mut gen = BatchGen::new(data.clone(), s, BatchMode::NsLike, 256, 1.0, Rng::new(1));
+        let b = gen.next_batch();
+        assert_eq!(b.x.len(), 256 * data.feat_dim);
+        assert_eq!(b.pos.len(), 256);
+        assert_eq!(b.neg.len(), 256);
+        assert!(b.neg.iter().all(|&n| (n as usize) < data.num_classes));
+    }
+
+    #[test]
+    fn epoch_covers_all_points() {
+        let data = tiny_data();
+        let n = data.len();
+        let s = SamplerKind::Uniform(UniformSampler::new(data.num_classes));
+        let mut gen = BatchGen::new(data.clone(), s, BatchMode::Softmax, 256, 1.0, Rng::new(2));
+        let mut seen = vec![0usize; data.num_classes];
+        let batches = n / 256;
+        let mut label_counts = data.label_counts();
+        for _ in 0..batches {
+            let b = gen.next_batch();
+            for &y in &b.pos {
+                seen[y as usize] += 1;
+            }
+        }
+        // one epoch touches each point exactly once => label histograms match
+        for (c, s) in label_counts.iter_mut().zip(seen.iter()) {
+            assert_eq!(*c as usize, *s);
+        }
+        assert_eq!(gen.epochs_completed, 0);
+        gen.next_batch();
+        assert_eq!(gen.epochs_completed, 1);
+    }
+
+    #[test]
+    fn pairwise_negative_never_equals_positive() {
+        let data = tiny_data();
+        let s = SamplerKind::Uniform(UniformSampler::new(data.num_classes));
+        let mut gen = BatchGen::new(data.clone(), s, BatchMode::Pairwise, 256, 42.0, Rng::new(3));
+        for _ in 0..5 {
+            let b = gen.next_batch();
+            for j in 0..256 {
+                assert_ne!(b.pos[j], b.neg[j]);
+                assert_eq!(b.lpn_n[j], 42.0);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_batches_have_consistent_logprobs() {
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 2048;
+        let data = Arc::new(Splits::synthetic(&cfg).train);
+        let tcfg = TreeConfig { aux_dim: 8, ..Default::default() };
+        let (adv, _) = AdversarialSampler::fit(&data, &tcfg, 3);
+        let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
+        let s = SamplerKind::Adversarial { sampler: Arc::new(adv.clone()), x_proj };
+        let mut gen = BatchGen::new(data.clone(), s, BatchMode::NsLike, 256, 1.0, Rng::new(4));
+        let b = gen.next_batch();
+        // spot-check lpn against direct computation through the raw API
+        for j in (0..256).step_by(37) {
+            let x = &b.x[j * data.feat_dim..(j + 1) * data.feat_dim];
+            let expect = adv.log_prob(x, b.neg[j]);
+            assert!(
+                (b.lpn_n[j] - expect).abs() < 1e-4,
+                "j={j}: {} vs {expect}",
+                b.lpn_n[j]
+            );
+            let expect_p = adv.log_prob(x, b.pos[j]);
+            assert!((b.lpn_p[j] - expect_p).abs() < 1e-4);
+        }
+    }
+}

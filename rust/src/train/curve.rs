@@ -1,0 +1,168 @@
+//! Learning-curve recording (the data behind Figure 1) and CSV export.
+
+use crate::config::{DatasetPreset, Method};
+use std::io::Write;
+use std::path::Path;
+
+/// One evaluation checkpoint during training.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    /// Training wallclock in seconds, *excluding* evaluation time and
+    /// *including* the auxiliary-model fit time (the paper shifts the
+    /// adversarial/NCE curves right by the fit time).
+    pub wall_s: f64,
+    /// Mean training loss over the last window.
+    pub train_loss: f64,
+    /// Test predictive log-likelihood per point.
+    pub log_likelihood: f64,
+    /// Test top-1 accuracy.
+    pub accuracy: f64,
+}
+
+/// A full training trajectory for one (dataset, method) cell of Figure 1.
+#[derive(Clone, Debug)]
+pub struct LearningCurve {
+    pub dataset: String,
+    pub method: Method,
+    /// Auxiliary model fit time (0 for methods that need no tree).
+    pub aux_fit_seconds: f64,
+    pub points: Vec<CurvePoint>,
+}
+
+impl LearningCurve {
+    pub fn new(dataset: DatasetPreset, method: Method, aux_fit_seconds: f64) -> Self {
+        Self {
+            dataset: dataset.to_string(),
+            method,
+            aux_fit_seconds,
+            points: Vec::new(),
+        }
+    }
+
+    /// Final (last-checkpoint) metrics, if any evaluation ran.
+    pub fn last(&self) -> Option<&CurvePoint> {
+        self.points.last()
+    }
+
+    /// Best accuracy seen along the curve.
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    /// Best predictive log-likelihood seen along the curve.
+    pub fn best_log_likelihood(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.log_likelihood)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// First wallclock (s) at which accuracy reached `target`, if ever —
+    /// the "time to accuracy" statistic behind the paper's
+    /// order-of-magnitude claim.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= target)
+            .map(|p| p.wall_s)
+    }
+
+    /// Append rows to a CSV (writes header if the file is new/empty).
+    pub fn append_csv(&self, path: &Path) -> anyhow::Result<()> {
+        let new = !path.exists() || std::fs::metadata(path)?.len() == 0;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        if new {
+            writeln!(f, "dataset,method,step,wall_s,train_loss,log_likelihood,accuracy")?;
+        }
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{},{},{:.3},{:.6},{:.6},{:.6}",
+                self.dataset, self.method, p.step, p.wall_s, p.train_loss,
+                p.log_likelihood, p.accuracy
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Log-spaced evaluation schedule: dense early (where Figure 1's x-axis is
+/// log time), sparse late. Returns the next step at which to evaluate.
+pub fn next_eval_step(current: usize, eval_every: usize) -> usize {
+    if eval_every > 0 {
+        current + eval_every
+    } else {
+        ((current as f64) * 1.5).ceil().max((current + 25) as f64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> LearningCurve {
+        let mut c = LearningCurve::new(DatasetPreset::Tiny, Method::Adversarial, 1.0);
+        for (i, (ll, acc)) in [(-5.0, 0.1), (-3.0, 0.4), (-3.5, 0.35)].iter().enumerate() {
+            c.points.push(CurvePoint {
+                step: (i + 1) * 100,
+                wall_s: (i + 1) as f64,
+                train_loss: 1.0,
+                log_likelihood: *ll,
+                accuracy: *acc,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn best_metrics() {
+        let c = curve();
+        assert_eq!(c.best_accuracy(), 0.4);
+        assert_eq!(c.best_log_likelihood(), -3.0);
+        assert_eq!(c.last().unwrap().step, 300);
+    }
+
+    #[test]
+    fn time_to_accuracy() {
+        let c = curve();
+        assert_eq!(c.time_to_accuracy(0.35), Some(2.0));
+        assert_eq!(c.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn schedule_grows_geometrically() {
+        let mut s = 0;
+        let mut steps = vec![];
+        for _ in 0..8 {
+            s = next_eval_step(s, 0);
+            steps.push(s);
+        }
+        for w in steps.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(steps[7] > 300, "{steps:?}");
+    }
+
+    #[test]
+    fn fixed_schedule() {
+        assert_eq!(next_eval_step(100, 50), 150);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let c = curve();
+        let path = std::env::temp_dir().join("adv_softmax_curve_test.csv");
+        std::fs::remove_file(&path).ok();
+        c.append_csv(&path).unwrap();
+        c.append_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + 2 * 3); // one header, 2x3 rows
+        assert!(lines[0].starts_with("dataset,method"));
+        std::fs::remove_file(&path).ok();
+    }
+}

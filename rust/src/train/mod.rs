@@ -1,0 +1,376 @@
+//! Training coordinator: per-method update rules over the AOT HLO step
+//! artifacts, with pipelined negative-sample generation.
+//!
+//! The step protocol for sampling-based methods is gather → execute →
+//! scatter: rust gathers the 2B touched parameter rows, the HLO artifact
+//! (Pallas gradient core) computes the fused loss + row gradients, rust
+//! scatters them back through sparse Adagrad. Cost per step is O(B·K) on
+//! the host plus the kernel, independent of C — the property that makes
+//! negative sampling scale (Sec. 2.1).
+//!
+//! Negative generation (the O(k log C) tree descents) depends only on the
+//! features, so in pipelined mode it runs on a worker thread a few batches
+//! ahead, fully overlapped with PJRT execution and the optimizer scatter.
+
+pub mod batcher;
+pub mod curve;
+
+pub use batcher::{BatchGen, BatchMode, RawBatch, SamplerKind};
+pub use curve::{CurvePoint, LearningCurve};
+
+use crate::config::{Method, RunConfig};
+use crate::data::{Dataset, Splits};
+use crate::eval::{EvalResult, Evaluator, LpnCache};
+use crate::model::ParamStore;
+use crate::runtime::{lit_f32, lit_i32, read_f32, Executable, Registry};
+use crate::sampler::{AdversarialSampler, FrequencySampler, UniformSampler};
+use crate::utils::{Rng, StopWatch};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// How many batches the pipelined generator may run ahead.
+const PIPELINE_DEPTH: usize = 4;
+
+/// Where batches come from.
+enum BatchSource {
+    Inline(BatchGen),
+    Pipelined {
+        rx: Receiver<RawBatch>,
+        stop: Arc<AtomicBool>,
+        handle: Option<JoinHandle<()>>,
+    },
+}
+
+impl BatchSource {
+    fn next(&mut self) -> RawBatch {
+        match self {
+            BatchSource::Inline(gen) => gen.next_batch(),
+            BatchSource::Pipelined { rx, .. } => {
+                rx.recv().expect("batch generator thread died")
+            }
+        }
+    }
+}
+
+impl Drop for BatchSource {
+    fn drop(&mut self) {
+        if let BatchSource::Pipelined { rx, stop, handle } = self {
+            stop.store(true, Ordering::Relaxed);
+            // unblock a sender stuck on a full channel, then join
+            while rx.try_recv().is_ok() {}
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// A prepared training run: data, sampler, parameters, compiled step.
+pub struct TrainRun {
+    pub cfg: RunConfig,
+    data: Arc<Dataset>,
+    eval_set: Dataset,
+    pub params: ParamStore,
+    step_exec: Arc<Executable>,
+    evaluator: Evaluator,
+    /// Fitted auxiliary model (Some for methods that need the tree).
+    pub aux: Option<Arc<AdversarialSampler>>,
+    pub aux_fit_seconds: f64,
+    mode: BatchMode,
+    source: BatchSource,
+    step: usize,
+    /// Eq. 5 correction cache for the fixed eval subset (built lazily on
+    /// the first corrected evaluation; exact because the tree is frozen).
+    lpn_cache: Option<LpnCache>,
+    // scratch
+    wp: Vec<f32>,
+    bp: Vec<f32>,
+    wn: Vec<f32>,
+    bn: Vec<f32>,
+}
+
+impl TrainRun {
+    /// Build everything needed to train `cfg.method` on `splits`.
+    pub fn prepare(registry: &Registry, splits: &Splits, cfg: &RunConfig) -> Result<Self> {
+        let shapes = &registry.manifest.shapes;
+        anyhow::ensure!(
+            cfg.batch_size == shapes.train_b,
+            "batch_size {} must match AOT train_b {}",
+            cfg.batch_size,
+            shapes.train_b
+        );
+        anyhow::ensure!(
+            splits.train.feat_dim == shapes.feat_k,
+            "feat_dim {} must match AOT feat_k {}",
+            splits.train.feat_dim,
+            shapes.feat_k
+        );
+        if cfg.method == Method::Softmax {
+            anyhow::ensure!(
+                splits.train.num_classes == shapes.softmax_c,
+                "softmax method requires C == AOT softmax_c ({} vs {})",
+                splits.train.num_classes,
+                shapes.softmax_c
+            );
+        }
+
+        let data = Arc::new(splits.train.clone());
+        let c = data.num_classes;
+        let mut rng = Rng::new(cfg.seed);
+
+        // --- auxiliary model (Sec. 3) ---
+        let (aux, aux_fit_seconds) = if cfg.method.needs_tree() {
+            let t0 = std::time::Instant::now();
+            let (adv, stats) = AdversarialSampler::fit(&data, &cfg.tree, cfg.seed);
+            let dt = t0.elapsed().as_secs_f64();
+            log::info(&format!(
+                "aux tree fitted: {} nodes, {:.1}s, train loglik {:.3}",
+                stats.nodes_fitted, dt, stats.train_mean_loglik
+            ));
+            (Some(Arc::new(adv)), dt)
+        } else {
+            (None, 0.0)
+        };
+
+        // --- sampler + batch mode ---
+        let mode = BatchMode::of(cfg.method);
+        let sampler = match cfg.method {
+            Method::Adversarial | Method::Nce => {
+                let adv = aux.clone().unwrap();
+                let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
+                SamplerKind::Adversarial { sampler: adv, x_proj }
+            }
+            Method::Frequency => {
+                SamplerKind::Frequency(FrequencySampler::from_dataset(&data, 1.0)?)
+            }
+            _ => SamplerKind::Uniform(UniformSampler::new(c)),
+        };
+        let scale = match cfg.method {
+            Method::AugmentReduce => {
+                (c as f32 - 1.0) / cfg.hyper.num_negatives.max(1) as f32
+            }
+            _ => 1.0,
+        };
+        let gen = BatchGen::new(
+            data.clone(),
+            sampler,
+            mode,
+            cfg.batch_size,
+            scale,
+            rng.split(1),
+        );
+        // Pipelining overlaps batch generation with PJRT execution; on a
+        // single hardware thread there is nothing to overlap with and the
+        // channel only adds overhead, so fall back to inline generation.
+        let multi_core = std::thread::available_parallelism()
+            .map(|n| n.get() > 1)
+            .unwrap_or(false);
+        let source = if cfg.pipelined && multi_core && mode != BatchMode::Softmax {
+            spawn_pipeline(gen)
+        } else {
+            BatchSource::Inline(gen)
+        };
+
+        // --- compiled step ---
+        let exec_name = match cfg.method {
+            Method::Adversarial | Method::Uniform | Method::Frequency => "ns_grad_",
+            Method::Nce => "nce_grad_",
+            Method::AugmentReduce | Method::OneVsEach => "ove_grad_",
+            Method::Softmax => "softmax_grad_",
+        };
+        let step_exec = registry.get_by_prefix(exec_name)?;
+
+        let eval_set = splits.test.subsample(cfg.eval_points, &mut rng.split(2));
+        let b = cfg.batch_size;
+        let k = data.feat_dim;
+        Ok(Self {
+            cfg: cfg.clone(),
+            params: ParamStore::zeros(c, k, cfg.hyper.lr),
+            data,
+            eval_set,
+            step_exec,
+            evaluator: Evaluator::new(registry)?,
+            aux,
+            aux_fit_seconds,
+            mode,
+            source,
+            step: 0,
+            lpn_cache: None,
+            wp: vec![0f32; b * k],
+            bp: vec![0f32; b],
+            wn: vec![0f32; b * k],
+            bn: vec![0f32; b],
+        })
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// Run one training step; returns the mean per-example loss.
+    pub fn step_once(&mut self) -> Result<f64> {
+        let batch = self.source.next();
+        let loss = self.apply_batch(&batch)?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Execute + scatter one assembled batch (public for benches).
+    pub fn apply_batch(&mut self, batch: &RawBatch) -> Result<f64> {
+        let b = self.cfg.batch_size;
+        let k = self.data.feat_dim;
+        let lam = [self.cfg.hyper.lambda];
+        let x_lit = lit_f32(&batch.x, &[b, k])?;
+        let lam_lit = lit_f32(&lam, &[1])?;
+
+        let mean_loss = match self.mode {
+            BatchMode::NsLike | BatchMode::Pairwise => {
+                self.params.gather(&batch.pos, &mut self.wp, &mut self.bp);
+                self.params.gather(&batch.neg, &mut self.wn, &mut self.bn);
+                let wp = lit_f32(&self.wp, &[b, k])?;
+                let bp = lit_f32(&self.bp, &[b])?;
+                let wn = lit_f32(&self.wn, &[b, k])?;
+                let bn = lit_f32(&self.bn, &[b])?;
+                let outs = if self.mode == BatchMode::NsLike {
+                    let lpn_p = lit_f32(&batch.lpn_p, &[b])?;
+                    let lpn_n = lit_f32(&batch.lpn_n, &[b])?;
+                    self.step_exec
+                        .run(&[x_lit, wp, bp, wn, bn, lpn_p, lpn_n, lam_lit])
+                        .context("ns/nce step")?
+                } else {
+                    let scale = lit_f32(&batch.lpn_n, &[b])?;
+                    self.step_exec
+                        .run(&[x_lit, wp, bp, wn, bn, scale, lam_lit])
+                        .context("ove step")?
+                };
+                let loss = read_f32(&outs[0])?;
+                // read the row gradients into the (now free) gather
+                // buffers instead of allocating — perf pass iteration 3
+                crate::runtime::literal::read_f32_into(&outs[1], &mut self.wp)?;
+                crate::runtime::literal::read_f32_into(&outs[2], &mut self.bp)?;
+                crate::runtime::literal::read_f32_into(&outs[3], &mut self.wn)?;
+                crate::runtime::literal::read_f32_into(&outs[4], &mut self.bn)?;
+                self.params.apply_sparse(&batch.pos, &self.wp, &self.bp);
+                self.params.apply_sparse(&batch.neg, &self.wn, &self.bn);
+                loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64
+            }
+            BatchMode::Softmax => {
+                let c = self.params.num_classes;
+                let w = lit_f32(&self.params.w, &[c, k])?;
+                let bb = lit_f32(&self.params.b, &[c])?;
+                let y: Vec<i32> = batch.pos.iter().map(|&v| v as i32).collect();
+                let y_lit = lit_i32(&y, &[b])?;
+                let outs = self
+                    .step_exec
+                    .run(&[x_lit, w, bb, y_lit, lam_lit])
+                    .context("softmax step")?;
+                let loss = read_f32(&outs[0])?;
+                let gw = read_f32(&outs[1])?;
+                let gb = read_f32(&outs[2])?;
+                self.params.apply_dense(&gw, &gb);
+                loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64
+            }
+        };
+        Ok(mean_loss)
+    }
+
+    /// Evaluate current parameters on the held-out eval subset, applying
+    /// the Eq. 5 bias correction iff the method calls for it.
+    pub fn evaluate_now(&mut self) -> Result<EvalResult> {
+        self.evaluate_with(self.cfg.method.corrects_bias())
+    }
+
+    /// Evaluate with the Eq. 5 correction explicitly on/off (ablation A1).
+    /// Requesting correction without a fitted tree evaluates uncorrected.
+    pub fn evaluate_with(&mut self, bias_correction: bool) -> Result<EvalResult> {
+        let cache = if bias_correction {
+            match (&mut self.lpn_cache, &self.aux) {
+                (slot @ None, Some(adv)) => {
+                    *slot = Some(LpnCache::build(adv, &self.eval_set));
+                    slot.as_ref()
+                }
+                (slot, _) => slot.as_ref(),
+            }
+        } else {
+            None
+        };
+        self.evaluator
+            .evaluate_cached(&self.params, &self.eval_set, cache)
+    }
+
+    /// Full training loop with the learning-curve protocol of Figure 1:
+    /// train wallclock excludes evaluation, aux fit time preloads the
+    /// clock, eval checkpoints are log-spaced (or every `eval_every`).
+    pub fn train(&mut self) -> Result<LearningCurve> {
+        let mut curve = LearningCurve::new(self.cfg.dataset, self.cfg.method, self.aux_fit_seconds);
+        let mut watch = StopWatch::new();
+        watch.preload(std::time::Duration::from_secs_f64(self.aux_fit_seconds));
+        let mut next_eval = curve::next_eval_step(0, self.cfg.eval_every);
+        let mut loss_sum = 0f64;
+        let mut loss_n = 0usize;
+
+        watch.resume();
+        loop {
+            let loss = self.step_once()?;
+            loss_sum += loss;
+            loss_n += 1;
+
+            let done = self.step >= self.cfg.max_steps
+                || watch.elapsed_secs() >= self.cfg.max_seconds + self.aux_fit_seconds;
+            if self.step >= next_eval || done {
+                watch.pause();
+                let r = self.evaluate_now()?;
+                curve.points.push(CurvePoint {
+                    step: self.step,
+                    wall_s: watch.elapsed_secs(),
+                    train_loss: loss_sum / loss_n.max(1) as f64,
+                    log_likelihood: r.log_likelihood,
+                    accuracy: r.accuracy,
+                });
+                loss_sum = 0.0;
+                loss_n = 0;
+                next_eval = curve::next_eval_step(self.step, self.cfg.eval_every);
+                watch.resume();
+            }
+            if done {
+                break;
+            }
+        }
+        Ok(curve)
+    }
+}
+
+fn spawn_pipeline(mut gen: BatchGen) -> BatchSource {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let (tx, rx) = sync_channel::<RawBatch>(PIPELINE_DEPTH);
+    let handle = std::thread::Builder::new()
+        .name("batch-gen".into())
+        .spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                let b = gen.next_batch();
+                if tx.send(b).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn batch generator");
+    BatchSource::Pipelined { rx, stop, handle: Some(handle) }
+}
+
+/// Minimal logging shim (keeps the library free of logger dependencies;
+/// the CLI prints, tests stay quiet unless `REPRO_VERBOSE` is set).
+mod log {
+    pub fn info(msg: &str) {
+        if std::env::var_os("REPRO_VERBOSE").is_some() {
+            eprintln!("[repro] {msg}");
+        }
+    }
+}

@@ -1,0 +1,589 @@
+//! Greedy maximum-likelihood fitting of the auxiliary tree (paper Sec. 3).
+//!
+//! Top-down over the balanced tree: each node ν alternates between
+//!
+//!  * **continuous** maximization of Eq. 8 over (w_ν, b_ν) by Newton ascent
+//!    (the objective is concave; (k+1)-dim Hessian solved by Cholesky —
+//!    hyperparameter-free, as the paper emphasizes), and
+//!  * **discrete** re-splitting of the node's label set into equal halves
+//!    by the score Δ_y = Σ_{x∈D_y}(w_ν·x + b_ν) = w_ν·S_y + n_y b_ν
+//!    (Eq. 9) — note Δ_y only needs the per-label sufficient statistics
+//!    (S_y = Σ x, n_y), gathered once per node.
+//!
+//! Initialization follows the paper: b_ν = 0 and w_ν set to the dominant
+//! eigenvector of the covariance of the per-label sum vectors {S_y}.
+//! Nodes whose subtree holds ≤1 real label become deterministic `forced`
+//! chains with p = 1 (padding handling).
+
+use super::{Forced, Tree, PADDING};
+use crate::config::TreeConfig;
+use crate::linalg::pca::dominant_eigenvector;
+use crate::linalg::{sigmoid, solve_spd};
+use crate::utils::Rng;
+
+/// Diagnostics from one fitting run.
+#[derive(Clone, Debug, Default)]
+pub struct FitStats {
+    pub nodes_fitted: usize,
+    pub newton_iters_total: usize,
+    pub alternations_total: usize,
+    pub forced_nodes: usize,
+    pub fit_seconds: f64,
+    /// Mean log-likelihood (Eq. 7 / N) on the data used for fitting.
+    pub train_mean_loglik: f64,
+}
+
+struct NodeTask {
+    node: usize,
+    depth: usize,
+    slot_lo: usize,
+    slot_hi: usize,
+    pt_lo: usize,
+    pt_hi: usize,
+}
+
+/// Fit a tree on projected features `x_proj` ([n, k] row-major).
+pub fn fit_tree(
+    x_proj: &[f32],
+    labels: &[u32],
+    n: usize,
+    k: usize,
+    c: usize,
+    cfg: &TreeConfig,
+    rng: &mut Rng,
+) -> (Tree, FitStats) {
+    assert!(c >= 2, "need at least two classes");
+    assert_eq!(x_proj.len(), n * k);
+    assert_eq!(labels.len(), n);
+    let t0 = std::time::Instant::now();
+
+    let num_leaves = c.next_power_of_two();
+    let depth = num_leaves.trailing_zeros() as usize;
+    let num_nodes = num_leaves - 1;
+
+    let mut tree = Tree {
+        aux_dim: k,
+        num_classes: c,
+        num_leaves,
+        depth,
+        w: vec![0f32; num_nodes * k],
+        b: vec![0f32; num_nodes],
+        forced: vec![0 as Forced; num_nodes],
+        label_of_leaf: vec![PADDING; num_leaves],
+        leaf_of_label: vec![0u32; c],
+    };
+    let mut stats = FitStats::default();
+
+    // label slots: real labels packed as a prefix of each node's range.
+    let mut label_order: Vec<u32> = (0..c as u32).chain((c..num_leaves).map(|_| PADDING)).collect();
+    let mut slot_of_label: Vec<u32> = (0..c as u32).collect();
+
+    // points used for fitting (optionally subsampled)
+    let mut point_order: Vec<u32> = (0..n as u32).collect();
+    if cfg.fit_subsample > 0 && cfg.fit_subsample < n {
+        rng.shuffle(&mut point_order);
+        point_order.truncate(cfg.fit_subsample);
+    }
+    let n_fit = point_order.len();
+
+    let mut queue: Vec<NodeTask> = vec![NodeTask {
+        node: 0,
+        depth: 0,
+        slot_lo: 0,
+        slot_hi: num_leaves,
+        pt_lo: 0,
+        pt_hi: n_fit,
+    }];
+
+    // scratch reused across nodes
+    let mut pt_scratch: Vec<u32> = vec![0; n_fit];
+
+    while let Some(task) = queue.pop() {
+        let cap = task.slot_hi - task.slot_lo;
+        debug_assert!(cap >= 2);
+        let ccap = cap / 2;
+        // real labels are a prefix of the slot range
+        let n_r = label_order[task.slot_lo..task.slot_hi]
+            .iter()
+            .take_while(|&&l| l != PADDING)
+            .count();
+
+        if n_r == 0 {
+            continue; // unreachable subtree; params stay zero
+        }
+        if n_r == 1 {
+            // deterministic chain: the lone label sits at the leftmost leaf
+            let mut cur = task.node;
+            let mut d = task.depth;
+            while d < depth {
+                tree.forced[cur] = -1;
+                stats.forced_nodes += 1;
+                cur = 2 * cur + 1;
+                d += 1;
+            }
+            continue;
+        }
+
+        // ---- per-label sufficient statistics over the node's points ----
+        let pts = &point_order[task.pt_lo..task.pt_hi];
+        let mut sums = vec![0f64; n_r * k]; // S_y
+        let mut counts = vec![0u64; n_r];
+        for &p in pts {
+            let y = labels[p as usize] as usize;
+            let local = (slot_of_label[y] as usize) - task.slot_lo;
+            debug_assert!(local < n_r);
+            let row = &x_proj[p as usize * k..(p as usize + 1) * k];
+            let dst = &mut sums[local * k..(local + 1) * k];
+            for (d, v) in dst.iter_mut().zip(row.iter()) {
+                *d += *v as f64;
+            }
+            counts[local] += 1;
+        }
+
+        // ---- init: w = dominant eigenvector of Cov({S_y}), b = 0 ----
+        let mut w = init_weight(&sums, n_r, k, rng);
+        let mut b = 0f64;
+
+        // ---- alternate Newton ascent and balanced re-splits ----
+        // right-child count r, clamped so both halves fit their capacity
+        let r = (n_r + 1) / 2;
+        let r = r.max(n_r.saturating_sub(ccap)).min(ccap);
+        let mut zeta = split_by_delta(&sums, &counts, &w, b, n_r, k, r);
+        let mut converged = false;
+        for _alt in 0..cfg.max_alternations {
+            stats.alternations_total += 1;
+            let iters = newton_ascent(
+                x_proj, labels, pts, &slot_of_label, task.slot_lo, &zeta, k,
+                cfg.lambda_n, cfg.newton_iters, &mut w, &mut b,
+            );
+            stats.newton_iters_total += iters;
+            let new_zeta = split_by_delta(&sums, &counts, &w, b, n_r, k, r);
+            if new_zeta == zeta {
+                converged = true;
+                break;
+            }
+            zeta = new_zeta;
+        }
+        let _ = converged;
+        stats.nodes_fitted += 1;
+
+        // ---- commit node parameters ----
+        for (dst, src) in tree.w[task.node * k..(task.node + 1) * k]
+            .iter_mut()
+            .zip(w.iter())
+        {
+            *dst = *src as f32;
+        }
+        tree.b[task.node] = b as f32;
+
+        // ---- reorder label slots: left prefix | pad | right prefix | pad ----
+        let slot_mid = task.slot_lo + ccap;
+        {
+            let node_slots = &mut label_order[task.slot_lo..task.slot_hi];
+            let mut left: Vec<u32> = Vec::with_capacity(ccap);
+            let mut right: Vec<u32> = Vec::with_capacity(ccap);
+            for (local, &z) in zeta.iter().enumerate() {
+                let lbl = node_slots[local];
+                if z {
+                    right.push(lbl);
+                } else {
+                    left.push(lbl);
+                }
+            }
+            debug_assert_eq!(right.len(), r);
+            for s in node_slots.iter_mut() {
+                *s = PADDING;
+            }
+            node_slots[..left.len()].copy_from_slice(&left);
+            node_slots[ccap..ccap + right.len()].copy_from_slice(&right);
+        }
+        for (off, &lbl) in label_order[task.slot_lo..task.slot_hi].iter().enumerate() {
+            if lbl != PADDING {
+                slot_of_label[lbl as usize] = (task.slot_lo + off) as u32;
+            }
+        }
+
+        // ---- partition points by their label's side ----
+        let scratch = &mut pt_scratch[..pts.len()];
+        let mut nl = 0usize;
+        let mut nr_pts = 0usize;
+        for &p in pts.iter() {
+            let y = labels[p as usize] as usize;
+            let slot = slot_of_label[y] as usize;
+            if slot < slot_mid {
+                scratch[nl] = p;
+                nl += 1;
+            } else {
+                nr_pts += 1;
+                scratch[pts.len() - nr_pts] = p;
+            }
+        }
+        // right side was written back-to-front; reverse for stability
+        scratch[nl..].reverse();
+        point_order[task.pt_lo..task.pt_hi].copy_from_slice(scratch);
+        let pt_mid = task.pt_lo + nl;
+
+        // ---- recurse ----
+        if task.depth + 1 < depth {
+            queue.push(NodeTask {
+                node: 2 * task.node + 1,
+                depth: task.depth + 1,
+                slot_lo: task.slot_lo,
+                slot_hi: slot_mid,
+                pt_lo: task.pt_lo,
+                pt_hi: pt_mid,
+            });
+            queue.push(NodeTask {
+                node: 2 * task.node + 2,
+                depth: task.depth + 1,
+                slot_lo: slot_mid,
+                slot_hi: task.slot_hi,
+                pt_lo: pt_mid,
+                pt_hi: task.pt_hi,
+            });
+        }
+    }
+
+    // ---- leaf mapping ----
+    tree.label_of_leaf.copy_from_slice(&label_order);
+    for (leaf, &lbl) in label_order.iter().enumerate() {
+        if lbl != PADDING {
+            tree.leaf_of_label[lbl as usize] = leaf as u32;
+        }
+    }
+
+    stats.fit_seconds = t0.elapsed().as_secs_f64();
+    // mean train log-likelihood over the fitted subsample
+    let mut total = 0f64;
+    for &p in &point_order {
+        let i = p as usize;
+        total += tree.log_prob(&x_proj[i * k..(i + 1) * k], labels[i]) as f64;
+    }
+    stats.train_mean_loglik = total / point_order.len().max(1) as f64;
+
+    (tree, stats)
+}
+
+/// Paper's init: dominant eigenvector of the covariance of {S_y}.
+fn init_weight(sums: &[f64], n_r: usize, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut mean = vec![0f64; k];
+    for s in sums.chunks_exact(k) {
+        for (m, v) in mean.iter_mut().zip(s.iter()) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n_r as f64;
+    }
+    let mut cov = vec![0f64; k * k];
+    for s in sums.chunks_exact(k) {
+        for i in 0..k {
+            let di = s[i] - mean[i];
+            for j in 0..k {
+                cov[i * k + j] += di * (s[j] - mean[j]);
+            }
+        }
+    }
+    for v in cov.iter_mut() {
+        *v /= n_r as f64;
+    }
+    dominant_eigenvector(&cov, k, 40, rng)
+        .into_iter()
+        .map(|v| v as f64)
+        .collect()
+}
+
+/// Δ_y = w·S_y + n_y·b for all labels; returns the balanced assignment
+/// (true = right child) giving the top-`r` labels by Δ to the right.
+fn split_by_delta(
+    sums: &[f64],
+    counts: &[u64],
+    w: &[f64],
+    b: f64,
+    n_r: usize,
+    k: usize,
+    r: usize,
+) -> Vec<bool> {
+    let mut delta: Vec<(f64, usize)> = (0..n_r)
+        .map(|local| {
+            let s = &sums[local * k..(local + 1) * k];
+            let d: f64 = w.iter().zip(s.iter()).map(|(a, b)| a * b).sum::<f64>()
+                + counts[local] as f64 * b;
+            (d, local)
+        })
+        .collect();
+    // sort desc by Δ, ties by label slot for determinism
+    delta.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut zeta = vec![false; n_r];
+    for &(_, local) in delta.iter().take(r) {
+        zeta[local] = true;
+    }
+    zeta
+}
+
+/// Newton ascent on the concave node objective (Eq. 8 with L2 term):
+///   L_ν(w, b) = Σ_pts log σ(ζ_y (w·x + b)) − λ_n (‖w‖² + b²).
+///
+/// Damped with Armijo backtracking: plain Newton is only locally
+/// convergent for logistic likelihoods — on an *unfittable* split (two
+/// statistically identical label halves, common deep in the tree) the
+/// curvature flattens while the gradient stays finite and raw Newton
+/// steps diverge. Backtracking on the true objective restores the global
+/// convergence the concavity guarantees. Returns iterations performed.
+#[allow(clippy::too_many_arguments)]
+fn newton_ascent(
+    x_proj: &[f32],
+    labels: &[u32],
+    pts: &[u32],
+    slot_of_label: &[u32],
+    slot_lo: usize,
+    zeta: &[bool],
+    k: usize,
+    lambda_n: f64,
+    max_iters: usize,
+    w: &mut Vec<f64>,
+    b: &mut f64,
+) -> usize {
+    let dim = k + 1;
+    let mut grad = vec![0f64; dim];
+    let mut hess = vec![0f64; dim * dim];
+
+    let zeta_of = |i: usize| -> f64 {
+        let y = labels[i] as usize;
+        let local = (slot_of_label[y] as usize) - slot_lo;
+        if zeta[local] {
+            1.0
+        } else {
+            -1.0
+        }
+    };
+    // objective value at (w, b)
+    let objective = |w: &[f64], b: f64| -> f64 {
+        let mut obj = 0f64;
+        for &p in pts {
+            let i = p as usize;
+            let x = &x_proj[i * k..(i + 1) * k];
+            let a: f64 =
+                w.iter().zip(x.iter()).map(|(wv, xv)| wv * *xv as f64).sum::<f64>() + b;
+            let za = zeta_of(i) * a;
+            // log sigma(za), stable
+            obj += za.min(0.0) - (-za.abs()).exp().ln_1p();
+        }
+        obj - lambda_n * (w.iter().map(|v| v * v).sum::<f64>() + b * b)
+    };
+
+    let mut obj = objective(w, *b);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        hess.iter_mut().for_each(|h| *h = 0.0);
+        for &p in pts {
+            let i = p as usize;
+            let z = zeta_of(i);
+            let x = &x_proj[i * k..(i + 1) * k];
+            let a: f64 =
+                w.iter().zip(x.iter()).map(|(wv, xv)| wv * *xv as f64).sum::<f64>() + *b;
+            let s = sigmoid(a as f32) as f64;
+            // ∇ log σ(ζa) = ζ σ(−ζa) x̃ ;  σ(−ζa) = if ζ>0 {1−s} else {s}
+            let gcoef = z * if z > 0.0 { 1.0 - s } else { s };
+            let hcoef = s * (1.0 - s); // −∂² is σσ′ x̃x̃ᵀ
+            for j in 0..k {
+                grad[j] += gcoef * x[j] as f64;
+            }
+            grad[k] += gcoef;
+            // accumulate upper triangle of H
+            for j in 0..k {
+                let xj = x[j] as f64 * hcoef;
+                let row = &mut hess[j * dim..];
+                for l in j..k {
+                    row[l] += xj * x[l] as f64;
+                }
+                row[k] += xj;
+            }
+            hess[k * dim + k] += hcoef;
+        }
+        // regularizer: −λ_n(‖w‖²+b²) → grad −= 2λ_n θ ; H += 2λ_n I
+        for j in 0..k {
+            grad[j] -= 2.0 * lambda_n * w[j];
+        }
+        grad[k] -= 2.0 * lambda_n * *b;
+        for j in 0..dim {
+            hess[j * dim + j] += 2.0 * lambda_n;
+            for l in 0..j {
+                hess[j * dim + l] = hess[l * dim + j]; // mirror
+            }
+        }
+
+        let gnorm: f64 = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        if gnorm < 1e-8 * (pts.len() as f64).max(1.0) {
+            break;
+        }
+        let Some(step) = solve_spd(&hess, &grad, dim) else { break };
+
+        // Armijo backtracking: accept the largest t in {1, 1/2, ...} with
+        // obj(θ + tδ) ≥ obj(θ) + c t ∇L·δ  (c = 1e-4; ∇L·δ > 0 by SPD).
+        let gdotd: f64 = grad.iter().zip(step.iter()).map(|(g, d)| g * d).sum();
+        let mut t = 1.0f64;
+        let mut accepted = false;
+        for _ in 0..30 {
+            let wt: Vec<f64> = w.iter().zip(step.iter()).map(|(wv, d)| wv + t * d).collect();
+            let bt = *b + t * step[k];
+            let new_obj = objective(&wt, bt);
+            if new_obj >= obj + 1e-4 * t * gdotd {
+                *w = wt;
+                *b = bt;
+                obj = new_obj;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            break; // numerically flat — we're done
+        }
+        let snorm: f64 = step.iter().map(|s| s * s).sum::<f64>().sqrt();
+        if t * snorm < 1e-10 {
+            break;
+        }
+    }
+    iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cluster_data(n: usize, k: usize, rng: &mut Rng) -> (Vec<f32>, Vec<u32>) {
+        // labels 0,1 at x ~ N(-2,0.5), labels 2,3 at x ~ N(+2,0.5) in dim 0
+        let mut x = vec![0f32; n * k];
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let lbl = rng.below(4) as u32;
+            y[i] = lbl;
+            let center = if lbl < 2 { -2.0 } else { 2.0 };
+            x[i * k] = center + 0.5 * rng.normal();
+            for j in 1..k {
+                x[i * k + j] = 0.1 * rng.normal();
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn root_split_separates_clusters() {
+        let mut rng = Rng::new(1);
+        let (x, y) = two_cluster_data(4000, 4, &mut rng);
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let (tree, stats) = fit_tree(&x, &y, 4000, 4, 4, &cfg, &mut rng);
+        assert_eq!(tree.depth, 2);
+        assert!(stats.nodes_fitted >= 3);
+        // root must separate {0,1} from {2,3}
+        let side = |lbl: u32| tree.leaf_of_label[lbl as usize] / 2;
+        assert_eq!(side(0), side(1));
+        assert_eq!(side(2), side(3));
+        assert_ne!(side(0), side(2));
+    }
+
+    #[test]
+    fn fitted_loglik_beats_uniform() {
+        let mut rng = Rng::new(2);
+        let (x, y) = two_cluster_data(4000, 4, &mut rng);
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let (tree, stats) = fit_tree(&x, &y, 4000, 4, 4, &cfg, &mut rng);
+        let uniform = -(4f64).ln();
+        assert!(
+            stats.train_mean_loglik > uniform + 0.4,
+            "loglik {} vs uniform {}",
+            stats.train_mean_loglik,
+            uniform
+        );
+        let full = tree.mean_log_likelihood(&x, &y);
+        assert!((full - stats.train_mean_loglik).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_power_of_two_labels_get_padding() {
+        let mut rng = Rng::new(3);
+        let c = 5; // -> 8 leaves, 3 padding
+        let n = 2000;
+        let k = 3;
+        let mut x = vec![0f32; n * k];
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            y[i] = rng.below(c) as u32;
+            for j in 0..k {
+                x[i * k + j] = y[i] as f32 + 0.3 * rng.normal();
+            }
+        }
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, &mut rng);
+        assert_eq!(tree.num_leaves, 8);
+        let pad_leaves = tree.label_of_leaf.iter().filter(|&&l| l == PADDING).count();
+        assert_eq!(pad_leaves, 3);
+        // normalization over real labels only
+        let mut lps = vec![0f32; c];
+        tree.log_prob_all(&x[..k], &mut lps);
+        let total: f64 = lps.iter().map(|&l| (l as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5, "total {total}");
+        // sampling never yields padding and matches probabilities
+        for _ in 0..5000 {
+            let (s, lp) = tree.sample(&x[..k], &mut rng);
+            assert!((s as usize) < c);
+            assert!(lp.is_finite());
+        }
+    }
+
+    #[test]
+    fn subsample_cap_respected() {
+        let mut rng = Rng::new(4);
+        let (x, y) = two_cluster_data(3000, 4, &mut rng);
+        let cfg = TreeConfig { aux_dim: 4, fit_subsample: 500, ..Default::default() };
+        let (tree, stats) = fit_tree(&x, &y, 3000, 4, 4, &cfg, &mut rng);
+        assert!(stats.train_mean_loglik.is_finite());
+        assert!(tree.mean_log_likelihood(&x, &y) > -(4f64).ln() - 0.5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng1 = Rng::new(5);
+        let (x, y) = two_cluster_data(1000, 4, &mut rng1);
+        let mut ra = Rng::new(9);
+        let mut rb = Rng::new(9);
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let (ta, _) = fit_tree(&x, &y, 1000, 4, 4, &cfg, &mut ra);
+        let (tb, _) = fit_tree(&x, &y, 1000, 4, 4, &cfg, &mut rb);
+        assert_eq!(ta.w, tb.w);
+        assert_eq!(ta.label_of_leaf, tb.label_of_leaf);
+    }
+
+    #[test]
+    fn larger_c_all_labels_mapped() {
+        let mut rng = Rng::new(6);
+        let c = 100;
+        let n = 4000;
+        let k = 6;
+        let mut x = vec![0f32; n * k];
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let lbl = rng.below(c) as u32;
+            y[i] = lbl;
+            for j in 0..k {
+                x[i * k + j] = ((lbl as usize >> (j % 7)) & 1) as f32 * 2.0 - 1.0
+                    + 0.4 * rng.normal();
+            }
+        }
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, &mut rng);
+        // bijection between real labels and leaves
+        let mut seen = vec![false; c];
+        for &lbl in tree.label_of_leaf.iter().filter(|&&l| l != PADDING) {
+            assert!(!seen[lbl as usize], "label {lbl} mapped twice");
+            seen[lbl as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        for lbl in 0..c as u32 {
+            assert_eq!(tree.label_of_leaf[tree.leaf_of_label[lbl as usize] as usize], lbl);
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! The auxiliary adversarial model (paper Sec. 3): a balanced probabilistic
+//! binary decision tree over the label set.
+//!
+//! * Structure: a perfect binary tree with `L = next_pow2(C)` leaves stored
+//!   implicitly in heap order (node `i` has children `2i+1`, `2i+2`; leaf
+//!   `j` sits at heap position `L-1+j`). Each internal node ν carries
+//!   (w_ν ∈ R^k, b_ν); the probability of branching right given projected
+//!   features x is σ(w_ν·x + b_ν).
+//! * Padding: if C is not a power of two, the extra leaves are uninhabited
+//!   padding labels. Nodes whose one child subtree contains only padding
+//!   are `forced` toward the real side (the paper's "b_ν set to a very
+//!   large value"), so p_n(padding|x) = 0 exactly and sampling never
+//!   reaches a padding leaf.
+//! * Inference costs: ancestral sampling and single-label log-probability
+//!   are O(k log C); the full conditional vector log p_n(·|x) needed for
+//!   bias-corrected evaluation is O(k C) via one activation sweep plus an
+//!   O(C) prefix accumulation (`log_prob_all`), or O(C) if activations come
+//!   precomputed from the `scores` HLO artifact
+//!   (`log_prob_all_from_activations`).
+//!
+//! Fitting (greedy maximum likelihood, alternating Newton ascent and
+//! balanced re-splits) lives in [`fit`].
+
+pub mod fit;
+
+pub use fit::FitStats;
+
+use crate::linalg::{dot, log_sigmoid, sigmoid};
+use crate::utils::json::Json;
+use crate::utils::Rng;
+use std::path::Path;
+
+/// Sentinel for uninhabited padding label slots.
+pub const PADDING: u32 = u32::MAX;
+
+/// Forced-branch flag: 0 normal, +1 always-right, -1 always-left.
+pub type Forced = i8;
+
+/// A fitted probabilistic decision tree over `num_classes` labels.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    /// Projected feature dimension k.
+    pub aux_dim: usize,
+    /// Number of real labels C.
+    pub num_classes: usize,
+    /// next_pow2(C) leaves.
+    pub num_leaves: usize,
+    /// log2(num_leaves).
+    pub depth: usize,
+    /// Internal-node weights, `(num_leaves - 1) * aux_dim`, heap order.
+    pub w: Vec<f32>,
+    /// Internal-node biases, `num_leaves - 1`.
+    pub b: Vec<f32>,
+    /// Forced-branch flags, `num_leaves - 1`.
+    pub forced: Vec<Forced>,
+    /// Leaf -> label (PADDING for uninhabited leaves).
+    pub label_of_leaf: Vec<u32>,
+    /// Label -> leaf.
+    pub leaf_of_label: Vec<u32>,
+}
+
+impl Tree {
+    /// Number of internal nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_leaves - 1
+    }
+
+    #[inline]
+    fn node_w(&self, i: usize) -> &[f32] {
+        &self.w[i * self.aux_dim..(i + 1) * self.aux_dim]
+    }
+
+    /// Activation a_ν = w_ν·x + b_ν of one node.
+    #[inline]
+    pub fn activation(&self, node: usize, x_proj: &[f32]) -> f32 {
+        dot(self.node_w(node), x_proj) + self.b[node]
+    }
+
+    /// Ancestral sampling: draw y' ~ p_n(·|x), returning (label, log p_n).
+    /// O(k log C).
+    pub fn sample(&self, x_proj: &[f32], rng: &mut Rng) -> (u32, f32) {
+        debug_assert_eq!(x_proj.len(), self.aux_dim);
+        let mut node = 0usize;
+        let mut logp = 0f32;
+        for _ in 0..self.depth {
+            let go_right = match self.forced[node] {
+                1 => true,
+                -1 => false,
+                _ => {
+                    let a = self.activation(node, x_proj);
+                    let p_right = sigmoid(a);
+                    let right = rng.next_f32() < p_right;
+                    logp += if right { log_sigmoid(a) } else { log_sigmoid(-a) };
+                    right
+                }
+            };
+            node = 2 * node + 1 + usize::from(go_right);
+        }
+        let leaf = node - (self.num_leaves - 1);
+        let label = self.label_of_leaf[leaf];
+        debug_assert_ne!(label, PADDING, "sampled a padding leaf");
+        (label, logp)
+    }
+
+    /// log p_n(y|x) for one label. O(k log C).
+    pub fn log_prob(&self, x_proj: &[f32], y: u32) -> f32 {
+        debug_assert!((y as usize) < self.num_classes);
+        let leaf = self.leaf_of_label[y as usize] as usize;
+        let mut pos = leaf + self.num_leaves - 1; // heap position
+        let mut logp = 0f32;
+        while pos > 0 {
+            let parent = (pos - 1) / 2;
+            let went_right = pos == 2 * parent + 2;
+            match self.forced[parent] {
+                1 => {
+                    if !went_right {
+                        return f32::NEG_INFINITY;
+                    }
+                }
+                -1 => {
+                    if went_right {
+                        return f32::NEG_INFINITY;
+                    }
+                }
+                _ => {
+                    let a = self.activation(parent, x_proj);
+                    logp += if went_right { log_sigmoid(a) } else { log_sigmoid(-a) };
+                }
+            }
+            pos = parent;
+        }
+        logp
+    }
+
+    /// All node activations for one x (heap order). O(k C).
+    pub fn node_activations(&self, x_proj: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.num_nodes());
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.activation(i, x_proj);
+        }
+    }
+
+    /// log p_n(y|x) for every real label y, given precomputed activations
+    /// (e.g. from the `scores` HLO artifact). O(C).
+    pub fn log_prob_all_from_activations(&self, acts: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(acts.len(), self.num_nodes());
+        debug_assert_eq!(out.len(), self.num_classes);
+        // prefix accumulation down the heap
+        let mut lp = vec![0f32; 2 * self.num_leaves - 1];
+        for i in 0..self.num_nodes() {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            match self.forced[i] {
+                1 => {
+                    lp[l] = f32::NEG_INFINITY;
+                    lp[r] = lp[i];
+                }
+                -1 => {
+                    lp[l] = lp[i];
+                    lp[r] = f32::NEG_INFINITY;
+                }
+                _ => {
+                    let a = acts[i];
+                    lp[l] = lp[i] + log_sigmoid(-a);
+                    lp[r] = lp[i] + log_sigmoid(a);
+                }
+            }
+        }
+        let base = self.num_leaves - 1;
+        for leaf in 0..self.num_leaves {
+            let label = self.label_of_leaf[leaf];
+            if label != PADDING {
+                out[label as usize] = lp[base + leaf];
+            }
+        }
+    }
+
+    /// log p_n(y|x) for every real label y. O(k C).
+    pub fn log_prob_all(&self, x_proj: &[f32], out: &mut [f32]) {
+        let mut acts = vec![0f32; self.num_nodes()];
+        self.node_activations(x_proj, &mut acts);
+        self.log_prob_all_from_activations(&acts, out);
+    }
+
+    /// Mean log-likelihood (Eq. 7, normalized) of projected data under p_n.
+    pub fn mean_log_likelihood(&self, x_proj: &[f32], labels: &[u32]) -> f64 {
+        let n = labels.len();
+        assert_eq!(x_proj.len(), n * self.aux_dim);
+        let mut total = 0f64;
+        for (i, &y) in labels.iter().enumerate() {
+            total += self.log_prob(&x_proj[i * self.aux_dim..(i + 1) * self.aux_dim], y) as f64;
+        }
+        total / n as f64
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("aux_dim", Json::Num(self.aux_dim as f64)),
+            ("num_classes", Json::Num(self.num_classes as f64)),
+            ("num_leaves", Json::Num(self.num_leaves as f64)),
+            ("depth", Json::Num(self.depth as f64)),
+            ("w", Json::arr_f32(&self.w)),
+            ("b", Json::arr_f32(&self.b)),
+            (
+                "forced",
+                Json::Arr(self.forced.iter().map(|&f| Json::Num(f as f64)).collect()),
+            ),
+            ("label_of_leaf", Json::arr_u32(&self.label_of_leaf)),
+            ("leaf_of_label", Json::arr_u32(&self.leaf_of_label)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let forced: Vec<Forced> = v
+            .get("forced")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_f64()? as Forced))
+            .collect::<anyhow::Result<_>>()?;
+        let t = Self {
+            aux_dim: v.get("aux_dim")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            num_leaves: v.get("num_leaves")?.as_usize()?,
+            depth: v.get("depth")?.as_usize()?,
+            w: v.get("w")?.to_vec_f32()?,
+            b: v.get("b")?.to_vec_f32()?,
+            forced,
+            label_of_leaf: v.get("label_of_leaf")?.to_vec_u32()?,
+            leaf_of_label: v.get("leaf_of_label")?.to_vec_u32()?,
+        };
+        anyhow::ensure!(t.num_leaves.is_power_of_two(), "num_leaves not a power of two");
+        anyhow::ensure!(t.w.len() == (t.num_leaves - 1) * t.aux_dim, "w size mismatch");
+        anyhow::ensure!(t.b.len() == t.num_leaves - 1, "b size mismatch");
+        anyhow::ensure!(t.label_of_leaf.len() == t.num_leaves, "leaf map size mismatch");
+        anyhow::ensure!(t.leaf_of_label.len() == t.num_classes, "label map size mismatch");
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        Ok(std::fs::write(path, self.to_json().to_string())?)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TreeConfig;
+
+    /// Hand-built 4-leaf tree over 3 labels (1 padding leaf).
+    fn toy_tree() -> Tree {
+        // leaves: [0 -> label 0, 1 -> label 1, 2 -> label 2, 3 -> PADDING]
+        // node 2 (parent of leaves 2,3) is forced left.
+        Tree {
+            aux_dim: 2,
+            num_classes: 3,
+            num_leaves: 4,
+            depth: 2,
+            w: vec![
+                1.0, 0.0, // root
+                0.0, 1.0, // node 1
+                0.0, 0.0, // node 2 (forced)
+            ],
+            b: vec![0.0, 0.5, 0.0],
+            forced: vec![0, 0, -1],
+            label_of_leaf: vec![0, 1, 2, PADDING],
+            leaf_of_label: vec![0, 1, 2],
+        }
+    }
+
+    #[test]
+    fn log_prob_normalizes_over_real_labels() {
+        let t = toy_tree();
+        for x in [[0.3f32, -0.7], [2.0, 1.0], [-3.0, 0.1]] {
+            let total: f64 = (0..3).map(|y| (t.log_prob(&x, y) as f64).exp()).sum();
+            assert!((total - 1.0).abs() < 1e-6, "x {x:?} total {total}");
+        }
+    }
+
+    #[test]
+    fn log_prob_all_matches_single() {
+        let t = toy_tree();
+        let x = [0.8f32, -1.2];
+        let mut all = vec![0f32; 3];
+        t.log_prob_all(&x, &mut all);
+        for y in 0..3u32 {
+            assert!((all[y as usize] - t.log_prob(&x, y)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sampling_matches_log_prob() {
+        let t = toy_tree();
+        let x = [0.5f32, 0.5];
+        let mut rng = Rng::new(42);
+        let mut counts = [0usize; 3];
+        let draws = 200_000;
+        for _ in 0..draws {
+            let (y, lp) = t.sample(&x, &mut rng);
+            counts[y as usize] += 1;
+            assert!((lp - t.log_prob(&x, y)).abs() < 1e-5);
+        }
+        for y in 0..3u32 {
+            let expect = (t.log_prob(&x, y) as f64).exp();
+            let got = counts[y as usize] as f64 / draws as f64;
+            assert!(
+                (got - expect).abs() < 0.006,
+                "label {y}: got {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn padding_never_sampled() {
+        let t = toy_tree();
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            let (y, _) = t.sample(&[5.0, 5.0], &mut rng);
+            assert!(y < 3);
+        }
+    }
+
+    #[test]
+    fn activations_roundtrip() {
+        let t = toy_tree();
+        let x = [1.0f32, 2.0];
+        let mut acts = vec![0f32; t.num_nodes()];
+        t.node_activations(&x, &mut acts);
+        let mut a = vec![0f32; 3];
+        let mut b = vec![0f32; 3];
+        t.log_prob_all(&x, &mut a);
+        t.log_prob_all_from_activations(&acts, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = toy_tree();
+        let back = Tree::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.w, t.w);
+        assert_eq!(back.b, t.b);
+        assert_eq!(back.forced, t.forced);
+        assert_eq!(back.label_of_leaf, t.label_of_leaf);
+        assert_eq!(back.leaf_of_label, t.leaf_of_label);
+    }
+
+    /// End-to-end: fitted tree on separable clusters should put most mass
+    /// on the right cluster. (More fit tests in fit.rs.)
+    #[test]
+    fn fitted_tree_is_conditional() {
+        let k = 2;
+        let c = 4;
+        let n = 2000;
+        let mut rng = Rng::new(9);
+        // 4 well-separated clusters at (+-3, +-3)
+        let centers = [[3.0f32, 3.0], [-3.0, 3.0], [3.0, -3.0], [-3.0, -3.0]];
+        let mut x = vec![0f32; n * k];
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let lbl = rng.below(c);
+            y[i] = lbl as u32;
+            x[i * 2] = centers[lbl][0] + 0.3 * rng.normal();
+            x[i * 2 + 1] = centers[lbl][1] + 0.3 * rng.normal();
+        }
+        let cfg = TreeConfig { aux_dim: k, ..TreeConfig::default() };
+        let (tree, _stats) = fit::fit_tree(&x, &y, n, k, c, &cfg, &mut rng);
+        // each training point's own label should have high conditional prob
+        let mut correct = 0;
+        for i in 0..200 {
+            let xi = &x[i * 2..i * 2 + 2];
+            let mut lps = vec![0f32; c];
+            tree.log_prob_all(xi, &mut lps);
+            let argmax = (0..c).max_by(|&a, &b| lps[a].total_cmp(&lps[b])).unwrap();
+            if argmax as u32 == y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 180, "only {correct}/200 correct");
+    }
+}

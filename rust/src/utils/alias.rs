@@ -1,0 +1,152 @@
+//! Walker alias method for O(1) sampling from a fixed discrete distribution.
+//!
+//! Used by the frequency-based negative sampler (the word2vec-style baseline
+//! in Sec. 2.2 of the paper): build once from empirical label counts, then
+//! each draw costs one uniform + one comparison regardless of C.
+
+use super::rng::Rng;
+
+/// Precomputed alias table over `n` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+    log_p: Vec<f32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (need not be normalized). Empty or
+    /// all-zero weights are rejected.
+    pub fn new(weights: &[f64]) -> anyhow::Result<Self> {
+        let n = weights.len();
+        anyhow::ensure!(n > 0, "alias table needs at least one outcome");
+        let total: f64 = weights.iter().sum();
+        anyhow::ensure!(
+            total > 0.0 && weights.iter().all(|w| *w >= 0.0 && w.is_finite()),
+            "alias table weights must be finite, non-negative, not all zero"
+        );
+
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            // donate mass from l to fill s up to 1
+            alias[s as usize] = l;
+            prob[l as usize] -= 1.0 - prob[s as usize];
+            if prob[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers are 1.0 up to rounding
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+        }
+
+        let log_p = weights
+            .iter()
+            .map(|w| {
+                if *w > 0.0 {
+                    ((*w / total).ln()) as f32
+                } else {
+                    f32::NEG_INFINITY
+                }
+            })
+            .collect();
+        Ok(Self { prob, alias, log_p })
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome in O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// log-probability of outcome `i` under the normalized distribution.
+    #[inline]
+    pub fn log_prob(&self, i: usize) -> f32 {
+        self.log_p[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_degenerate_weights() {
+        assert!(AliasTable::new(&[]).is_err());
+        assert!(AliasTable::new(&[0.0, 0.0]).is_err());
+        assert!(AliasTable::new(&[1.0, -1.0]).is_err());
+        assert!(AliasTable::new(&[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn matches_target_distribution() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&w).unwrap();
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 4];
+        let draws = 400_000;
+        for _ in 0..draws {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        let total: f64 = w.iter().sum();
+        for i in 0..4 {
+            let expect = w[i] / total;
+            let got = counts[i] as f64 / draws as f64;
+            assert!(
+                (got - expect).abs() < 0.005,
+                "outcome {i}: got {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_prob_is_normalized() {
+        let t = AliasTable::new(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let total: f32 = (0..4).map(|i| t.log_prob(i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_outcome_never_sampled() {
+        let t = AliasTable::new(&[1.0, 0.0, 1.0]).unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..50_000 {
+            assert_ne!(t.sample(&mut rng), 1);
+        }
+        assert_eq!(t.log_prob(1), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[42.0]).unwrap();
+        let mut rng = Rng::new(1);
+        assert_eq!(t.sample(&mut rng), 0);
+        assert!((t.log_prob(0) - 0.0).abs() < 1e-7);
+    }
+}

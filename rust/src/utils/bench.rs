@@ -1,0 +1,141 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `rust/benches/*.rs` target (all `harness = false`).
+//! Protocol: warm up, then run timed iterations until both a minimum
+//! iteration count and a minimum wall budget are met; report median / mean
+//! / p10 / p90 per-iteration latency. Median over many iterations is
+//! robust to scheduler noise at the sizes we measure.
+
+use std::time::{Duration, Instant};
+
+/// Per-iteration latency statistics (nanoseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchStats {
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+
+    /// Items-per-second at the median latency for a batch of `items`.
+    pub fn throughput(&self, items: usize) -> f64 {
+        items as f64 / self.median_secs()
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    warmup_iters: usize,
+    min_iters: usize,
+    budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            budget: Duration::from_secs_f64(
+                std::env::var("REPRO_BENCH_SECONDS")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(2.0),
+            ),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, min_iters: usize, budget_secs: f64) -> Self {
+        Self {
+            warmup_iters,
+            min_iters,
+            budget: Duration::from_secs_f64(budget_secs),
+        }
+    }
+
+    /// Time `f` and print a criterion-style line. Returns the stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let n = samples.len();
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q) as usize];
+        let stats = BenchStats {
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            median_ns: pick(0.5),
+            p10_ns: pick(0.1),
+            p90_ns: pick(0.9),
+        };
+        println!(
+            "bench {name:<44} median {:>10}  p10 {:>10}  p90 {:>10}  (n={})",
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p10_ns),
+            fmt_ns(stats.p90_ns),
+            n
+        );
+        stats
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let b = Bench::new(1, 20, 0.01);
+        let mut acc = 0u64;
+        let s = b.run("test_case", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s.iters >= 20);
+        assert!(s.p10_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p90_ns);
+        assert!(s.median_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let s = BenchStats { iters: 10, mean_ns: 1e6, median_ns: 1e6, p10_ns: 1e6, p90_ns: 1e6 };
+        assert!((s.throughput(1000) - 1e9 / 1e6 * 1000.0 / 1000.0 * 1000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [<subcommand>...] [--key value|--key=value|--flag]`.
+//! Typed access via [`Args::get`] with a default, [`Args::get_opt`], and
+//! [`Args::flag`]. Unknown-key detection via [`Args::finish`] keeps typos
+//! loud.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed arguments: leading positionals (subcommands) + key/value options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = S>, S: Into<String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is the next token unless it looks like an option
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.options.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Positional `i` (subcommand path).
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get_opt(key)? {
+            Some(v) => Ok(v),
+            None => Ok(default),
+        }
+    }
+
+    /// Typed optional option.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.borrow_mut().insert(key.to_string());
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {raw:?}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present without value, or with true/false).
+    pub fn flag(&self, key: &str) -> Result<bool> {
+        Ok(self.get_opt::<String>(key)?.map(|v| v != "false").unwrap_or(false))
+    }
+
+    /// Error on any option never consumed (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {unknown:?}");
+        }
+        Ok(())
+    }
+
+    /// Required option.
+    pub fn require<T: FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get_opt(key)?.with_context(|| format!("missing required --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(["exp", "figure1", "--seconds", "30", "--dataset=wiki-sim", "--verbose"]).unwrap();
+        assert_eq!(a.pos(0), Some("exp"));
+        assert_eq!(a.pos(1), Some("figure1"));
+        assert_eq!(a.get::<f64>("seconds", 0.0).unwrap(), 30.0);
+        assert_eq!(a.get::<String>("dataset", "".into()).unwrap(), "wiki-sim");
+        assert!(a.flag("verbose").unwrap());
+        assert!(!a.flag("quiet").unwrap());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(["x"]).unwrap();
+        assert_eq!(a.get::<usize>("n", 7).unwrap(), 7);
+        assert!(a.require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = Args::parse(["--known", "1", "--typo", "2"]).unwrap();
+        let _ = a.get::<usize>("known", 0).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = Args::parse(["--n", "abc"]).unwrap();
+        assert!(a.get::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = Args::parse(["--x", "-3.5"]).unwrap();
+        assert_eq!(a.get::<f64>("x", 0.0).unwrap(), -3.5);
+    }
+}

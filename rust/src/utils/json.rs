@@ -1,0 +1,432 @@
+//! Minimal JSON parser/writer (RFC 8259 subset sufficient for our files:
+//! the AOT manifest, model checkpoints, run configs).
+//!
+//! In-tree because the build environment vendors only the `xla` crate's
+//! dependency closure (no serde_json). Supports the full JSON value model;
+//! numbers are f64 (exact for the f32 payloads we store and for integers
+//! up to 2^53, far beyond any shape or count in this library).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ------------------------------------------------------------------
+    // constructors / accessors
+    // ------------------------------------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f32(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect())
+    }
+
+    pub fn arr_u32(xs: &[u32]) -> Json {
+        Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect())
+    }
+
+    pub fn arr_usize(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect())
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).with_context(|| format!("missing key {key:?}")),
+            _ => bail!("not an object (looking up {key:?})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "not a usize: {n}");
+        Ok(n as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "not a u64: {n}");
+        Ok(n as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object: {self:?}"),
+        }
+    }
+
+    pub fn to_vec_f32(&self) -> Result<Vec<f32>> {
+        self.as_arr()?.iter().map(|v| v.as_f32()).collect()
+    }
+
+    pub fn to_vec_u32(&self) -> Result<Vec<u32>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_u64()? as u32))
+            .collect()
+    }
+
+    pub fn to_vec_usize(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // parsing
+    // ------------------------------------------------------------------
+
+    pub fn parse(s: &str) -> Result<Json> {
+        let bytes = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(pos == bytes.len(), "trailing garbage at byte {pos}");
+        Ok(v)
+    }
+
+    // ------------------------------------------------------------------
+    // writing
+    // ------------------------------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    // shortest roundtrip repr rust provides
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "bad literal at byte {pos}"
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    let n: f64 = s
+        .parse()
+        .with_context(|| format!("bad number {s:?} at byte {start}"))?;
+    Ok(Json::Num(n))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    anyhow::ensure!(
+        *pos < b.len() && b[*pos] == b'"',
+        "expected string at byte {pos}"
+    );
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "unterminated escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 < b.len(), "bad \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let cp = u32::from_str_radix(hex, 16).context("bad \\u hex")?;
+                        // (surrogate pairs unsupported; our payloads are ASCII)
+                        out.push(char::from_u32(cp).context("bad codepoint")?);
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape \\{}", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy one UTF-8 scalar
+                let rest = std::str::from_utf8(&b[*pos..])?;
+                let c = rest.chars().next().context("empty")?;
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            c => bail!("expected ',' or ']', got {:?}", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut out = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':'");
+        *pos += 1;
+        let val = parse_value(b, pos)?;
+        out.insert(key, val);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(out));
+            }
+            c => bail!("expected ',' or '}}', got {:?}", c as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b").unwrap().as_str().unwrap(), "x");
+        assert_eq!(v.get("c").unwrap(), &Json::Null);
+        assert!(v.get("zzz").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = Json::obj(vec![
+            ("nums", Json::arr_f32(&[1.5, -2.25, 0.0])),
+            ("name", Json::Str("tree \"x\"\n".into())),
+            ("n", Json::Num(42.0)),
+            ("flag", Json::Bool(true)),
+        ]);
+        let text = src.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn f32_payload_roundtrips_exactly() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 * 0.7).sin() * 1e3).collect();
+        let text = Json::arr_f32(&xs).to_string();
+        let back = Json::parse(&text).unwrap().to_vec_f32().unwrap();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_shape() {
+        let text = r#"{
+            "artifacts": {
+                "ns_grad_B256_K64": {
+                    "file": "ns_grad_B256_K64.hlo.txt",
+                    "inputs": [{"shape": [256, 64], "dtype": "float32"}]
+                }
+            },
+            "format": "hlo-text",
+            "version": 1
+        }"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("format").unwrap().as_str().unwrap(), "hlo-text");
+        let arts = v.get("artifacts").unwrap().as_obj().unwrap();
+        let a = &arts["ns_grad_B256_K64"];
+        let shape = a.get("inputs").unwrap().as_arr().unwrap()[0]
+            .get("shape")
+            .unwrap()
+            .to_vec_usize()
+            .unwrap();
+        assert_eq!(shape, vec![256, 64]);
+    }
+
+    #[test]
+    fn integers_written_without_decimal() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, alias tables, timing helpers.
+
+pub mod alias;
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use alias::AliasTable;
+pub use rng::Rng;
+pub use timer::StopWatch;

@@ -1,0 +1,110 @@
+//! Pausable stopwatch for learning-curve timing.
+//!
+//! Figure 1 plots metrics against *training* wallclock; evaluation passes
+//! must not count. The trainer pauses the watch around evaluation, exactly
+//! like the paper's protocol of shifting curves only by the auxiliary-model
+//! fitting time.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch that can be paused and resumed.
+#[derive(Debug)]
+pub struct StopWatch {
+    accumulated: Duration,
+    started_at: Option<Instant>,
+}
+
+impl Default for StopWatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StopWatch {
+    /// Create a paused stopwatch at zero.
+    pub fn new() -> Self {
+        Self { accumulated: Duration::ZERO, started_at: None }
+    }
+
+    /// Create and immediately start.
+    pub fn started() -> Self {
+        let mut s = Self::new();
+        s.resume();
+        s
+    }
+
+    pub fn resume(&mut self) {
+        if self.started_at.is_none() {
+            self.started_at = Some(Instant::now());
+        }
+    }
+
+    pub fn pause(&mut self) {
+        if let Some(t0) = self.started_at.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    /// Total running time so far.
+    pub fn elapsed(&self) -> Duration {
+        self.accumulated
+            + self
+                .started_at
+                .map(|t0| t0.elapsed())
+                .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Seed the accumulated time (e.g. with the auxiliary-model fit time so
+    /// curves start shifted right, as in the paper's Figure 1).
+    pub fn preload(&mut self, d: Duration) {
+        self.accumulated += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    #[test]
+    fn pause_stops_accumulation() {
+        let mut w = StopWatch::started();
+        sleep(Duration::from_millis(10));
+        w.pause();
+        let e1 = w.elapsed();
+        sleep(Duration::from_millis(20));
+        let e2 = w.elapsed();
+        assert_eq!(e1, e2);
+        assert!(e1 >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn resume_continues() {
+        let mut w = StopWatch::started();
+        sleep(Duration::from_millis(5));
+        w.pause();
+        w.resume();
+        sleep(Duration::from_millis(5));
+        assert!(w.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn preload_shifts_origin() {
+        let mut w = StopWatch::new();
+        w.preload(Duration::from_secs(3));
+        assert!(w.elapsed() >= Duration::from_secs(3));
+    }
+
+    #[test]
+    fn double_resume_is_idempotent() {
+        let mut w = StopWatch::started();
+        w.resume();
+        sleep(Duration::from_millis(5));
+        w.pause();
+        assert!(w.elapsed() < Duration::from_millis(500));
+    }
+}

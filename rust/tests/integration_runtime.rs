@@ -1,0 +1,192 @@
+//! Integration: AOT artifacts → PJRT runtime → numerics cross-checked
+//! against pure-rust implementations of the same math.
+//!
+//! Requires `make artifacts` (fails with a clear message otherwise).
+
+use adv_softmax::linalg::{dot, log_sigmoid, sigmoid};
+use adv_softmax::runtime::{lit_f32, lit_i32, read_f32, read_i32, Registry};
+use adv_softmax::utils::Rng;
+
+fn registry() -> Registry {
+    Registry::open_default().expect("artifacts missing — run `make artifacts` first")
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn manifest_lists_all_entry_points() {
+    let reg = registry();
+    for prefix in [
+        "ns_grad_", "nce_grad_", "ove_grad_", "softmax_grad_",
+        "eval_chunk_B", "eval_chunk_plain_", "scores_",
+    ] {
+        reg.get_by_prefix(prefix).unwrap_or_else(|e| panic!("{prefix}: {e}"));
+    }
+    assert!(reg.get("nonexistent").is_err());
+    assert!(reg.get_by_prefix("zzz").is_err());
+}
+
+#[test]
+fn ns_grad_matches_rust_reference() {
+    let reg = registry();
+    let exec = reg.get_by_prefix("ns_grad_").unwrap();
+    let b = reg.manifest.shapes.train_b;
+    let k = reg.manifest.shapes.feat_k;
+    let mut rng = Rng::new(1);
+    let x = randv(&mut rng, b * k);
+    let wp = randv(&mut rng, b * k);
+    let bp = randv(&mut rng, b);
+    let wn = randv(&mut rng, b * k);
+    let bn = randv(&mut rng, b);
+    let lpn_p: Vec<f32> = randv(&mut rng, b).iter().map(|v| v - 3.0).collect();
+    let lpn_n: Vec<f32> = randv(&mut rng, b).iter().map(|v| v - 3.0).collect();
+    let lam = 0.01f32;
+
+    let outs = exec
+        .run(&[
+            lit_f32(&x, &[b, k]).unwrap(),
+            lit_f32(&wp, &[b, k]).unwrap(),
+            lit_f32(&bp, &[b]).unwrap(),
+            lit_f32(&wn, &[b, k]).unwrap(),
+            lit_f32(&bn, &[b]).unwrap(),
+            lit_f32(&lpn_p, &[b]).unwrap(),
+            lit_f32(&lpn_n, &[b]).unwrap(),
+            lit_f32(&[lam], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let loss = read_f32(&outs[0]).unwrap();
+    let gwp = read_f32(&outs[1]).unwrap();
+    let gbp = read_f32(&outs[2]).unwrap();
+
+    // rust reference (paper Eq. 6)
+    for i in 0..b {
+        let xi_p = dot(&x[i * k..(i + 1) * k], &wp[i * k..(i + 1) * k]) + bp[i];
+        let xi_n = dot(&x[i * k..(i + 1) * k], &wn[i * k..(i + 1) * k]) + bn[i];
+        let expect = -log_sigmoid(xi_p) - log_sigmoid(-xi_n)
+            + lam * (xi_p + lpn_p[i]).powi(2)
+            + lam * (xi_n + lpn_n[i]).powi(2);
+        assert!(
+            (loss[i] - expect).abs() < 2e-4 * (1.0 + expect.abs()),
+            "loss[{i}]: {} vs {expect}",
+            loss[i]
+        );
+        let dxi_p = -sigmoid(-xi_p) + 2.0 * lam * (xi_p + lpn_p[i]);
+        assert!((gbp[i] - dxi_p).abs() < 2e-4, "gbp[{i}]");
+        for j in (0..k).step_by(17) {
+            let expect_g = dxi_p * x[i * k + j];
+            assert!(
+                (gwp[i * k + j] - expect_g).abs() < 2e-4 * (1.0 + expect_g.abs()),
+                "gwp[{i},{j}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_chunk_streaming_reduction_is_correct() {
+    let reg = registry();
+    let exec = reg.get_by_prefix("eval_chunk_plain_").unwrap();
+    let b = reg.manifest.shapes.eval_b;
+    let cc = reg.manifest.shapes.eval_c;
+    let k = reg.manifest.shapes.feat_k;
+    let mut rng = Rng::new(2);
+    let x = randv(&mut rng, b * k);
+    let wc = randv(&mut rng, cc * k);
+    let bc = randv(&mut rng, cc);
+    let y_rel: Vec<i32> = (0..b)
+        .map(|i| if i % 3 == 0 { -1 } else { (i % cc) as i32 })
+        .collect();
+
+    let outs = exec
+        .run(&[
+            lit_f32(&x, &[b, k]).unwrap(),
+            lit_f32(&wc, &[cc, k]).unwrap(),
+            lit_f32(&bc, &[cc]).unwrap(),
+            lit_i32(&y_rel, &[b]).unwrap(),
+        ])
+        .unwrap();
+    let cmax = read_f32(&outs[0]).unwrap();
+    let cargmax = read_i32(&outs[1]).unwrap();
+    let csum = read_f32(&outs[2]).unwrap();
+    let ctrue = read_f32(&outs[3]).unwrap();
+
+    for i in (0..b).step_by(37) {
+        let scores: Vec<f32> = (0..cc)
+            .map(|c| dot(&x[i * k..(i + 1) * k], &wc[c * k..(c + 1) * k]) + bc[c])
+            .collect();
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let am = (0..cc).max_by(|&a, &b2| scores[a].total_cmp(&scores[b2])).unwrap();
+        let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+        assert!((cmax[i] - m).abs() < 1e-3, "max[{i}]");
+        assert_eq!(cargmax[i] as usize, am, "argmax[{i}]");
+        assert!((csum[i] - se).abs() < 1e-2 * se, "sumexp[{i}]");
+        if y_rel[i] >= 0 {
+            assert!((ctrue[i] - scores[y_rel[i] as usize]).abs() < 1e-3);
+        } else {
+            assert!(ctrue[i] < -1.0e29, "sentinel expected");
+        }
+    }
+}
+
+#[test]
+fn scores_artifact_is_plain_matmul() {
+    let reg = registry();
+    let exec = reg.get_by_prefix("scores_").unwrap();
+    let (b, ka) = (exec.meta.inputs[0].shape[0], exec.meta.inputs[0].shape[1]);
+    let ca = exec.meta.inputs[1].shape[0];
+    let mut rng = Rng::new(3);
+    let x = randv(&mut rng, b * ka);
+    let wc = randv(&mut rng, ca * ka);
+    let bc = randv(&mut rng, ca);
+    let outs = exec
+        .run(&[
+            lit_f32(&x, &[b, ka]).unwrap(),
+            lit_f32(&wc, &[ca, ka]).unwrap(),
+            lit_f32(&bc, &[ca]).unwrap(),
+        ])
+        .unwrap();
+    let s = read_f32(&outs[0]).unwrap();
+    for (i, c) in [(0, 0), (b / 2, ca / 2), (b - 1, ca - 1)] {
+        let expect = dot(&x[i * ka..(i + 1) * ka], &wc[c * ka..(c + 1) * ka]) + bc[c];
+        assert!(
+            (s[i * ca + c] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+            "s[{i},{c}]"
+        );
+    }
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let reg = registry();
+    let exec = reg.get_by_prefix("scores_").unwrap();
+    assert!(exec.run(&[]).is_err());
+}
+
+// NB: the xla crate's PjRtLoadedExecutable is Rc-based (!Send), so all
+// PJRT execution stays on the coordinator thread by design; the training
+// pipeline overlaps *batch generation* (pure rust) with execution instead.
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let reg = registry();
+    let exec = reg.get_by_prefix("scores_").unwrap();
+    let (b, ka) = (exec.meta.inputs[0].shape[0], exec.meta.inputs[0].shape[1]);
+    let ca = exec.meta.inputs[1].shape[0];
+    let mut rng = Rng::new(4);
+    let x = randv(&mut rng, b * ka);
+    let wc = randv(&mut rng, ca * ka);
+    let bc = randv(&mut rng, ca);
+    let run = || {
+        let outs = exec
+            .run(&[
+                lit_f32(&x, &[b, ka]).unwrap(),
+                lit_f32(&wc, &[ca, ka]).unwrap(),
+                lit_f32(&bc, &[ca]).unwrap(),
+            ])
+            .unwrap();
+        read_f32(&outs[0]).unwrap()
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,184 @@
+//! Integration: full training runs through the coordinator on the tiny
+//! preset — every method learns (or behaves exactly as the paper predicts),
+//! the HLO evaluator agrees with the pure-rust reference evaluator, and
+//! runs are deterministic.
+
+use adv_softmax::eval::{evaluate_reference, Evaluator};
+use adv_softmax::prelude::*;
+
+fn registry() -> Registry {
+    Registry::open_default().expect("artifacts missing — run `make artifacts` first")
+}
+
+fn tiny_splits() -> Splits {
+    Splits::synthetic(&SyntheticConfig::preset(DatasetPreset::Tiny))
+}
+
+fn short_cfg(method: Method, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::new(DatasetPreset::Tiny, method);
+    cfg.max_steps = steps;
+    cfg.max_seconds = 120.0;
+    cfg.eval_points = 512;
+    cfg
+}
+
+#[test]
+fn adversarial_method_learns_tiny() {
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(Method::Adversarial, 600)).unwrap();
+    let curve = run.train().unwrap();
+    let final_acc = curve.last().unwrap().accuracy;
+    assert!(final_acc > 0.85, "adversarial acc {final_acc}");
+    assert!(curve.aux_fit_seconds > 0.0);
+    // accuracy at the end must beat the tree-alone baseline at step ~0
+    let first = curve.points.first().unwrap();
+    assert!(final_acc >= first.accuracy);
+}
+
+#[test]
+fn uniform_and_frequency_learn_tiny() {
+    let reg = registry();
+    let splits = tiny_splits();
+    for method in [Method::Uniform, Method::Frequency] {
+        let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(method, 800)).unwrap();
+        let curve = run.train().unwrap();
+        let acc = curve.best_accuracy();
+        assert!(acc > 0.6, "{method} acc {acc}");
+        assert_eq!(curve.aux_fit_seconds, 0.0);
+    }
+}
+
+#[test]
+fn pairwise_methods_learn_tiny() {
+    let reg = registry();
+    let splits = tiny_splits();
+    for method in [Method::OneVsEach, Method::AugmentReduce] {
+        let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(method, 800)).unwrap();
+        let curve = run.train().unwrap();
+        let acc = curve.best_accuracy();
+        assert!(acc > 0.6, "{method} acc {acc}");
+    }
+}
+
+#[test]
+fn nce_trains_but_ranks_slowly() {
+    // The paper's own point (Sec. 5 Baselines): NCE must re-learn what the
+    // base distribution captures, so its *ranking* is poor on short
+    // budgets even as its loss decreases.
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(Method::Nce, 400)).unwrap();
+    let curve = run.train().unwrap();
+    let first_loss = curve.points.first().unwrap().train_loss;
+    let last_loss = curve.points.last().unwrap().train_loss;
+    assert!(last_loss < first_loss, "NCE loss should decrease: {first_loss} -> {last_loss}");
+}
+
+#[test]
+fn bias_correction_improves_adversarial_predictions() {
+    // Ablation A1 as a hard invariant: Eq. 5 correction must help early in
+    // training (the tree knows far more than the barely-trained scores).
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(Method::Adversarial, 100)).unwrap();
+    for _ in 0..100 {
+        run.step_once().unwrap();
+    }
+    let with = run.evaluate_with(true).unwrap();
+    let without = run.evaluate_with(false).unwrap();
+    assert!(
+        with.accuracy > without.accuracy + 0.05,
+        "correction {:.3} vs raw {:.3}",
+        with.accuracy,
+        without.accuracy
+    );
+}
+
+#[test]
+fn hlo_evaluator_matches_reference_evaluator() {
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(Method::Adversarial, 50)).unwrap();
+    for _ in 0..50 {
+        run.step_once().unwrap();
+    }
+    let mut rng = Rng::new(7);
+    let eval_set = splits.test.subsample(300, &mut rng); // non-multiple of B: tests padding
+    let evaluator = Evaluator::new(&reg).unwrap();
+    for corrector in [None, run.aux.as_deref()] {
+        let hlo = evaluator.evaluate(&run.params, &eval_set, corrector).unwrap();
+        let refr = evaluate_reference(&run.params, &eval_set, corrector);
+        assert_eq!(hlo.n, refr.n);
+        assert!(
+            (hlo.log_likelihood - refr.log_likelihood).abs() < 1e-3,
+            "loglik {} vs {}",
+            hlo.log_likelihood,
+            refr.log_likelihood
+        );
+        assert!(
+            (hlo.accuracy - refr.accuracy).abs() < 1e-9,
+            "acc {} vs {}",
+            hlo.accuracy,
+            refr.accuracy
+        );
+    }
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut cfg = short_cfg(Method::Uniform, 60);
+    cfg.pipelined = false; // pipelining preserves the stream; keep the test strict anyway
+    let run_once = || {
+        let mut run = TrainRun::prepare(&reg, &splits, &cfg).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..60 {
+            losses.push(run.step_once().unwrap());
+        }
+        losses
+    };
+    assert_eq!(run_once(), run_once());
+}
+
+#[test]
+fn pipelined_equals_inline_stream() {
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut cfg = short_cfg(Method::Adversarial, 40);
+    let mut losses = Vec::new();
+    for pipelined in [false, true] {
+        cfg.pipelined = pipelined;
+        let mut run = TrainRun::prepare(&reg, &splits, &cfg).unwrap();
+        let mut l = Vec::new();
+        for _ in 0..40 {
+            l.push(run.step_once().unwrap());
+        }
+        losses.push(l);
+    }
+    assert_eq!(losses[0], losses[1]);
+}
+
+#[test]
+fn softmax_method_requires_matching_c() {
+    let reg = registry();
+    let splits = tiny_splits(); // C=256 != softmax_c=4096
+    let cfg = short_cfg(Method::Softmax, 10);
+    assert!(TrainRun::prepare(&reg, &splits, &cfg).is_err());
+}
+
+#[test]
+fn curve_csv_appends() {
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut run = TrainRun::prepare(&reg, &splits, &short_cfg(Method::Uniform, 30)).unwrap();
+    let curve = run.train().unwrap();
+    let path = std::env::temp_dir().join("adv_softmax_integration_curve.csv");
+    std::fs::remove_file(&path).ok();
+    curve.append_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("dataset,method,step"));
+    assert!(text.lines().count() >= 2);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,273 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The proptest crate is unavailable offline, so this file uses an
+//! equivalent in-tree pattern: each property runs against many randomized
+//! cases drawn from a seeded generator, and failures report the seed of
+//! the offending case so it can be replayed exactly.
+
+use adv_softmax::config::TreeConfig;
+use adv_softmax::data::Dataset;
+use adv_softmax::linalg::{lse_merge, solve_spd};
+use adv_softmax::model::ParamStore;
+use adv_softmax::sampler::{FrequencySampler, NoiseSampler, UniformSampler};
+use adv_softmax::tree::fit::fit_tree;
+use adv_softmax::tree::PADDING;
+use adv_softmax::utils::json::Json;
+use adv_softmax::utils::{AliasTable, Rng};
+
+/// Run `prop` over `cases` random seeds; panic with the seed on failure.
+fn for_all_seeds(cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xfeed_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(">>> property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_tree_data(rng: &mut Rng) -> (Vec<f32>, Vec<u32>, usize, usize, usize) {
+    let c = 2 + rng.below(40); // 2..41 classes, mostly not powers of two
+    let k = 1 + rng.below(6);
+    let n = 300 + rng.below(700);
+    let mut x = vec![0f32; n * k];
+    let mut y = vec![0u32; n];
+    for i in 0..n {
+        let lbl = rng.below(c) as u32;
+        y[i] = lbl;
+        for j in 0..k {
+            x[i * k + j] =
+                ((lbl as usize >> j) & 1) as f32 * 2.0 - 1.0 + 0.5 * rng.normal();
+        }
+    }
+    (x, y, n, k, c)
+}
+
+/// Tree invariant 1: p_n(·|x) is a normalized distribution over the real
+/// labels for any fitted tree and any input.
+#[test]
+fn prop_tree_normalizes() {
+    for_all_seeds(12, |rng| {
+        let (x, y, n, k, c) = random_tree_data(rng);
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, rng);
+        let mut lps = vec![0f32; c];
+        for i in [0usize, n / 2, n - 1] {
+            tree.log_prob_all(&x[i * k..(i + 1) * k], &mut lps);
+            let total: f64 = lps.iter().map(|&l| (l as f64).exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4, "C={c} k={k}: total {total}");
+        }
+    });
+}
+
+/// Tree invariant 2: leaves and labels are in bijection; padding leaves
+/// are never sampled; sample() agrees with log_prob().
+#[test]
+fn prop_tree_bijection_and_sampling() {
+    for_all_seeds(12, |rng| {
+        let (x, y, n, k, c) = random_tree_data(rng);
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, rng);
+        // bijection
+        let mut seen = vec![false; c];
+        for &lbl in tree.label_of_leaf.iter().filter(|&&l| l != PADDING) {
+            assert!(!seen[lbl as usize]);
+            seen[lbl as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // sampling
+        let xi = &x[..k];
+        for _ in 0..200 {
+            let (s, lp) = tree.sample(xi, rng);
+            assert!((s as usize) < c);
+            let direct = tree.log_prob(xi, s);
+            assert!((lp - direct).abs() < 1e-4, "lp {lp} vs {direct}");
+        }
+    });
+}
+
+/// Sampler invariant: every sampler's log_prob is consistent with its
+/// empirical sampling distribution (KL ≈ 0 on a coarse histogram).
+#[test]
+fn prop_sampler_logprob_matches_empirical() {
+    for_all_seeds(6, |rng| {
+        let c = 2 + rng.below(20);
+        let n = 2000;
+        let k = 3;
+        let feats: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(c) as u32).collect();
+        let data = Dataset::new(feats, labels, k, c);
+        let samplers: Vec<Box<dyn NoiseSampler>> = vec![
+            Box::new(UniformSampler::new(c)),
+            Box::new(FrequencySampler::from_dataset(&data, 1.0).unwrap()),
+        ];
+        for s in &samplers {
+            let draws = 60_000;
+            let mut counts = vec![0usize; c];
+            for _ in 0..draws {
+                counts[s.sample(&[], rng).0 as usize] += 1;
+            }
+            for lbl in 0..c {
+                let p = (s.log_prob(&[], lbl as u32) as f64).exp();
+                let emp = counts[lbl] as f64 / draws as f64;
+                let tol = 4.0 * (p / draws as f64).sqrt() + 2e-3;
+                assert!(
+                    (p - emp).abs() < tol,
+                    "{}: label {lbl}: p={p:.5} emp={emp:.5}",
+                    s.name()
+                );
+            }
+        }
+    });
+}
+
+/// Alias-table invariant: normalized log-probs and support exactly the
+/// nonzero-weight outcomes.
+#[test]
+fn prop_alias_table_support() {
+    for_all_seeds(20, |rng| {
+        let n = 1 + rng.below(50);
+        let weights: Vec<f64> = (0..n)
+            .map(|_| if rng.bernoulli(0.2) { 0.0 } else { rng.next_f64() + 0.01 })
+            .collect();
+        if weights.iter().sum::<f64>() == 0.0 {
+            return;
+        }
+        let t = AliasTable::new(&weights).unwrap();
+        let total: f64 = (0..n)
+            .map(|i| (t.log_prob(i) as f64).exp())
+            .filter(|p| p.is_finite())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        for _ in 0..2000 {
+            let s = t.sample(rng);
+            assert!(weights[s] > 0.0, "sampled zero-weight outcome {s}");
+        }
+    });
+}
+
+/// Streaming LSE merge is associative-equivalent to the global reduction
+/// for arbitrary chunkings.
+#[test]
+fn prop_lse_merge_chunking_invariant() {
+    for_all_seeds(30, |rng| {
+        let n = 2 + rng.below(200);
+        let xs: Vec<f32> = (0..n).map(|_| 10.0 * rng.normal()).collect();
+        let gm = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let gs: f32 = xs.iter().map(|x| (x - gm).exp()).sum();
+        let global = gm + gs.ln();
+
+        // random chunking
+        let (mut m, mut s) = (f32::NEG_INFINITY, 0f32);
+        let mut i = 0;
+        while i < n {
+            let len = 1 + rng.below(n - i);
+            let chunk = &xs[i..i + len];
+            let cm = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let cs: f32 = chunk.iter().map(|x| (x - cm).exp()).sum();
+            let (nm, ns) = lse_merge(m, s, cm, cs);
+            m = nm;
+            s = ns;
+            i += len;
+        }
+        let streamed = m + s.ln();
+        assert!(
+            (streamed - global).abs() < 1e-3 * (1.0 + global.abs()),
+            "{streamed} vs {global}"
+        );
+    });
+}
+
+/// Gather/scatter invariant: apply_sparse on gathered rows changes exactly
+/// the touched rows, and gather reads back what scatter wrote.
+#[test]
+fn prop_gather_scatter_consistency() {
+    for_all_seeds(20, |rng| {
+        let c = 4 + rng.below(60);
+        let k = 1 + rng.below(16);
+        let b = 1 + rng.below(32);
+        let mut p = ParamStore::zeros(c, k, 0.1);
+        let labels: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let gw: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        p.apply_sparse(&labels, &gw, &gb);
+        let touched: std::collections::HashSet<u32> = labels.iter().copied().collect();
+        for y in 0..c as u32 {
+            let row_nonzero = p.row(y).iter().any(|&v| v != 0.0) || p.b[y as usize] != 0.0;
+            if touched.contains(&y) {
+                // a row could stay zero only if its gradient was exactly 0
+                let any_grad = labels
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &l)| l == y)
+                    .any(|(i, _)| gb[i] != 0.0 || gw[i * k..(i + 1) * k].iter().any(|&g| g != 0.0));
+                assert_eq!(row_nonzero, any_grad, "row {y}");
+            } else {
+                assert!(!row_nonzero, "untouched row {y} changed");
+            }
+        }
+    });
+}
+
+/// SPD solver: A x = b residual is tiny for random SPD systems.
+#[test]
+fn prop_spd_solver_residual() {
+    for_all_seeds(25, |rng| {
+        let n = 1 + rng.below(12);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal() as f64).collect();
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 0.5 } else { 0.0 };
+                for l in 0..n {
+                    s += m[l * n + i] * m[l * n + j];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+        let x = solve_spd(&a, &b, n).expect("SPD");
+        for i in 0..n {
+            let ax: f64 = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+            assert!((ax - b[i]).abs() < 1e-8 * (1.0 + b[i].abs()), "row {i}");
+        }
+    });
+}
+
+/// JSON roundtrip: arbitrary (generated) values survive write->parse.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64 / 4.0),
+            3 => {
+                let len = rng.below(8);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_all_seeds(50, |rng| {
+        let v = gen_value(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text:?}: {e}"));
+        assert_eq!(back, v, "text was {text:?}");
+    });
+}
