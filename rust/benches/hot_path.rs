@@ -1,87 +1,232 @@
 //! Component micro-benchmarks for the L3 hot path (perf pass, DESIGN.md §7).
 //!
-//! Measures each stage of a training step in isolation: batch assembly
-//! (tree descents), parameter gather, literal creation, PJRT execute,
-//! gradient scatter (Adagrad). The sum should roughly match the end-to-end
-//! step time measured in figure1_convergence; discrepancies localize
-//! overheads.
+//! Measures each stage of a training step in isolation — batch assembly
+//! (tree descents), parameter gather, Adagrad scatter, the eval sweep,
+//! literal creation, PJRT execute — and, for every pool-sharded stage, the
+//! serial vs. `parallelism = 4` comparison that tracks the multi-worker
+//! hot-path refactor. Results are also written to `BENCH_hot_path.json`
+//! (cwd) so later PRs can diff the perf trajectory mechanically.
+//!
+//! The PJRT-dependent cases are skipped with a notice when artifacts (or
+//! the real xla runtime) are unavailable; all host-side cases always run.
 
 use adv_softmax::config::{DatasetPreset, Method, RunConfig, SyntheticConfig, TreeConfig};
 use adv_softmax::data::Splits;
+use adv_softmax::eval::LpnCache;
 use adv_softmax::model::ParamStore;
 use adv_softmax::runtime::{lit_f32, Registry};
 use adv_softmax::sampler::{AdversarialSampler, NoiseSampler};
-use adv_softmax::train::{BatchGen, BatchMode, SamplerKind, TrainRun};
-use adv_softmax::utils::bench::{black_box, Bench};
-use adv_softmax::utils::Rng;
+use adv_softmax::train::{BatchGen, BatchMode, BatchSource, SamplerKind, TrainRun};
+use adv_softmax::utils::bench::{black_box, Bench, BenchStats};
+use adv_softmax::utils::json::Json;
+use adv_softmax::utils::{Pool, Rng};
 use std::sync::Arc;
+
+/// Worker count for the parallel variants (the acceptance-bar setting).
+const PAR: usize = 4;
+
+/// (summary key, serial case, parallel case) for the tracked speedups.
+const SPEEDUP_PAIRS: [(&str, &str, &str); 4] = [
+    ("batch_assembly", "batcher/next_batch(serial)", "batcher/pipeline(workers=4)"),
+    ("gather", "params/gather(serial)", "params/gather(workers=4)"),
+    ("scatter", "params/adagrad_scatter(serial)", "params/adagrad_scatter(workers=4)"),
+    ("eval_sweep", "eval/lpn_cache(serial)", "eval/lpn_cache(workers=4)"),
+];
+
+#[derive(Default)]
+struct Report {
+    results: Vec<(String, BenchStats)>,
+}
+
+impl Report {
+    fn record(&mut self, name: &str, stats: BenchStats) {
+        self.results.push((name.to_string(), stats));
+    }
+
+    fn median(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.median_ns)
+    }
+
+    fn speedup(&self, serial: &str, parallel: &str) -> Option<f64> {
+        match (self.median(serial), self.median(parallel)) {
+            (Some(s), Some(p)) if p > 0.0 => Some(s / p),
+            _ => None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let cases = Json::Obj(
+            self.results
+                .iter()
+                .map(|(name, s)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("median_ns", Json::Num(s.median_ns)),
+                            ("mean_ns", Json::Num(s.mean_ns)),
+                            ("p10_ns", Json::Num(s.p10_ns)),
+                            ("p90_ns", Json::Num(s.p90_ns)),
+                            ("iters", Json::Num(s.iters as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let speedups = Json::Obj(
+            SPEEDUP_PAIRS
+                .iter()
+                .filter_map(|(key, s, p)| {
+                    self.speedup(s, p).map(|x| (key.to_string(), Json::Num(x)))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::Str("hot_path".into())),
+            ("parallel_workers", Json::Num(PAR as f64)),
+            ("results", cases),
+            ("speedups_serial_over_parallel", speedups),
+        ])
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let bench = Bench::default();
+    let mut report = Report::default();
     let syn = SyntheticConfig::preset(DatasetPreset::Tiny);
     let splits = Splits::synthetic(&syn);
     let data = Arc::new(splits.train.clone());
     let (b, k, c) = (256usize, data.feat_dim, data.num_classes);
     let mut rng = Rng::new(1);
+    let pool = Pool::new(PAR);
 
     // --- linalg ---
     let va: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
     let vb: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
-    bench.run("linalg/dot_64", || {
+    let s = bench.run("linalg/dot_64", || {
         black_box(adv_softmax::linalg::dot(black_box(&va), black_box(&vb)));
     });
+    report.record("linalg/dot_64", s);
 
     // --- tree sampling / log-prob ---
     let tcfg = TreeConfig { aux_dim: 16, ..Default::default() };
     let (adv, _) = AdversarialSampler::fit(&data, &tcfg, 1);
     let x0 = data.x(0).to_vec();
     let mut srng = Rng::new(2);
-    bench.run("sampler/adversarial_sample(C=256)", || {
+    let s = bench.run("sampler/adversarial_sample(C=256)", || {
         black_box(adv.sample(black_box(&x0), &mut srng));
     });
-    bench.run("sampler/adversarial_log_prob", || {
+    report.record("sampler/adversarial_sample(C=256)", s);
+    let s = bench.run("sampler/adversarial_log_prob", || {
         black_box(adv.log_prob(black_box(&x0), 17));
     });
+    report.record("sampler/adversarial_log_prob", s);
     let mut lps = vec![0f32; c];
-    bench.run("sampler/log_prob_all(C=256)", || {
+    let s = bench.run("sampler/log_prob_all(C=256)", || {
         adv.log_prob_all(black_box(&x0), &mut lps);
         black_box(&lps);
     });
+    report.record("sampler/log_prob_all(C=256)", s);
 
-    // --- batch assembly (the pipelined worker's unit of work) ---
+    // --- batch assembly: serial descents vs the M-worker pipeline ---
     let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
-    let sk = SamplerKind::Adversarial { sampler: Arc::new(adv.clone()), x_proj };
-    let mut gen = BatchGen::new(data.clone(), sk, BatchMode::NsLike, b, 1.0, Rng::new(3));
-    bench.run("batcher/next_batch(B=256,adversarial)", || {
-        black_box(gen.next_batch());
+    let adv_arc = Arc::new(adv.clone());
+    let make_gen = |seed: u64| {
+        BatchGen::new(
+            data.clone(),
+            SamplerKind::Adversarial { sampler: adv_arc.clone(), x_proj: x_proj.clone() },
+            BatchMode::NsLike,
+            b,
+            1.0,
+            Rng::new(seed),
+        )
+    };
+    let mut serial_src = BatchSource::inline(make_gen(3));
+    let s = bench.run("batcher/next_batch(serial)", || {
+        let batch = serial_src.next();
+        black_box(&batch);
+        serial_src.recycle(batch);
     });
+    report.record("batcher/next_batch(serial)", s);
+    {
+        let gen = make_gen(3);
+        let mut piped = BatchSource::pipelined(&gen, PAR);
+        // measure steady-state consumption throughput of the pipeline
+        let s = bench.run("batcher/pipeline(workers=4)", || {
+            let batch = piped.next();
+            black_box(&batch);
+            piped.recycle(batch);
+        });
+        report.record("batcher/pipeline(workers=4)", s);
+    }
 
-    // --- parameter gather + Adagrad scatter ---
+    // --- parameter gather + Adagrad scatter, serial vs sharded ---
     let mut params = ParamStore::zeros(c, k, 0.05);
     let labels: Vec<u32> = (0..b).map(|_| srng.below(c) as u32).collect();
     let mut wbuf = vec![0f32; b * k];
     let mut bbuf = vec![0f32; b];
-    bench.run("params/gather(B=256,K=64)", || {
+    let s = bench.run("params/gather(serial)", || {
         params.gather(black_box(&labels), &mut wbuf, &mut bbuf);
         black_box(&wbuf);
     });
+    report.record("params/gather(serial)", s);
+    let s = bench.run("params/gather(workers=4)", || {
+        params.gather_par(&pool, black_box(&labels), &mut wbuf, &mut bbuf);
+        black_box(&wbuf);
+    });
+    report.record("params/gather(workers=4)", s);
     let gw: Vec<f32> = (0..b * k).map(|_| srng.normal() * 0.01).collect();
     let gb: Vec<f32> = (0..b).map(|_| srng.normal() * 0.01).collect();
-    bench.run("params/adagrad_scatter(B=256,K=64)", || {
+    let s = bench.run("params/adagrad_scatter(serial)", || {
         params.apply_sparse(black_box(&labels), black_box(&gw), black_box(&gb));
     });
-
-    // --- literal creation + PJRT execute ---
-    let registry = Registry::open_default()?;
-    bench.run("runtime/lit_f32(B*K=16k)", || {
-        black_box(lit_f32(black_box(&gw), &[b, k]).unwrap());
+    report.record("params/adagrad_scatter(serial)", s);
+    let s = bench.run("params/adagrad_scatter(workers=4)", || {
+        params.apply_sparse_par(&pool, black_box(&labels), black_box(&gw), black_box(&gb));
     });
-    let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
-    cfg.pipelined = false;
-    let mut run = TrainRun::prepare(&registry, &splits, &cfg)?;
-    bench.run("train/step_once(adversarial,B=256)", || {
-        black_box(run.step_once().unwrap());
-    });
+    report.record("params/adagrad_scatter(workers=4)", s);
 
+    // --- eval sweep (Eq. 5 correction cache), serial vs sharded ---
+    let eval_set = splits.test.subsample(512, &mut Rng::new(7));
+    let s = bench.run("eval/lpn_cache(serial)", || {
+        black_box(LpnCache::build(&adv_arc, &eval_set));
+    });
+    report.record("eval/lpn_cache(serial)", s);
+    let s = bench.run("eval/lpn_cache(workers=4)", || {
+        black_box(LpnCache::build_with(&adv_arc, &eval_set, &pool));
+    });
+    report.record("eval/lpn_cache(workers=4)", s);
+
+    // --- literal creation + PJRT execute (skipped without artifacts) ---
+    match Registry::open_default() {
+        Ok(registry) => {
+            let s = bench.run("runtime/lit_f32(B*K=16k)", || {
+                black_box(lit_f32(black_box(&gw), &[b, k]).unwrap());
+            });
+            report.record("runtime/lit_f32(B*K=16k)", s);
+            let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
+            cfg.pipelined = false;
+            let mut run = TrainRun::prepare(&registry, &splits, &cfg)?;
+            let s = bench.run("train/step_once(adversarial,B=256)", || {
+                black_box(run.step_once().unwrap());
+            });
+            report.record("train/step_once(adversarial,B=256)", s);
+        }
+        Err(e) => {
+            eprintln!("skipping PJRT benches (artifacts/runtime unavailable): {e:#}");
+        }
+    }
+
+    // --- serial vs parallel summary + machine-readable trajectory file ---
+    for (key, serial, parallel) in SPEEDUP_PAIRS {
+        if let Some(x) = report.speedup(serial, parallel) {
+            println!("speedup {key:<16} {x:>6.2}x  (workers={PAR})");
+        }
+    }
+    let out = "BENCH_hot_path.json";
+    std::fs::write(out, report.to_json().to_string())?;
+    println!("wrote {out}");
     Ok(())
 }

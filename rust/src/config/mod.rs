@@ -293,8 +293,13 @@ pub struct RunConfig {
     /// Number of eval points (subsampled from the test split).
     pub eval_points: usize,
     pub seed: u64,
-    /// Pipelined batch generation (worker thread) on/off.
+    /// Pipelined batch generation (worker threads) on/off.
     pub pipelined: bool,
+    /// Host-side worker-pool width for the sharded hot path (pipeline
+    /// workers, gather/scatter shards, eval sweeps). 0 = auto-detect from
+    /// hardware, 1 = fully serial. Learning curves are bit-identical at
+    /// every setting; only wallclock changes.
+    pub parallelism: usize,
 }
 
 impl RunConfig {
@@ -311,6 +316,7 @@ impl RunConfig {
             eval_points: 2048,
             seed: 1,
             pipelined: true,
+            parallelism: 0,
         }
     }
 
@@ -334,6 +340,7 @@ impl RunConfig {
             ("eval_points", Json::Num(self.eval_points as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("pipelined", Json::Bool(self.pipelined)),
+            ("parallelism", Json::Num(self.parallelism as f64)),
         ])
     }
 
@@ -356,6 +363,10 @@ impl RunConfig {
         cfg.eval_points = v.get("eval_points")?.as_usize()?;
         cfg.seed = v.get("seed")?.as_u64()?;
         cfg.pipelined = v.get("pipelined")?.as_bool()?;
+        // optional for configs saved before the parallelism knob existed
+        if let Some(p) = v.opt("parallelism") {
+            cfg.parallelism = p.as_usize()?;
+        }
         Ok(cfg)
     }
 
@@ -403,6 +414,7 @@ mod tests {
         cfg.hyper.lr = 0.123;
         cfg.max_seconds = 7.5;
         cfg.pipelined = false;
+        cfg.parallelism = 4;
         let back = RunConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.dataset, cfg.dataset);
         assert_eq!(back.method, cfg.method);
@@ -410,6 +422,20 @@ mod tests {
         assert_eq!(back.hyper.lr, cfg.hyper.lr);
         assert_eq!(back.max_seconds, cfg.max_seconds);
         assert!(!back.pipelined);
+        assert_eq!(back.parallelism, 4);
+    }
+
+    #[test]
+    fn parallelism_defaults_when_absent_from_json() {
+        // configs saved before the knob existed must still load
+        let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Uniform);
+        cfg.parallelism = 7;
+        let mut v = cfg.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.remove("parallelism");
+        }
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.parallelism, 0);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::linalg::lse_merge;
 use crate::model::ParamStore;
 use crate::runtime::{lit_f32, lit_i32, read_f32, read_i32, Executable, Registry};
 use crate::sampler::{AdversarialSampler, NoiseSampler};
+use crate::utils::Pool;
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
@@ -53,18 +54,27 @@ pub struct LpnCache {
 impl LpnCache {
     /// Build from the tree's activation sweep over every data row.
     pub fn build(adv: &AdversarialSampler, data: &Dataset) -> Self {
+        Self::build_with(adv, data, &Pool::serial())
+    }
+
+    /// [`LpnCache::build`] with the O(N·C·k) per-example sweep sharded
+    /// over a worker pool. Rows are independent with one writer each, so
+    /// the cache is identical at any worker count.
+    pub fn build_with(adv: &AdversarialSampler, data: &Dataset, pool: &Pool) -> Self {
         let c = data.num_classes;
         let n = data.len();
         let k = adv.aux_dim();
         let mut rows = vec![0f32; n * c];
-        let mut proj = vec![0f32; k];
-        let mut acts = vec![0f32; adv.tree.num_nodes()];
-        for i in 0..n {
-            adv.pca.project(data.x(i), &mut proj);
-            adv.tree.node_activations(&proj, &mut acts);
-            adv.tree
-                .log_prob_all_from_activations(&acts, &mut rows[i * c..(i + 1) * c]);
-        }
+        pool.for_each_span(&mut rows, c, |first_row, span| {
+            let mut proj = vec![0f32; k];
+            let mut acts = vec![0f32; adv.tree.num_nodes()];
+            for (j, out_row) in span.chunks_exact_mut(c).enumerate() {
+                let i = first_row + j;
+                adv.pca.project(data.x(i), &mut proj);
+                adv.tree.node_activations(&proj, &mut acts);
+                adv.tree.log_prob_all_from_activations(&acts, out_row);
+            }
+        });
         Self { rows, num_rows: n, num_classes: c }
     }
 }
@@ -264,39 +274,70 @@ pub fn evaluate_reference(
     data: &Dataset,
     corrector: Option<&AdversarialSampler>,
 ) -> EvalResult {
+    evaluate_reference_with(params, data, corrector, &Pool::serial())
+}
+
+/// [`evaluate_reference`] with the O(N·C·K) per-example sweep sharded over
+/// a worker pool. Per-shard partial sums are reduced in shard order, so the
+/// result is deterministic for a given worker count (the f64 summation
+/// order — and thus the last ulp of `log_likelihood` — can differ between
+/// worker counts; `accuracy` and `n` are exact everywhere).
+pub fn evaluate_reference_with(
+    params: &ParamStore,
+    data: &Dataset,
+    corrector: Option<&AdversarialSampler>,
+    pool: &Pool,
+) -> EvalResult {
     let c = params.num_classes;
     let k = params.feat_dim;
-    let mut sum_loglik = 0f64;
-    let mut correct = 0usize;
-    let mut scores = vec![0f32; c];
-    let mut lpn = vec![0f32; c];
-    for i in 0..data.len() {
-        let x = data.x(i);
-        for y in 0..c {
-            scores[y] = crate::linalg::dot(x, &params.w[y * k..(y + 1) * k]) + params.b[y];
-        }
-        if let Some(adv) = corrector {
-            adv.log_prob_all(x, &mut lpn);
-            for y in 0..c {
-                scores[y] += lpn[y];
+    let n = data.len();
+    let shards = pool.num_workers();
+    let per = n.div_ceil(shards.max(1)).max(1);
+    let mut partials = vec![(0f64, 0usize); shards];
+    {
+        let partials_view = crate::utils::SharedMut::new(&mut partials);
+        let partials_ref = &partials_view;
+        pool.run_sharded(move |shard| {
+            let lo = (shard * per).min(n);
+            let hi = ((shard + 1) * per).min(n);
+            let mut sum_loglik = 0f64;
+            let mut correct = 0usize;
+            let mut scores = vec![0f32; c];
+            let mut lpn = vec![0f32; c];
+            for i in lo..hi {
+                let x = data.x(i);
+                for y in 0..c {
+                    scores[y] =
+                        crate::linalg::dot(x, &params.w[y * k..(y + 1) * k]) + params.b[y];
+                }
+                if let Some(adv) = corrector {
+                    adv.log_prob_all(x, &mut lpn);
+                    for y in 0..c {
+                        scores[y] += lpn[y];
+                    }
+                }
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+                let lse = m + se.ln();
+                let y = data.y(i) as usize;
+                sum_loglik += (scores[y] - lse) as f64;
+                let argmax = (0..c)
+                    .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
+                    .unwrap();
+                if argmax == y {
+                    correct += 1;
+                }
             }
-        }
-        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
-        let lse = m + se.ln();
-        let y = data.y(i) as usize;
-        sum_loglik += (scores[y] - lse) as f64;
-        let argmax = (0..c)
-            .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
-            .unwrap();
-        if argmax == y {
-            correct += 1;
-        }
+            // SAFETY: slot `shard` is written only by this shard.
+            unsafe { *partials_ref.get_mut(shard) = (sum_loglik, correct) };
+        });
     }
+    let sum_loglik: f64 = partials.iter().map(|p| p.0).sum();
+    let correct: usize = partials.iter().map(|p| p.1).sum();
     EvalResult {
-        log_likelihood: sum_loglik / data.len() as f64,
-        accuracy: correct as f64 / data.len() as f64,
-        n: data.len(),
+        log_likelihood: sum_loglik / n as f64,
+        accuracy: correct as f64 / n as f64,
+        n,
     }
 }
 
@@ -346,6 +387,40 @@ mod tests {
         p.b.iter_mut().for_each(|v| *v = 0.0);
         let r = evaluate_reference(&p, &data, None);
         assert!((r.log_likelihood + (16f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn parallel_reference_matches_serial() {
+        let (p, data) = toy(16, 4, 131); // not a multiple of any shard count
+        let serial = evaluate_reference(&p, &data, None);
+        for workers in [2, 3, 4] {
+            let par = evaluate_reference_with(&p, &data, None, &Pool::new(workers));
+            assert_eq!(par.n, serial.n, "workers={workers}");
+            assert_eq!(par.accuracy, serial.accuracy, "workers={workers}");
+            assert!(
+                (par.log_likelihood - serial.log_likelihood).abs() < 1e-9,
+                "workers={workers}: {} vs {}",
+                par.log_likelihood,
+                serial.log_likelihood
+            );
+        }
+    }
+
+    #[test]
+    fn lpn_cache_parallel_matches_serial() {
+        use crate::config::{DatasetPreset, SyntheticConfig, TreeConfig};
+        use crate::data::Splits;
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 2048;
+        cfg.n_test = 257;
+        let splits = Splits::synthetic(&cfg);
+        let tcfg = TreeConfig { aux_dim: 6, ..Default::default() };
+        let (adv, _) = AdversarialSampler::fit(&splits.train, &tcfg, 5);
+        let serial = LpnCache::build(&adv, &splits.test);
+        for workers in [2, 4] {
+            let par = LpnCache::build_with(&adv, &splits.test, &Pool::new(workers));
+            assert_eq!(par.rows, serial.rows, "workers={workers}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use super::{axpy, dot, scale};
 use crate::utils::json::Json;
-use crate::utils::Rng;
+use crate::utils::{Pool, Rng};
 
 /// A fitted PCA projection: x -> (x - mean) @ components^T, [K] -> [k].
 #[derive(Clone, Debug)]
@@ -159,11 +159,21 @@ impl Pca {
 
     /// Project a whole row-major matrix [n, K] -> [n, k].
     pub fn project_all(&self, data: &[f32], n: usize) -> Vec<f32> {
+        self.project_all_with(data, n, &Pool::serial())
+    }
+
+    /// [`Pca::project_all`] with the per-row loop sharded over a worker
+    /// pool. Rows are independent and each output row has one writer, so
+    /// the result is identical at any worker count.
+    pub fn project_all_with(&self, data: &[f32], n: usize, pool: &Pool) -> Vec<f32> {
         assert_eq!(data.len(), n * self.input_dim);
         let mut out = vec![0f32; n * self.output_dim];
-        for (i, row) in data.chunks_exact(self.input_dim).enumerate() {
-            self.project(row, &mut out[i * self.output_dim..(i + 1) * self.output_dim]);
-        }
+        pool.for_each_span(&mut out, self.output_dim, |first_row, span| {
+            for (j, chunk) in span.chunks_exact_mut(self.output_dim).enumerate() {
+                let i = first_row + j;
+                self.project(&data[i * self.input_dim..(i + 1) * self.input_dim], chunk);
+            }
+        });
         out
     }
 }
@@ -219,6 +229,19 @@ mod tests {
         for j in 0..3 {
             let m: f32 = (0..n).map(|i| proj[i * 3 + j]).sum::<f32>() / n as f32;
             assert!(m.abs() < 0.2, "component {j} mean {m}");
+        }
+    }
+
+    #[test]
+    fn project_all_parallel_matches_serial() {
+        let (n, kin) = (333usize, 6usize);
+        let mut rng = Rng::new(4);
+        let data: Vec<f32> = (0..n * kin).map(|_| rng.normal()).collect();
+        let pca = Pca::fit(&data, n, kin, 3, 9);
+        let serial = pca.project_all(&data, n);
+        for workers in [2, 3, 5] {
+            let par = pca.project_all_with(&data, n, &Pool::new(workers));
+            assert_eq!(par, serial, "workers={workers}");
         }
     }
 

@@ -7,6 +7,8 @@
 //! repro data-stats   --dataset tiny
 //! repro tree-fit     --dataset wiki-sim --aux-dim 16 [--save tree.json]
 //! repro train        --dataset tiny --method adversarial --seconds 30
+//!                    [--parallelism N]  (0 = auto; curves are identical
+//!                    at every setting, only wallclock changes)
 //! repro exp table1
 //! repro exp figure1  --dataset wiki-sim --seconds 60 [--methods adv,uniform]
 //! repro exp appendix-a2 --seconds 60
@@ -117,6 +119,7 @@ fn train(args: &Args) -> Result<()> {
             c.seed = args.get("seed", 1)?;
             c.eval_points = args.get("eval-points", 2048)?;
             c.pipelined = !args.flag("no-pipeline")?;
+            c.parallelism = args.get("parallelism", 0)?;
             c
         }
     };

@@ -31,17 +31,22 @@ impl Adagrad {
     pub fn update_row(&mut self, y: usize, g: &[f32], gb: f32, w: &mut [f32], b: &mut [f32]) {
         let k = self.feat_dim;
         debug_assert_eq!(g.len(), k);
-        let acc = &mut self.gw2[y * k..(y + 1) * k];
-        let row = &mut w[y * k..(y + 1) * k];
-        let lr = self.lr;
-        let eps = self.eps;
-        for j in 0..k {
-            let gj = g[j];
-            acc[j] += gj * gj;
-            row[j] -= lr * gj / (acc[j].sqrt() + eps);
-        }
-        self.gb2[y] += gb * gb;
-        b[y] -= lr * gb / (self.gb2[y].sqrt() + eps);
+        update_row_kernel(
+            self.lr,
+            self.eps,
+            g,
+            gb,
+            &mut self.gw2[y * k..(y + 1) * k],
+            &mut w[y * k..(y + 1) * k],
+            &mut self.gb2[y],
+            &mut b[y],
+        );
+    }
+
+    /// Split borrows of the (weight, bias) accumulators, for the sharded
+    /// scatter in [`super::ParamStore::apply_sparse_par`].
+    pub(crate) fn accumulators_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.gw2, &mut self.gb2)
     }
 
     /// Reset all accumulators (e.g. between experiment repetitions).
@@ -49,6 +54,31 @@ impl Adagrad {
         self.gw2.iter_mut().for_each(|v| *v = 0.0);
         self.gb2.iter_mut().for_each(|v| *v = 0.0);
     }
+}
+
+/// The per-row Adagrad update on raw slices: G += g²; θ -= ρ g / (√G + ε).
+/// Shared by the serial [`Adagrad::update_row`] and the sharded scatter so
+/// both paths are the same floating-point program (bit-identical results).
+#[inline]
+pub(crate) fn update_row_kernel(
+    lr: f32,
+    eps: f32,
+    g: &[f32],
+    gb: f32,
+    acc: &mut [f32],
+    row: &mut [f32],
+    bacc: &mut f32,
+    bval: &mut f32,
+) {
+    debug_assert_eq!(g.len(), acc.len());
+    debug_assert_eq!(g.len(), row.len());
+    for j in 0..g.len() {
+        let gj = g[j];
+        acc[j] += gj * gj;
+        row[j] -= lr * gj / (acc[j].sqrt() + eps);
+    }
+    *bacc += gb * gb;
+    *bval -= lr * gb / (bacc.sqrt() + eps);
 }
 
 #[cfg(test)]

@@ -6,12 +6,23 @@
 //! are scattered back here with Adagrad state (Duchi et al., 2011) kept
 //! per-coordinate. Sampling-based methods touch only 2B rows per step, so
 //! updates are O(B·K) regardless of C.
+//!
+//! Gather and scatter have pool-sharded variants ([`ParamStore::gather_par`],
+//! [`ParamStore::apply_sparse_par`]) that partition work by
+//! `label % num_shards`: every parameter row has exactly one writer, and a
+//! shard applies its rows' updates in batch order, so duplicate labels in a
+//! batch update their row in exactly the serial sequence — parallel results
+//! are bit-identical to the serial path.
 
 pub mod adagrad;
 
 pub use adagrad::Adagrad;
 
-use crate::utils::Rng;
+use crate::utils::{Pool, Rng, SharedMut};
+
+/// Below this batch size the sharded paths fall back to the serial loop
+/// (thread spawn overhead would dominate).
+const PAR_MIN_LABELS: usize = 64;
 
 /// Dense parameter matrix (W, b) with per-coordinate Adagrad accumulators.
 #[derive(Clone, Debug)]
@@ -81,6 +92,77 @@ impl ParamStore {
         }
     }
 
+    /// Pool-sharded [`ParamStore::gather`]: shard `labels[i] % S` copies
+    /// batch slot `i`, so each output row has exactly one writer and the
+    /// result is identical to the serial gather at any worker count.
+    pub fn gather_par(&self, pool: &Pool, labels: &[u32], w_out: &mut [f32], b_out: &mut [f32]) {
+        if pool.is_serial() || labels.len() < PAR_MIN_LABELS {
+            return self.gather(labels, w_out, b_out);
+        }
+        debug_assert_eq!(w_out.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(b_out.len(), labels.len());
+        let k = self.feat_dim;
+        let shards = pool.num_workers();
+        let w_view = SharedMut::new(w_out);
+        let b_view = SharedMut::new(b_out);
+        pool.run_sharded(|shard| {
+            for (i, &y) in labels.iter().enumerate() {
+                if (y as usize) % shards != shard {
+                    continue;
+                }
+                // SAFETY: batch slot i is written only by the shard owning
+                // labels[i] (one label per slot => disjoint slots).
+                unsafe {
+                    w_view.slice_mut(i * k, k).copy_from_slice(self.row(y));
+                    *b_view.get_mut(i) = self.b[y as usize];
+                }
+            }
+        });
+    }
+
+    /// Pool-sharded [`ParamStore::apply_sparse`]: shard `label % S` owns
+    /// all updates to its rows and applies them in batch order, preserving
+    /// the exact sequential-per-row Adagrad semantics for duplicate labels.
+    /// Bit-identical to the serial scatter at any worker count.
+    pub fn apply_sparse_par(&mut self, pool: &Pool, labels: &[u32], gw: &[f32], gb: &[f32]) {
+        if pool.is_serial() || labels.len() < PAR_MIN_LABELS {
+            return self.apply_sparse(labels, gw, gb);
+        }
+        debug_assert_eq!(gw.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(gb.len(), labels.len());
+        let k = self.feat_dim;
+        let shards = pool.num_workers();
+        let (lr, eps) = (self.opt.lr, self.opt.eps);
+        let (gw2, gb2) = self.opt.accumulators_mut();
+        let w_view = SharedMut::new(&mut self.w);
+        let b_view = SharedMut::new(&mut self.b);
+        let gw2_view = SharedMut::new(gw2);
+        let gb2_view = SharedMut::new(gb2);
+        pool.run_sharded(|shard| {
+            for (i, &y) in labels.iter().enumerate() {
+                let y = y as usize;
+                if y % shards != shard {
+                    continue;
+                }
+                // SAFETY: row y (weights, bias, both accumulators) is
+                // touched only by shard y % shards; within the shard,
+                // updates run in batch order like the serial scatter.
+                unsafe {
+                    adagrad::update_row_kernel(
+                        lr,
+                        eps,
+                        &gw[i * k..(i + 1) * k],
+                        gb[i],
+                        gw2_view.slice_mut(y * k, k),
+                        w_view.slice_mut(y * k, k),
+                        gb2_view.get_mut(y),
+                        b_view.get_mut(y),
+                    );
+                }
+            }
+        });
+    }
+
     /// Dense update over all rows (full-softmax baseline).
     pub fn apply_dense(&mut self, gw: &[f32], gb: &[f32]) {
         debug_assert_eq!(gw.len(), self.w.len());
@@ -143,6 +225,46 @@ mod tests {
         a.apply_sparse(&[0, 0], &[1.0, 1.0], &[0.0, 0.0]);
         b.apply_sparse(&[0], &[1.0], &[0.0]);
         assert!(a.w[0] < b.w[0], "{} vs {}", a.w[0], b.w[0]);
+    }
+
+    #[test]
+    fn gather_par_matches_serial() {
+        let mut rng = Rng::new(21);
+        let (c, k, b) = (37, 8, 300); // b > PAR_MIN_LABELS to hit the pool
+        let mut p = ParamStore::zeros(c, k, 0.1);
+        p.w.iter_mut().for_each(|v| *v = rng.normal());
+        p.b.iter_mut().for_each(|v| *v = rng.normal());
+        let labels: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let mut w_ref = vec![0f32; b * k];
+        let mut b_ref = vec![0f32; b];
+        p.gather(&labels, &mut w_ref, &mut b_ref);
+        for workers in [2, 3, 4] {
+            let mut w_par = vec![0f32; b * k];
+            let mut b_par = vec![0f32; b];
+            p.gather_par(&Pool::new(workers), &labels, &mut w_par, &mut b_par);
+            assert_eq!(w_par, w_ref, "workers={workers}");
+            assert_eq!(b_par, b_ref, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn sharded_scatter_is_bit_identical_with_duplicates() {
+        let mut rng = Rng::new(22);
+        let (c, k, b) = (19, 8, 300); // heavy duplication: b >> c
+        let labels: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let gw: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let mut serial = ParamStore::zeros(c, k, 0.1);
+        serial.apply_sparse(&labels, &gw, &gb);
+        serial.apply_sparse(&labels, &gw, &gb); // accumulators persist
+        for workers in [2, 3, 4] {
+            let mut par = ParamStore::zeros(c, k, 0.1);
+            let pool = Pool::new(workers);
+            par.apply_sparse_par(&pool, &labels, &gw, &gb);
+            par.apply_sparse_par(&pool, &labels, &gw, &gb);
+            assert_eq!(par.w, serial.w, "workers={workers}");
+            assert_eq!(par.b, serial.b, "workers={workers}");
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::data::Dataset;
 use crate::linalg::Pca;
 use crate::tree::{fit::fit_tree, FitStats, Tree};
 use crate::utils::json::Json;
-use crate::utils::{AliasTable, Rng};
+use crate::utils::{AliasTable, Pool, Rng};
 use std::path::Path;
 
 /// A conditional noise distribution over labels.
@@ -127,9 +127,16 @@ pub struct AdversarialSampler {
 impl AdversarialSampler {
     /// Fit PCA + tree on the training set. Returns fit diagnostics.
     pub fn fit(data: &Dataset, cfg: &TreeConfig, seed: u64) -> (Self, FitStats) {
+        Self::fit_with(data, cfg, seed, &Pool::serial())
+    }
+
+    /// [`AdversarialSampler::fit`] with the O(N·K·k) projection pass
+    /// sharded over a worker pool (the tree fit itself is unchanged, so
+    /// the fitted model is identical at any worker count).
+    pub fn fit_with(data: &Dataset, cfg: &TreeConfig, seed: u64, pool: &Pool) -> (Self, FitStats) {
         let k = cfg.aux_dim.min(data.feat_dim);
         let pca = Pca::fit(&data.features, data.len(), data.feat_dim, k, seed);
-        let x_proj = pca.project_all(&data.features, data.len());
+        let x_proj = pca.project_all_with(&data.features, data.len(), pool);
         let mut rng = Rng::new(seed ^ 0x7ee);
         let (tree, stats) = fit_tree(
             &x_proj,

@@ -3,8 +3,29 @@
 //!
 //! Negative generation is the paper's O(k log C) hot loop (tree descents),
 //! and it depends only on features — never on the evolving parameters — so
-//! the [`super::pipeline`] module can run it on a worker thread fully
-//! overlapped with PJRT execution and the Adagrad scatter.
+//! the pipeline in [`super`] can run it on worker threads fully overlapped
+//! with PJRT execution and the Adagrad scatter.
+//!
+//! # Deterministic sequence-numbered stream
+//!
+//! The batch stream is defined as a **pure function of (seed, batch
+//! sequence number `t`)**, never of generator call order:
+//!
+//! * positives: global position `p = t·B + j` maps to epoch `e = p / N` and
+//!   slot `p % N` of a permutation derived from `seed.stream(EPOCH, e)`;
+//! * negatives: draw `j` of batch `t` uses a private RNG split from
+//!   `seed.stream(BATCH, t)`.
+//!
+//! Any worker can therefore produce batch `t` in isolation, and an
+//! M-worker pipeline (worker `m` makes batches `t ≡ m (mod M)`) emits a
+//! stream bit-identical to the inline single-thread path for every M. Each
+//! generator caches only the permutation of the epoch it is currently in
+//! (epochs advance monotonically), so the O(N) reshuffle is paid once per
+//! epoch per worker.
+//!
+//! Negatives for NS-like modes run through the blocked level-by-level tree
+//! descents ([`crate::tree::Tree::sample_batch`]), which are bit-identical
+//! to per-draw descents under the same per-draw RNG streams.
 
 use crate::config::Method;
 use crate::data::Dataset;
@@ -12,8 +33,16 @@ use crate::sampler::{AdversarialSampler, FrequencySampler, NoiseSampler, Uniform
 use crate::utils::Rng;
 use std::sync::Arc;
 
+/// RNG stream domain for per-epoch permutations.
+const STREAM_EPOCH: u64 = 1;
+/// RNG stream domain for per-batch negative draws.
+const STREAM_BATCH: u64 = 2;
+
 /// One assembled raw batch (parameter rows are gathered later, on the
-/// thread that owns the parameters).
+/// thread that owns the parameters). Buffers are reused across batches via
+/// [`RawBatch::alloc`] + [`BatchGen::fill_next`] — the pipeline recycles
+/// them through a return channel, so steady-state batch assembly is
+/// allocation-free.
 #[derive(Clone, Debug)]
 pub struct RawBatch {
     /// Features, [B, K] row-major.
@@ -27,6 +56,19 @@ pub struct RawBatch {
     /// log p_n(y'|x) for negatives (NS/NCE) or the importance weight
     /// `scale` (OVE/A&R).
     pub lpn_n: Vec<f32>,
+}
+
+impl RawBatch {
+    /// Zeroed buffers for a [B, K] batch.
+    pub fn alloc(batch_size: usize, feat_dim: usize) -> Self {
+        Self {
+            x: vec![0f32; batch_size * feat_dim],
+            pos: vec![0u32; batch_size],
+            neg: vec![0u32; batch_size],
+            lpn_p: vec![0f32; batch_size],
+            lpn_n: vec![0f32; batch_size],
+        }
+    }
 }
 
 /// Which operand layout the method's HLO step consumes.
@@ -93,20 +135,103 @@ impl SamplerKind {
             }
         }
     }
+
+    /// Blocked NS-like draws for training points `idx` with positives
+    /// `pos`: fills `neg[j]`/`lpn_n[j]` with a draw from `rngs[j]` and
+    /// `lpn_p[j] = log p_n(pos[j] | x_idx[j])`. Bit-identical to calling
+    /// [`SamplerKind::sample_for`] / [`SamplerKind::log_prob_for`] per row
+    /// with the same streams; the adversarial sampler runs the block
+    /// through the cache-friendly level-by-level tree descents.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_block(
+        &self,
+        idx: &[usize],
+        pos: &[u32],
+        rngs: &mut [Rng],
+        neg: &mut [u32],
+        lpn_n: &mut [f32],
+        lpn_p: &mut [f32],
+        proj_scratch: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(idx.len(), pos.len());
+        match self {
+            SamplerKind::Uniform(s) => {
+                for j in 0..idx.len() {
+                    let (y, lp) = s.sample(&[], &mut rngs[j]);
+                    neg[j] = y;
+                    lpn_n[j] = lp;
+                    lpn_p[j] = s.log_prob(&[], pos[j]);
+                }
+            }
+            SamplerKind::Frequency(s) => {
+                for j in 0..idx.len() {
+                    let (y, lp) = s.sample(&[], &mut rngs[j]);
+                    neg[j] = y;
+                    lpn_n[j] = lp;
+                    lpn_p[j] = s.log_prob(&[], pos[j]);
+                }
+            }
+            SamplerKind::Adversarial { sampler, x_proj } => {
+                let k = sampler.aux_dim();
+                proj_scratch.clear();
+                proj_scratch.resize(idx.len() * k, 0.0);
+                for (j, &i) in idx.iter().enumerate() {
+                    proj_scratch[j * k..(j + 1) * k]
+                        .copy_from_slice(&x_proj[i * k..(i + 1) * k]);
+                }
+                sampler.tree.sample_batch(proj_scratch, rngs, neg, lpn_n);
+                sampler.tree.log_prob_batch(proj_scratch, pos, lpn_p);
+            }
+        }
+    }
+}
+
+/// Everything that defines the batch stream, shared read-only between the
+/// inline generator and all pipeline workers.
+pub struct BatchSpec {
+    pub data: Arc<Dataset>,
+    pub sampler: SamplerKind,
+    pub mode: BatchMode,
+    pub batch_size: usize,
+    /// Importance weight for Pairwise mode ((C-1)/S for A&R, 1 for OVE).
+    pub scale: f32,
+    /// Seed state for stream derivations; never advanced after
+    /// construction, so every derived stream is a pure function of
+    /// (seed, domain, index).
+    root: Rng,
+}
+
+impl BatchSpec {
+    /// Permutation RNG for epoch `e`.
+    fn epoch_rng(&self, epoch: u64) -> Rng {
+        self.root.stream(STREAM_EPOCH, epoch)
+    }
+
+    /// Negative-draw RNG for batch `t`.
+    fn batch_rng(&self, t: u64) -> Rng {
+        self.root.stream(STREAM_BATCH, t)
+    }
 }
 
 /// Streaming batch generator: epoch-shuffled positives + sampled negatives.
+///
+/// `next_batch`/`fill_next` yield batches `start, start+stride, …` of the
+/// deterministic sequence-numbered stream; the default generator
+/// (`start = 0, stride = 1`) is the inline path, and [`BatchGen::worker`]
+/// derives the pipeline workers' interleaved sub-streams.
 pub struct BatchGen {
-    data: Arc<Dataset>,
-    sampler: SamplerKind,
-    mode: BatchMode,
-    batch_size: usize,
-    /// Importance weight for Pairwise mode ((C-1)/S for A&R, 1 for OVE).
-    pub scale: f32,
-    rng: Rng,
+    spec: Arc<BatchSpec>,
+    /// Next batch sequence number this generator will produce.
+    next_seq: u64,
+    /// Sequence-number increment (1 inline, M for pipeline worker m of M).
+    stride: u64,
+    /// Cached permutation for `epoch` (regenerated on epoch boundaries).
     order: Vec<u32>,
-    cursor: usize,
-    pub epochs_completed: usize,
+    epoch: u64,
+    // scratch (reused across batches; no per-batch allocation)
+    idx: Vec<usize>,
+    rngs: Vec<Rng>,
+    proj: Vec<f32>,
 }
 
 impl BatchGen {
@@ -116,74 +241,140 @@ impl BatchGen {
         mode: BatchMode,
         batch_size: usize,
         scale: f32,
-        mut rng: Rng,
+        rng: Rng,
     ) -> Self {
         assert!(data.len() >= batch_size, "dataset smaller than one batch");
-        let mut order: Vec<u32> = (0..data.len() as u32).collect();
-        rng.shuffle(&mut order);
+        let spec = Arc::new(BatchSpec { data, sampler, mode, batch_size, scale, root: rng });
+        Self::with_stream(spec, 0, 1)
+    }
+
+    /// Generator over batches `start, start+stride, …` of `spec`'s stream.
+    fn with_stream(spec: Arc<BatchSpec>, start: u64, stride: u64) -> Self {
+        assert!(stride > 0);
+        let n = spec.data.len();
+        let b = spec.batch_size;
         Self {
-            data,
-            sampler,
-            mode,
-            batch_size,
-            scale,
-            rng,
-            order,
-            cursor: 0,
-            epochs_completed: 0,
+            spec,
+            next_seq: start,
+            stride,
+            order: vec![0u32; n],
+            epoch: u64::MAX,
+            idx: vec![0usize; b],
+            rngs: vec![Rng::new(0); b],
+            proj: Vec::new(),
         }
     }
 
-    /// Next training point index from the shuffled stream.
-    #[inline]
-    fn next_index(&mut self) -> usize {
-        if self.cursor >= self.order.len() {
-            self.rng.shuffle(&mut self.order);
-            self.cursor = 0;
-            self.epochs_completed += 1;
-        }
-        let i = self.order[self.cursor] as usize;
-        self.cursor += 1;
-        i
+    /// Derive pipeline worker `start` of `stride`: produces exactly the
+    /// batches `t ≡ start (mod stride)` of the same stream as `self`.
+    pub fn worker(&self, start: u64, stride: u64) -> BatchGen {
+        Self::with_stream(self.spec.clone(), start, stride)
     }
 
-    /// Assemble the next batch.
+    pub fn batch_size(&self) -> usize {
+        self.spec.batch_size
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.spec.data.feat_dim
+    }
+
+    /// Epochs fully consumed by the global stream up to this generator's
+    /// position (exact for the inline `stride = 1` generator).
+    pub fn epochs_completed(&self) -> usize {
+        let points = self.next_seq * self.spec.batch_size as u64;
+        if points == 0 {
+            0
+        } else {
+            ((points - 1) / self.spec.data.len() as u64) as usize
+        }
+    }
+
+    /// Make sure `self.order` holds epoch `e`'s permutation.
+    fn ensure_epoch(&mut self, e: u64) {
+        if self.epoch == e {
+            return;
+        }
+        let mut erng = self.spec.epoch_rng(e);
+        for (i, o) in self.order.iter_mut().enumerate() {
+            *o = i as u32;
+        }
+        erng.shuffle(&mut self.order);
+        self.epoch = e;
+    }
+
+    /// Assemble the next batch into freshly allocated buffers.
     pub fn next_batch(&mut self) -> RawBatch {
-        let b = self.batch_size;
-        let k = self.data.feat_dim;
-        let mut out = RawBatch {
-            x: vec![0f32; b * k],
-            pos: vec![0u32; b],
-            neg: vec![0u32; b],
-            lpn_p: vec![0f32; b],
-            lpn_n: vec![0f32; b],
-        };
+        let mut out = RawBatch::alloc(self.spec.batch_size, self.spec.data.feat_dim);
+        self.fill_next(&mut out);
+        out
+    }
+
+    /// Assemble the next batch into `out` (buffers recycled by the caller).
+    pub fn fill_next(&mut self, out: &mut RawBatch) {
+        let t = self.next_seq;
+        self.fill_batch(t, out);
+        self.next_seq = t + self.stride;
+    }
+
+    /// Assemble batch `t` of the deterministic stream into `out`.
+    fn fill_batch(&mut self, t: u64, out: &mut RawBatch) {
+        let spec = self.spec.clone();
+        let b = spec.batch_size;
+        let k = spec.data.feat_dim;
+        let n = spec.data.len() as u64;
+        debug_assert_eq!(out.x.len(), b * k);
+        debug_assert_eq!(out.pos.len(), b);
+
+        // positives: global positions [t·B, (t+1)·B) of the epoch stream
+        let base = t * b as u64;
         for j in 0..b {
-            let i = self.next_index();
-            out.x[j * k..(j + 1) * k].copy_from_slice(self.data.x(i));
-            let y = self.data.y(i);
-            out.pos[j] = y;
-            match self.mode {
-                BatchMode::NsLike => {
-                    let (neg, lpn) = self.sampler.sample_for(i, &mut self.rng);
-                    out.neg[j] = neg;
-                    out.lpn_n[j] = lpn;
-                    out.lpn_p[j] = self.sampler.log_prob_for(i, y);
+            let p = base + j as u64;
+            self.ensure_epoch(p / n);
+            let i = self.order[(p % n) as usize] as usize;
+            self.idx[j] = i;
+            out.x[j * k..(j + 1) * k].copy_from_slice(spec.data.x(i));
+            out.pos[j] = spec.data.y(i);
+        }
+
+        // negatives: all randomness below comes from batch t's own stream
+        let mut brng = spec.batch_rng(t);
+        match spec.mode {
+            BatchMode::NsLike => {
+                for j in 0..b {
+                    self.rngs[j] = brng.split(j as u64);
                 }
-                BatchMode::Pairwise => {
+                spec.sampler.sample_block(
+                    &self.idx,
+                    &out.pos,
+                    &mut self.rngs,
+                    &mut out.neg,
+                    &mut out.lpn_n,
+                    &mut out.lpn_p,
+                    &mut self.proj,
+                );
+            }
+            BatchMode::Pairwise => {
+                let c = spec.data.num_classes;
+                for j in 0..b {
                     // uniform y' != y
-                    let c = self.data.num_classes;
-                    let mut neg = self.rng.below(c) as u32;
+                    let y = out.pos[j];
+                    let mut neg = brng.below(c) as u32;
                     while neg == y && c > 1 {
-                        neg = self.rng.below(c) as u32;
+                        neg = brng.below(c) as u32;
                     }
                     out.neg[j] = neg;
-                    out.lpn_n[j] = self.scale;
+                    out.lpn_n[j] = spec.scale;
+                    out.lpn_p[j] = 0.0;
                 }
-                BatchMode::Softmax => {}
+            }
+            BatchMode::Softmax => {
+                // recycled buffers: clear fields this mode does not define
+                out.neg.iter_mut().for_each(|v| *v = 0);
+                out.lpn_p.iter_mut().for_each(|v| *v = 0.0);
+                out.lpn_n.iter_mut().for_each(|v| *v = 0.0);
             }
         }
-        out
     }
 }
 
@@ -230,9 +421,9 @@ mod tests {
         for (c, s) in label_counts.iter_mut().zip(seen.iter()) {
             assert_eq!(*c as usize, *s);
         }
-        assert_eq!(gen.epochs_completed, 0);
+        assert_eq!(gen.epochs_completed(), 0);
         gen.next_batch();
-        assert_eq!(gen.epochs_completed, 1);
+        assert_eq!(gen.epochs_completed(), 1);
     }
 
     #[test]
@@ -271,6 +462,47 @@ mod tests {
             );
             let expect_p = adv.log_prob(x, b.pos[j]);
             assert!((b.lpn_p[j] - expect_p).abs() < 1e-4);
+        }
+    }
+
+    /// Worker sub-streams reassemble into exactly the inline stream — the
+    /// invariant the whole pipeline design rests on.
+    #[test]
+    fn worker_streams_interleave_to_inline_stream() {
+        let data = tiny_data();
+        for stride in [2u64, 3, 4] {
+            let s = SamplerKind::Uniform(UniformSampler::new(data.num_classes));
+            let mut inline =
+                BatchGen::new(data.clone(), s, BatchMode::NsLike, 128, 1.0, Rng::new(9));
+            let mut workers: Vec<BatchGen> =
+                (0..stride).map(|m| inline.worker(m, stride)).collect();
+            for t in 0..40u64 {
+                let a = inline.next_batch();
+                let b = workers[(t % stride) as usize].next_batch();
+                assert_eq!(a.pos, b.pos, "t={t} stride={stride}");
+                assert_eq!(a.neg, b.neg, "t={t} stride={stride}");
+                assert_eq!(a.x, b.x, "t={t} stride={stride}");
+                assert_eq!(a.lpn_p, b.lpn_p, "t={t} stride={stride}");
+                assert_eq!(a.lpn_n, b.lpn_n, "t={t} stride={stride}");
+            }
+        }
+    }
+
+    /// Recycled buffers produce the same stream as fresh allocations.
+    #[test]
+    fn fill_next_recycling_matches_next_batch() {
+        let data = tiny_data();
+        let s = SamplerKind::Uniform(UniformSampler::new(data.num_classes));
+        let mut a = BatchGen::new(data.clone(), s, BatchMode::NsLike, 128, 1.0, Rng::new(5));
+        let s2 = SamplerKind::Uniform(UniformSampler::new(data.num_classes));
+        let mut b = BatchGen::new(data.clone(), s2, BatchMode::NsLike, 128, 1.0, Rng::new(5));
+        let mut buf = RawBatch::alloc(128, data.feat_dim);
+        for _ in 0..20 {
+            let fresh = a.next_batch();
+            b.fill_next(&mut buf);
+            assert_eq!(fresh.pos, buf.pos);
+            assert_eq!(fresh.neg, buf.neg);
+            assert_eq!(fresh.lpn_n, buf.lpn_n);
         }
     }
 }

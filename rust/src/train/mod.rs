@@ -1,5 +1,7 @@
 //! Training coordinator: per-method update rules over the AOT HLO step
-//! artifacts, with pipelined negative-sample generation.
+//! artifacts, with a host-parallel, deterministic step pipeline.
+//!
+//! # Step protocol
 //!
 //! The step protocol for sampling-based methods is gather → execute →
 //! scatter: rust gathers the 2B touched parameter rows, the HLO artifact
@@ -8,9 +10,41 @@
 //! the host plus the kernel, independent of C — the property that makes
 //! negative sampling scale (Sec. 2.1).
 //!
-//! Negative generation (the O(k log C) tree descents) depends only on the
-//! features, so in pipelined mode it runs on a worker thread a few batches
-//! ahead, fully overlapped with PJRT execution and the optimizer scatter.
+//! # Performance architecture: pipeline, sharding, determinism
+//!
+//! Every host-side stage of a step is parallel, and every stage is
+//! **bit-deterministic** — the same seed produces the same learning curve
+//! at every `parallelism` setting:
+//!
+//! * **Batch pipeline** — negative generation (the O(k log C) tree
+//!   descents) depends only on the features, never on the evolving
+//!   parameters, so M workers assemble batches ahead of the coordinator.
+//!   The batch stream is a pure function of (seed, batch sequence number):
+//!   worker m produces batches `t ≡ m (mod M)` from per-batch RNG streams
+//!   (see [`batcher`]), and the coordinator consumes the per-worker
+//!   channels round-robin, so the stream is bit-identical to the inline
+//!   path for every M. `RawBatch` buffers cycle back to their worker
+//!   through a return channel — steady-state assembly is allocation-free.
+//! * **Sharded gather/scatter** — [`ParamStore::gather_par`] and
+//!   [`ParamStore::apply_sparse_par`] shard rows by `label % num_shards`,
+//!   so all updates to one row happen on one worker in batch order:
+//!   duplicate-label Adagrad semantics stay exactly sequential-per-row and
+//!   the result is bit-identical to the serial scatter.
+//! * **Parallel eval sweep** — the Eq. 5 correction cache
+//!   ([`LpnCache::build_with`]) shards its O(N·C·k) per-example sweep over
+//!   the pool (bit-identical: one writer per row). The pure-rust reference
+//!   evaluator has a pool variant too
+//!   ([`crate::eval::evaluate_reference_with`], used by tests/benches; its
+//!   f64 reduction order varies with worker count, so it stays out of the
+//!   bit-deterministic training path).
+//! * **Shutdown** — pipeline teardown closes both channel directions
+//!   before joining, so a worker blocked on a full batch channel (or
+//!   polling the buffer-return channel) observes disconnection and exits;
+//!   there is no drain-then-join race and no stop flag.
+//!
+//! PJRT execution itself stays on the coordinator thread (the runtime
+//! handles are not `Send`); the pipeline overlaps batch generation with
+//! it, and the pool parallelizes the host stages around it.
 
 pub mod batcher;
 pub mod curve;
@@ -24,46 +58,149 @@ use crate::eval::{EvalResult, Evaluator, LpnCache};
 use crate::model::ParamStore;
 use crate::runtime::{lit_f32, lit_i32, read_f32, Executable, Registry};
 use crate::sampler::{AdversarialSampler, FrequencySampler, UniformSampler};
-use crate::utils::{Rng, StopWatch};
+use crate::utils::{Pool, Rng, StopWatch};
 use anyhow::{Context, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// How many batches the pipelined generator may run ahead.
-const PIPELINE_DEPTH: usize = 4;
+/// Buffers in flight per pipeline worker (its private recycle pool).
+const PIPELINE_DEPTH_PER_WORKER: usize = 2;
+/// Cap on pipeline workers: batch assembly saturates well before the
+/// coordinator-side stages, and idle workers only cost memory.
+const PIPELINE_MAX_WORKERS: usize = 8;
 
-/// Where batches come from.
-enum BatchSource {
-    Inline(BatchGen),
-    Pipelined {
-        rx: Receiver<RawBatch>,
-        stop: Arc<AtomicBool>,
-        handle: Option<JoinHandle<()>>,
+/// Where batches come from: the inline generator or the worker pipeline.
+/// Callers must return each batch via [`BatchSource::recycle`] so buffers
+/// keep cycling instead of being reallocated.
+pub struct BatchSource {
+    inner: SourceInner,
+}
+
+enum SourceInner {
+    Inline {
+        gen: BatchGen,
+        spare: Vec<RawBatch>,
     },
+    Pipelined(Pipeline),
+}
+
+/// M workers, each with a bounded batch channel and a buffer-return
+/// channel. Worker m owns batches `t ≡ m (mod M)`; the coordinator reads
+/// the channels round-robin, which restores the global order.
+struct Pipeline {
+    batch_rx: Vec<Receiver<RawBatch>>,
+    buf_tx: Vec<SyncSender<RawBatch>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Worker whose batch is next in sequence order.
+    next_worker: usize,
+    /// Worker that produced the oldest outstanding batch (recycle target).
+    recycle_worker: usize,
 }
 
 impl BatchSource {
-    fn next(&mut self) -> RawBatch {
-        match self {
-            BatchSource::Inline(gen) => gen.next_batch(),
-            BatchSource::Pipelined { rx, .. } => {
-                rx.recv().expect("batch generator thread died")
+    /// Single-thread source (batch assembled on the calling thread).
+    pub fn inline(gen: BatchGen) -> Self {
+        BatchSource { inner: SourceInner::Inline { gen, spare: Vec::new() } }
+    }
+
+    /// Spawn `workers` pipeline workers over `gen`'s batch stream.
+    pub fn pipelined(gen: &BatchGen, workers: usize) -> Self {
+        let m = workers.max(1);
+        let mut batch_rx = Vec::with_capacity(m);
+        let mut buf_tx = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        for w in 0..m {
+            let (btx, brx) = sync_channel::<RawBatch>(PIPELINE_DEPTH_PER_WORKER);
+            let (rtx, rrx) = sync_channel::<RawBatch>(PIPELINE_DEPTH_PER_WORKER);
+            let mut wgen = gen.worker(w as u64, m as u64);
+            let handle = std::thread::Builder::new()
+                .name(format!("batch-gen-{w}"))
+                .spawn(move || {
+                    use std::sync::mpsc::TryRecvError;
+                    let (b, k) = (wgen.batch_size(), wgen.feat_dim());
+                    loop {
+                        // Prefer a recycled buffer; fall back to a fresh
+                        // allocation so a caller that drops batches instead
+                        // of recycling degrades to per-batch allocation
+                        // (bounded by the batch channel's backpressure)
+                        // rather than deadlocking the pipeline.
+                        let mut buf = match rrx.try_recv() {
+                            Ok(buf) => buf,
+                            Err(TryRecvError::Empty) => RawBatch::alloc(b, k),
+                            Err(TryRecvError::Disconnected) => break,
+                        };
+                        wgen.fill_next(&mut buf);
+                        // errors once the coordinator closes its end
+                        if btx.send(buf).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn batch generator");
+            batch_rx.push(brx);
+            buf_tx.push(rtx);
+            handles.push(handle);
+        }
+        BatchSource {
+            inner: SourceInner::Pipelined(Pipeline {
+                batch_rx,
+                buf_tx,
+                handles,
+                next_worker: 0,
+                recycle_worker: 0,
+            }),
+        }
+    }
+
+    /// Next batch of the deterministic stream.
+    pub fn next(&mut self) -> RawBatch {
+        match &mut self.inner {
+            SourceInner::Inline { gen, spare } => {
+                let mut buf = spare
+                    .pop()
+                    .unwrap_or_else(|| RawBatch::alloc(gen.batch_size(), gen.feat_dim()));
+                gen.fill_next(&mut buf);
+                buf
+            }
+            SourceInner::Pipelined(p) => {
+                let buf = p.batch_rx[p.next_worker]
+                    .recv()
+                    .expect("batch generator thread died");
+                p.next_worker = (p.next_worker + 1) % p.batch_rx.len();
+                buf
+            }
+        }
+    }
+
+    /// Return a consumed batch's buffers for reuse. Recycling in the order
+    /// batches were taken (the training loop's natural behavior) routes
+    /// each buffer back to the worker that produced it; skipped or
+    /// out-of-order recycling is safe — workers allocate fresh buffers
+    /// when their return queue is empty, and `try_send` drops the buffer
+    /// when it is full.
+    pub fn recycle(&mut self, batch: RawBatch) {
+        match &mut self.inner {
+            SourceInner::Inline { spare, .. } => spare.push(batch),
+            SourceInner::Pipelined(p) => {
+                let _ = p.buf_tx[p.recycle_worker].try_send(batch);
+                p.recycle_worker = (p.recycle_worker + 1) % p.buf_tx.len();
             }
         }
     }
 }
 
-impl Drop for BatchSource {
+impl Drop for Pipeline {
     fn drop(&mut self) {
-        if let BatchSource::Pipelined { rx, stop, handle } = self {
-            stop.store(true, Ordering::Relaxed);
-            // unblock a sender stuck on a full channel, then join
-            while rx.try_recv().is_ok() {}
-            if let Some(h) = handle.take() {
-                let _ = h.join();
-            }
+        // Close both directions first: a worker blocked sending a finished
+        // batch, or waiting for a recycled buffer, sees the disconnect and
+        // exits. Only then join. (The previous design drained the batch
+        // channel once and could re-fill before the worker checked its
+        // stop flag — a deadlock on join.)
+        self.batch_rx.clear();
+        self.buf_tx.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -79,6 +216,8 @@ pub struct TrainRun {
     /// Fitted auxiliary model (Some for methods that need the tree).
     pub aux: Option<Arc<AdversarialSampler>>,
     pub aux_fit_seconds: f64,
+    /// Worker pool for the sharded host stages (gather/scatter/eval).
+    pool: Pool,
     mode: BatchMode,
     source: BatchSource,
     step: usize,
@@ -120,11 +259,12 @@ impl TrainRun {
         let data = Arc::new(splits.train.clone());
         let c = data.num_classes;
         let mut rng = Rng::new(cfg.seed);
+        let pool = Pool::from_parallelism(cfg.parallelism);
 
         // --- auxiliary model (Sec. 3) ---
         let (aux, aux_fit_seconds) = if cfg.method.needs_tree() {
             let t0 = std::time::Instant::now();
-            let (adv, stats) = AdversarialSampler::fit(&data, &cfg.tree, cfg.seed);
+            let (adv, stats) = AdversarialSampler::fit_with(&data, &cfg.tree, cfg.seed, &pool);
             let dt = t0.elapsed().as_secs_f64();
             log::info(&format!(
                 "aux tree fitted: {} nodes, {:.1}s, train loglik {:.3}",
@@ -140,7 +280,8 @@ impl TrainRun {
         let sampler = match cfg.method {
             Method::Adversarial | Method::Nce => {
                 let adv = aux.clone().unwrap();
-                let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
+                let x_proj =
+                    Arc::new(adv.pca.project_all_with(&data.features, data.len(), &pool));
                 SamplerKind::Adversarial { sampler: adv, x_proj }
             }
             Method::Frequency => {
@@ -164,14 +305,15 @@ impl TrainRun {
         );
         // Pipelining overlaps batch generation with PJRT execution; on a
         // single hardware thread there is nothing to overlap with and the
-        // channel only adds overhead, so fall back to inline generation.
+        // channels only add overhead, so fall back to inline generation.
         let multi_core = std::thread::available_parallelism()
             .map(|n| n.get() > 1)
             .unwrap_or(false);
         let source = if cfg.pipelined && multi_core && mode != BatchMode::Softmax {
-            spawn_pipeline(gen)
+            let workers = pool.num_workers().min(PIPELINE_MAX_WORKERS);
+            BatchSource::pipelined(&gen, workers)
         } else {
-            BatchSource::Inline(gen)
+            BatchSource::inline(gen)
         };
 
         // --- compiled step ---
@@ -195,6 +337,7 @@ impl TrainRun {
             evaluator: Evaluator::new(registry)?,
             aux,
             aux_fit_seconds,
+            pool,
             mode,
             source,
             step: 0,
@@ -217,7 +360,9 @@ impl TrainRun {
     /// Run one training step; returns the mean per-example loss.
     pub fn step_once(&mut self) -> Result<f64> {
         let batch = self.source.next();
-        let loss = self.apply_batch(&batch)?;
+        let result = self.apply_batch(&batch);
+        self.source.recycle(batch);
+        let loss = result?;
         self.step += 1;
         Ok(loss)
     }
@@ -232,8 +377,10 @@ impl TrainRun {
 
         let mean_loss = match self.mode {
             BatchMode::NsLike | BatchMode::Pairwise => {
-                self.params.gather(&batch.pos, &mut self.wp, &mut self.bp);
-                self.params.gather(&batch.neg, &mut self.wn, &mut self.bn);
+                self.params
+                    .gather_par(&self.pool, &batch.pos, &mut self.wp, &mut self.bp);
+                self.params
+                    .gather_par(&self.pool, &batch.neg, &mut self.wn, &mut self.bn);
                 let wp = lit_f32(&self.wp, &[b, k])?;
                 let bp = lit_f32(&self.bp, &[b])?;
                 let wn = lit_f32(&self.wn, &[b, k])?;
@@ -257,8 +404,10 @@ impl TrainRun {
                 crate::runtime::literal::read_f32_into(&outs[2], &mut self.bp)?;
                 crate::runtime::literal::read_f32_into(&outs[3], &mut self.wn)?;
                 crate::runtime::literal::read_f32_into(&outs[4], &mut self.bn)?;
-                self.params.apply_sparse(&batch.pos, &self.wp, &self.bp);
-                self.params.apply_sparse(&batch.neg, &self.wn, &self.bn);
+                self.params
+                    .apply_sparse_par(&self.pool, &batch.pos, &self.wp, &self.bp);
+                self.params
+                    .apply_sparse_par(&self.pool, &batch.neg, &self.wn, &self.bn);
                 loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64
             }
             BatchMode::Softmax => {
@@ -293,7 +442,7 @@ impl TrainRun {
         let cache = if bias_correction {
             match (&mut self.lpn_cache, &self.aux) {
                 (slot @ None, Some(adv)) => {
-                    *slot = Some(LpnCache::build(adv, &self.eval_set));
+                    *slot = Some(LpnCache::build_with(adv, &self.eval_set, &self.pool));
                     slot.as_ref()
                 }
                 (slot, _) => slot.as_ref(),
@@ -345,24 +494,6 @@ impl TrainRun {
         }
         Ok(curve)
     }
-}
-
-fn spawn_pipeline(mut gen: BatchGen) -> BatchSource {
-    let stop = Arc::new(AtomicBool::new(false));
-    let stop2 = stop.clone();
-    let (tx, rx) = sync_channel::<RawBatch>(PIPELINE_DEPTH);
-    let handle = std::thread::Builder::new()
-        .name("batch-gen".into())
-        .spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                let b = gen.next_batch();
-                if tx.send(b).is_err() {
-                    break;
-                }
-            }
-        })
-        .expect("spawn batch generator");
-    BatchSource::Pipelined { rx, stop, handle: Some(handle) }
 }
 
 /// Minimal logging shim (keeps the library free of logger dependencies;

@@ -104,15 +104,19 @@ impl Tree {
     }
 
     /// log p_n(y|x) for one label. O(k log C).
+    ///
+    /// Walks root→leaf (the leaf's ancestor at distance `d` is `q >> d`
+    /// for 1-indexed heap position `q`), so the accumulation order matches
+    /// [`Tree::log_prob_batch`] and [`Tree::log_prob_all`] bit-for-bit.
     pub fn log_prob(&self, x_proj: &[f32], y: u32) -> f32 {
         debug_assert!((y as usize) < self.num_classes);
-        let leaf = self.leaf_of_label[y as usize] as usize;
-        let mut pos = leaf + self.num_leaves - 1; // heap position
+        // 1-indexed heap position of the leaf (root = 1).
+        let q = self.leaf_of_label[y as usize] as usize + self.num_leaves;
         let mut logp = 0f32;
-        while pos > 0 {
-            let parent = (pos - 1) / 2;
-            let went_right = pos == 2 * parent + 2;
-            match self.forced[parent] {
+        for d in (1..=self.depth).rev() {
+            let node = (q >> d) - 1; // 0-indexed ancestor at distance d
+            let went_right = (q >> (d - 1)) & 1 == 1;
+            match self.forced[node] {
                 1 => {
                     if !went_right {
                         return f32::NEG_INFINITY;
@@ -124,13 +128,99 @@ impl Tree {
                     }
                 }
                 _ => {
-                    let a = self.activation(parent, x_proj);
+                    let a = self.activation(node, x_proj);
                     logp += if went_right { log_sigmoid(a) } else { log_sigmoid(-a) };
                 }
             }
-            pos = parent;
         }
         logp
+    }
+
+    /// Blocked ancestral sampling: one descent per block entry, processed
+    /// level-by-level so the upper tree levels (one node, then 2, 4, …) are
+    /// touched once per level for the whole block instead of once per draw —
+    /// the weight rows of the first ~log2(m) levels stay cache-resident.
+    ///
+    /// `x_projs` is `[m, k]` row-major and `rngs[j]` is draw `j`'s private
+    /// stream; each stream is consumed exactly as a scalar
+    /// [`Tree::sample`] call would consume it, so
+    /// `sample_batch(x, rngs, ..)` produces bit-identical (label, log p)
+    /// pairs to calling `sample` per row with the same streams. `labels`
+    /// doubles as the descent state, so the call is allocation-free.
+    pub fn sample_batch(
+        &self,
+        x_projs: &[f32],
+        rngs: &mut [Rng],
+        labels: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let m = labels.len();
+        let k = self.aux_dim;
+        debug_assert_eq!(x_projs.len(), m * k);
+        debug_assert_eq!(rngs.len(), m);
+        debug_assert_eq!(logps.len(), m);
+        labels.iter_mut().for_each(|n| *n = 0);
+        logps.iter_mut().for_each(|l| *l = 0.0);
+        for _level in 0..self.depth {
+            for j in 0..m {
+                let node = labels[j] as usize;
+                let go_right = match self.forced[node] {
+                    1 => true,
+                    -1 => false,
+                    _ => {
+                        let a = self.activation(node, &x_projs[j * k..(j + 1) * k]);
+                        let p_right = sigmoid(a);
+                        let right = rngs[j].next_f32() < p_right;
+                        logps[j] += if right { log_sigmoid(a) } else { log_sigmoid(-a) };
+                        right
+                    }
+                };
+                labels[j] = (2 * node + 1 + usize::from(go_right)) as u32;
+            }
+        }
+        for label in labels.iter_mut() {
+            let leaf = *label as usize - (self.num_leaves - 1);
+            *label = self.label_of_leaf[leaf];
+            debug_assert_ne!(*label, PADDING, "sampled a padding leaf");
+        }
+    }
+
+    /// Blocked root→leaf log-probability: `out[j] = log p_n(ys[j] | x_j)`
+    /// for an `[m, k]` block, processed level-by-level like
+    /// [`Tree::sample_batch`]. Bit-identical to scalar [`Tree::log_prob`]
+    /// per row (same traversal order, same accumulation order).
+    pub fn log_prob_batch(&self, x_projs: &[f32], ys: &[u32], out: &mut [f32]) {
+        let m = ys.len();
+        let k = self.aux_dim;
+        debug_assert_eq!(x_projs.len(), m * k);
+        debug_assert_eq!(out.len(), m);
+        out.iter_mut().for_each(|l| *l = 0.0);
+        for d in (1..=self.depth).rev() {
+            for j in 0..m {
+                if out[j] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let q = self.leaf_of_label[ys[j] as usize] as usize + self.num_leaves;
+                let node = (q >> d) - 1;
+                let went_right = (q >> (d - 1)) & 1 == 1;
+                match self.forced[node] {
+                    1 => {
+                        if !went_right {
+                            out[j] = f32::NEG_INFINITY;
+                        }
+                    }
+                    -1 => {
+                        if went_right {
+                            out[j] = f32::NEG_INFINITY;
+                        }
+                    }
+                    _ => {
+                        let a = self.activation(node, &x_projs[j * k..(j + 1) * k]);
+                        out[j] += if went_right { log_sigmoid(a) } else { log_sigmoid(-a) };
+                    }
+                }
+            }
+        }
     }
 
     /// All node activations for one x (heap order). O(k C).
@@ -311,6 +401,42 @@ mod tests {
                 (got - expect).abs() < 0.006,
                 "label {y}: got {got}, expect {expect}"
             );
+        }
+    }
+
+    #[test]
+    fn sample_batch_matches_scalar_sampling() {
+        let t = toy_tree();
+        let m = 64;
+        let mut rng = Rng::new(11);
+        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
+        // identical per-draw streams for both paths
+        let mut rngs_block: Vec<Rng> = (0..m).map(|j| rng.stream(7, j as u64)).collect();
+        let mut rngs_scalar = rngs_block.clone();
+        let mut labels = vec![0u32; m];
+        let mut logps = vec![0f32; m];
+        t.sample_batch(&x_projs, &mut rngs_block, &mut labels, &mut logps);
+        for j in 0..m {
+            let (y, lp) = t.sample(&x_projs[j * 2..(j + 1) * 2], &mut rngs_scalar[j]);
+            assert_eq!(labels[j], y, "draw {j}");
+            assert_eq!(logps[j], lp, "draw {j}");
+            // and the streams were consumed identically
+            assert_eq!(rngs_block[j].next_u64(), rngs_scalar[j].next_u64());
+        }
+    }
+
+    #[test]
+    fn log_prob_batch_matches_scalar() {
+        let t = toy_tree();
+        let m = 48;
+        let mut rng = Rng::new(12);
+        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
+        let ys: Vec<u32> = (0..m).map(|j| (j % 3) as u32).collect();
+        let mut out = vec![0f32; m];
+        t.log_prob_batch(&x_projs, &ys, &mut out);
+        for j in 0..m {
+            let expect = t.log_prob(&x_projs[j * 2..(j + 1) * 2], ys[j]);
+            assert_eq!(out[j], expect, "row {j}");
         }
     }
 

@@ -1,12 +1,15 @@
-//! Small shared utilities: deterministic RNG, alias tables, timing helpers.
+//! Small shared utilities: deterministic RNG, alias tables, the scoped
+//! worker pool, timing helpers.
 
 pub mod alias;
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 
 pub use alias::AliasTable;
+pub use pool::{Pool, SharedMut};
 pub use rng::Rng;
 pub use timer::StopWatch;

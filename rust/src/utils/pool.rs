@@ -1,0 +1,446 @@
+//! Persistent worker pool with deterministic sharded parallel-for.
+//!
+//! The host-side hot path (batch assembly, parameter gather, Adagrad
+//! scatter, eval sweeps) is embarrassingly parallel but must stay
+//! **bit-deterministic**: results may never depend on thread interleaving.
+//! The pool therefore offers only two shapes of parallelism, both with
+//! statically determined work assignment:
+//!
+//! * [`Pool::run_sharded`] — run `f(shard)` for every shard id; the caller
+//!   partitions work by a pure function of the data (e.g. `label % shards`)
+//!   so each output cell has exactly one writer.
+//! * [`Pool::for_each_span`] — split a contiguous output buffer into
+//!   per-worker spans aligned to an item size; span bounds depend only on
+//!   `(len, workers)`, never on timing.
+//!
+//! Workers are spawned **once** at pool construction and parked on a
+//! condvar between jobs, so a dispatch costs a lock + wakeup (~a few µs)
+//! rather than a thread spawn — the pool is called several times per
+//! training step on 10–100 µs units of work, where per-call spawning would
+//! eat the entire parallel win. Shard 0 always runs on the calling thread.
+//! There is no work stealing and no task queue by design: predictable
+//! assignment is what makes parallel training runs reproduce serial ones
+//! exactly.
+//!
+//! Dispatch hands workers a lifetime-erased pointer to the caller's
+//! closure; soundness comes from `run_sharded` blocking until every worker
+//! has finished the job (the closure provably outlives all uses). Worker
+//! panics are caught, forwarded, and re-raised on the calling thread.
+//!
+//! [`SharedMut`] supports the sharded-scatter pattern: several workers
+//! mutating *disjoint* rows of one buffer. Disjointness is the caller's
+//! obligation (documented per call site); the wrapper only erases the
+//! aliasing rule the borrow checker cannot see across the shard function.
+
+use std::marker::PhantomData;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased pointer to the job closure of the current generation.
+/// Only dereferenced by workers between the generation bump and the final
+/// `remaining` decrement, an interval during which `run_sharded` keeps the
+/// closure alive on the caller's stack.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is Sync (shared-callable from any thread), and the
+// dispatch protocol guarantees it outlives every dereference.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    job: Option<JobPtr>,
+    /// Bumped once per dispatched job; workers run each generation once.
+    generation: u64,
+    /// Workers still running the current generation.
+    remaining: usize,
+    /// A worker's job panicked (re-raised on the calling thread).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new generation (or shutdown).
+    work_cv: Condvar,
+    /// The dispatching caller waits here for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+fn worker_loop(inner: Arc<PoolInner>, shard: usize) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != last_gen {
+                    if let Some(job) = st.job {
+                        last_gen = st.generation;
+                        break job;
+                    }
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the dispatcher keeps the closure alive until every
+        // worker decrements `remaining` for this generation (see below).
+        let f = unsafe { &*job.0 };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(shard)));
+        let mut st = inner.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+/// A fixed-width pool of persistent workers (see module docs). Workers are
+/// joined on drop.
+pub struct Pool {
+    workers: usize,
+    /// None when serial (1 worker): everything degrades to inline calls.
+    inner: Option<Arc<PoolInner>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Pool with exactly `workers` workers (clamped to at least 1). The
+    /// calling thread acts as shard 0; `workers - 1` threads are spawned.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return Pool { workers, inner: None, handles: Vec::new() };
+        }
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                job: None,
+                generation: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..workers)
+            .map(|shard| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("pool-{shard}"))
+                    .spawn(move || worker_loop(inner, shard))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { workers, inner: Some(inner), handles }
+    }
+
+    /// Single-worker pool: every operation degrades to the serial loop.
+    pub fn serial() -> Self {
+        Pool::new(1)
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Self {
+        Pool::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        )
+    }
+
+    /// Interpret a `RunConfig::parallelism` knob: 0 = auto-detect, n = n.
+    pub fn from_parallelism(parallelism: usize) -> Self {
+        if parallelism == 0 {
+            Pool::auto()
+        } else {
+            Pool::new(parallelism)
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Run `f(shard)` for every `shard in 0..num_workers`; shard 0 runs on
+    /// the calling thread, the rest on the persistent workers. Blocks until
+    /// all shards finish. `f` decides what belongs to each shard by a pure
+    /// function of the data, so the result is identical for every worker
+    /// count that uses the same shard map.
+    pub fn run_sharded<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let Some(inner) = &self.inner else {
+            f(0);
+            return;
+        };
+        let trait_obj: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY (lifetime erasure): this function does not return until
+        // `remaining == 0`, i.e. until no worker can touch the pointer.
+        let job = JobPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                trait_obj,
+            )
+        });
+        {
+            let mut st = inner.state.lock().unwrap();
+            debug_assert_eq!(st.remaining, 0, "run_sharded is not reentrant");
+            st.job = Some(job);
+            st.generation = st.generation.wrapping_add(1);
+            st.remaining = self.workers - 1;
+            inner.work_cv.notify_all();
+        }
+        // The guard waits for all workers even if f(0) unwinds below —
+        // the closure must outlive every worker's use of `job`.
+        let guard = DispatchGuard { inner: inner.as_ref() };
+        f(0);
+        drop(guard);
+        let mut st = inner.state.lock().unwrap();
+        if st.panicked {
+            st.panicked = false;
+            drop(st);
+            panic!("pool worker panicked");
+        }
+    }
+
+    /// Split `data` (a `[n_items, item_len]` row-major buffer) into one
+    /// contiguous span per shard, aligned to `item_len`, and run
+    /// `f(first_item_index, span)` on each span in parallel. Span bounds
+    /// depend only on the lengths, so output placement is deterministic.
+    pub fn for_each_span<T, F>(&self, data: &mut [T], item_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(item_len > 0, "item_len must be positive");
+        debug_assert_eq!(data.len() % item_len, 0);
+        let n_items = data.len() / item_len;
+        if self.is_serial() || n_items <= 1 {
+            f(0, data);
+            return;
+        }
+        let per = n_items.div_ceil(self.workers);
+        let view = SharedMut::new(data);
+        let view = &view;
+        self.run_sharded(move |shard| {
+            let lo = (shard * per).min(n_items);
+            let hi = ((shard + 1) * per).min(n_items);
+            if lo >= hi {
+                return;
+            }
+            // SAFETY: spans [lo, hi) are disjoint across shards by
+            // construction.
+            let span = unsafe { view.slice_mut(lo * item_len, (hi - lo) * item_len) };
+            f(lo, span);
+        });
+    }
+}
+
+/// Blocks until the in-flight generation completes; runs even when the
+/// dispatching closure unwinds, keeping the lifetime-erased job pointer
+/// valid for every worker dereference.
+struct DispatchGuard<'p> {
+    inner: &'p PoolInner,
+}
+
+impl Drop for DispatchGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(inner) = &self.inner {
+            let mut st = inner.state.lock().unwrap();
+            st.shutdown = true;
+            inner.work_cv.notify_all();
+            drop(st);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A mutable slice view shareable across pool workers.
+///
+/// # Safety contract
+///
+/// [`SharedMut::slice_mut`] / [`SharedMut::get_mut`] hand out `&mut`
+/// aliases without synchronization. Callers must guarantee that concurrent
+/// accesses target **disjoint index ranges** — in this codebase, by
+/// sharding on `row % num_shards` (or contiguous spans) so each index has
+/// exactly one writer.
+pub struct SharedMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the wrapper is only a pointer + length; sending/sharing it is
+// safe because all dereferences go through the unsafe accessors whose
+// disjointness contract the caller upholds.
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable subslice `[start, start + len)`.
+    ///
+    /// # Safety
+    /// No other thread may access an overlapping range for the lifetime of
+    /// the returned borrow.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// Mutable element reference.
+    ///
+    /// # Safety
+    /// No other thread may access index `i` for the lifetime of the
+    /// returned borrow.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let hits = AtomicUsize::new(0);
+        Pool::serial().run_sharded(|shard| {
+            assert_eq!(shard, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn run_sharded_visits_every_shard_once() {
+        for workers in [1, 2, 3, 8] {
+            let pool = Pool::new(workers);
+            let hits: Vec<AtomicUsize> = (0..workers).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_sharded(|shard| {
+                hits[shard].fetch_add(1, Ordering::Relaxed);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_dispatch_reuses_workers() {
+        let pool = Pool::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run_sharded(|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 200 * 4);
+    }
+
+    #[test]
+    fn for_each_span_covers_everything_in_order() {
+        for workers in [1, 2, 3, 5] {
+            let pool = Pool::new(workers);
+            let n_items = 13;
+            let item_len = 4;
+            let mut buf = vec![0u32; n_items * item_len];
+            pool.for_each_span(&mut buf, item_len, |first_item, span| {
+                for (j, chunk) in span.chunks_exact_mut(item_len).enumerate() {
+                    let item = (first_item + j) as u32;
+                    for (c, v) in chunk.iter_mut().enumerate() {
+                        *v = item * 100 + c as u32;
+                    }
+                }
+            });
+            for item in 0..n_items as u32 {
+                for c in 0..item_len as u32 {
+                    assert_eq!(buf[(item as usize) * item_len + c as usize], item * 100 + c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_disjoint_writes_through_shared_mut() {
+        let n = 997;
+        for workers in [2, 4] {
+            let pool = Pool::new(workers);
+            let mut buf = vec![0usize; n];
+            let view = SharedMut::new(&mut buf);
+            let view_ref = &view;
+            pool.run_sharded(move |shard| {
+                for i in 0..n {
+                    if i % workers == shard {
+                        // SAFETY: index i is written only by shard i % workers.
+                        unsafe { *view_ref.get_mut(i) = i * 2 };
+                    }
+                }
+            });
+            assert!(buf.iter().enumerate().all(|(i, &v)| v == i * 2));
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = Pool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_sharded(|shard| {
+                if shard == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // pool still usable afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run_sharded(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn from_parallelism_zero_is_auto() {
+        assert!(Pool::from_parallelism(0).num_workers() >= 1);
+        assert_eq!(Pool::from_parallelism(3).num_workers(), 3);
+    }
+}

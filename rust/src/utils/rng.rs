@@ -34,6 +34,32 @@ impl Rng {
         Self { s }
     }
 
+    /// Derive an independent stream purely from the **current** state and a
+    /// `(domain, index)` pair, *without* advancing this generator.
+    ///
+    /// This is the keystone of pipelined determinism: batch `t` of a run is
+    /// generated from `base.stream(STREAM_BATCH, t)`, which any worker can
+    /// recompute, so the batch stream is bit-identical no matter how many
+    /// pipeline workers produce it (see `train::batcher`). `domain`
+    /// separates independent uses (epoch shuffles vs. per-batch draws) that
+    /// share an index space.
+    pub fn stream(&self, domain: u64, index: u64) -> Rng {
+        let mut sm = self.s[0]
+            ^ self.s[1].rotate_left(17)
+            ^ self.s[2].rotate_left(31)
+            ^ self.s[3].rotate_left(47);
+        sm = sm.wrapping_add(domain.wrapping_mul(0xA076_1D64_78BD_642F));
+        let _ = splitmix64(&mut sm); // diffuse domain before mixing index
+        sm = sm.wrapping_add(index.wrapping_mul(0xE703_7ED1_A0B4_28DB));
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
     /// Derive an independent stream (for worker threads / sub-components).
     pub fn split(&mut self, stream: u64) -> Rng {
         let mut sm = self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -142,6 +168,26 @@ mod tests {
         let mut b = root.split(1);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn stream_is_pure_and_non_advancing() {
+        let mut a = Rng::new(5);
+        let b = a.clone();
+        let s1: Vec<u64> = (0..8).map(|_| a.stream(1, 42).next_u64()).collect();
+        // deriving streams did not advance `a`
+        assert_eq!(a.s, b.s);
+        // pure function of (state, domain, index)
+        let s2: Vec<u64> = (0..8).map(|_| a.stream(1, 42).next_u64()).collect();
+        assert_eq!(s1, s2);
+        // distinct (domain, index) pairs give distinct streams
+        let mut x = a.stream(1, 42);
+        let mut y = a.stream(1, 43);
+        let mut z = a.stream(2, 42);
+        let same_xy = (0..64).filter(|_| x.next_u64() == y.next_u64()).count();
+        let same_xz = (0..64).filter(|_| x.next_u64() == z.next_u64()).count();
+        assert_eq!(same_xy, 0);
+        assert_eq!(same_xz, 0);
     }
 
     #[test]

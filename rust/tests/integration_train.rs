@@ -1,10 +1,13 @@
 //! Integration: full training runs through the coordinator on the tiny
 //! preset — every method learns (or behaves exactly as the paper predicts),
 //! the HLO evaluator agrees with the pure-rust reference evaluator, and
-//! runs are deterministic.
+//! runs are deterministic — bit-identically so across every `parallelism`
+//! setting of the host-parallel pipeline.
 
 use adv_softmax::eval::{evaluate_reference, Evaluator};
 use adv_softmax::prelude::*;
+use adv_softmax::train::{BatchGen, BatchMode, BatchSource, SamplerKind};
+use std::sync::Arc;
 
 fn registry() -> Registry {
     Registry::open_default().expect("artifacts missing — run `make artifacts` first")
@@ -158,6 +161,103 @@ fn pipelined_equals_inline_stream() {
         losses.push(l);
     }
     assert_eq!(losses[0], losses[1]);
+}
+
+/// The pipeline's core invariant, checked without any artifacts: the batch
+/// stream coming out of a [`BatchSource`] is bit-identical for the inline
+/// path and for every pipeline worker count.
+#[test]
+fn batch_stream_identical_across_worker_counts() {
+    let splits = tiny_splits();
+    let data = Arc::new(splits.train.clone());
+    let make_gen = || {
+        BatchGen::new(
+            data.clone(),
+            SamplerKind::Uniform(UniformSampler::new(data.num_classes)),
+            BatchMode::NsLike,
+            256,
+            1.0,
+            Rng::new(5),
+        )
+    };
+    let collect = |mut src: BatchSource| -> Vec<(Vec<u32>, Vec<u32>, Vec<f32>, Vec<f32>)> {
+        (0..30)
+            .map(|_| {
+                let b = src.next();
+                let row = (b.pos.clone(), b.neg.clone(), b.lpn_p.clone(), b.lpn_n.clone());
+                src.recycle(b);
+                row
+            })
+            .collect()
+    };
+    let inline = collect(BatchSource::inline(make_gen()));
+    for workers in [1usize, 2, 3, 4] {
+        let gen = make_gen();
+        let piped = collect(BatchSource::pipelined(&gen, workers));
+        assert_eq!(piped, inline, "workers={workers}");
+    }
+}
+
+/// Adversarial batches (blocked tree descents) are also stream-stable.
+#[test]
+fn adversarial_batch_stream_identical_across_worker_counts() {
+    let splits = tiny_splits();
+    let data = Arc::new(splits.train.clone());
+    let tcfg = adv_softmax::config::TreeConfig { aux_dim: 8, ..Default::default() };
+    let (adv, _) = AdversarialSampler::fit(&data, &tcfg, 3);
+    let adv = Arc::new(adv);
+    let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
+    let make_gen = || {
+        BatchGen::new(
+            data.clone(),
+            SamplerKind::Adversarial { sampler: adv.clone(), x_proj: x_proj.clone() },
+            BatchMode::NsLike,
+            256,
+            1.0,
+            Rng::new(6),
+        )
+    };
+    let collect = |mut src: BatchSource| -> Vec<(Vec<u32>, Vec<u32>, Vec<f32>, Vec<f32>)> {
+        (0..20)
+            .map(|_| {
+                let b = src.next();
+                let row = (b.pos.clone(), b.neg.clone(), b.lpn_p.clone(), b.lpn_n.clone());
+                src.recycle(b);
+                row
+            })
+            .collect()
+    };
+    let inline = collect(BatchSource::inline(make_gen()));
+    for workers in [2usize, 4] {
+        let gen = make_gen();
+        assert_eq!(collect(BatchSource::pipelined(&gen, workers)), inline, "workers={workers}");
+    }
+}
+
+/// End to end: the learning curve (train loss, eval metrics, step ids) is
+/// bit-identical between a serial run and a `parallelism = 4` run — the
+/// acceptance bar for the host-parallel refactor.
+#[test]
+fn learning_curve_identical_across_parallelism() {
+    let reg = registry();
+    let splits = tiny_splits();
+    let mut curves: Vec<Vec<(usize, f64, f64, f64)>> = Vec::new();
+    for parallelism in [1usize, 4] {
+        let mut cfg = short_cfg(Method::Adversarial, 120);
+        cfg.eval_every = 40;
+        cfg.parallelism = parallelism;
+        let mut run = TrainRun::prepare(&reg, &splits, &cfg).unwrap();
+        let curve = run.train().unwrap();
+        curves.push(
+            curve
+                .points
+                .iter()
+                .map(|p| (p.step, p.train_loss, p.log_likelihood, p.accuracy))
+                .collect(),
+        );
+    }
+    assert!(!curves[0].is_empty());
+    assert_eq!(curves[0], curves[1]);
 }
 
 #[test]

@@ -13,7 +13,7 @@ use adv_softmax::sampler::{FrequencySampler, NoiseSampler, UniformSampler};
 use adv_softmax::tree::fit::fit_tree;
 use adv_softmax::tree::PADDING;
 use adv_softmax::utils::json::Json;
-use adv_softmax::utils::{AliasTable, Rng};
+use adv_softmax::utils::{AliasTable, Pool, Rng};
 
 /// Run `prop` over `cases` random seeds; panic with the seed on failure.
 fn for_all_seeds(cases: u64, prop: impl Fn(&mut Rng)) {
@@ -86,6 +86,72 @@ fn prop_tree_bijection_and_sampling() {
             let direct = tree.log_prob(xi, s);
             assert!((lp - direct).abs() < 1e-4, "lp {lp} vs {direct}");
         }
+    });
+}
+
+/// Blocked-descent invariant: `Tree::sample_batch` agrees bit-for-bit with
+/// repeated `Tree::sample` under the same split per-draw RNG streams, and
+/// `Tree::log_prob_batch` with repeated `Tree::log_prob` — for arbitrary
+/// fitted trees (non-power-of-two C, forced padding branches included).
+#[test]
+fn prop_blocked_descents_match_scalar() {
+    for_all_seeds(10, |rng| {
+        let (x, y, n, k, c) = random_tree_data(rng);
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, rng);
+        let m = 64 + rng.below(128);
+        let x_projs: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        // split one base stream into per-draw streams, clone for both paths
+        let base = rng.split(99);
+        let mut rngs_block: Vec<Rng> = (0..m).map(|j| base.stream(3, j as u64)).collect();
+        let mut rngs_scalar = rngs_block.clone();
+        let mut labels = vec![0u32; m];
+        let mut logps = vec![0f32; m];
+        tree.sample_batch(&x_projs, &mut rngs_block, &mut labels, &mut logps);
+        for j in 0..m {
+            let (sy, slp) = tree.sample(&x_projs[j * k..(j + 1) * k], &mut rngs_scalar[j]);
+            assert_eq!(labels[j], sy, "draw {j}");
+            assert_eq!(logps[j], slp, "draw {j}");
+        }
+        // log_prob_batch vs scalar log_prob on the sampled labels
+        let mut lp_block = vec![0f32; m];
+        tree.log_prob_batch(&x_projs, &labels, &mut lp_block);
+        for j in 0..m {
+            let direct = tree.log_prob(&x_projs[j * k..(j + 1) * k], labels[j]);
+            assert_eq!(lp_block[j], direct, "row {j}");
+        }
+    });
+}
+
+/// Sharded-scatter invariant: `apply_sparse_par` is bit-identical to the
+/// serial scatter (including duplicate-label Adagrad sequencing) for
+/// arbitrary shapes, duplicate densities, and worker counts; `gather_par`
+/// reads back identically too.
+#[test]
+fn prop_sharded_gather_scatter_match_serial() {
+    for_all_seeds(10, |rng| {
+        let c = 2 + rng.below(40);
+        let k = 1 + rng.below(16);
+        let b = 64 + rng.below(256); // above the parallel threshold
+        let labels: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let gw: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let mut serial = ParamStore::zeros(c, k, 0.1);
+        serial.apply_sparse(&labels, &gw, &gb);
+        let workers = 2 + rng.below(5);
+        let pool = Pool::new(workers);
+        let mut par = ParamStore::zeros(c, k, 0.1);
+        par.apply_sparse_par(&pool, &labels, &gw, &gb);
+        assert_eq!(par.w, serial.w, "C={c} k={k} b={b} workers={workers}");
+        assert_eq!(par.b, serial.b);
+        let mut w_s = vec![0f32; b * k];
+        let mut b_s = vec![0f32; b];
+        serial.gather(&labels, &mut w_s, &mut b_s);
+        let mut w_p = vec![0f32; b * k];
+        let mut b_p = vec![0f32; b];
+        par.gather_par(&pool, &labels, &mut w_p, &mut b_p);
+        assert_eq!(w_p, w_s);
+        assert_eq!(b_p, b_s);
     });
 }
 

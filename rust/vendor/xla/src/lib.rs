@@ -1,0 +1,247 @@
+//! Vendored **host-only stub** of the `xla` PJRT bindings.
+//!
+//! The build environment cannot link the real XLA/PJRT runtime, so this
+//! crate implements the API surface the workspace uses in two tiers:
+//!
+//! * **Fully functional host types** — [`Literal`] stores shape + bytes on
+//!   the host, so literal creation, element counts, and typed reads all
+//!   behave exactly like the real crate (the coordinator's gather/scatter
+//!   hot path and its benches run unmodified).
+//! * **Gated runtime types** — [`PjRtClient::cpu`] and everything behind
+//!   it return a descriptive [`Error`]; executing AOT artifacts requires
+//!   building against the real `xla` crate. Callers already treat runtime
+//!   construction as fallible, so the stub degrades into clear messages
+//!   instead of link errors.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (Display/Debug + std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT runtime unavailable: this workspace is built against the vendored \
+     host-only xla stub (rust/vendor/xla); build with the real xla crate to execute AOT artifacts";
+
+/// Element types used by this workspace's artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Rust scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+}
+
+/// A host tensor: element type, dims, and a flat little-endian byte buffer.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build from raw bytes (memcpy, no element-wise conversion).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        if n * ty.byte_size() != data.len() {
+            return Err(Error(format!(
+                "literal byte size {} does not match shape {dims:?} ({} elements of {} bytes)",
+                data.len(),
+                n,
+                ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len() / self.ty.byte_size()
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::ELEMENT_TYPE != self.ty {
+            return Err(Error(format!(
+                "type mismatch: literal is {:?}, read as {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        let n = self.element_count();
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // SAFETY: `data` holds exactly `n` little-endian elements of T
+        // (invariant established at construction); the byte copy into the
+        // freshly reserved, properly aligned buffer initializes all n.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// Copy into an existing typed buffer (avoids an allocation).
+    pub fn copy_raw_to<T: NativeType>(&self, out: &mut [T]) -> Result<()> {
+        if T::ELEMENT_TYPE != self.ty {
+            return Err(Error(format!(
+                "type mismatch: literal is {:?}, read as {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        if out.len() != self.element_count() {
+            return Err(Error(format!(
+                "buffer has {} elements, literal has {}",
+                out.len(),
+                self.element_count()
+            )));
+        }
+        // SAFETY: lengths checked above; byte-for-byte copy of POD data.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Flatten a tuple literal into its elements. The stub never produces
+    /// tuples (execution is gated), so this only errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("stub literal is not a tuple".into()))
+    }
+}
+
+/// Parsed HLO module text (held verbatim; compilation is gated).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// PJRT client handle. Construction fails in the stub build.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub build).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Device buffer handle (unreachable in the stub build).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let mut out = [0f32; 3];
+        lit.copy_raw_to::<f32>(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4])
+            .is_err());
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[0u8; 4]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn runtime_is_gated() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
