@@ -13,10 +13,12 @@
 use adv_softmax::config::{DatasetPreset, Method, RunConfig, SyntheticConfig, TreeConfig};
 use adv_softmax::data::Splits;
 use adv_softmax::eval::LpnCache;
+use adv_softmax::linalg::Pca;
 use adv_softmax::model::ParamStore;
 use adv_softmax::runtime::{lit_f32, Registry};
 use adv_softmax::sampler::{AdversarialSampler, NoiseSampler};
 use adv_softmax::train::{BatchGen, BatchMode, BatchSource, SamplerKind, TrainRun};
+use adv_softmax::tree::fit::{fit_tree, fit_tree_with};
 use adv_softmax::utils::bench::{black_box, Bench, BenchStats};
 use adv_softmax::utils::json::Json;
 use adv_softmax::utils::{Pool, Rng};
@@ -26,11 +28,13 @@ use std::sync::Arc;
 const PAR: usize = 4;
 
 /// (summary key, serial case, parallel case) for the tracked speedups.
-const SPEEDUP_PAIRS: [(&str, &str, &str); 4] = [
+const SPEEDUP_PAIRS: [(&str, &str, &str); 6] = [
     ("batch_assembly", "batcher/next_batch(serial)", "batcher/pipeline(workers=4)"),
     ("gather", "params/gather(serial)", "params/gather(workers=4)"),
     ("scatter", "params/adagrad_scatter(serial)", "params/adagrad_scatter(workers=4)"),
     ("eval_sweep", "eval/lpn_cache(serial)", "eval/lpn_cache(workers=4)"),
+    ("pca_fit", "fit/pca(serial)", "fit/pca(workers=4)"),
+    ("tree_fit", "fit/tree(serial)", "fit/tree(workers=4)"),
 ];
 
 #[derive(Default)]
@@ -198,6 +202,37 @@ fn main() -> anyhow::Result<()> {
         black_box(LpnCache::build_with(&adv_arc, &eval_set, &pool));
     });
     report.record("eval/lpn_cache(workers=4)", s);
+
+    // --- aux-model fit stages (the paper's one-off cost): PCA covariance
+    // accumulation and the level-synchronous tree fit, serial vs sharded.
+    // Both are bit-deterministic, so serial and parallel cases measure the
+    // exact same computation (fit-parity tests enforce this). Lower
+    // iteration floor than the micro cases (one fit is ~5 orders slower),
+    // but the same REPRO_BENCH_SECONDS budget knob (CI smoke relies on it).
+    let fit_bench = Bench::with_env_budget(1, 5, 0.5);
+    let s = fit_bench.run("fit/pca(serial)", || {
+        black_box(Pca::fit(&data.features, data.len(), k, tcfg.aux_dim, 1));
+    });
+    report.record("fit/pca(serial)", s);
+    let s = fit_bench.run("fit/pca(workers=4)", || {
+        black_box(Pca::fit_with(&data.features, data.len(), k, tcfg.aux_dim, 1, &pool));
+    });
+    report.record("fit/pca(workers=4)", s);
+    let s = fit_bench.run("fit/tree(serial)", || {
+        let mut frng = Rng::new(9);
+        black_box(fit_tree(
+            x_proj.as_slice(), &data.labels, data.len(), tcfg.aux_dim, c, &tcfg, &mut frng,
+        ));
+    });
+    report.record("fit/tree(serial)", s);
+    let s = fit_bench.run("fit/tree(workers=4)", || {
+        let mut frng = Rng::new(9);
+        black_box(fit_tree_with(
+            x_proj.as_slice(), &data.labels, data.len(), tcfg.aux_dim, c, &tcfg, &mut frng,
+            &pool,
+        ));
+    });
+    report.record("fit/tree(workers=4)", s);
 
     // --- literal creation + PJRT execute (skipped without artifacts) ---
     match Registry::open_default() {

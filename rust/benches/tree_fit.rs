@@ -1,15 +1,18 @@
 //! E7 — auxiliary-model fit cost (Sec. 3 requirement (i): "subleading
 //! computational overhead"). Measures greedy tree fitting across label-set
 //! sizes and reports per-point-per-level cost, plus the quality (train
-//! log-likelihood vs the uniform floor).
+//! log-likelihood vs the uniform floor) and the level-sharded parallel
+//! speedup (the parallel fit is bit-identical to the serial one, so both
+//! cases measure the exact same computation).
 
 use adv_softmax::config::TreeConfig;
-use adv_softmax::tree::fit::fit_tree;
+use adv_softmax::tree::fit::{fit_tree, fit_tree_with};
 use adv_softmax::utils::bench::Bench;
-use adv_softmax::utils::Rng;
+use adv_softmax::utils::{Pool, Rng};
 
 fn main() {
     let bench = Bench::new(0, 2, 0.5);
+    let pool = Pool::new(4);
     let k = 16;
     let mut rng = Rng::new(1);
     for (c, n) in [(256usize, 8_192usize), (1024, 16_384), (4096, 32_768)] {
@@ -30,13 +33,25 @@ fn main() {
             let (_, s) = fit_tree(&x, &y, n, k, c, &cfg, &mut frng);
             loglik = s.train_mean_loglik;
         });
+        let mut loglik_par = 0.0;
+        let stats_par = bench.run(&format!("tree_fit C={c} N={n} workers=4"), || {
+            let mut frng = Rng::new(9);
+            let (_, s) = fit_tree_with(&x, &y, n, k, c, &cfg, &mut frng, &pool);
+            loglik_par = s.train_mean_loglik;
+        });
         let levels = (c as f64).log2();
         println!(
-            "  -> {:.0} ns/point/level, train loglik {:.3} (uniform floor {:.3})",
+            "  -> {:.0} ns/point/level, train loglik {:.3} (uniform floor {:.3}), \
+             parallel speedup {:.2}x",
             stats.median_ns / (n as f64 * levels),
             loglik,
-            -(c as f64).ln()
+            -(c as f64).ln(),
+            stats.median_ns / stats_par.median_ns,
         );
         assert!(loglik > -(c as f64).ln(), "tree must beat uniform");
+        assert!(
+            (loglik - loglik_par).abs() < 1e-12,
+            "parallel fit must be bit-identical to serial ({loglik} vs {loglik_par})"
+        );
     }
 }

@@ -107,10 +107,17 @@ impl Default for Hyper {
     }
 }
 
+/// Hard cap on the auxiliary (PCA) dimension k: the samplers project raw
+/// features into fixed-size stack buffers of this many floats on the
+/// per-negative-draw hot path (`sampler::AdversarialSampler`), so larger
+/// values must be rejected when a config is loaded, not discovered as a
+/// slice panic mid-training.
+pub const MAX_AUX_DIM: usize = 64;
+
 /// Auxiliary-model (Sec. 3) settings.
 #[derive(Clone, Copy, Debug)]
 pub struct TreeConfig {
-    /// PCA dimension k (paper: 16).
+    /// PCA dimension k (paper: 16). At most [`MAX_AUX_DIM`].
     pub aux_dim: usize,
     /// Node regularizer lambda_n (paper: 0.1).
     pub lambda_n: f64,
@@ -131,6 +138,26 @@ impl Default for TreeConfig {
             max_alternations: 4,
             fit_subsample: 0,
         }
+    }
+}
+
+impl TreeConfig {
+    /// Reject knob values that would otherwise fail deep in the fit or
+    /// sampling path. Called whenever a config is loaded from JSON; callers
+    /// constructing a `TreeConfig` directly can invoke it themselves.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.aux_dim >= 1, "aux_dim must be at least 1");
+        anyhow::ensure!(
+            self.aux_dim <= MAX_AUX_DIM,
+            "aux_dim {} exceeds the supported maximum {} (the samplers \
+             project into a fixed {}-float stack buffer)",
+            self.aux_dim,
+            MAX_AUX_DIM,
+            MAX_AUX_DIM
+        );
+        anyhow::ensure!(self.newton_iters >= 1, "newton_iters must be at least 1");
+        anyhow::ensure!(self.max_alternations >= 1, "max_alternations must be at least 1");
+        Ok(())
     }
 }
 
@@ -367,6 +394,7 @@ impl RunConfig {
         if let Some(p) = v.opt("parallelism") {
             cfg.parallelism = p.as_usize()?;
         }
+        cfg.tree.validate()?;
         Ok(cfg)
     }
 
@@ -436,6 +464,18 @@ mod tests {
         }
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.parallelism, 0);
+    }
+
+    #[test]
+    fn oversized_aux_dim_rejected_at_load() {
+        let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
+        cfg.tree.aux_dim = MAX_AUX_DIM + 1;
+        assert!(RunConfig::from_json(&cfg.to_json()).is_err());
+        cfg.tree.aux_dim = MAX_AUX_DIM;
+        assert!(RunConfig::from_json(&cfg.to_json()).is_ok());
+        cfg.tree.aux_dim = 0;
+        assert!(RunConfig::from_json(&cfg.to_json()).is_err());
+        assert!(TreeConfig::default().validate().is_ok());
     }
 
     #[test]

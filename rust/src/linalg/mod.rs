@@ -68,6 +68,19 @@ pub fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
 }
 
+/// Logistic sigmoid in f64, branch-stable at both tails. Used where f32
+/// rounding is not acceptable — e.g. the tree-fit Newton curvature, whose
+/// Armijo check compares against a full-f64 objective (`tree/fit.rs`).
+#[inline]
+pub fn sigmoid64(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
 /// Streaming log-sum-exp merge: combine (m1, s1) and (m2, s2) where each
 /// pair represents max and sum(exp(x - max)) over disjoint sets.
 #[inline]
@@ -115,6 +128,18 @@ mod tests {
         for z in [-5.0f32, -1.0, 0.0, 2.0, 7.0] {
             assert!((sigmoid(z) + sigmoid(-z) - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn sigmoid64_matches_and_exceeds_f32_precision() {
+        for z in [-30.0f64, -5.0, -1.0, 0.0, 0.5, 2.0, 7.0, 30.0] {
+            assert!((sigmoid64(z) + sigmoid64(-z) - 1.0).abs() < 1e-15, "z={z}");
+            assert!((sigmoid64(z) - sigmoid(z as f32) as f64).abs() < 1e-6, "z={z}");
+        }
+        // tails stay finite where f32 would round to 0/1
+        assert!(sigmoid64(-40.0) > 0.0);
+        assert!(sigmoid64(30.0) < 1.0 && sigmoid(30.0f32) == 1.0);
+        assert!(sigmoid64(-700.0) >= 0.0 && sigmoid64(700.0) <= 1.0);
     }
 
     #[test]

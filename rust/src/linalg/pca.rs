@@ -6,10 +6,22 @@
 //! an explicit K×K covariance plus power iteration is exact enough and has
 //! no dependencies. Also used to initialize tree-node weights with the
 //! dominant eigenvector of per-label sum vectors (paper's init).
+//!
+//! The O(N·K²) mean/covariance accumulation of [`Pca::fit_with`] is
+//! sharded over a worker pool: rows are cut into [`FIT_SHARDS`] fixed
+//! slabs (a pure function of N, never of the worker count), each slab
+//! accumulates its own f64 partial, and partials reduce in slab order —
+//! so the fitted model is bit-identical at every `parallelism` setting.
 
-use super::{axpy, dot, scale};
+use super::dot;
 use crate::utils::json::Json;
-use crate::utils::{Pool, Rng};
+use crate::utils::{Pool, Rng, SharedMut};
+
+/// Fixed row-slab count for the parallel mean/covariance accumulation.
+/// Must not depend on the worker count (see module docs); 16 slabs bound
+/// the partial-buffer memory at 16·K² f64 while still feeding every pool
+/// width we run.
+const FIT_SHARDS: usize = 16;
 
 /// A fitted PCA projection: x -> (x - mean) @ components^T, [K] -> [k].
 #[derive(Clone, Debug)]
@@ -17,6 +29,9 @@ pub struct Pca {
     pub mean: Vec<f32>,
     /// k rows of length K, orthonormal.
     pub components: Vec<Vec<f32>>,
+    /// Precomputed mean·component per component: `project` runs once per
+    /// negative draw, so the mean dot must not be recomputed there.
+    pub proj_bias: Vec<f32>,
     pub input_dim: usize,
     pub output_dim: usize,
 }
@@ -50,43 +65,109 @@ pub fn dominant_eigenvector(m: &[f64], n: usize, iters: usize, rng: &mut Rng) ->
 }
 
 impl Pca {
-    /// Fit `out_dim` principal components of `data` ([n, in_dim] row-major).
+    /// Fit `out_dim` principal components of `data` ([n, in_dim] row-major),
+    /// serially.
     ///
     /// Power iteration with deflation; each component gets `iters`
     /// iterations (30 is plenty at these scales — see unit tests, which
     /// check recovery of a planted low-rank structure).
     pub fn fit(data: &[f32], n: usize, in_dim: usize, out_dim: usize, seed: u64) -> Self {
+        Self::fit_with(data, n, in_dim, out_dim, seed, &Pool::serial())
+    }
+
+    /// [`Pca::fit`] with the O(N·K²) mean/covariance accumulation sharded
+    /// over a worker pool. Fixed row slabs + fixed-order partial reduction
+    /// make the result bit-identical at every worker count (module docs).
+    pub fn fit_with(
+        data: &[f32],
+        n: usize,
+        in_dim: usize,
+        out_dim: usize,
+        seed: u64,
+        pool: &Pool,
+    ) -> Self {
         assert!(n > 0 && in_dim > 0 && out_dim > 0 && out_dim <= in_dim);
         assert_eq!(data.len(), n * in_dim);
         let mut rng = Rng::new(seed ^ 0x9ca);
-        // mean
-        let mut mean = vec![0f32; in_dim];
-        for row in data.chunks_exact(in_dim) {
-            axpy(1.0, row, &mut mean);
+        let workers = pool.num_workers();
+        let slab = n.div_ceil(FIT_SHARDS);
+        let slab_bounds = |s: usize| ((s * slab).min(n), ((s + 1) * slab).min(n));
+
+        // ---- mean: per-slab f64 partials, reduced in slab order ----
+        let mut mean_part = vec![0f64; FIT_SHARDS * in_dim];
+        {
+            let parts = SharedMut::new(&mut mean_part);
+            pool.run_sharded(|shard| {
+                for s in (shard..FIT_SHARDS).step_by(workers) {
+                    let (lo, hi) = slab_bounds(s);
+                    if lo >= hi {
+                        continue;
+                    }
+                    // SAFETY: slab s is processed by exactly one shard.
+                    let dst = unsafe { parts.slice_mut(s * in_dim, in_dim) };
+                    for row in data[lo * in_dim..hi * in_dim].chunks_exact(in_dim) {
+                        for (d, v) in dst.iter_mut().zip(row.iter()) {
+                            *d += *v as f64;
+                        }
+                    }
+                }
+            });
         }
-        scale(&mut mean, 1.0 / n as f32);
-        // covariance in f64 (K ≤ few hundred -> K² ≤ ~100k entries)
-        let mut cov = vec![0f64; in_dim * in_dim];
-        let mut centered = vec![0f32; in_dim];
-        for row in data.chunks_exact(in_dim) {
-            for (c, (r, m)) in centered.iter_mut().zip(row.iter().zip(mean.iter())) {
-                *c = r - m;
+        let mut mean64 = vec![0f64; in_dim];
+        for part in mean_part.chunks_exact(in_dim) {
+            for (m, p) in mean64.iter_mut().zip(part.iter()) {
+                *m += *p;
             }
-            for i in 0..in_dim {
-                let ci = centered[i] as f64;
-                if ci == 0.0 {
-                    continue;
+        }
+        let mean: Vec<f32> = mean64.iter().map(|m| (*m / n as f64) as f32).collect();
+
+        // ---- covariance in f64 (K ≤ few hundred -> K² ≤ ~100k entries):
+        // per-slab K×K partials, reduced in slab order ----
+        let mut cov_part = vec![0f64; FIT_SHARDS * in_dim * in_dim];
+        {
+            let parts = SharedMut::new(&mut cov_part);
+            let mean_ref = &mean;
+            pool.run_sharded(|shard| {
+                let mut centered = vec![0f32; in_dim];
+                for s in (shard..FIT_SHARDS).step_by(workers) {
+                    let (lo, hi) = slab_bounds(s);
+                    if lo >= hi {
+                        continue;
+                    }
+                    // SAFETY: slab s is processed by exactly one shard.
+                    let dst = unsafe { parts.slice_mut(s * in_dim * in_dim, in_dim * in_dim) };
+                    for row in data[lo * in_dim..hi * in_dim].chunks_exact(in_dim) {
+                        for (c, (r, m)) in
+                            centered.iter_mut().zip(row.iter().zip(mean_ref.iter()))
+                        {
+                            *c = r - m;
+                        }
+                        for i in 0..in_dim {
+                            let ci = centered[i] as f64;
+                            if ci == 0.0 {
+                                continue;
+                            }
+                            let drow = &mut dst[i * in_dim..(i + 1) * in_dim];
+                            for (d, c) in drow.iter_mut().zip(centered.iter()) {
+                                *d += ci * *c as f64;
+                            }
+                        }
+                    }
                 }
-                let dst = &mut cov[i * in_dim..(i + 1) * in_dim];
-                for (d, c) in dst.iter_mut().zip(centered.iter()) {
-                    *d += ci * *c as f64;
-                }
+            });
+        }
+        let mut cov = vec![0f64; in_dim * in_dim];
+        for part in cov_part.chunks_exact(in_dim * in_dim) {
+            for (c, p) in cov.iter_mut().zip(part.iter()) {
+                *c += *p;
             }
         }
         for v in cov.iter_mut() {
             *v /= n as f64;
         }
 
+        // power iteration + deflation stays serial: O(k·iters·K²) is tiny
+        // next to the accumulation above
         let mut components: Vec<Vec<f32>> = Vec::with_capacity(out_dim);
         for _ in 0..out_dim {
             let v = dominant_eigenvector(&cov, in_dim, 50, &mut rng);
@@ -109,17 +190,22 @@ impl Pca {
             }
             components.push(v);
         }
-        Self { mean, components, input_dim: in_dim, output_dim: out_dim }
+        let proj_bias = components.iter().map(|c| dot(&mean, c)).collect();
+        Self { mean, components, proj_bias, input_dim: in_dim, output_dim: out_dim }
     }
 
     /// Project one feature vector into the PCA space.
     pub fn project(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.input_dim);
         debug_assert_eq!(out.len(), self.output_dim);
-        // (x - mean) . c  ==  x.c - mean.c ; precomputing mean.c per
-        // component would save a dot, but this runs off the hot path.
-        for (o, c) in out.iter_mut().zip(self.components.iter()) {
-            *o = dot(x, c) - dot(&self.mean, c);
+        // (x - mean)·c == x·c - mean·c ; mean·c is `proj_bias`, precomputed
+        // at fit/deserialize time — this runs once per negative draw.
+        for ((o, c), bias) in out
+            .iter_mut()
+            .zip(self.components.iter())
+            .zip(self.proj_bias.iter())
+        {
+            *o = dot(x, c) - bias;
         }
     }
 
@@ -143,18 +229,20 @@ impl Pca {
             .iter()
             .map(|c| c.to_vec_f32())
             .collect::<anyhow::Result<_>>()?;
-        let s = Self {
-            mean: v.get("mean")?.to_vec_f32()?,
-            components,
-            input_dim: v.get("input_dim")?.as_usize()?,
-            output_dim: v.get("output_dim")?.as_usize()?,
-        };
-        anyhow::ensure!(s.components.len() == s.output_dim, "component count mismatch");
+        let mean = v.get("mean")?.to_vec_f32()?;
+        let input_dim = v.get("input_dim")?.as_usize()?;
+        let output_dim = v.get("output_dim")?.as_usize()?;
+        anyhow::ensure!(components.len() == output_dim, "component count mismatch");
         anyhow::ensure!(
-            s.components.iter().all(|c| c.len() == s.input_dim),
+            components.iter().all(|c| c.len() == input_dim),
             "component dim mismatch"
         );
-        Ok(s)
+        anyhow::ensure!(mean.len() == input_dim, "mean dim mismatch");
+        // proj_bias is derived, not serialized: recompute on load so old
+        // checkpoints stay readable and the value always matches (mean,
+        // components) exactly.
+        let proj_bias = components.iter().map(|c| dot(&mean, c)).collect();
+        Ok(Self { mean, components, proj_bias, input_dim, output_dim })
     }
 
     /// Project a whole row-major matrix [n, K] -> [n, k].
@@ -243,6 +331,34 @@ mod tests {
             let par = pca.project_all_with(&data, n, &Pool::new(workers));
             assert_eq!(par, serial, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn fit_parallel_bit_identical() {
+        let (n, kin) = (1111usize, 7usize);
+        let mut rng = Rng::new(6);
+        let data: Vec<f32> = (0..n * kin).map(|_| rng.normal()).collect();
+        let reference = Pca::fit(&data, n, kin, 3, 11);
+        for workers in [2, 3, 5, 32] {
+            let p = Pca::fit_with(&data, n, kin, 3, 11, &Pool::new(workers));
+            assert_eq!(p.mean, reference.mean, "workers={workers}");
+            assert_eq!(p.components, reference.components, "workers={workers}");
+            assert_eq!(p.proj_bias, reference.proj_bias, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn proj_bias_matches_explicit_mean_dot() {
+        let (n, kin) = (400usize, 6usize);
+        let mut rng = Rng::new(8);
+        let data: Vec<f32> = (0..n * kin).map(|_| rng.normal() + 3.0).collect();
+        let pca = Pca::fit(&data, n, kin, 2, 5);
+        for (bias, c) in pca.proj_bias.iter().zip(pca.components.iter()) {
+            assert_eq!(*bias, dot(&pca.mean, c));
+        }
+        // the JSON roundtrip rebuilds the identical derived bias
+        let back = Pca::from_json(&pca.to_json()).unwrap();
+        assert_eq!(back.proj_bias, pca.proj_bias);
     }
 
     #[test]

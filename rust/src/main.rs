@@ -6,6 +6,7 @@
 //! ```text
 //! repro data-stats   --dataset tiny
 //! repro tree-fit     --dataset wiki-sim --aux-dim 16 [--save tree.json]
+//!                    [--parallelism N]  (parallel PCA + level-sharded fit)
 //! repro train        --dataset tiny --method adversarial --seconds 30
 //!                    [--parallelism N]  (0 = auto; curves are identical
 //!                    at every setting, only wallclock changes)
@@ -24,6 +25,7 @@ use adv_softmax::runtime::Registry;
 use adv_softmax::sampler::AdversarialSampler;
 use adv_softmax::train::TrainRun;
 use adv_softmax::utils::cli::Args;
+use adv_softmax::utils::Pool;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
@@ -78,22 +80,29 @@ fn tree_fit(args: &Args) -> Result<()> {
     let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
     let aux_dim: usize = args.get("aux-dim", 16)?;
     let seed: u64 = args.get("seed", 1)?;
+    let parallelism: usize = args.get("parallelism", 0)?;
     let save: Option<PathBuf> = args.get_opt("save")?;
     args.finish()?;
 
     let syn = SyntheticConfig::preset(dataset);
     let splits = Splits::synthetic(&syn);
     let cfg = adv_softmax::config::TreeConfig { aux_dim, ..Default::default() };
+    cfg.validate()?;
+    let pool = Pool::from_parallelism(parallelism);
     let t0 = std::time::Instant::now();
-    let (adv, stats) = AdversarialSampler::fit(&splits.train, &cfg, seed);
+    let (adv, stats) = AdversarialSampler::fit_with(&splits.train, &cfg, seed, &pool);
     println!(
-        "fitted {} nodes in {:.2}s ({} newton iters, {} alternations, {} forced)",
+        "fitted {} nodes in {:.2}s over {} workers ({} newton iters, {} alternations, {} forced)",
         stats.nodes_fitted,
         t0.elapsed().as_secs_f64(),
+        pool.num_workers(),
         stats.newton_iters_total,
         stats.alternations_total,
         stats.forced_nodes,
     );
+    let levels: Vec<String> =
+        stats.level_seconds.iter().map(|s| format!("{s:.3}")).collect();
+    println!("per-level fit seconds   : [{}]", levels.join(", "));
     println!("train mean log p_n(y|x): {:.4}", stats.train_mean_loglik);
     println!(
         "uniform baseline        : {:.4}",

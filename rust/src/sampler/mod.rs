@@ -11,10 +11,10 @@
 //! All samplers expose exact `log_prob`, which the training losses (Eq. 6,
 //! NCE) and the Eq. 5 bias correction consume.
 
-use crate::config::TreeConfig;
+use crate::config::{TreeConfig, MAX_AUX_DIM};
 use crate::data::Dataset;
 use crate::linalg::Pca;
-use crate::tree::{fit::fit_tree, FitStats, Tree};
+use crate::tree::{fit::fit_tree_with, FitStats, Tree};
 use crate::utils::json::Json;
 use crate::utils::{AliasTable, Pool, Rng};
 use std::path::Path;
@@ -130,15 +130,24 @@ impl AdversarialSampler {
         Self::fit_with(data, cfg, seed, &Pool::serial())
     }
 
-    /// [`AdversarialSampler::fit`] with the O(N·K·k) projection pass
-    /// sharded over a worker pool (the tree fit itself is unchanged, so
-    /// the fitted model is identical at any worker count).
+    /// [`AdversarialSampler::fit`] with every aux-model construction stage
+    /// sharded over a worker pool: PCA covariance accumulation, the
+    /// O(N·K·k) projection pass, and the level-synchronous tree fit. Each
+    /// stage is bit-deterministic, so the fitted model is identical at any
+    /// worker count.
     pub fn fit_with(data: &Dataset, cfg: &TreeConfig, seed: u64, pool: &Pool) -> (Self, FitStats) {
+        // backstop for configs built in code; JSON-loaded configs are
+        // validated in `RunConfig::from_json`
+        assert!(
+            cfg.aux_dim >= 1 && cfg.aux_dim <= MAX_AUX_DIM,
+            "aux_dim {} out of range [1, {MAX_AUX_DIM}] — see TreeConfig::validate",
+            cfg.aux_dim
+        );
         let k = cfg.aux_dim.min(data.feat_dim);
-        let pca = Pca::fit(&data.features, data.len(), data.feat_dim, k, seed);
+        let pca = Pca::fit_with(&data.features, data.len(), data.feat_dim, k, seed, pool);
         let x_proj = pca.project_all_with(&data.features, data.len(), pool);
         let mut rng = Rng::new(seed ^ 0x7ee);
-        let (tree, stats) = fit_tree(
+        let (tree, stats) = fit_tree_with(
             &x_proj,
             &data.labels,
             data.len(),
@@ -146,6 +155,7 @@ impl AdversarialSampler {
             data.num_classes,
             cfg,
             &mut rng,
+            pool,
         );
         (Self { pca, tree }, stats)
     }
@@ -169,10 +179,28 @@ impl AdversarialSampler {
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
-        Ok(Self {
+        let s = Self {
             pca: Pca::from_json(v.get("pca")?)?,
             tree: Tree::from_json(v.get("tree")?)?,
-        })
+        };
+        // same bound as TreeConfig::validate — the hot-path methods below
+        // project into MAX_AUX_DIM-float stack buffers
+        anyhow::ensure!(
+            s.tree.aux_dim >= 1 && s.tree.aux_dim <= MAX_AUX_DIM,
+            "checkpoint aux_dim {} out of range [1, {}]",
+            s.tree.aux_dim,
+            MAX_AUX_DIM
+        );
+        // the PCA must feed exactly the tree's input space: a mismatch
+        // would silently truncate/zero-fill projections in release builds
+        // (Pca::project only debug_asserts its output length)
+        anyhow::ensure!(
+            s.pca.output_dim == s.tree.aux_dim,
+            "checkpoint PCA output_dim {} != tree aux_dim {}",
+            s.pca.output_dim,
+            s.tree.aux_dim
+        );
+        Ok(s)
     }
 
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
@@ -182,29 +210,38 @@ impl AdversarialSampler {
     pub fn load(path: &Path) -> anyhow::Result<Self> {
         Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }
+
+    /// Project raw features into a caller-provided stack buffer, returning
+    /// the filled k-prefix. One shared bound check for all three hot-path
+    /// methods: `aux_dim <= MAX_AUX_DIM` is enforced at fit and checkpoint
+    /// load, so this assert only guards hand-built `Tree`s — but it must
+    /// hold in release builds too, not just under `debug_assert`.
+    #[inline]
+    fn project_stack<'a>(&self, x: &[f32], buf: &'a mut [f32; MAX_AUX_DIM]) -> &'a [f32] {
+        let k = self.aux_dim();
+        assert!(k <= MAX_AUX_DIM, "aux_dim {k} exceeds MAX_AUX_DIM {MAX_AUX_DIM}");
+        self.pca.project(x, &mut buf[..k]);
+        &buf[..k]
+    }
 }
 
 impl NoiseSampler for AdversarialSampler {
     fn sample(&self, x: &[f32], rng: &mut Rng) -> (u32, f32) {
-        let mut proj = [0f32; 64];
-        let k = self.aux_dim();
-        debug_assert!(k <= 64);
-        self.pca.project(x, &mut proj[..k]);
-        self.tree.sample(&proj[..k], rng)
+        let mut proj = [0f32; MAX_AUX_DIM];
+        let proj = self.project_stack(x, &mut proj);
+        self.tree.sample(proj, rng)
     }
 
     fn log_prob(&self, x: &[f32], y: u32) -> f32 {
-        let mut proj = [0f32; 64];
-        let k = self.aux_dim();
-        self.pca.project(x, &mut proj[..k]);
-        self.tree.log_prob(&proj[..k], y)
+        let mut proj = [0f32; MAX_AUX_DIM];
+        let proj = self.project_stack(x, &mut proj);
+        self.tree.log_prob(proj, y)
     }
 
     fn log_prob_all(&self, x: &[f32], out: &mut [f32]) {
-        let mut proj = [0f32; 64];
-        let k = self.aux_dim();
-        self.pca.project(x, &mut proj[..k]);
-        self.tree.log_prob_all(&proj[..k], out);
+        let mut proj = [0f32; MAX_AUX_DIM];
+        let proj = self.project_stack(x, &mut proj);
+        self.tree.log_prob_all(proj, out);
     }
 
     fn is_conditional(&self) -> bool {

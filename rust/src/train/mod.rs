@@ -37,6 +37,13 @@
 //!   ([`crate::eval::evaluate_reference_with`], used by tests/benches; its
 //!   f64 reduction order varies with worker count, so it stays out of the
 //!   bit-deterministic training path).
+//! * **Parallel aux-model fit** — the one-off cost the paper counts in
+//!   its training-time claim is sharded too: PCA mean/covariance
+//!   accumulate per fixed row-slab and reduce in slab order
+//!   ([`crate::linalg::Pca::fit_with`]), and the tree fits level by level
+//!   with the whole frontier of one depth running concurrently under
+//!   per-node RNG streams ([`crate::tree::fit::fit_tree_with`]) — both
+//!   bit-identical at every worker count.
 //! * **Shutdown** — pipeline teardown closes both channel directions
 //!   before joining, so a worker blocked on a full batch channel (or
 //!   polling the buffer-return channel) observes disconnection and exits;
@@ -266,9 +273,16 @@ impl TrainRun {
             let t0 = std::time::Instant::now();
             let (adv, stats) = AdversarialSampler::fit_with(&data, &cfg.tree, cfg.seed, &pool);
             let dt = t0.elapsed().as_secs_f64();
+            let slowest_level = stats.level_seconds.iter().cloned().fold(0.0, f64::max);
             log::info(&format!(
-                "aux tree fitted: {} nodes, {:.1}s, train loglik {:.3}",
-                stats.nodes_fitted, dt, stats.train_mean_loglik
+                "aux tree fitted: {} nodes, {:.1}s ({} levels over {} workers, \
+                 slowest level {:.2}s), train loglik {:.3}",
+                stats.nodes_fitted,
+                dt,
+                stats.level_seconds.len(),
+                pool.num_workers(),
+                slowest_level,
+                stats.train_mean_loglik
             ));
             (Some(Arc::new(adv)), dt)
         } else {

@@ -14,12 +14,28 @@
 //! eigenvector of the covariance of the per-label sum vectors {S_y}.
 //! Nodes whose subtree holds ≤1 real label become deterministic `forced`
 //! chains with p = 1 (padding handling).
+//!
+//! # Parallel fitting
+//!
+//! Nodes at the same depth own disjoint label-slot ranges, disjoint point
+//! ranges, and disjoint subtrees, so the tree is fitted **level by level**:
+//! the whole frontier of one depth runs concurrently over a [`Pool`]
+//! ([`fit_tree_with`]), then the next frontier is assembled in node order.
+//! Each node draws its initialization from an RNG stream that is a pure
+//! function of `(caller state, node index)` ([`Rng::stream`]), and all
+//! shared buffers are written through range-disjoint [`SharedMut`] views,
+//! so the fitted tree is **bit-identical at every worker count** —
+//! including the serial wrapper [`fit_tree`].
 
 use super::{Forced, Tree, PADDING};
 use crate::config::TreeConfig;
 use crate::linalg::pca::dominant_eigenvector;
-use crate::linalg::{sigmoid, solve_spd};
-use crate::utils::Rng;
+use crate::linalg::{sigmoid64, solve_spd};
+use crate::utils::{Pool, Rng, SharedMut};
+
+/// RNG stream domain for per-node initialization draws: node `i` uses
+/// `base.stream(STREAM_FIT_NODE, i)`, independent of fitting order.
+const STREAM_FIT_NODE: u64 = 11;
 
 /// Diagnostics from one fitting run.
 #[derive(Clone, Debug, Default)]
@@ -29,6 +45,9 @@ pub struct FitStats {
     pub alternations_total: usize,
     pub forced_nodes: usize,
     pub fit_seconds: f64,
+    /// Wallclock per tree level of the level-synchronous frontier
+    /// (index 0 = root level). Diagnostics only — not deterministic.
+    pub level_seconds: Vec<f64>,
     /// Mean log-likelihood (Eq. 7 / N) on the data used for fitting.
     pub train_mean_loglik: f64,
 }
@@ -42,7 +61,21 @@ struct NodeTask {
     pt_hi: usize,
 }
 
-/// Fit a tree on projected features `x_proj` ([n, k] row-major).
+/// Everything one frontier node produces; merged into [`FitStats`] and the
+/// next frontier in node order, so aggregates are deterministic.
+struct NodeOutcome {
+    fitted: bool,
+    newton_iters: usize,
+    alternations: usize,
+    forced_nodes: usize,
+    children: [Option<NodeTask>; 2],
+}
+
+/// Fit a tree on projected features `x_proj` ([n, k] row-major), serially.
+///
+/// `rng` seeds the optional subsample shuffle and the per-node init
+/// streams; it is advanced once per call (a stream split), not once per
+/// node as in the old DFS fitter.
 pub fn fit_tree(
     x_proj: &[f32],
     labels: &[u32],
@@ -51,6 +84,23 @@ pub fn fit_tree(
     c: usize,
     cfg: &TreeConfig,
     rng: &mut Rng,
+) -> (Tree, FitStats) {
+    fit_tree_with(x_proj, labels, n, k, c, cfg, rng, &Pool::serial())
+}
+
+/// [`fit_tree`] with each tree level's node fits sharded over a worker
+/// pool. The fitted tree is bit-identical at every worker count (see the
+/// module docs for the determinism argument).
+#[allow(clippy::too_many_arguments)]
+pub fn fit_tree_with(
+    x_proj: &[f32],
+    labels: &[u32],
+    n: usize,
+    k: usize,
+    c: usize,
+    cfg: &TreeConfig,
+    rng: &mut Rng,
+    pool: &Pool,
 ) -> (Tree, FitStats) {
     assert!(c >= 2, "need at least two classes");
     assert_eq!(x_proj.len(), n * k);
@@ -86,7 +136,17 @@ pub fn fit_tree(
     }
     let n_fit = point_order.len();
 
-    let mut queue: Vec<NodeTask> = vec![NodeTask {
+    // Per-node init streams derive from a split of the caller's RNG, so
+    // node i's draws depend only on (caller state, i) — never on which
+    // worker fits it or in what order. `split` also advances the caller's
+    // generator, so back-to-back fits from one Rng stay independent.
+    let base_rng = rng.split(STREAM_FIT_NODE);
+
+    // scratch shared across nodes; each task uses its own point range
+    let mut pt_scratch: Vec<u32> = vec![0; n_fit];
+    let workers = pool.num_workers();
+
+    let mut frontier: Vec<NodeTask> = vec![NodeTask {
         node: 0,
         depth: 0,
         slot_lo: 0,
@@ -95,153 +155,61 @@ pub fn fit_tree(
         pt_hi: n_fit,
     }];
 
-    // scratch reused across nodes
-    let mut pt_scratch: Vec<u32> = vec![0; n_fit];
+    while !frontier.is_empty() {
+        let lvl_t0 = std::time::Instant::now();
+        let n_tasks = frontier.len();
+        let mut outcomes: Vec<Option<NodeOutcome>> = Vec::with_capacity(n_tasks);
+        outcomes.resize_with(n_tasks, || None);
 
-    while let Some(task) = queue.pop() {
-        let cap = task.slot_hi - task.slot_lo;
-        debug_assert!(cap >= 2);
-        let ccap = cap / 2;
-        // real labels are a prefix of the slot range
-        let n_r = label_order[task.slot_lo..task.slot_hi]
-            .iter()
-            .take_while(|&&l| l != PADDING)
-            .count();
-
-        if n_r == 0 {
-            continue; // unreachable subtree; params stay zero
-        }
-        if n_r == 1 {
-            // deterministic chain: the lone label sits at the leftmost leaf
-            let mut cur = task.node;
-            let mut d = task.depth;
-            while d < depth {
-                tree.forced[cur] = -1;
-                stats.forced_nodes += 1;
-                cur = 2 * cur + 1;
-                d += 1;
-            }
-            continue;
-        }
-
-        // ---- per-label sufficient statistics over the node's points ----
-        let pts = &point_order[task.pt_lo..task.pt_hi];
-        let mut sums = vec![0f64; n_r * k]; // S_y
-        let mut counts = vec![0u64; n_r];
-        for &p in pts {
-            let y = labels[p as usize] as usize;
-            let local = (slot_of_label[y] as usize) - task.slot_lo;
-            debug_assert!(local < n_r);
-            let row = &x_proj[p as usize * k..(p as usize + 1) * k];
-            let dst = &mut sums[local * k..(local + 1) * k];
-            for (d, v) in dst.iter_mut().zip(row.iter()) {
-                *d += *v as f64;
-            }
-            counts[local] += 1;
-        }
-
-        // ---- init: w = dominant eigenvector of Cov({S_y}), b = 0 ----
-        let mut w = init_weight(&sums, n_r, k, rng);
-        let mut b = 0f64;
-
-        // ---- alternate Newton ascent and balanced re-splits ----
-        // right-child count r, clamped so both halves fit their capacity
-        let r = (n_r + 1) / 2;
-        let r = r.max(n_r.saturating_sub(ccap)).min(ccap);
-        let mut zeta = split_by_delta(&sums, &counts, &w, b, n_r, k, r);
-        let mut converged = false;
-        for _alt in 0..cfg.max_alternations {
-            stats.alternations_total += 1;
-            let iters = newton_ascent(
-                x_proj, labels, pts, &slot_of_label, task.slot_lo, &zeta, k,
-                cfg.lambda_n, cfg.newton_iters, &mut w, &mut b,
-            );
-            stats.newton_iters_total += iters;
-            let new_zeta = split_by_delta(&sums, &counts, &w, b, n_r, k, r);
-            if new_zeta == zeta {
-                converged = true;
-                break;
-            }
-            zeta = new_zeta;
-        }
-        let _ = converged;
-        stats.nodes_fitted += 1;
-
-        // ---- commit node parameters ----
-        for (dst, src) in tree.w[task.node * k..(task.node + 1) * k]
-            .iter_mut()
-            .zip(w.iter())
         {
-            *dst = *src as f32;
-        }
-        tree.b[task.node] = b as f32;
-
-        // ---- reorder label slots: left prefix | pad | right prefix | pad ----
-        let slot_mid = task.slot_lo + ccap;
-        {
-            let node_slots = &mut label_order[task.slot_lo..task.slot_hi];
-            let mut left: Vec<u32> = Vec::with_capacity(ccap);
-            let mut right: Vec<u32> = Vec::with_capacity(ccap);
-            for (local, &z) in zeta.iter().enumerate() {
-                let lbl = node_slots[local];
-                if z {
-                    right.push(lbl);
-                } else {
-                    left.push(lbl);
+            let tasks = &frontier;
+            let outcome_view = SharedMut::new(&mut outcomes);
+            let w_view = SharedMut::new(&mut tree.w);
+            let b_view = SharedMut::new(&mut tree.b);
+            let forced_view = SharedMut::new(&mut tree.forced);
+            let order_view = SharedMut::new(&mut label_order);
+            let slot_view = SharedMut::new(&mut slot_of_label);
+            let pts_view = SharedMut::new(&mut point_order);
+            let scratch_view = SharedMut::new(&mut pt_scratch);
+            let run_task = |i: usize| {
+                let out = fit_node(
+                    &tasks[i], x_proj, labels, k, depth, cfg, &base_rng, &w_view, &b_view,
+                    &forced_view, &order_view, &slot_view, &pts_view, &scratch_view,
+                );
+                // SAFETY: outcome slot i has exactly one writer (this task).
+                unsafe { *outcome_view.get_mut(i) = Some(out) };
+            };
+            if workers == 1 || n_tasks == 1 {
+                for i in 0..n_tasks {
+                    run_task(i);
                 }
-            }
-            debug_assert_eq!(right.len(), r);
-            for s in node_slots.iter_mut() {
-                *s = PADDING;
-            }
-            node_slots[..left.len()].copy_from_slice(&left);
-            node_slots[ccap..ccap + right.len()].copy_from_slice(&right);
-        }
-        for (off, &lbl) in label_order[task.slot_lo..task.slot_hi].iter().enumerate() {
-            if lbl != PADDING {
-                slot_of_label[lbl as usize] = (task.slot_lo + off) as u32;
-            }
-        }
-
-        // ---- partition points by their label's side ----
-        let scratch = &mut pt_scratch[..pts.len()];
-        let mut nl = 0usize;
-        let mut nr_pts = 0usize;
-        for &p in pts.iter() {
-            let y = labels[p as usize] as usize;
-            let slot = slot_of_label[y] as usize;
-            if slot < slot_mid {
-                scratch[nl] = p;
-                nl += 1;
             } else {
-                nr_pts += 1;
-                scratch[pts.len() - nr_pts] = p;
+                // Tasks shard round-robin; assignment is a pure function of
+                // (task index, worker count) and tasks are independent, so
+                // scheduling cannot affect the result.
+                pool.run_sharded(|shard| {
+                    let mut i = shard;
+                    while i < n_tasks {
+                        run_task(i);
+                        i += workers;
+                    }
+                });
             }
         }
-        // right side was written back-to-front; reverse for stability
-        scratch[nl..].reverse();
-        point_order[task.pt_lo..task.pt_hi].copy_from_slice(scratch);
-        let pt_mid = task.pt_lo + nl;
 
-        // ---- recurse ----
-        if task.depth + 1 < depth {
-            queue.push(NodeTask {
-                node: 2 * task.node + 1,
-                depth: task.depth + 1,
-                slot_lo: task.slot_lo,
-                slot_hi: slot_mid,
-                pt_lo: task.pt_lo,
-                pt_hi: pt_mid,
-            });
-            queue.push(NodeTask {
-                node: 2 * task.node + 2,
-                depth: task.depth + 1,
-                slot_lo: slot_mid,
-                slot_hi: task.slot_hi,
-                pt_lo: pt_mid,
-                pt_hi: task.pt_hi,
-            });
+        // merge stats and assemble the next frontier in node order
+        let mut next: Vec<NodeTask> = Vec::with_capacity(2 * n_tasks);
+        for outcome in outcomes.into_iter().flatten() {
+            stats.nodes_fitted += outcome.fitted as usize;
+            stats.newton_iters_total += outcome.newton_iters;
+            stats.alternations_total += outcome.alternations;
+            stats.forced_nodes += outcome.forced_nodes;
+            for child in outcome.children.into_iter().flatten() {
+                next.push(child);
+            }
         }
+        stats.level_seconds.push(lvl_t0.elapsed().as_secs_f64());
+        frontier = next;
     }
 
     // ---- leaf mapping ----
@@ -262,6 +230,194 @@ pub fn fit_tree(
     stats.train_mean_loglik = total / point_order.len().max(1) as f64;
 
     (tree, stats)
+}
+
+/// Fit one frontier node: gather sufficient statistics, alternate Newton
+/// ascent with Δ-splits, commit parameters, and re-partition the node's
+/// label slots and points for its children.
+///
+/// Shared-buffer contract (why the `SharedMut` accesses below are sound):
+/// within one level, tasks own disjoint `[slot_lo, slot_hi)` label-slot
+/// ranges, disjoint `[pt_lo, pt_hi)` point ranges (scratch included),
+/// disjoint subtrees (`w`/`b`/`forced`), and each label belongs to exactly
+/// one task's range — so every index touched here has a single owner.
+#[allow(clippy::too_many_arguments)]
+fn fit_node(
+    task: &NodeTask,
+    x_proj: &[f32],
+    labels: &[u32],
+    k: usize,
+    depth: usize,
+    cfg: &TreeConfig,
+    base_rng: &Rng,
+    w_view: &SharedMut<f32>,
+    b_view: &SharedMut<f32>,
+    forced_view: &SharedMut<Forced>,
+    order_view: &SharedMut<u32>,
+    slot_view: &SharedMut<u32>,
+    pts_view: &SharedMut<u32>,
+    scratch_view: &SharedMut<u32>,
+) -> NodeOutcome {
+    let mut out = NodeOutcome {
+        fitted: false,
+        newton_iters: 0,
+        alternations: 0,
+        forced_nodes: 0,
+        children: [None, None],
+    };
+    let cap = task.slot_hi - task.slot_lo;
+    debug_assert!(cap >= 2);
+    let ccap = cap / 2;
+    let n_pts = task.pt_hi - task.pt_lo;
+
+    // SAFETY: this task exclusively owns slot range [slot_lo, slot_hi) and
+    // point range [pt_lo, pt_hi) of all three buffers (see fn docs).
+    let node_slots = unsafe { order_view.slice_mut(task.slot_lo, cap) };
+    let pts = unsafe { pts_view.slice_mut(task.pt_lo, n_pts) };
+    let scratch = unsafe { scratch_view.slice_mut(task.pt_lo, n_pts) };
+
+    // real labels are a prefix of the slot range
+    let n_r = node_slots.iter().take_while(|&&l| l != PADDING).count();
+
+    if n_r == 0 {
+        return out; // unreachable subtree; params stay zero
+    }
+    if n_r == 1 {
+        // deterministic chain: the lone label sits at the leftmost leaf
+        let mut cur = task.node;
+        let mut d = task.depth;
+        while d < depth {
+            // SAFETY: `cur` stays strictly inside this task's subtree.
+            unsafe { *forced_view.get_mut(cur) = -1 };
+            out.forced_nodes += 1;
+            cur = 2 * cur + 1;
+            d += 1;
+        }
+        return out;
+    }
+
+    // ---- per-label sufficient statistics over the node's points ----
+    let mut sums = vec![0f64; n_r * k]; // S_y
+    let mut counts = vec![0u64; n_r];
+    // local label index per point, reused by the Newton objective
+    let mut pt_local = vec![0u32; n_pts];
+    for (j, &p) in pts.iter().enumerate() {
+        let y = labels[p as usize] as usize;
+        // SAFETY: label y lies in this node's slot range; its slot entry
+        // has no other reader or writer this level.
+        let local = (unsafe { *slot_view.get_mut(y) } as usize) - task.slot_lo;
+        debug_assert!(local < n_r);
+        pt_local[j] = local as u32;
+        let row = &x_proj[p as usize * k..(p as usize + 1) * k];
+        let dst = &mut sums[local * k..(local + 1) * k];
+        for (d, v) in dst.iter_mut().zip(row.iter()) {
+            *d += *v as f64;
+        }
+        counts[local] += 1;
+    }
+
+    // ---- init: w = dominant eigenvector of Cov({S_y}), b = 0 ----
+    let mut node_rng = base_rng.stream(STREAM_FIT_NODE, task.node as u64);
+    let mut w = init_weight(&sums, n_r, k, &mut node_rng);
+    let mut b = 0f64;
+
+    // ---- alternate Newton ascent and balanced re-splits ----
+    // right-child count r, clamped so both halves fit their capacity
+    let r = (n_r + 1) / 2;
+    let r = r.max(n_r.saturating_sub(ccap)).min(ccap);
+    let mut zeta = split_by_delta(&sums, &counts, &w, b, n_r, k, r);
+    let mut converged = false;
+    for _alt in 0..cfg.max_alternations {
+        out.alternations += 1;
+        let iters = newton_ascent(
+            x_proj, pts, &pt_local, &zeta, k, cfg.lambda_n, cfg.newton_iters, &mut w, &mut b,
+        );
+        out.newton_iters += iters;
+        let new_zeta = split_by_delta(&sums, &counts, &w, b, n_r, k, r);
+        if new_zeta == zeta {
+            converged = true;
+            break;
+        }
+        zeta = new_zeta;
+    }
+    let _ = converged;
+    out.fitted = true;
+
+    // ---- commit node parameters ----
+    // SAFETY: node `task.node` belongs to this task alone.
+    let w_dst = unsafe { w_view.slice_mut(task.node * k, k) };
+    for (dst, src) in w_dst.iter_mut().zip(w.iter()) {
+        *dst = *src as f32;
+    }
+    unsafe { *b_view.get_mut(task.node) = b as f32 };
+
+    // ---- reorder label slots: left prefix | pad | right prefix | pad ----
+    let slot_mid = task.slot_lo + ccap;
+    {
+        let mut left: Vec<u32> = Vec::with_capacity(ccap);
+        let mut right: Vec<u32> = Vec::with_capacity(ccap);
+        for (local, &z) in zeta.iter().enumerate() {
+            let lbl = node_slots[local];
+            if z {
+                right.push(lbl);
+            } else {
+                left.push(lbl);
+            }
+        }
+        debug_assert_eq!(right.len(), r);
+        for s in node_slots.iter_mut() {
+            *s = PADDING;
+        }
+        node_slots[..left.len()].copy_from_slice(&left);
+        node_slots[ccap..ccap + right.len()].copy_from_slice(&right);
+    }
+    for (off, &lbl) in node_slots.iter().enumerate() {
+        if lbl != PADDING {
+            // SAFETY: each label belongs to exactly one frontier task.
+            unsafe { *slot_view.get_mut(lbl as usize) = (task.slot_lo + off) as u32 };
+        }
+    }
+
+    // ---- partition points by their label's side ----
+    let mut nl = 0usize;
+    let mut nr_pts = 0usize;
+    for &p in pts.iter() {
+        let y = labels[p as usize] as usize;
+        // SAFETY: as above — this task's labels only.
+        let slot = unsafe { *slot_view.get_mut(y) } as usize;
+        if slot < slot_mid {
+            scratch[nl] = p;
+            nl += 1;
+        } else {
+            nr_pts += 1;
+            scratch[n_pts - nr_pts] = p;
+        }
+    }
+    // right side was written back-to-front; reverse for stability
+    scratch[nl..].reverse();
+    pts.copy_from_slice(scratch);
+    let pt_mid = task.pt_lo + nl;
+
+    // ---- children ----
+    if task.depth + 1 < depth {
+        out.children[0] = Some(NodeTask {
+            node: 2 * task.node + 1,
+            depth: task.depth + 1,
+            slot_lo: task.slot_lo,
+            slot_hi: slot_mid,
+            pt_lo: task.pt_lo,
+            pt_hi: pt_mid,
+        });
+        out.children[1] = Some(NodeTask {
+            node: 2 * task.node + 2,
+            depth: task.depth + 1,
+            slot_lo: slot_mid,
+            slot_hi: task.slot_hi,
+            pt_lo: pt_mid,
+            pt_hi: task.pt_hi,
+        });
+    }
+    out
 }
 
 /// Paper's init: dominant eigenvector of the covariance of {S_y}.
@@ -330,13 +486,18 @@ fn split_by_delta(
 /// curvature flattens while the gradient stays finite and raw Newton
 /// steps diverge. Backtracking on the true objective restores the global
 /// convergence the concavity guarantees. Returns iterations performed.
+///
+/// The sigmoid feeding the gradient/Hessian must be evaluated in f64: the
+/// Armijo objective is full f64, so an f32-rounded σ(a) near the optimum
+/// yields a step inconsistent with the objective and stalls backtracking.
+///
+/// `pt_local[j]` is the ζ index of point `pts[j]` (precomputed by the
+/// caller during the sufficient-statistics gather).
 #[allow(clippy::too_many_arguments)]
 fn newton_ascent(
     x_proj: &[f32],
-    labels: &[u32],
     pts: &[u32],
-    slot_of_label: &[u32],
-    slot_lo: usize,
+    pt_local: &[u32],
     zeta: &[bool],
     k: usize,
     lambda_n: f64,
@@ -344,14 +505,13 @@ fn newton_ascent(
     w: &mut Vec<f64>,
     b: &mut f64,
 ) -> usize {
+    debug_assert_eq!(pts.len(), pt_local.len());
     let dim = k + 1;
     let mut grad = vec![0f64; dim];
     let mut hess = vec![0f64; dim * dim];
 
-    let zeta_of = |i: usize| -> f64 {
-        let y = labels[i] as usize;
-        let local = (slot_of_label[y] as usize) - slot_lo;
-        if zeta[local] {
+    let zeta_of = |j: usize| -> f64 {
+        if zeta[pt_local[j] as usize] {
             1.0
         } else {
             -1.0
@@ -360,12 +520,12 @@ fn newton_ascent(
     // objective value at (w, b)
     let objective = |w: &[f64], b: f64| -> f64 {
         let mut obj = 0f64;
-        for &p in pts {
+        for (j, &p) in pts.iter().enumerate() {
             let i = p as usize;
             let x = &x_proj[i * k..(i + 1) * k];
             let a: f64 =
                 w.iter().zip(x.iter()).map(|(wv, xv)| wv * *xv as f64).sum::<f64>() + b;
-            let za = zeta_of(i) * a;
+            let za = zeta_of(j) * a;
             // log sigma(za), stable
             obj += za.min(0.0) - (-za.abs()).exp().ln_1p();
         }
@@ -378,13 +538,13 @@ fn newton_ascent(
         iters += 1;
         grad.iter_mut().for_each(|g| *g = 0.0);
         hess.iter_mut().for_each(|h| *h = 0.0);
-        for &p in pts {
+        for (jp, &p) in pts.iter().enumerate() {
             let i = p as usize;
-            let z = zeta_of(i);
+            let z = zeta_of(jp);
             let x = &x_proj[i * k..(i + 1) * k];
             let a: f64 =
                 w.iter().zip(x.iter()).map(|(wv, xv)| wv * *xv as f64).sum::<f64>() + *b;
-            let s = sigmoid(a as f32) as f64;
+            let s = sigmoid64(a);
             // ∇ log σ(ζa) = ζ σ(−ζa) x̃ ;  σ(−ζa) = if ζ>0 {1−s} else {s}
             let gcoef = z * if z > 0.0 { 1.0 - s } else { s };
             let hcoef = s * (1.0 - s); // −∂² is σσ′ x̃x̃ᵀ
@@ -555,6 +715,51 @@ mod tests {
         let (tb, _) = fit_tree(&x, &y, 1000, 4, 4, &cfg, &mut rb);
         assert_eq!(ta.w, tb.w);
         assert_eq!(ta.label_of_leaf, tb.label_of_leaf);
+    }
+
+    #[test]
+    fn parallel_fit_bit_identical_small() {
+        let mut rng = Rng::new(8);
+        let (x, y) = two_cluster_data(2000, 4, &mut rng);
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let mut r0 = Rng::new(3);
+        let (reference, rstats) = fit_tree(&x, &y, 2000, 4, 4, &cfg, &mut r0);
+        for workers in [2, 3, 7] {
+            let mut r = Rng::new(3);
+            let (t, s) = fit_tree_with(&x, &y, 2000, 4, 4, &cfg, &mut r, &Pool::new(workers));
+            assert_eq!(t.w, reference.w, "workers={workers}");
+            assert_eq!(t.b, reference.b, "workers={workers}");
+            assert_eq!(t.label_of_leaf, reference.label_of_leaf, "workers={workers}");
+            assert_eq!(s.nodes_fitted, rstats.nodes_fitted);
+            assert_eq!(s.newton_iters_total, rstats.newton_iters_total);
+        }
+    }
+
+    #[test]
+    fn fit_advances_caller_rng() {
+        // back-to-back fits from one Rng must not reuse the same per-node
+        // streams: the split inside fit_tree advances the caller state
+        let mut data_rng = Rng::new(8);
+        let (x, y) = two_cluster_data(1000, 4, &mut data_rng);
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let mut rng = Rng::new(77);
+        let mut untouched = rng.clone();
+        let _ = fit_tree(&x, &y, 1000, 4, 4, &cfg, &mut rng);
+        assert_ne!(
+            rng.next_u64(),
+            untouched.next_u64(),
+            "fit_tree must advance the caller rng"
+        );
+    }
+
+    #[test]
+    fn level_timings_cover_every_level() {
+        let mut rng = Rng::new(12);
+        let (x, y) = two_cluster_data(1000, 4, &mut rng);
+        let cfg = TreeConfig { aux_dim: 4, ..Default::default() };
+        let (tree, stats) = fit_tree(&x, &y, 1000, 4, 4, &cfg, &mut rng);
+        assert_eq!(stats.level_seconds.len(), tree.depth);
+        assert!(stats.level_seconds.iter().all(|&s| s >= 0.0));
     }
 
     #[test]

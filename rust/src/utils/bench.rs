@@ -48,18 +48,17 @@ pub struct Bench {
     budget: Duration,
 }
 
+/// Per-case budget from `REPRO_BENCH_SECONDS`, falling back to `default_secs`.
+fn env_budget_secs(default_secs: f64) -> f64 {
+    std::env::var("REPRO_BENCH_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_secs)
+}
+
 impl Default for Bench {
     fn default() -> Self {
-        Self {
-            warmup_iters: 3,
-            min_iters: 10,
-            budget: Duration::from_secs_f64(
-                std::env::var("REPRO_BENCH_SECONDS")
-                    .ok()
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(2.0),
-            ),
-        }
+        Self::with_env_budget(3, 10, 2.0)
     }
 }
 
@@ -70,6 +69,18 @@ impl Bench {
             min_iters,
             budget: Duration::from_secs_f64(budget_secs),
         }
+    }
+
+    /// Like [`Bench::new`], but `REPRO_BENCH_SECONDS` overrides the budget
+    /// (single parser for the knob; `default_budget_secs` applies when the
+    /// variable is unset/unparsable). For cases whose per-iteration cost
+    /// warrants a different default than [`Bench::default`]'s 2s.
+    pub fn with_env_budget(
+        warmup_iters: usize,
+        min_iters: usize,
+        default_budget_secs: f64,
+    ) -> Self {
+        Self::new(warmup_iters, min_iters, env_budget_secs(default_budget_secs))
     }
 
     /// Time `f` and print a criterion-style line. Returns the stats.

@@ -1,0 +1,136 @@
+//! Bit-exact parity of the parallel auxiliary-model fit (PR 2).
+//!
+//! The whole aux-model construction path — PCA mean/covariance, the
+//! projection pass, and the level-synchronous tree fit — must produce the
+//! **same bits** at every `parallelism` setting, and oversized aux dims
+//! must be rejected when the config is loaded rather than panicking on a
+//! fixed-size stack buffer in the sampler hot path of a release build.
+
+use adv_softmax::config::{
+    DatasetPreset, Method, RunConfig, SyntheticConfig, TreeConfig, MAX_AUX_DIM,
+};
+use adv_softmax::data::Splits;
+use adv_softmax::linalg::Pca;
+use adv_softmax::sampler::AdversarialSampler;
+use adv_softmax::tree::fit::{fit_tree, fit_tree_with};
+use adv_softmax::utils::{Pool, Rng};
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+fn tiny_splits() -> Splits {
+    let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+    cfg.n_train = 4096;
+    Splits::synthetic(&cfg)
+}
+
+#[test]
+fn tree_fit_bit_identical_across_worker_counts() {
+    let splits = tiny_splits();
+    let d = &splits.train;
+    let k = 8;
+    let tcfg = TreeConfig { aux_dim: k, ..Default::default() };
+    let pca = Pca::fit(&d.features, d.len(), d.feat_dim, k, 11);
+    let x_proj = pca.project_all(&d.features, d.len());
+    let mut rng = Rng::new(13);
+    let (reference, ref_stats) =
+        fit_tree(&x_proj, &d.labels, d.len(), k, d.num_classes, &tcfg, &mut rng);
+    for workers in WORKER_COUNTS {
+        let pool = Pool::new(workers);
+        let mut rng = Rng::new(13);
+        let (t, s) =
+            fit_tree_with(&x_proj, &d.labels, d.len(), k, d.num_classes, &tcfg, &mut rng, &pool);
+        assert_eq!(t.w, reference.w, "w differs at workers={workers}");
+        assert_eq!(t.b, reference.b, "b differs at workers={workers}");
+        assert_eq!(t.forced, reference.forced, "forced differs at workers={workers}");
+        assert_eq!(
+            t.label_of_leaf, reference.label_of_leaf,
+            "label_of_leaf differs at workers={workers}"
+        );
+        assert_eq!(
+            t.leaf_of_label, reference.leaf_of_label,
+            "leaf_of_label differs at workers={workers}"
+        );
+        assert_eq!(s.nodes_fitted, ref_stats.nodes_fitted, "workers={workers}");
+        assert_eq!(s.newton_iters_total, ref_stats.newton_iters_total, "workers={workers}");
+        assert_eq!(s.alternations_total, ref_stats.alternations_total, "workers={workers}");
+        assert_eq!(s.forced_nodes, ref_stats.forced_nodes, "workers={workers}");
+        assert_eq!(s.train_mean_loglik, ref_stats.train_mean_loglik, "workers={workers}");
+    }
+}
+
+#[test]
+fn tree_fit_parity_holds_under_subsampling() {
+    // fit_subsample exercises the caller-RNG shuffle before the frontier:
+    // per-node streams must still be independent of the worker count
+    let splits = tiny_splits();
+    let d = &splits.train;
+    let k = 6;
+    let tcfg = TreeConfig { aux_dim: k, fit_subsample: 1500, ..Default::default() };
+    let pca = Pca::fit(&d.features, d.len(), d.feat_dim, k, 3);
+    let x_proj = pca.project_all(&d.features, d.len());
+    let mut rng = Rng::new(29);
+    let (reference, _) =
+        fit_tree(&x_proj, &d.labels, d.len(), k, d.num_classes, &tcfg, &mut rng);
+    for workers in [2, 7] {
+        let mut rng = Rng::new(29);
+        let (t, _) = fit_tree_with(
+            &x_proj, &d.labels, d.len(), k, d.num_classes, &tcfg, &mut rng,
+            &Pool::new(workers),
+        );
+        assert_eq!(t.w, reference.w, "workers={workers}");
+        assert_eq!(t.label_of_leaf, reference.label_of_leaf, "workers={workers}");
+    }
+}
+
+#[test]
+fn pca_fit_bit_identical_across_worker_counts() {
+    let splits = tiny_splits();
+    let d = &splits.train;
+    let reference = Pca::fit(&d.features, d.len(), d.feat_dim, 12, 5);
+    for workers in WORKER_COUNTS {
+        let p = Pca::fit_with(&d.features, d.len(), d.feat_dim, 12, 5, &Pool::new(workers));
+        assert_eq!(p.mean, reference.mean, "mean differs at workers={workers}");
+        assert_eq!(
+            p.components, reference.components,
+            "components differ at workers={workers}"
+        );
+        assert_eq!(p.proj_bias, reference.proj_bias, "proj_bias differs at workers={workers}");
+    }
+}
+
+#[test]
+fn sampler_fit_bit_identical_across_worker_counts() {
+    let splits = tiny_splits();
+    let tcfg = TreeConfig { aux_dim: 8, ..Default::default() };
+    let (reference, _) = AdversarialSampler::fit(&splits.train, &tcfg, 21);
+    for workers in [2, 3, 7] {
+        let (s, _) = AdversarialSampler::fit_with(&splits.train, &tcfg, 21, &Pool::new(workers));
+        assert_eq!(s.pca.mean, reference.pca.mean, "workers={workers}");
+        assert_eq!(s.pca.components, reference.pca.components, "workers={workers}");
+        assert_eq!(s.pca.proj_bias, reference.pca.proj_bias, "workers={workers}");
+        assert_eq!(s.tree.w, reference.tree.w, "workers={workers}");
+        assert_eq!(s.tree.b, reference.tree.b, "workers={workers}");
+        assert_eq!(s.tree.forced, reference.tree.forced, "workers={workers}");
+        assert_eq!(
+            s.tree.label_of_leaf, reference.tree.label_of_leaf,
+            "workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn oversized_aux_dim_rejected_at_config_load_not_release_panic() {
+    let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
+    cfg.tree.aux_dim = MAX_AUX_DIM + 1;
+    // config load is the contract: the error arrives here, with a clear
+    // message, instead of as a buffer panic inside sample()/log_prob() —
+    // which release builds (debug_assert compiled out) used to reach
+    let err = RunConfig::from_json(&cfg.to_json());
+    assert!(err.is_err(), "aux_dim {} must be rejected", MAX_AUX_DIM + 1);
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("aux_dim"), "error should name the knob: {msg}");
+
+    // the boundary value stays valid
+    cfg.tree.aux_dim = MAX_AUX_DIM;
+    assert!(RunConfig::from_json(&cfg.to_json()).is_ok());
+}
