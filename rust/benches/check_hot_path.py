@@ -1,0 +1,53 @@
+#!/usr/bin/env python3
+"""Diff hot-path bench speedups against the committed baseline.
+
+Usage: check_hot_path.py BENCH_hot_path.json benches/hot_path_baseline.json
+
+Compares every entry the baseline tracks (the lane-major kernel speedups
+``speedups_scalar_over_kernel`` and, when present, the worker-pool
+``speedups_serial_over_parallel``) and emits a GitHub Actions ``::warning``
+when a measured speedup regresses more than 25% below its baseline value.
+Warn-only by design: shared CI runners are noisy, so regressions flag for a
+human instead of failing the build. Exit code is 0 unless the inputs are
+unreadable or a tracked entry is missing entirely.
+"""
+
+import json
+import sys
+
+REGRESSION_FACTOR = 0.75  # warn below 75% of baseline (>25% regression)
+TRACKED_SECTIONS = ("speedups_scalar_over_kernel", "speedups_serial_over_parallel")
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        measured = json.load(f)
+    with open(sys.argv[2]) as f:
+        baseline = json.load(f)
+
+    missing = False
+    for section in TRACKED_SECTIONS:
+        base_entries = baseline.get(section) or {}
+        got_entries = measured.get(section) or {}
+        for key, base in sorted(base_entries.items()):
+            got = got_entries.get(key)
+            if got is None:
+                print(f"::error::bench entry {section}.{key} missing from results")
+                missing = True
+                continue
+            status = "ok"
+            if got < base * REGRESSION_FACTOR:
+                print(
+                    f"::warning::hot-path speedup regression: {key} measured "
+                    f"{got:.2f}x vs baseline {base:.2f}x (>25% below baseline)"
+                )
+                status = "REGRESSED"
+            print(f"bench-diff {key:<16} measured {got:6.2f}x  baseline {base:6.2f}x  {status}")
+    return 1 if missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ use adv_softmax::runtime::{lit_f32, Registry};
 use adv_softmax::sampler::{AdversarialSampler, NoiseSampler};
 use adv_softmax::train::{BatchGen, BatchMode, BatchSource, SamplerKind, TrainRun};
 use adv_softmax::tree::fit::{fit_tree, fit_tree_with};
+use adv_softmax::tree::{Tree, TreeKernel};
 use adv_softmax::utils::bench::{black_box, Bench, BenchStats};
 use adv_softmax::utils::json::Json;
 use adv_softmax::utils::{Pool, Rng};
@@ -35,6 +36,14 @@ const SPEEDUP_PAIRS: [(&str, &str, &str); 6] = [
     ("eval_sweep", "eval/lpn_cache(serial)", "eval/lpn_cache(workers=4)"),
     ("pca_fit", "fit/pca(serial)", "fit/pca(workers=4)"),
     ("tree_fit", "fit/tree(serial)", "fit/tree(workers=4)"),
+];
+
+/// (summary key, scalar-walker case, SIMD-width kernel case) for the
+/// single-thread lane-major kernel speedups (PR 3 acceptance bar: ≥ 1.5×;
+/// CI's bench-smoke job diffs these against `benches/hot_path_baseline.json`).
+const KERNEL_PAIRS: [(&str, &str, &str); 2] = [
+    ("descent_batch", "tree/descents(scalar)", "tree/descents(batch8)"),
+    ("act_sweep", "tree/act_sweep(scalar)", "tree/act_sweep(batch8)"),
 ];
 
 #[derive(Default)]
@@ -87,11 +96,20 @@ impl Report {
                 })
                 .collect(),
         );
+        let kernel_speedups = Json::Obj(
+            KERNEL_PAIRS
+                .iter()
+                .filter_map(|(key, s, p)| {
+                    self.speedup(s, p).map(|x| (key.to_string(), Json::Num(x)))
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("bench", Json::Str("hot_path".into())),
             ("parallel_workers", Json::Num(PAR as f64)),
             ("results", cases),
             ("speedups_serial_over_parallel", speedups),
+            ("speedups_scalar_over_kernel", kernel_speedups),
         ])
     }
 }
@@ -133,6 +151,67 @@ fn main() -> anyhow::Result<()> {
         black_box(&lps);
     });
     report.record("sampler/log_prob_all(C=256)", s);
+
+    // --- SIMD-width tree kernels vs the retained scalar walkers ---
+    // Synthetic random tree at C = 4096 (depth 12, k = 16): big enough that
+    // the weight set stresses the cache hierarchy like a real label space,
+    // forced-free so both paths take the branch-free route. The scalar
+    // cases are the oracle walkers the parity suite pins the kernels to.
+    {
+        let (kc, kk, km, ktile) = (4096usize, 16usize, 256usize, 8usize);
+        let mut trng = Rng::new(41);
+        let tw: Vec<f32> = (0..(kc - 1) * kk).map(|_| 0.3 * trng.normal()).collect();
+        let tb: Vec<f32> = (0..kc - 1).map(|_| 0.1 * trng.normal()).collect();
+        let ktree = Tree {
+            aux_dim: kk,
+            num_classes: kc,
+            num_leaves: kc,
+            depth: 12,
+            w: tw,
+            b: tb,
+            forced: vec![0; kc - 1],
+            label_of_leaf: (0..kc as u32).collect(),
+            leaf_of_label: (0..kc as u32).collect(),
+        };
+        let kern = TreeKernel::build(&ktree);
+        let xk: Vec<f32> = (0..km * kk).map(|_| trng.normal()).collect();
+        let rng_base = Rng::new(77);
+        let mut rngs: Vec<Rng> = (0..km).map(|j| rng_base.stream(1, j as u64)).collect();
+        let mut labels = vec![0u32; km];
+        let mut logps = vec![0f32; km];
+        let s = bench.run("tree/descents(scalar)", || {
+            for j in 0..km {
+                let (y, lp) = ktree.sample(&xk[j * kk..(j + 1) * kk], &mut rngs[j]);
+                labels[j] = y;
+                logps[j] = lp;
+            }
+            black_box(&labels);
+        });
+        report.record("tree/descents(scalar)", s);
+        let s = bench.run("tree/descents(batch8)", || {
+            kern.sample_batch(&xk, &mut rngs, &mut labels, &mut logps);
+            black_box(&labels);
+        });
+        report.record("tree/descents(batch8)", s);
+
+        let nn = kc - 1;
+        let mut acts = vec![0f32; ktile * nn];
+        let s = bench.run("tree/act_sweep(scalar)", || {
+            for j in 0..ktile {
+                ktree.node_activations(
+                    &xk[j * kk..(j + 1) * kk],
+                    &mut acts[j * nn..(j + 1) * nn],
+                );
+            }
+            black_box(&acts);
+        });
+        report.record("tree/act_sweep(scalar)", s);
+        let s = bench.run("tree/act_sweep(batch8)", || {
+            kern.node_activations_batch(&xk[..ktile * kk], ktile, &mut acts);
+            black_box(&acts);
+        });
+        report.record("tree/act_sweep(batch8)", s);
+    }
 
     // --- batch assembly: serial descents vs the M-worker pipeline ---
     let x_proj = Arc::new(adv.pca.project_all(&data.features, data.len()));
@@ -258,6 +337,11 @@ fn main() -> anyhow::Result<()> {
     for (key, serial, parallel) in SPEEDUP_PAIRS {
         if let Some(x) = report.speedup(serial, parallel) {
             println!("speedup {key:<16} {x:>6.2}x  (workers={PAR})");
+        }
+    }
+    for (key, scalar, kernel) in KERNEL_PAIRS {
+        if let Some(x) = report.speedup(scalar, kernel) {
+            println!("speedup {key:<16} {x:>6.2}x  (scalar walker vs lane kernel)");
         }
     }
     let out = "BENCH_hot_path.json";

@@ -15,7 +15,7 @@ use crate::data::Dataset;
 use crate::linalg::lse_merge;
 use crate::model::ParamStore;
 use crate::runtime::{lit_f32, lit_i32, read_f32, read_i32, Executable, Registry};
-use crate::sampler::{AdversarialSampler, NoiseSampler};
+use crate::sampler::AdversarialSampler;
 use crate::utils::Pool;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -24,6 +24,11 @@ use std::sync::Arc;
 const PAD_BIAS: f32 = -1.0e30;
 /// Sentinel the eval artifact returns for "true label not in this chunk".
 const NEG_INF_SENTINEL: f32 = -1.0e30;
+/// Below this many batch rows the per-chunk streaming merge stays serial:
+/// each row's merge is ~10 flops, so a pool dispatch (a few µs) only pays
+/// for itself on large eval batches. (The `lpn_blk` slicing loop next to
+/// it moves O(B·Cc) bytes per chunk and parallelizes unconditionally.)
+const PAR_MIN_MERGE_ROWS: usize = 4096;
 
 /// Aggregate predictive metrics over an evaluation set.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,20 +64,32 @@ impl LpnCache {
 
     /// [`LpnCache::build`] with the O(N·C·k) per-example sweep sharded
     /// over a worker pool. Rows are independent with one writer each, so
-    /// the cache is identical at any worker count.
+    /// the cache is identical at any worker count. Within each shard, rows
+    /// run through the kernel's batched activation sweep in blocks of 8
+    /// ([`AdversarialSampler::log_prob_all_block`]), which amortizes every
+    /// node-weight load across the block.
     pub fn build_with(adv: &AdversarialSampler, data: &Dataset, pool: &Pool) -> Self {
         let c = data.num_classes;
         let n = data.len();
-        let k = adv.aux_dim();
+        let kf = data.feat_dim;
         let mut rows = vec![0f32; n * c];
         pool.for_each_span(&mut rows, c, |first_row, span| {
-            let mut proj = vec![0f32; k];
-            let mut acts = vec![0f32; adv.tree.num_nodes()];
-            for (j, out_row) in span.chunks_exact_mut(c).enumerate() {
-                let i = first_row + j;
-                adv.pca.project(data.x(i), &mut proj);
-                adv.tree.node_activations(&proj, &mut acts);
-                adv.tree.log_prob_all_from_activations(&acts, out_row);
+            let span_rows = span.len() / c;
+            let mut scratch = crate::sampler::LpnBlockScratch::default();
+            let mut j = 0;
+            while j < span_rows {
+                let hi = (j + crate::tree::LANES).min(span_rows);
+                // feature rows are contiguous in the dataset, so the block
+                // is a direct slice — no copy
+                let lo_i = first_row + j;
+                let hi_i = first_row + hi;
+                adv.log_prob_all_block_with(
+                    &data.features[lo_i * kf..hi_i * kf],
+                    hi - j,
+                    &mut span[j * c..hi * c],
+                    &mut scratch,
+                );
+                j = hi;
             }
         });
         Self { rows, num_rows: n, num_classes: c }
@@ -123,6 +140,22 @@ impl Evaluator {
         data: &Dataset,
         lpn_cache: Option<&LpnCache>,
     ) -> Result<EvalResult> {
+        self.evaluate_cached_with(params, data, lpn_cache, &Pool::serial())
+    }
+
+    /// [`Evaluator::evaluate_cached`] with the host-side per-chunk work —
+    /// the `[B, Cc]` correction-block slicing and the per-row streaming
+    /// LSE/argmax merge — sharded over a worker pool. Rows are merged
+    /// independently with one writer each (contiguous spans), so the
+    /// result is bit-identical at any worker count; PJRT execution stays
+    /// on the calling thread.
+    pub fn evaluate_cached_with(
+        &self,
+        params: &ParamStore,
+        data: &Dataset,
+        lpn_cache: Option<&LpnCache>,
+        pool: &Pool,
+    ) -> Result<EvalResult> {
         anyhow::ensure!(!data.is_empty(), "empty evaluation set");
         anyhow::ensure!(
             params.feat_dim == data.feat_dim,
@@ -169,6 +202,9 @@ impl Evaluator {
 
         let n = data.len();
         let mut batch_x = vec![0f32; b * k];
+        // correction-block scratch, reused across batches and chunks
+        let mut lpn_blk = vec![0f32; b * cc];
+        let mut merge = vec![RowMerge::default(); b];
 
         for batch_lo in (0..n).step_by(b) {
             let batch_hi = (batch_lo + b).min(n);
@@ -181,11 +217,7 @@ impl Evaluator {
             let x_lit = lit_f32(&batch_x, &[b, k])?;
 
             // streaming merge state per row
-            let mut best_score = vec![f32::NEG_INFINITY; b];
-            let mut best_label = vec![0u32; b];
-            let mut run_max = vec![f32::NEG_INFINITY; b];
-            let mut run_sum = vec![0f32; b];
-            let mut true_score = vec![f32::NEG_INFINITY; b];
+            merge.iter_mut().for_each(|r| *r = RowMerge::default());
 
             for (ci, (wc_lit, bc_lit)) in chunk_lits.iter().enumerate() {
                 let lo = ci * cc;
@@ -204,15 +236,19 @@ impl Evaluator {
                 let y_lit = lit_i32(&y_rel, &[b])?;
 
                 let outs = if let Some(cache) = lpn_cache {
-                    // slice the [B, Cc] correction block (pad cols get 0;
-                    // their bias PAD_BIAS keeps them irrelevant; padded
-                    // batch rows reuse row `batch_lo` like the features)
-                    let mut lpn_blk = vec![0f32; b * cc];
-                    for j in 0..b {
-                        let src = if j < valid { batch_lo + j } else { batch_lo };
-                        lpn_blk[j * cc..j * cc + (hi - lo)]
-                            .copy_from_slice(&cache.rows[src * c + lo..src * c + hi]);
-                    }
+                    // slice the [B, Cc] correction block, rows sharded over
+                    // the pool (pad cols get 0; their bias PAD_BIAS keeps
+                    // them irrelevant; padded batch rows reuse row
+                    // `batch_lo` like the features)
+                    pool.for_each_span(&mut lpn_blk, cc, |first_row, span| {
+                        for (t, dst) in span.chunks_exact_mut(cc).enumerate() {
+                            let j = first_row + t;
+                            let src = if j < valid { batch_lo + j } else { batch_lo };
+                            dst[..hi - lo]
+                                .copy_from_slice(&cache.rows[src * c + lo..src * c + hi]);
+                            dst[hi - lo..].iter_mut().for_each(|v| *v = 0.0);
+                        }
+                    });
                     let lpn_lit = lit_f32(&lpn_blk, &[b, cc])?;
                     self.exec_corrected
                         .run(&[
@@ -233,25 +269,36 @@ impl Evaluator {
                 let cargmax = read_i32(&outs[1])?;
                 let csum = read_f32(&outs[2])?;
                 let ctrue = read_f32(&outs[3])?;
-                for j in 0..b {
-                    if cmax[j] > best_score[j] {
-                        best_score[j] = cmax[j];
-                        best_label[j] = (lo + cargmax[j] as usize) as u32;
+                // per-row chunk merge: rows are independent with one writer
+                // each (contiguous spans), so the merged state is identical
+                // at any worker count; tiny batches skip the dispatch
+                let do_merge = |first: usize, span: &mut [RowMerge]| {
+                    for (t, row) in span.iter_mut().enumerate() {
+                        let j = first + t;
+                        if cmax[j] > row.best_score {
+                            row.best_score = cmax[j];
+                            row.best_label = (lo + cargmax[j] as usize) as u32;
+                        }
+                        let (m, s) = lse_merge(row.run_max, row.run_sum, cmax[j], csum[j]);
+                        row.run_max = m;
+                        row.run_sum = s;
+                        if ctrue[j] > NEG_INF_SENTINEL {
+                            row.true_score = ctrue[j];
+                        }
                     }
-                    let (m, s) = lse_merge(run_max[j], run_sum[j], cmax[j], csum[j]);
-                    run_max[j] = m;
-                    run_sum[j] = s;
-                    if ctrue[j] > NEG_INF_SENTINEL {
-                        true_score[j] = ctrue[j];
-                    }
+                };
+                if pool.is_serial() || b < PAR_MIN_MERGE_ROWS {
+                    do_merge(0, &mut merge);
+                } else {
+                    pool.for_each_span(&mut merge, 1, do_merge);
                 }
             }
 
-            for j in 0..valid {
+            for (j, row) in merge.iter().enumerate().take(valid) {
                 let src = batch_lo + j;
-                let lse = run_max[j] + run_sum[j].ln();
-                sum_loglik += (true_score[j] - lse) as f64;
-                if best_label[j] == data.y(src) {
+                let lse = row.run_max + row.run_sum.ln();
+                sum_loglik += (row.true_score - lse) as f64;
+                if row.best_label == data.y(src) {
                     correct += 1;
                 }
                 total += 1;
@@ -263,6 +310,28 @@ impl Evaluator {
             accuracy: correct as f64 / total as f64,
             n: total,
         })
+    }
+}
+
+/// Per-row streaming merge state of the chunked evaluator.
+#[derive(Clone, Copy)]
+struct RowMerge {
+    best_score: f32,
+    best_label: u32,
+    run_max: f32,
+    run_sum: f32,
+    true_score: f32,
+}
+
+impl Default for RowMerge {
+    fn default() -> Self {
+        RowMerge {
+            best_score: f32::NEG_INFINITY,
+            best_label: 0,
+            run_max: f32::NEG_INFINITY,
+            run_sum: 0.0,
+            true_score: f32::NEG_INFINITY,
+        }
     }
 }
 
@@ -282,6 +351,13 @@ pub fn evaluate_reference(
 /// result is deterministic for a given worker count (the f64 summation
 /// order — and thus the last ulp of `log_likelihood` — can differ between
 /// worker counts; `accuracy` and `n` are exact everywhere).
+///
+/// Within each shard, examples run in 8-row blocks: the dense ξ scores go
+/// through the tiled [`crate::linalg::affine_dots_tile`] kernel (each
+/// parameter row streamed once per block) and the Eq. 5 correction through
+/// the tree kernel's batched activation sweep
+/// ([`AdversarialSampler::log_prob_all_block`]). Per-example results are
+/// bit-identical to the naive per-row loops.
 pub fn evaluate_reference_with(
     params: &ParamStore,
     data: &Dataset,
@@ -302,31 +378,47 @@ pub fn evaluate_reference_with(
             let hi = ((shard + 1) * per).min(n);
             let mut sum_loglik = 0f64;
             let mut correct = 0usize;
-            let mut scores = vec![0f32; c];
-            let mut lpn = vec![0f32; c];
-            for i in lo..hi {
-                let x = data.x(i);
-                for y in 0..c {
-                    scores[y] =
-                        crate::linalg::dot(x, &params.w[y * k..(y + 1) * k]) + params.b[y];
-                }
+            let tile = crate::tree::LANES;
+            let mut scores_blk = vec![0f32; tile * c];
+            let mut lpn_blk = vec![0f32; if corrector.is_some() { tile * c } else { 0 }];
+            let mut scratch = crate::sampler::LpnBlockScratch::default();
+            let mut blo = lo;
+            while blo < hi {
+                let bhi = (blo + tile).min(hi);
+                let mb = bhi - blo;
+                let x_blk = &data.features[blo * k..bhi * k];
+                crate::linalg::affine_dots_tile(
+                    &params.w,
+                    &params.b,
+                    k,
+                    x_blk,
+                    mb,
+                    &mut scores_blk[..mb * c],
+                    c,
+                    0,
+                );
                 if let Some(adv) = corrector {
-                    adv.log_prob_all(x, &mut lpn);
-                    for y in 0..c {
-                        scores[y] += lpn[y];
+                    adv.log_prob_all_block_with(x_blk, mb, &mut lpn_blk[..mb * c], &mut scratch);
+                    for (s, l) in scores_blk[..mb * c].iter_mut().zip(lpn_blk[..mb * c].iter())
+                    {
+                        *s += *l;
                     }
                 }
-                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
-                let lse = m + se.ln();
-                let y = data.y(i) as usize;
-                sum_loglik += (scores[y] - lse) as f64;
-                let argmax = (0..c)
-                    .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
-                    .unwrap();
-                if argmax == y {
-                    correct += 1;
+                for j in 0..mb {
+                    let scores = &scores_blk[j * c..(j + 1) * c];
+                    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+                    let lse = m + se.ln();
+                    let y = data.y(blo + j) as usize;
+                    sum_loglik += (scores[y] - lse) as f64;
+                    let argmax = (0..c)
+                        .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
+                        .unwrap();
+                    if argmax == y {
+                        correct += 1;
+                    }
                 }
+                blo = bhi;
             }
             // SAFETY: slot `shard` is written only by this shard.
             unsafe { *partials_ref.get_mut(shard) = (sum_loglik, correct) };

@@ -3,6 +3,18 @@
 //! Dimensions here are tiny (k ≤ 64 for the auxiliary model, K ≤ a few
 //! hundred for PCA covariances), so plain row-major loops beat any BLAS
 //! round-trip; the heavy O(N·C·K) work lives in the HLO artifacts instead.
+//!
+//! # Canonical reduction order
+//!
+//! [`dot`] fixes one floating-point reduction order (4 stride-4 lane
+//! accumulators, final reduce `(s0+s2)+(s1+s3)`, sequential tail) and the
+//! tree's SIMD-width kernels ([`crate::tree::TreeKernel`]) reproduce that
+//! exact order per node, so the lane-major batch paths are bit-identical
+//! to the retained scalar walkers. The same contract covers the fused
+//! sigmoid/log-sigmoid kernels below: [`sig_terms`] / [`log_sigmoid_pair`]
+//! and their 8-lane structure-of-arrays twins evaluate the identical
+//! per-lane IEEE operation sequence, so scalar and vectorized descents
+//! agree to the last bit at every `parallelism` setting.
 
 pub mod pca;
 pub mod solve;
@@ -10,27 +22,72 @@ pub mod solve;
 pub use pca::Pca;
 pub use solve::solve_spd;
 
-/// Dot product.
+/// Dot product in the canonical reduction order: 4 stride-4 accumulators
+/// (`s_i` sums terms `t ≡ i (mod 4)`), final reduce `(s0+s2)+(s1+s3)` (the
+/// order a 4-wide SIMD horizontal reduce produces), then the `len % 4`
+/// tail added sequentially. Every tree activation — scalar walkers and the
+/// blocked [`crate::tree::TreeKernel`] paths alike — goes through this
+/// order, which is what makes them bit-identical.
+///
+/// Contract: `a.len() == b.len()`. Checked in debug builds only; a
+/// release-mode mismatch truncates to the shorter slice (the iterator
+/// form trades the old bounds-check panic for check-free codegen on the
+/// hottest loop in the crate).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: keeps the compiler auto-vectorizing and
-    // reduces sequential FP dependency. See benches/hot_path.rs.
-    let n = a.len();
-    let chunks = n / 4;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
     let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
+    let mut s = (s0 + s2) + (s1 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
     }
     s
+}
+
+/// Tiled batch of affine row scores: for every row `i` of `w` (`[rows, k]`
+/// row-major, `rows = b.len()`) and every example `j` of `xs` (`[m, k]`),
+///
+/// `out[j * out_stride + out_offset + i] = dot(w_i, x_j) + b[i]`.
+///
+/// This is the nodes×k · k×m GEMM-like kernel behind the tree's batched
+/// activation sweep: examples are tiled in blocks of 8 with the row loop
+/// outside, so each weight row is streamed from memory once per 8 examples
+/// instead of once per example, while the tile's `x` rows stay L1-resident.
+/// Each individual score uses the canonical [`dot`] order, so the result is
+/// bit-identical to the naive per-example loop.
+#[allow(clippy::too_many_arguments)]
+pub fn affine_dots_tile(
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    xs: &[f32],
+    m: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_offset: usize,
+) {
+    let rows = b.len();
+    debug_assert_eq!(w.len(), rows * k);
+    debug_assert_eq!(xs.len(), m * k);
+    const EXAMPLE_TILE: usize = 8;
+    let mut jt = 0;
+    while jt < m {
+        let jhi = (jt + EXAMPLE_TILE).min(m);
+        for (i, (wr, &bi)) in w.chunks_exact(k).zip(b.iter()).enumerate() {
+            for j in jt..jhi {
+                out[j * out_stride + out_offset + i] = dot(wr, &xs[j * k..(j + 1) * k]) + bi;
+            }
+        }
+        jt = jhi;
+    }
 }
 
 /// y += alpha * x
@@ -81,6 +138,195 @@ pub fn sigmoid64(z: f64) -> f64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Canonical fused sigmoid / log-sigmoid kernels (tree hot path)
+// ---------------------------------------------------------------------------
+//
+// One branch decision in the auxiliary tree needs all of σ(a), log σ(a) and
+// log σ(−a). All three share a single e = exp(−|a|) and a single
+// l = ln(1+e), so the fused kernel costs one polynomial exp and one
+// polynomial log instead of the two libm exps + one libm log1p of the naive
+// formulation — and, unlike libm calls, the polynomial form is pure
+// straight-line IEEE arithmetic (mul/add/select/bit ops), which the
+// compiler vectorizes across the 8-lane structure-of-arrays variants used
+// by `tree::TreeKernel`.
+//
+// Determinism contract: the scalar helpers below are the per-lane bodies of
+// the 8-lane variants, so scalar walkers and SIMD-width kernels execute the
+// identical operation sequence per value and agree bitwise (pinned by
+// `sig_terms8_bitwise_matches_scalar`). Keep the two shapes in lockstep
+// when editing either.
+//
+// Polynomial accuracy (coefficients after Cephes `expf`/`logf`): max
+// absolute error ~1.3e-7 on log σ over |a| ≤ 40, max relative error ~2e-6
+// on σ — below f32 round-off of the downstream sums.
+
+/// Round-to-nearest bias: adding then subtracting 1.5·2²³ rounds an f32 in
+/// ±2²² to an integer without any float→int conversion.
+const EXP_MAGIC: f32 = 12_582_912.0;
+/// Below this, exp(−|a|) is ≤ ~1.6e-38 and indistinguishable from 0 in
+/// every downstream use (1 + e == 1, ln(1+e) == e); clamping keeps the
+/// 2ⁿ exponent construction in the normal range.
+const EXP_MIN: f32 = -87.0;
+/// ln 2 split for Cody–Waite range reduction (hi holds 11 exact bits).
+const LN2_HI: f32 = 0.693_359_375;
+const LN2_LO: f32 = -2.121_944_4e-4;
+/// Minimax coefficients of (exp(r) − 1 − r)/r² on |r| ≤ ln2/2 (Cephes
+/// `expf`; full decimal digits kept so the literals round to the exact
+/// floats the kernel was validated with).
+#[allow(clippy::excessive_precision)]
+const EXP_C: [f32; 6] = [
+    1.9875691500e-4,
+    1.3981999507e-3,
+    8.3334519073e-3,
+    4.1665795894e-2,
+    1.6666665459e-1,
+    5.0000001201e-1,
+];
+/// Minimax coefficients of (ln(1+t) − t + t²/2)/t³ on the reduced range
+/// (Cephes `logf`; full decimal digits, see [`EXP_C`]).
+#[allow(clippy::excessive_precision)]
+const LN_C: [f32; 9] = [
+    7.0376836292e-2,
+    -1.1514610310e-1,
+    1.1676998740e-1,
+    -1.2420140846e-1,
+    1.4249322787e-1,
+    -1.6668057665e-1,
+    2.0000714765e-1,
+    -2.4999993993e-1,
+    3.3333331174e-1,
+];
+
+/// e = exp(−|a|) ∈ (0, 1], canonical polynomial form (one lane of
+/// [`exp_neg_abs8`]; keep the op sequences identical).
+#[inline]
+fn exp_neg_abs(a: f32) -> f32 {
+    // NaN would be laundered into a finite value by the clamp below (the
+    // libm formulation propagated it); activations are finite by
+    // construction, so surface a broken fit here rather than downstream.
+    debug_assert!(!a.is_nan(), "NaN activation reached the sigmoid kernel");
+    let az = if a < 0.0 { a } else { -a };
+    let zc = if az > EXP_MIN { az } else { EXP_MIN };
+    let t = zc * std::f32::consts::LOG2_E + EXP_MAGIC;
+    let n = t - EXP_MAGIC;
+    let r0 = zc - n * LN2_HI;
+    let r = r0 - n * LN2_LO;
+    let mut q = EXP_C[0];
+    q = q * r + EXP_C[1];
+    q = q * r + EXP_C[2];
+    q = q * r + EXP_C[3];
+    q = q * r + EXP_C[4];
+    q = q * r + EXP_C[5];
+    let poly = q * (r * r) + r + 1.0;
+    // t = EXP_MAGIC + n exactly, so n sits in t's low mantissa bits: build
+    // the 2ⁿ scale with pure integer ops (no float→int conversion).
+    let n_int = (t.to_bits() & 0x007f_ffff) as i32 - 0x0040_0000;
+    let scale = f32::from_bits(((n_int + 127) << 23) as u32);
+    poly * scale
+}
+
+/// ln(1 + e) for e ∈ [0, 1], canonical polynomial form (one lane of
+/// [`ln_1p_unit8`]; keep the op sequences identical).
+#[inline]
+fn ln_1p_unit(e: f32) -> f32 {
+    let u = 1.0 + e;
+    let big = u > std::f32::consts::SQRT_2;
+    let t = if big { 0.5 * u - 1.0 } else { u - 1.0 };
+    let z2 = t * t;
+    let mut q = LN_C[0];
+    q = q * t + LN_C[1];
+    q = q * t + LN_C[2];
+    q = q * t + LN_C[3];
+    q = q * t + LN_C[4];
+    q = q * t + LN_C[5];
+    q = q * t + LN_C[6];
+    q = q * t + LN_C[7];
+    q = q * t + LN_C[8];
+    let y = (t * z2) * q - 0.5 * z2;
+    let r = t + y;
+    // r is never -0.0 here (t ≥ -0.293 and t = 0 arrives as +0.0), so the
+    // unconditional add of a selected base keeps bit-exactness while
+    // staying branch-free for the vectorizer.
+    let base = if big { std::f32::consts::LN_2 } else { 0.0 };
+    r + base
+}
+
+/// Fused (σ(a), log σ(a), log σ(−a)) — the three terms one sampled branch
+/// decision consumes — sharing one exp and one log. Scalar shape of the
+/// canonical kernel; bit-identical per lane to [`sig_terms8`].
+#[inline]
+pub fn sig_terms(a: f32) -> (f32, f32, f32) {
+    let e = exp_neg_abs(a);
+    let l = ln_1p_unit(e);
+    let num = if a >= 0.0 { 1.0 } else { e };
+    let p = num / (1.0 + e);
+    let lsr = (if a < 0.0 { a } else { 0.0 }) - l;
+    let lsl = (if -a < 0.0 { -a } else { 0.0 }) - l;
+    (p, lsr, lsl)
+}
+
+/// Fused (log σ(a), log σ(−a)) for probability-only walks (no draw).
+/// Bit-identical per lane to [`log_sigmoid_pair8`], and its two outputs
+/// match the corresponding [`sig_terms`] outputs bitwise.
+#[inline]
+pub fn log_sigmoid_pair(a: f32) -> (f32, f32) {
+    let e = exp_neg_abs(a);
+    let l = ln_1p_unit(e);
+    let lsr = (if a < 0.0 { a } else { 0.0 }) - l;
+    let lsl = (if -a < 0.0 { -a } else { 0.0 }) - l;
+    (lsr, lsl)
+}
+
+/// 8-lane [`exp_neg_abs`]: per-stage loops over fixed-size arrays, the
+/// shape the auto-vectorizer turns into SIMD. Each lane runs the scalar
+/// helper's exact operation sequence.
+#[inline]
+fn exp_neg_abs8(a: &[f32; 8], e: &mut [f32; 8]) {
+    for (ai, ei) in a.iter().zip(e.iter_mut()) {
+        *ei = exp_neg_abs(*ai);
+    }
+}
+
+/// 8-lane [`ln_1p_unit`]; see [`exp_neg_abs8`].
+#[inline]
+fn ln_1p_unit8(e: &[f32; 8], l: &mut [f32; 8]) {
+    for (ei, li) in e.iter().zip(l.iter_mut()) {
+        *li = ln_1p_unit(*ei);
+    }
+}
+
+/// 8-lane [`sig_terms`]: `(p[i], lsr[i], lsl[i]) = sig_terms(a[i])`,
+/// bitwise, with the math staged for SIMD across lanes.
+#[inline]
+pub fn sig_terms8(a: &[f32; 8], p: &mut [f32; 8], lsr: &mut [f32; 8], lsl: &mut [f32; 8]) {
+    let mut e = [0f32; 8];
+    let mut l = [0f32; 8];
+    exp_neg_abs8(a, &mut e);
+    ln_1p_unit8(&e, &mut l);
+    for i in 0..8 {
+        let ai = a[i];
+        let num = if ai >= 0.0 { 1.0 } else { e[i] };
+        p[i] = num / (1.0 + e[i]);
+        lsr[i] = (if ai < 0.0 { ai } else { 0.0 }) - l[i];
+        lsl[i] = (if -ai < 0.0 { -ai } else { 0.0 }) - l[i];
+    }
+}
+
+/// 8-lane [`log_sigmoid_pair`] (no σ, so no per-lane division).
+#[inline]
+pub fn log_sigmoid_pair8(a: &[f32; 8], lsr: &mut [f32; 8], lsl: &mut [f32; 8]) {
+    let mut e = [0f32; 8];
+    let mut l = [0f32; 8];
+    exp_neg_abs8(a, &mut e);
+    ln_1p_unit8(&e, &mut l);
+    for i in 0..8 {
+        let ai = a[i];
+        lsr[i] = (if ai < 0.0 { ai } else { 0.0 }) - l[i];
+        lsl[i] = (if -ai < 0.0 { -ai } else { 0.0 }) - l[i];
+    }
+}
+
 /// Streaming log-sum-exp merge: combine (m1, s1) and (m2, s2) where each
 /// pair represents max and sum(exp(x - max)) over disjoint sets.
 #[inline]
@@ -98,6 +344,7 @@ pub fn lse_merge(m1: f32, s1: f32, m2: f32, s2: f32) -> (f32, f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::utils::Rng;
 
     #[test]
     fn dot_matches_naive() {
@@ -162,6 +409,94 @@ mod tests {
         };
         let (mm, ss) = lse_merge(m1, s1, m2, s2);
         assert!((mm + ss.ln() - global).abs() < 1e-5);
+    }
+
+    /// The determinism contract of the canonical kernels: the 8-lane
+    /// structure-of-arrays shapes reproduce the scalar helpers bit for bit
+    /// on a dense grid plus the edge cases (±0, clamp boundary, saturated
+    /// tails). If this breaks, blocked descents diverge from the oracle.
+    #[test]
+    fn sig_terms8_bitwise_matches_scalar() {
+        let mut inputs: Vec<f32> = Vec::new();
+        let mut a = -120.0f32;
+        while a < 120.0 {
+            inputs.push(a);
+            a += 0.037;
+        }
+        inputs.extend_from_slice(&[
+            0.0, -0.0, 1e-20, -1e-20, -86.9, -87.0, -87.1, 86.9, 87.0, 87.1, -500.0, 500.0,
+        ]);
+        while inputs.len() % 8 != 0 {
+            inputs.push(0.25);
+        }
+        for block in inputs.chunks_exact(8) {
+            let lanes: [f32; 8] = block.try_into().unwrap();
+            let (mut p8, mut r8, mut l8) = ([0f32; 8], [0f32; 8], [0f32; 8]);
+            sig_terms8(&lanes, &mut p8, &mut r8, &mut l8);
+            let (mut pr8, mut pl8) = ([0f32; 8], [0f32; 8]);
+            log_sigmoid_pair8(&lanes, &mut pr8, &mut pl8);
+            for i in 0..8 {
+                let (p, lsr, lsl) = sig_terms(lanes[i]);
+                let (qr, ql) = log_sigmoid_pair(lanes[i]);
+                assert_eq!(p.to_bits(), p8[i].to_bits(), "a={}", lanes[i]);
+                assert_eq!(lsr.to_bits(), r8[i].to_bits(), "a={}", lanes[i]);
+                assert_eq!(lsl.to_bits(), l8[i].to_bits(), "a={}", lanes[i]);
+                assert_eq!(qr.to_bits(), pr8[i].to_bits(), "a={}", lanes[i]);
+                assert_eq!(ql.to_bits(), pl8[i].to_bits(), "a={}", lanes[i]);
+                // the pair kernel is the terms kernel minus σ
+                assert_eq!(qr.to_bits(), lsr.to_bits());
+                assert_eq!(ql.to_bits(), lsl.to_bits());
+            }
+        }
+    }
+
+    /// Polynomial accuracy against the f64 reference formulation.
+    #[test]
+    fn sig_terms_accuracy_vs_reference() {
+        let mut a = -40.0f64;
+        while a < 40.0 {
+            let (p, lsr, lsl) = sig_terms(a as f32);
+            let e = (-a.abs()).exp();
+            let l = e.ln_1p();
+            let p_ref = 1.0 / (1.0 + (-a).exp());
+            let lsr_ref = a.min(0.0) - l;
+            let lsl_ref = (-a).min(0.0) - l;
+            assert!((p as f64 - p_ref).abs() < 3e-6 * p_ref.max(1e-6), "a={a}");
+            assert!((lsr as f64 - lsr_ref).abs() < 1e-6 * (1.0 + lsr_ref.abs()), "a={a}");
+            assert!((lsl as f64 - lsl_ref).abs() < 1e-6 * (1.0 + lsl_ref.abs()), "a={a}");
+            a += 0.0113;
+        }
+        // consistency identities the training losses rely on
+        let (p, lsr, lsl) = sig_terms(0.0);
+        assert!((p - 0.5).abs() < 1e-6);
+        assert!((lsr - lsl).abs() < 1e-7);
+        let (p_hi, lsr_hi, _) = sig_terms(50.0);
+        assert!((p_hi - 1.0).abs() < 1e-6 && lsr_hi.abs() < 1e-6);
+        let (p_lo, _, lsl_lo) = sig_terms(-50.0);
+        assert!(p_lo < 1e-6 && lsl_lo.abs() < 1e-6);
+        // saturated tails stay finite and monotone-consistent
+        let (_, lsr_tail, _) = sig_terms(-300.0);
+        assert!(lsr_tail <= -300.0 + 1.0 && lsr_tail.is_finite());
+    }
+
+    #[test]
+    fn affine_dots_tile_matches_naive_loop() {
+        let mut rng = Rng::new(31);
+        for (rows, k, m) in [(5usize, 3usize, 1usize), (8, 16, 8), (13, 7, 11), (1, 1, 9)] {
+            let w: Vec<f32> = (0..rows * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..rows).map(|_| rng.normal()).collect();
+            let xs: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let stride = rows + 2;
+            let off = 1;
+            let mut out = vec![0f32; m * stride];
+            affine_dots_tile(&w, &b, k, &xs, m, &mut out, stride, off);
+            for j in 0..m {
+                for i in 0..rows {
+                    let expect = dot(&w[i * k..(i + 1) * k], &xs[j * k..(j + 1) * k]) + b[i];
+                    assert_eq!(out[j * stride + off + i].to_bits(), expect.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! `label % num_shards`: every parameter row has exactly one writer, and a
 //! shard applies its rows' updates in batch order, so duplicate labels in a
 //! batch update their row in exactly the serial sequence — parallel results
-//! are bit-identical to the serial path.
+//! are bit-identical to the serial path. The softmax baseline's dense
+//! scatter has the same treatment ([`ParamStore::apply_dense_par`]) with
+//! contiguous disjoint row spans per shard.
 
 pub mod adagrad;
 
@@ -172,6 +174,50 @@ impl ParamStore {
             self.opt.update_row(y, &gw[y * k..(y + 1) * k], gb[y], &mut self.w, &mut self.b);
         }
     }
+
+    /// Pool-sharded [`ParamStore::apply_dense`]: rows are partitioned into
+    /// one contiguous span per shard (a pure function of `(C, workers)`),
+    /// and each row's Adagrad update touches only that row's weights, bias
+    /// and accumulators — every index has exactly one writer, and per-row
+    /// updates are the same floating-point program as the serial loop, so
+    /// the scatter is bit-identical at any worker count (matching the
+    /// `apply_sparse_par` semantics).
+    pub fn apply_dense_par(&mut self, pool: &Pool, gw: &[f32], gb: &[f32]) {
+        if pool.is_serial() || self.num_classes < PAR_MIN_LABELS {
+            return self.apply_dense(gw, gb);
+        }
+        debug_assert_eq!(gw.len(), self.w.len());
+        debug_assert_eq!(gb.len(), self.b.len());
+        let k = self.feat_dim;
+        let c = self.num_classes;
+        let per = c.div_ceil(pool.num_workers());
+        let (lr, eps) = (self.opt.lr, self.opt.eps);
+        let (gw2, gb2) = self.opt.accumulators_mut();
+        let w_view = SharedMut::new(&mut self.w);
+        let b_view = SharedMut::new(&mut self.b);
+        let gw2_view = SharedMut::new(gw2);
+        let gb2_view = SharedMut::new(gb2);
+        pool.run_sharded(|shard| {
+            let lo = (shard * per).min(c);
+            let hi = ((shard + 1) * per).min(c);
+            for y in lo..hi {
+                // SAFETY: row y (weights, bias, both accumulators) lies in
+                // exactly one shard's contiguous [lo, hi) span.
+                unsafe {
+                    adagrad::update_row_kernel(
+                        lr,
+                        eps,
+                        &gw[y * k..(y + 1) * k],
+                        gb[y],
+                        gw2_view.slice_mut(y * k, k),
+                        w_view.slice_mut(y * k, k),
+                        gb2_view.get_mut(y),
+                        b_view.get_mut(y),
+                    );
+                }
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -273,5 +319,24 @@ mod tests {
         p.apply_dense(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]);
         assert!(p.w.iter().all(|&v| v < 0.0));
         assert!(p.b.iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn sharded_dense_scatter_is_bit_identical() {
+        let mut rng = Rng::new(23);
+        let (c, k) = (101, 7); // c > PAR_MIN_LABELS, not a shard multiple
+        let gw: Vec<f32> = (0..c * k).map(|_| rng.normal()).collect();
+        let gb: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+        let mut serial = ParamStore::zeros(c, k, 0.1);
+        serial.apply_dense(&gw, &gb);
+        serial.apply_dense(&gw, &gb); // accumulators persist across steps
+        for workers in [2, 3, 5] {
+            let pool = Pool::new(workers);
+            let mut par = ParamStore::zeros(c, k, 0.1);
+            par.apply_dense_par(&pool, &gw, &gb);
+            par.apply_dense_par(&pool, &gw, &gb);
+            assert_eq!(par.w, serial.w, "workers={workers}");
+            assert_eq!(par.b, serial.b, "workers={workers}");
+        }
     }
 }

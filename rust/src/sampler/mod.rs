@@ -14,7 +14,7 @@
 use crate::config::{TreeConfig, MAX_AUX_DIM};
 use crate::data::Dataset;
 use crate::linalg::Pca;
-use crate::tree::{fit::fit_tree_with, FitStats, Tree};
+use crate::tree::{fit::fit_tree_with, FitStats, Tree, TreeKernel};
 use crate::utils::json::Json;
 use crate::utils::{AliasTable, Pool, Rng};
 use std::path::Path;
@@ -122,6 +122,9 @@ impl NoiseSampler for FrequencySampler {
 pub struct AdversarialSampler {
     pub pca: Pca,
     pub tree: Tree,
+    /// Lane-major batch kernel derived from `tree` — rebuilt whenever the
+    /// tree is (re)fitted or loaded, bit-identical to the scalar walkers.
+    pub kernel: TreeKernel,
 }
 
 impl AdversarialSampler {
@@ -157,7 +160,8 @@ impl AdversarialSampler {
             &mut rng,
             pool,
         );
-        (Self { pca, tree }, stats)
+        let kernel = TreeKernel::build(&tree);
+        (Self { pca, tree, kernel }, stats)
     }
 
     /// Projected feature dimension k.
@@ -179,10 +183,9 @@ impl AdversarialSampler {
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
-        let s = Self {
-            pca: Pca::from_json(v.get("pca")?)?,
-            tree: Tree::from_json(v.get("tree")?)?,
-        };
+        let pca = Pca::from_json(v.get("pca")?)?;
+        let tree = Tree::from_json(v.get("tree")?)?;
+        let s = Self { kernel: TreeKernel::build(&tree), pca, tree };
         // same bound as TreeConfig::validate — the hot-path methods below
         // project into MAX_AUX_DIM-float stack buffers
         anyhow::ensure!(
@@ -223,6 +226,66 @@ impl AdversarialSampler {
         self.pca.project(x, &mut buf[..k]);
         &buf[..k]
     }
+
+    /// Fill `out[j*C..(j+1)*C]` with log p_n(·|x_j) for a block of `m` raw
+    /// feature rows (`xs` is `[m, K]` row-major), routed through the
+    /// kernel's batched activation sweep so node weights are loaded once
+    /// per example tile instead of once per example. Per row bit-identical
+    /// to [`NoiseSampler::log_prob_all`]; used by the eval sweeps
+    /// ([`crate::eval::LpnCache`], the reference evaluator). One-shot
+    /// convenience — sweeps that call per 8-row block should hold an
+    /// [`LpnBlockScratch`] and use
+    /// [`AdversarialSampler::log_prob_all_block_with`].
+    pub fn log_prob_all_block(&self, xs: &[f32], m: usize, out: &mut [f32]) {
+        self.log_prob_all_block_with(xs, m, out, &mut LpnBlockScratch::default())
+    }
+
+    /// [`AdversarialSampler::log_prob_all_block`] with caller-owned scratch:
+    /// the projection and activation buffers (the latter is `m · (C−1)`
+    /// floats) are grown once and fully overwritten each call, so a sweep
+    /// looping over blocks pays no per-block allocation or memset.
+    pub fn log_prob_all_block_with(
+        &self,
+        xs: &[f32],
+        m: usize,
+        out: &mut [f32],
+        scratch: &mut LpnBlockScratch,
+    ) {
+        let k = self.aux_dim();
+        let c = self.tree.num_classes;
+        let nn = self.kernel.num_nodes();
+        debug_assert_eq!(xs.len() % m.max(1), 0);
+        debug_assert_eq!(out.len(), m * c);
+        let kf = if m == 0 { 0 } else { xs.len() / m };
+        if scratch.proj.len() < m * k {
+            scratch.proj.resize(m * k, 0.0);
+        }
+        if scratch.acts.len() < m * nn {
+            scratch.acts.resize(m * nn, 0.0);
+        }
+        let proj = &mut scratch.proj[..m * k];
+        let acts = &mut scratch.acts[..m * nn];
+        for (j, row) in xs.chunks_exact(kf.max(1)).enumerate().take(m) {
+            self.pca.project(row, &mut proj[j * k..(j + 1) * k]);
+        }
+        self.kernel.node_activations_batch(proj, m, acts);
+        for (j, out_row) in out.chunks_exact_mut(c).enumerate() {
+            self.tree.log_prob_all_from_activations_with(
+                &acts[j * nn..(j + 1) * nn],
+                out_row,
+                &mut scratch.lp,
+            );
+        }
+    }
+}
+
+/// Reusable projection/activation/prefix scratch for
+/// [`AdversarialSampler::log_prob_all_block_with`].
+#[derive(Default)]
+pub struct LpnBlockScratch {
+    proj: Vec<f32>,
+    acts: Vec<f32>,
+    lp: Vec<f32>,
 }
 
 impl NoiseSampler for AdversarialSampler {
@@ -241,6 +304,9 @@ impl NoiseSampler for AdversarialSampler {
     fn log_prob_all(&self, x: &[f32], out: &mut [f32]) {
         let mut proj = [0f32; MAX_AUX_DIM];
         let proj = self.project_stack(x, &mut proj);
+        // scalar-walker path: at m = 1 the tiled kernel amortizes nothing
+        // and is documented bit-identical, so the oracle sweep is simplest.
+        // Block callers use `log_prob_all_block_with`.
         self.tree.log_prob_all(proj, out);
     }
 

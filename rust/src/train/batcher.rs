@@ -23,9 +23,10 @@
 //! (epochs advance monotonically), so the O(N) reshuffle is paid once per
 //! epoch per worker.
 //!
-//! Negatives for NS-like modes run through the blocked level-by-level tree
-//! descents ([`crate::tree::Tree::sample_batch`]), which are bit-identical
-//! to per-draw descents under the same per-draw RNG streams.
+//! Negatives for NS-like modes run through the SIMD-width level-by-level
+//! tree descents ([`crate::tree::TreeKernel::sample_batch`], 8 descents
+//! per inner loop), which are bit-identical to per-draw scalar descents
+//! under the same per-draw RNG streams.
 
 use crate::config::Method;
 use crate::data::Dataset;
@@ -179,8 +180,8 @@ impl SamplerKind {
                     proj_scratch[j * k..(j + 1) * k]
                         .copy_from_slice(&x_proj[i * k..(i + 1) * k]);
                 }
-                sampler.tree.sample_batch(proj_scratch, rngs, neg, lpn_n);
-                sampler.tree.log_prob_batch(proj_scratch, pos, lpn_p);
+                sampler.kernel.sample_batch(proj_scratch, rngs, neg, lpn_n);
+                sampler.kernel.log_prob_batch(proj_scratch, pos, lpn_p);
             }
         }
     }

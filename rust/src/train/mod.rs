@@ -25,11 +25,16 @@
 //!   channels round-robin, so the stream is bit-identical to the inline
 //!   path for every M. `RawBatch` buffers cycle back to their worker
 //!   through a return channel — steady-state assembly is allocation-free.
+//!   Within each worker, descents run through the SIMD-width
+//!   [`crate::tree::TreeKernel`] (8 lanes per inner loop, canonical
+//!   reduction order), bit-identical to the scalar walkers.
 //! * **Sharded gather/scatter** — [`ParamStore::gather_par`] and
 //!   [`ParamStore::apply_sparse_par`] shard rows by `label % num_shards`,
 //!   so all updates to one row happen on one worker in batch order:
 //!   duplicate-label Adagrad semantics stay exactly sequential-per-row and
-//!   the result is bit-identical to the serial scatter.
+//!   the result is bit-identical to the serial scatter. The softmax
+//!   baseline's dense scatter shards contiguous row spans the same way
+//!   ([`ParamStore::apply_dense_par`]).
 //! * **Parallel eval sweep** — the Eq. 5 correction cache
 //!   ([`LpnCache::build_with`]) shards its O(N·C·k) per-example sweep over
 //!   the pool (bit-identical: one writer per row). The pure-rust reference
@@ -437,7 +442,7 @@ impl TrainRun {
                 let loss = read_f32(&outs[0])?;
                 let gw = read_f32(&outs[1])?;
                 let gb = read_f32(&outs[2])?;
-                self.params.apply_dense(&gw, &gb);
+                self.params.apply_dense_par(&self.pool, &gw, &gb);
                 loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64
             }
         };
@@ -465,7 +470,7 @@ impl TrainRun {
             None
         };
         self.evaluator
-            .evaluate_cached(&self.params, &self.eval_set, cache)
+            .evaluate_cached_with(&self.params, &self.eval_set, cache, &self.pool)
     }
 
     /// Full training loop with the learning-curve protocol of Figure 1:

@@ -27,7 +27,7 @@
 //! so the fitted tree is **bit-identical at every worker count** —
 //! including the serial wrapper [`fit_tree`].
 
-use super::{Forced, Tree, PADDING};
+use super::{Forced, Tree, TreeKernel, PADDING};
 use crate::config::TreeConfig;
 use crate::linalg::pca::dominant_eigenvector;
 use crate::linalg::{sigmoid64, solve_spd};
@@ -36,6 +36,10 @@ use crate::utils::{Pool, Rng, SharedMut};
 /// RNG stream domain for per-node initialization draws: node `i` uses
 /// `base.stream(STREAM_FIT_NODE, i)`, independent of fitting order.
 const STREAM_FIT_NODE: u64 = 11;
+
+/// Block size of the post-fit mean-log-likelihood sweep (rows per blocked
+/// `TreeKernel::log_prob_batch` call).
+const LOGLIK_BLOCK: usize = 256;
 
 /// Diagnostics from one fitting run.
 #[derive(Clone, Debug, Default)]
@@ -221,11 +225,35 @@ pub fn fit_tree_with(
     }
 
     stats.fit_seconds = t0.elapsed().as_secs_f64();
-    // mean train log-likelihood over the fitted subsample
+    // Mean train log-likelihood over the fitted subsample, swept through
+    // the freshly rebuilt blocked kernel. Each blocked row is bit-identical
+    // to scalar `log_prob`, and the f64 accumulation runs in point order,
+    // so the statistic equals a per-point scalar loop exactly (and
+    // `Tree::mean_log_likelihood` on the full, unshuffled data).
+    //
+    // This kernel is local to the sweep; `AdversarialSampler::fit_with`
+    // builds its own from the returned tree. The duplicate O(C·k) build is
+    // deliberate — negligible next to the fit itself, and it keeps the
+    // (Tree, FitStats) signature stable for the many fit_tree callers.
+    let kernel = TreeKernel::build(&tree);
     let mut total = 0f64;
-    for &p in &point_order {
-        let i = p as usize;
-        total += tree.log_prob(&x_proj[i * k..(i + 1) * k], labels[i]) as f64;
+    let mut xb = vec![0f32; LOGLIK_BLOCK * k];
+    let mut yb = vec![0u32; LOGLIK_BLOCK];
+    let mut lp = vec![0f32; LOGLIK_BLOCK];
+    let mut lo = 0;
+    while lo < point_order.len() {
+        let hi = (lo + LOGLIK_BLOCK).min(point_order.len());
+        let mb = hi - lo;
+        for (j, &p) in point_order[lo..hi].iter().enumerate() {
+            let i = p as usize;
+            xb[j * k..(j + 1) * k].copy_from_slice(&x_proj[i * k..(i + 1) * k]);
+            yb[j] = labels[i];
+        }
+        kernel.log_prob_batch(&xb[..mb * k], &yb[..mb], &mut lp[..mb]);
+        for &v in &lp[..mb] {
+            total += v as f64;
+        }
+        lo = hi;
     }
     stats.train_mean_loglik = total / point_order.len().max(1) as f64;
 

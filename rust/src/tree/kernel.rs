@@ -1,0 +1,441 @@
+//! SIMD-width, level-blocked inference kernels for the fitted tree.
+//!
+//! [`TreeKernel`] is a derived structure built once from a fitted [`Tree`]
+//! (and rebuilt whenever the tree is refitted or loaded): it re-lays the
+//! heap-ordered model out **level by level**, each level carrying its own
+//! packed weight rows, biases, forced flags, and a precomputed
+//! `any_forced` mask. The batch entry points process **LANES = 8 descents
+//! (or 8 examples) per inner loop**:
+//!
+//! * [`TreeKernel::sample_batch`] / [`TreeKernel::log_prob_batch`] walk a
+//!   whole block of descents one level at a time in lane groups of 8: the
+//!   group's 8 activations are gathered with the canonical
+//!   [`crate::linalg::dot`] order, the fused sigmoid/log-sigmoid terms for
+//!   all 8 lanes run through the vectorizable structure-of-arrays kernels
+//!   ([`crate::linalg::sig_terms8`] / [`crate::linalg::log_sigmoid_pair8`]),
+//!   and only the per-lane RNG draw stays scalar. Levels whose `any_forced`
+//!   mask is clear skip forced-flag handling entirely — the common case for
+//!   every level above the padding fringe — instead of branching per draw.
+//! * [`TreeKernel::node_activations_batch`] runs the O(kC) activation
+//!   sweep as a tiled nodes×k · k×m kernel
+//!   ([`crate::linalg::affine_dots_tile`]): the node-row loop sits outside
+//!   an 8-example tile, so each weight row is streamed from memory once per
+//!   tile instead of once per example.
+//!
+//! # Layout notes (measured, see `benches/hot_path.rs`)
+//!
+//! Weight rows stay **row-major** inside each level: the canonical 4-lane
+//! accumulator dot over a contiguous row is the form the auto-vectorizer
+//! compiles best, and it benchmarked ahead of feature-major transposed
+//! panels (whose strided per-node columns defeat contiguous loads). The
+//! lane-major aspect of the layout is the fixed 8-wide grouping of
+//! descents/examples plus the staged 8-lane math, not a weight transpose.
+//!
+//! # Determinism contract
+//!
+//! Every floating-point result these kernels produce is **bit-identical**
+//! to the retained scalar walkers ([`Tree::sample`], [`Tree::log_prob`],
+//! [`Tree::node_activations`]): activations share the canonical
+//! [`crate::linalg::dot`] reduction order, branch terms share the fused
+//! sigmoid kernels (whose scalar and 8-lane shapes execute the same IEEE
+//! operation sequence per lane), and each descent consumes its private RNG
+//! stream exactly as the scalar walker would. The scalar walkers are kept
+//! as the test oracle (`tests/proptest_invariants.rs` pins the parity
+//! across depths, padding shapes, and k ∈ {1, 7, 8, 64}), and batch
+//! results do not depend on how callers shard blocks across workers.
+
+use super::{Forced, Tree, PADDING};
+use crate::linalg::{
+    affine_dots_tile, dot, log_sigmoid_pair, log_sigmoid_pair8, sig_terms, sig_terms8,
+};
+use crate::utils::Rng;
+
+/// Lane width of the blocked kernels: descents/examples per inner loop.
+pub const LANES: usize = 8;
+
+/// One tree level's packed slice of the model (see module docs).
+#[derive(Clone, Debug)]
+struct Level {
+    /// Global heap index of the level's first node (2^d − 1 at depth d).
+    first: usize,
+    /// Node weights, row-major `[nodes, k]` (nodes = 2^d).
+    w: Vec<f32>,
+    /// Node biases, `[nodes]`.
+    b: Vec<f32>,
+    /// Forced-branch flags, `[nodes]`.
+    forced: Vec<Forced>,
+    /// Precomputed level mask: true iff any node here is forced. When
+    /// clear, descents take the branch-free fast path.
+    any_forced: bool,
+}
+
+/// Derived lane-major inference kernel over a fitted [`Tree`].
+#[derive(Clone, Debug)]
+pub struct TreeKernel {
+    pub aux_dim: usize,
+    pub num_classes: usize,
+    pub num_leaves: usize,
+    pub depth: usize,
+    levels: Vec<Level>,
+    label_of_leaf: Vec<u32>,
+    leaf_of_label: Vec<u32>,
+}
+
+impl TreeKernel {
+    /// Build the kernel from a fitted tree. O(C·k) copies; call once per
+    /// fit/load, not per batch.
+    pub fn build(tree: &Tree) -> Self {
+        let k = tree.aux_dim;
+        let mut levels = Vec::with_capacity(tree.depth);
+        for d in 0..tree.depth {
+            let first = (1usize << d) - 1;
+            let nodes = 1usize << d;
+            let forced = tree.forced[first..first + nodes].to_vec();
+            let any_forced = forced.iter().any(|&f| f != 0);
+            levels.push(Level {
+                first,
+                w: tree.w[first * k..(first + nodes) * k].to_vec(),
+                b: tree.b[first..first + nodes].to_vec(),
+                forced,
+                any_forced,
+            });
+        }
+        TreeKernel {
+            aux_dim: k,
+            num_classes: tree.num_classes,
+            num_leaves: tree.num_leaves,
+            depth: tree.depth,
+            levels,
+            label_of_leaf: tree.label_of_leaf.clone(),
+            leaf_of_label: tree.leaf_of_label.clone(),
+        }
+    }
+
+    /// Number of internal nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.num_leaves - 1
+    }
+
+    /// Blocked ancestral sampling, 8 descents per inner loop. `x_projs` is
+    /// `[m, k]` row-major and `rngs[j]` is draw `j`'s private stream,
+    /// consumed exactly as scalar [`Tree::sample`] would consume it;
+    /// results are bit-identical to per-draw scalar sampling under the
+    /// same streams. `labels` doubles as the descent state, so the call is
+    /// allocation-free.
+    pub fn sample_batch(
+        &self,
+        x_projs: &[f32],
+        rngs: &mut [Rng],
+        labels: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let m = labels.len();
+        let k = self.aux_dim;
+        debug_assert_eq!(x_projs.len(), m * k);
+        debug_assert_eq!(rngs.len(), m);
+        debug_assert_eq!(logps.len(), m);
+        labels.iter_mut().for_each(|n| *n = 0);
+        logps.iter_mut().for_each(|v| *v = 0.0);
+        for level in &self.levels {
+            let mut g = 0;
+            while g < m {
+                let hi = (g + LANES).min(m);
+                let x = &x_projs[g * k..hi * k];
+                let nodes = &mut labels[g..hi];
+                let lps = &mut logps[g..hi];
+                let rs = &mut rngs[g..hi];
+                if hi - g == LANES && !level.any_forced {
+                    self.sample_group_fast(level, x, rs, nodes, lps);
+                } else {
+                    self.sample_group_scalar(level, x, rs, nodes, lps);
+                }
+                g = hi;
+            }
+        }
+        for label in labels.iter_mut() {
+            let leaf = *label as usize - (self.num_leaves - 1);
+            *label = self.label_of_leaf[leaf];
+            debug_assert_ne!(*label, PADDING, "sampled a padding leaf");
+        }
+    }
+
+    /// Branch-free lane group: 8 gathered canonical dots, staged 8-lane
+    /// sigmoid terms, scalar RNG draws.
+    fn sample_group_fast(
+        &self,
+        level: &Level,
+        x: &[f32],
+        rngs: &mut [Rng],
+        nodes: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let k = self.aux_dim;
+        let mut acts = [0f32; LANES];
+        for l in 0..LANES {
+            let local = nodes[l] as usize - level.first;
+            acts[l] = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
+                + level.b[local];
+        }
+        let (mut p, mut lsr, mut lsl) = ([0f32; LANES], [0f32; LANES], [0f32; LANES]);
+        sig_terms8(&acts, &mut p, &mut lsr, &mut lsl);
+        for l in 0..LANES {
+            let right = rngs[l].next_f32() < p[l];
+            logps[l] += if right { lsr[l] } else { lsl[l] };
+            nodes[l] = (2 * nodes[l] as usize + 1 + usize::from(right)) as u32;
+        }
+    }
+
+    /// Per-lane fallback for levels with forced nodes and for the block's
+    /// ragged tail group. Same canonical math, scalar shape.
+    fn sample_group_scalar(
+        &self,
+        level: &Level,
+        x: &[f32],
+        rngs: &mut [Rng],
+        nodes: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let k = self.aux_dim;
+        for l in 0..nodes.len() {
+            let node = nodes[l] as usize;
+            let local = node - level.first;
+            let go_right = match level.forced[local] {
+                1 => true,
+                -1 => false,
+                _ => {
+                    let a = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
+                        + level.b[local];
+                    let (p, lsr, lsl) = sig_terms(a);
+                    let right = rngs[l].next_f32() < p;
+                    logps[l] += if right { lsr } else { lsl };
+                    right
+                }
+            };
+            nodes[l] = (2 * node + 1 + usize::from(go_right)) as u32;
+        }
+    }
+
+    /// Blocked root→leaf log-probability, 8 rows per inner loop:
+    /// `out[j] = log p_n(ys[j] | x_j)`, bit-identical to scalar
+    /// [`Tree::log_prob`] per row. A row that violates a forced branch
+    /// pins to −∞; later levels only add finite terms to it, so the final
+    /// value matches the scalar walker's early return exactly.
+    pub fn log_prob_batch(&self, x_projs: &[f32], ys: &[u32], out: &mut [f32]) {
+        let m = ys.len();
+        let k = self.aux_dim;
+        debug_assert_eq!(x_projs.len(), m * k);
+        debug_assert_eq!(out.len(), m);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for (ld, level) in self.levels.iter().enumerate() {
+            // distance of this level's nodes from the leaf row
+            let d = self.depth - ld;
+            let mut g = 0;
+            while g < m {
+                let hi = (g + LANES).min(m);
+                let x = &x_projs[g * k..hi * k];
+                let (ys_g, out_g) = (&ys[g..hi], &mut out[g..hi]);
+                if hi - g == LANES && !level.any_forced {
+                    self.log_prob_group_fast(level, d, x, ys_g, out_g);
+                } else {
+                    self.log_prob_group_scalar(level, d, x, ys_g, out_g);
+                }
+                g = hi;
+            }
+        }
+    }
+
+    fn log_prob_group_fast(
+        &self,
+        level: &Level,
+        d: usize,
+        x: &[f32],
+        ys: &[u32],
+        out: &mut [f32],
+    ) {
+        let k = self.aux_dim;
+        let mut acts = [0f32; LANES];
+        let mut went_right = [false; LANES];
+        for l in 0..LANES {
+            debug_assert!((ys[l] as usize) < self.num_classes);
+            // 1-indexed heap position of the label's leaf (root = 1)
+            let q = self.leaf_of_label[ys[l] as usize] as usize + self.num_leaves;
+            let local = (q >> d) - 1 - level.first;
+            went_right[l] = (q >> (d - 1)) & 1 == 1;
+            acts[l] = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
+                + level.b[local];
+        }
+        let (mut lsr, mut lsl) = ([0f32; LANES], [0f32; LANES]);
+        log_sigmoid_pair8(&acts, &mut lsr, &mut lsl);
+        for l in 0..LANES {
+            out[l] += if went_right[l] { lsr[l] } else { lsl[l] };
+        }
+    }
+
+    fn log_prob_group_scalar(
+        &self,
+        level: &Level,
+        d: usize,
+        x: &[f32],
+        ys: &[u32],
+        out: &mut [f32],
+    ) {
+        let k = self.aux_dim;
+        for l in 0..ys.len() {
+            debug_assert!((ys[l] as usize) < self.num_classes);
+            let q = self.leaf_of_label[ys[l] as usize] as usize + self.num_leaves;
+            let local = (q >> d) - 1 - level.first;
+            let went_right = (q >> (d - 1)) & 1 == 1;
+            match level.forced[local] {
+                1 => {
+                    if !went_right {
+                        out[l] = f32::NEG_INFINITY;
+                    }
+                }
+                -1 => {
+                    if went_right {
+                        out[l] = f32::NEG_INFINITY;
+                    }
+                }
+                _ => {
+                    let a = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
+                        + level.b[local];
+                    let (lsr, lsl) = log_sigmoid_pair(a);
+                    out[l] += if went_right { lsr } else { lsl };
+                }
+            }
+        }
+    }
+
+    /// Batched O(kC) activation sweep: fills `out[j * num_nodes + i]` with
+    /// node `i`'s activation for example `j`, for an `[m, k]` block of
+    /// projected features. Runs the tiled nodes×k · k×m kernel per level;
+    /// bit-identical to per-example scalar [`Tree::node_activations`].
+    pub fn node_activations_batch(&self, x_projs: &[f32], m: usize, out: &mut [f32]) {
+        let k = self.aux_dim;
+        let nn = self.num_nodes();
+        debug_assert_eq!(x_projs.len(), m * k);
+        debug_assert_eq!(out.len(), m * nn);
+        for level in &self.levels {
+            affine_dots_tile(&level.w, &level.b, k, x_projs, m, out, nn, level.first);
+        }
+    }
+
+    /// Single-example activation sweep (the m = 1 tile).
+    pub fn node_activations(&self, x_proj: &[f32], out: &mut [f32]) {
+        self.node_activations_batch(x_proj, 1, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built 4-leaf tree over 3 labels (1 padding leaf), mirroring
+    /// the oracle tests in `tree/mod.rs`.
+    fn toy_tree() -> Tree {
+        Tree {
+            aux_dim: 2,
+            num_classes: 3,
+            num_leaves: 4,
+            depth: 2,
+            w: vec![
+                1.0, 0.0, // root
+                0.0, 1.0, // node 1
+                0.0, 0.0, // node 2 (forced)
+            ],
+            b: vec![0.0, 0.5, 0.0],
+            forced: vec![0, 0, -1],
+            label_of_leaf: vec![0, 1, 2, PADDING],
+            leaf_of_label: vec![0, 1, 2],
+        }
+    }
+
+    #[test]
+    fn build_packs_every_level() {
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        assert_eq!(kern.depth, 2);
+        assert_eq!(kern.num_nodes(), 3);
+        assert_eq!(kern.levels.len(), 2);
+        assert_eq!(kern.levels[0].first, 0);
+        assert_eq!(kern.levels[1].first, 1);
+        assert!(!kern.levels[0].any_forced);
+        assert!(kern.levels[1].any_forced);
+        assert_eq!(kern.levels[1].w, &t.w[2..6]);
+    }
+
+    #[test]
+    fn sample_batch_matches_scalar_oracle() {
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        // 67: exercises both full lane groups and the ragged tail
+        let m = 67;
+        let mut rng = Rng::new(11);
+        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
+        let mut rngs_block: Vec<Rng> = (0..m).map(|j| rng.stream(7, j as u64)).collect();
+        let mut rngs_scalar = rngs_block.clone();
+        let mut labels = vec![0u32; m];
+        let mut logps = vec![0f32; m];
+        kern.sample_batch(&x_projs, &mut rngs_block, &mut labels, &mut logps);
+        for j in 0..m {
+            let (y, lp) = t.sample(&x_projs[j * 2..(j + 1) * 2], &mut rngs_scalar[j]);
+            assert_eq!(labels[j], y, "draw {j}");
+            assert_eq!(logps[j].to_bits(), lp.to_bits(), "draw {j}");
+            // and the streams were consumed identically
+            assert_eq!(rngs_block[j].next_u64(), rngs_scalar[j].next_u64());
+        }
+    }
+
+    #[test]
+    fn log_prob_batch_matches_scalar_oracle() {
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        let m = 43;
+        let mut rng = Rng::new(12);
+        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
+        let ys: Vec<u32> = (0..m).map(|j| (j % 3) as u32).collect();
+        let mut out = vec![0f32; m];
+        kern.log_prob_batch(&x_projs, &ys, &mut out);
+        for j in 0..m {
+            let expect = t.log_prob(&x_projs[j * 2..(j + 1) * 2], ys[j]);
+            assert_eq!(out[j].to_bits(), expect.to_bits(), "row {j}");
+        }
+    }
+
+    #[test]
+    fn activations_batch_matches_scalar_oracle() {
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        let m = 11;
+        let mut rng = Rng::new(13);
+        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
+        let nn = t.num_nodes();
+        let mut batch = vec![0f32; m * nn];
+        kern.node_activations_batch(&x_projs, m, &mut batch);
+        let mut single = vec![0f32; nn];
+        for j in 0..m {
+            t.node_activations(&x_projs[j * 2..(j + 1) * 2], &mut single);
+            assert_eq!(&batch[j * nn..(j + 1) * nn], &single[..], "row {j}");
+            kern.node_activations(&x_projs[j * 2..(j + 1) * 2], &mut single);
+            assert_eq!(&batch[j * nn..(j + 1) * nn], &single[..], "row {j} (m=1 path)");
+        }
+    }
+
+    #[test]
+    fn padding_never_sampled_through_kernel() {
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        let m = 64;
+        let x_projs = vec![5.0f32; m * 2];
+        let base = Rng::new(3);
+        let mut rngs: Vec<Rng> = (0..m).map(|j| base.stream(1, j as u64)).collect();
+        let mut labels = vec![0u32; m];
+        let mut logps = vec![0f32; m];
+        for _ in 0..50 {
+            kern.sample_batch(&x_projs, &mut rngs, &mut labels, &mut logps);
+            assert!(labels.iter().all(|&y| y < 3));
+            assert!(logps.iter().all(|l| l.is_finite()));
+        }
+    }
+}

@@ -17,15 +17,28 @@
 //!   O(C) prefix accumulation (`log_prob_all`), or O(C) if activations come
 //!   precomputed from the `scores` HLO artifact
 //!   (`log_prob_all_from_activations`).
+//! * Hot-path kernels: the methods here are the **scalar walkers** — one
+//!   draw / one label / one example at a time. They are the semantic
+//!   reference (and the test oracle), while production batch work goes
+//!   through the derived [`TreeKernel`] ([`kernel`]), which re-lays the
+//!   model out level-by-level and processes [`LANES`] descents or examples
+//!   per inner loop. Both sides evaluate activations in the canonical
+//!   [`crate::linalg::dot`] reduction order and branch terms through the
+//!   canonical fused sigmoid kernels ([`crate::linalg::sig_terms`] /
+//!   [`crate::linalg::log_sigmoid_pair`]), so scalar and blocked results
+//!   are bit-identical — the determinism contract that keeps learning
+//!   curves reproducible at every `parallelism` setting.
 //!
 //! Fitting (greedy maximum likelihood, alternating Newton ascent and
 //! balanced re-splits) lives in [`fit`].
 
 pub mod fit;
+pub mod kernel;
 
 pub use fit::FitStats;
+pub use kernel::{TreeKernel, LANES};
 
-use crate::linalg::{dot, log_sigmoid, sigmoid};
+use crate::linalg::{dot, log_sigmoid_pair, sig_terms};
 use crate::utils::json::Json;
 use crate::utils::Rng;
 use std::path::Path;
@@ -78,7 +91,8 @@ impl Tree {
     }
 
     /// Ancestral sampling: draw y' ~ p_n(·|x), returning (label, log p_n).
-    /// O(k log C).
+    /// O(k log C). Scalar walker; bit-identical to the blocked
+    /// [`TreeKernel::sample_batch`] under the same RNG stream.
     pub fn sample(&self, x_proj: &[f32], rng: &mut Rng) -> (u32, f32) {
         debug_assert_eq!(x_proj.len(), self.aux_dim);
         let mut node = 0usize;
@@ -89,9 +103,9 @@ impl Tree {
                 -1 => false,
                 _ => {
                     let a = self.activation(node, x_proj);
-                    let p_right = sigmoid(a);
+                    let (p_right, lsr, lsl) = sig_terms(a);
                     let right = rng.next_f32() < p_right;
-                    logp += if right { log_sigmoid(a) } else { log_sigmoid(-a) };
+                    logp += if right { lsr } else { lsl };
                     right
                 }
             };
@@ -107,7 +121,8 @@ impl Tree {
     ///
     /// Walks root→leaf (the leaf's ancestor at distance `d` is `q >> d`
     /// for 1-indexed heap position `q`), so the accumulation order matches
-    /// [`Tree::log_prob_batch`] and [`Tree::log_prob_all`] bit-for-bit.
+    /// [`TreeKernel::log_prob_batch`] and [`Tree::log_prob_all`]
+    /// bit-for-bit.
     pub fn log_prob(&self, x_proj: &[f32], y: u32) -> f32 {
         debug_assert!((y as usize) < self.num_classes);
         // 1-indexed heap position of the leaf (root = 1).
@@ -129,101 +144,16 @@ impl Tree {
                 }
                 _ => {
                     let a = self.activation(node, x_proj);
-                    logp += if went_right { log_sigmoid(a) } else { log_sigmoid(-a) };
+                    let (lsr, lsl) = log_sigmoid_pair(a);
+                    logp += if went_right { lsr } else { lsl };
                 }
             }
         }
         logp
     }
 
-    /// Blocked ancestral sampling: one descent per block entry, processed
-    /// level-by-level so the upper tree levels (one node, then 2, 4, …) are
-    /// touched once per level for the whole block instead of once per draw —
-    /// the weight rows of the first ~log2(m) levels stay cache-resident.
-    ///
-    /// `x_projs` is `[m, k]` row-major and `rngs[j]` is draw `j`'s private
-    /// stream; each stream is consumed exactly as a scalar
-    /// [`Tree::sample`] call would consume it, so
-    /// `sample_batch(x, rngs, ..)` produces bit-identical (label, log p)
-    /// pairs to calling `sample` per row with the same streams. `labels`
-    /// doubles as the descent state, so the call is allocation-free.
-    pub fn sample_batch(
-        &self,
-        x_projs: &[f32],
-        rngs: &mut [Rng],
-        labels: &mut [u32],
-        logps: &mut [f32],
-    ) {
-        let m = labels.len();
-        let k = self.aux_dim;
-        debug_assert_eq!(x_projs.len(), m * k);
-        debug_assert_eq!(rngs.len(), m);
-        debug_assert_eq!(logps.len(), m);
-        labels.iter_mut().for_each(|n| *n = 0);
-        logps.iter_mut().for_each(|l| *l = 0.0);
-        for _level in 0..self.depth {
-            for j in 0..m {
-                let node = labels[j] as usize;
-                let go_right = match self.forced[node] {
-                    1 => true,
-                    -1 => false,
-                    _ => {
-                        let a = self.activation(node, &x_projs[j * k..(j + 1) * k]);
-                        let p_right = sigmoid(a);
-                        let right = rngs[j].next_f32() < p_right;
-                        logps[j] += if right { log_sigmoid(a) } else { log_sigmoid(-a) };
-                        right
-                    }
-                };
-                labels[j] = (2 * node + 1 + usize::from(go_right)) as u32;
-            }
-        }
-        for label in labels.iter_mut() {
-            let leaf = *label as usize - (self.num_leaves - 1);
-            *label = self.label_of_leaf[leaf];
-            debug_assert_ne!(*label, PADDING, "sampled a padding leaf");
-        }
-    }
-
-    /// Blocked root→leaf log-probability: `out[j] = log p_n(ys[j] | x_j)`
-    /// for an `[m, k]` block, processed level-by-level like
-    /// [`Tree::sample_batch`]. Bit-identical to scalar [`Tree::log_prob`]
-    /// per row (same traversal order, same accumulation order).
-    pub fn log_prob_batch(&self, x_projs: &[f32], ys: &[u32], out: &mut [f32]) {
-        let m = ys.len();
-        let k = self.aux_dim;
-        debug_assert_eq!(x_projs.len(), m * k);
-        debug_assert_eq!(out.len(), m);
-        out.iter_mut().for_each(|l| *l = 0.0);
-        for d in (1..=self.depth).rev() {
-            for j in 0..m {
-                if out[j] == f32::NEG_INFINITY {
-                    continue;
-                }
-                let q = self.leaf_of_label[ys[j] as usize] as usize + self.num_leaves;
-                let node = (q >> d) - 1;
-                let went_right = (q >> (d - 1)) & 1 == 1;
-                match self.forced[node] {
-                    1 => {
-                        if !went_right {
-                            out[j] = f32::NEG_INFINITY;
-                        }
-                    }
-                    -1 => {
-                        if went_right {
-                            out[j] = f32::NEG_INFINITY;
-                        }
-                    }
-                    _ => {
-                        let a = self.activation(node, &x_projs[j * k..(j + 1) * k]);
-                        out[j] += if went_right { log_sigmoid(a) } else { log_sigmoid(-a) };
-                    }
-                }
-            }
-        }
-    }
-
-    /// All node activations for one x (heap order). O(k C).
+    /// All node activations for one x (heap order). O(k C). Scalar walker;
+    /// [`TreeKernel::node_activations_batch`] is the blocked form.
     pub fn node_activations(&self, x_proj: &[f32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.num_nodes());
         for (i, o) in out.iter_mut().enumerate() {
@@ -232,12 +162,29 @@ impl Tree {
     }
 
     /// log p_n(y|x) for every real label y, given precomputed activations
-    /// (e.g. from the `scores` HLO artifact). O(C).
+    /// (e.g. from the `scores` HLO artifact or the kernel's batched
+    /// activation sweep). O(C).
     pub fn log_prob_all_from_activations(&self, acts: &[f32], out: &mut [f32]) {
+        self.log_prob_all_from_activations_with(acts, out, &mut Vec::new());
+    }
+
+    /// [`Tree::log_prob_all_from_activations`] with a caller-owned heap
+    /// prefix buffer (grown once, fully overwritten), so per-example sweep
+    /// loops pay no per-call O(C) allocation.
+    pub fn log_prob_all_from_activations_with(
+        &self,
+        acts: &[f32],
+        out: &mut [f32],
+        lp: &mut Vec<f32>,
+    ) {
         debug_assert_eq!(acts.len(), self.num_nodes());
         debug_assert_eq!(out.len(), self.num_classes);
-        // prefix accumulation down the heap
-        let mut lp = vec![0f32; 2 * self.num_leaves - 1];
+        // prefix accumulation down the heap (every slot below the root is
+        // written before it is read; the root's 0 is seeded here)
+        if lp.len() < 2 * self.num_leaves - 1 {
+            lp.resize(2 * self.num_leaves - 1, 0.0);
+        }
+        lp[0] = 0.0;
         for i in 0..self.num_nodes() {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             match self.forced[i] {
@@ -250,9 +197,9 @@ impl Tree {
                     lp[r] = f32::NEG_INFINITY;
                 }
                 _ => {
-                    let a = acts[i];
-                    lp[l] = lp[i] + log_sigmoid(-a);
-                    lp[r] = lp[i] + log_sigmoid(a);
+                    let (lsr, lsl) = log_sigmoid_pair(acts[i]);
+                    lp[l] = lp[i] + lsl;
+                    lp[r] = lp[i] + lsr;
                 }
             }
         }
@@ -404,41 +351,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn sample_batch_matches_scalar_sampling() {
-        let t = toy_tree();
-        let m = 64;
-        let mut rng = Rng::new(11);
-        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
-        // identical per-draw streams for both paths
-        let mut rngs_block: Vec<Rng> = (0..m).map(|j| rng.stream(7, j as u64)).collect();
-        let mut rngs_scalar = rngs_block.clone();
-        let mut labels = vec![0u32; m];
-        let mut logps = vec![0f32; m];
-        t.sample_batch(&x_projs, &mut rngs_block, &mut labels, &mut logps);
-        for j in 0..m {
-            let (y, lp) = t.sample(&x_projs[j * 2..(j + 1) * 2], &mut rngs_scalar[j]);
-            assert_eq!(labels[j], y, "draw {j}");
-            assert_eq!(logps[j], lp, "draw {j}");
-            // and the streams were consumed identically
-            assert_eq!(rngs_block[j].next_u64(), rngs_scalar[j].next_u64());
-        }
-    }
-
-    #[test]
-    fn log_prob_batch_matches_scalar() {
-        let t = toy_tree();
-        let m = 48;
-        let mut rng = Rng::new(12);
-        let x_projs: Vec<f32> = (0..m * 2).map(|_| rng.normal()).collect();
-        let ys: Vec<u32> = (0..m).map(|j| (j % 3) as u32).collect();
-        let mut out = vec![0f32; m];
-        t.log_prob_batch(&x_projs, &ys, &mut out);
-        for j in 0..m {
-            let expect = t.log_prob(&x_projs[j * 2..(j + 1) * 2], ys[j]);
-            assert_eq!(out[j], expect, "row {j}");
-        }
-    }
+    // (Blocked sample/log-prob parity tests live in `kernel::tests` and
+    // the proptest parity suite, next to the TreeKernel they exercise.)
 
     #[test]
     fn padding_never_sampled() {

@@ -11,7 +11,7 @@ use adv_softmax::linalg::{lse_merge, solve_spd};
 use adv_softmax::model::ParamStore;
 use adv_softmax::sampler::{FrequencySampler, NoiseSampler, UniformSampler};
 use adv_softmax::tree::fit::fit_tree;
-use adv_softmax::tree::PADDING;
+use adv_softmax::tree::{Tree, TreeKernel, PADDING};
 use adv_softmax::utils::json::Json;
 use adv_softmax::utils::{AliasTable, Pool, Rng};
 
@@ -89,38 +89,105 @@ fn prop_tree_bijection_and_sampling() {
     });
 }
 
-/// Blocked-descent invariant: `Tree::sample_batch` agrees bit-for-bit with
-/// repeated `Tree::sample` under the same split per-draw RNG streams, and
-/// `Tree::log_prob_batch` with repeated `Tree::log_prob` — for arbitrary
-/// fitted trees (non-power-of-two C, forced padding branches included).
-#[test]
-fn prop_blocked_descents_match_scalar() {
-    for_all_seeds(10, |rng| {
-        let (x, y, n, k, c) = random_tree_data(rng);
-        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
-        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, rng);
-        let m = 64 + rng.below(128);
+/// Pin one fitted tree's lane-major kernels bit-identical to the scalar
+/// oracle walkers across a set of block sizes (full lane groups, ragged
+/// tails, single rows).
+fn assert_kernel_parity(tree: &Tree, k: usize, c: usize, rng: &mut Rng) {
+    let kern = TreeKernel::build(tree);
+    let nn = tree.num_nodes();
+    for &m in &[1usize, 7, 8, 64, 129] {
         let x_projs: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
-        // split one base stream into per-draw streams, clone for both paths
+        // --- sample_batch vs scalar Tree::sample, same per-draw streams ---
         let base = rng.split(99);
         let mut rngs_block: Vec<Rng> = (0..m).map(|j| base.stream(3, j as u64)).collect();
         let mut rngs_scalar = rngs_block.clone();
         let mut labels = vec![0u32; m];
         let mut logps = vec![0f32; m];
-        tree.sample_batch(&x_projs, &mut rngs_block, &mut labels, &mut logps);
+        kern.sample_batch(&x_projs, &mut rngs_block, &mut labels, &mut logps);
         for j in 0..m {
             let (sy, slp) = tree.sample(&x_projs[j * k..(j + 1) * k], &mut rngs_scalar[j]);
-            assert_eq!(labels[j], sy, "draw {j}");
-            assert_eq!(logps[j], slp, "draw {j}");
+            assert_eq!(labels[j], sy, "C={c} k={k} m={m} draw {j}");
+            assert_eq!(logps[j].to_bits(), slp.to_bits(), "C={c} k={k} m={m} draw {j}");
+            // the private streams were consumed identically
+            assert_eq!(rngs_block[j].next_u64(), rngs_scalar[j].next_u64());
         }
-        // log_prob_batch vs scalar log_prob on the sampled labels
+        // --- log_prob_batch vs scalar log_prob (sampled + arbitrary ys) ---
+        let mut ys = labels.clone();
+        for (j, yj) in ys.iter_mut().enumerate() {
+            if j % 3 == 0 {
+                *yj = (j % c) as u32;
+            }
+        }
         let mut lp_block = vec![0f32; m];
-        tree.log_prob_batch(&x_projs, &labels, &mut lp_block);
+        kern.log_prob_batch(&x_projs, &ys, &mut lp_block);
         for j in 0..m {
-            let direct = tree.log_prob(&x_projs[j * k..(j + 1) * k], labels[j]);
-            assert_eq!(lp_block[j], direct, "row {j}");
+            let direct = tree.log_prob(&x_projs[j * k..(j + 1) * k], ys[j]);
+            assert_eq!(lp_block[j].to_bits(), direct.to_bits(), "C={c} k={k} m={m} row {j}");
         }
+        // --- batched activation sweep vs scalar node_activations ---
+        let mut acts_b = vec![0f32; m * nn];
+        kern.node_activations_batch(&x_projs, m, &mut acts_b);
+        let mut acts_s = vec![0f32; nn];
+        for j in 0..m {
+            tree.node_activations(&x_projs[j * k..(j + 1) * k], &mut acts_s);
+            assert_eq!(&acts_b[j * nn..(j + 1) * nn], &acts_s[..], "C={c} k={k} m={m} row {j}");
+        }
+        // --- log_prob_all (activation sweep + prefix) vs scalar log_prob ---
+        let mut all = vec![0f32; c];
+        tree.log_prob_all(&x_projs[..k], &mut all);
+        for (y, &lp) in all.iter().enumerate() {
+            let direct = tree.log_prob(&x_projs[..k], y as u32);
+            assert_eq!(lp.to_bits(), direct.to_bits(), "C={c} k={k} label {y}");
+        }
+    }
+}
+
+/// Blocked-descent invariant: the `TreeKernel` batch paths agree bit for
+/// bit with the retained scalar walkers under the same split per-draw RNG
+/// streams — for arbitrary fitted trees (non-power-of-two C, forced
+/// padding branches included).
+#[test]
+fn prop_kernel_descents_match_scalar_oracle() {
+    for_all_seeds(8, |rng| {
+        let (x, y, n, k, c) = random_tree_data(rng);
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, rng);
+        assert_kernel_parity(&tree, k, c, rng);
     });
+}
+
+/// Kernel parity across the lane-width grid the ISSUE pins: auxiliary
+/// dimensions k ∈ {1, 7, 8, 64} (below/at/above the 4-lane dot chunk and
+/// at MAX_AUX_DIM) × padded and power-of-two label counts, with fitted
+/// trees so forced chains appear at several depths.
+#[test]
+fn prop_kernel_parity_k_grid() {
+    for (case, &k) in [1usize, 7, 8, 64].iter().enumerate() {
+        let mut rng = Rng::new(0xbead_0000 + case as u64);
+        for &c in &[5usize, 16, 33] {
+            let n = 400;
+            let mut x = vec![0f32; n * k];
+            let mut y = vec![0u32; n];
+            for i in 0..n {
+                let lbl = rng.below(c) as u32;
+                y[i] = lbl;
+                for j in 0..k {
+                    x[i * k + j] =
+                        ((lbl as usize >> (j % 6)) & 1) as f32 * 2.0 - 1.0 + 0.5 * rng.normal();
+                }
+            }
+            // small Newton budget: the parity property does not depend on
+            // fit quality, only on realistic fitted/forced structure
+            let cfg = TreeConfig {
+                aux_dim: k,
+                newton_iters: 3,
+                max_alternations: 2,
+                ..Default::default()
+            };
+            let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, &mut rng);
+            assert_kernel_parity(&tree, k, c, &mut rng);
+        }
+    }
 }
 
 /// Sharded-scatter invariant: `apply_sparse_par` is bit-identical to the
