@@ -107,6 +107,67 @@ impl Default for Hyper {
     }
 }
 
+/// Double-buffered step overlap (PR 4): run step t+1's host stages —
+/// parameter gather, literal packing — on the worker pool while step t
+/// executes on the PJRT runtime, with conflict-aware row leasing keeping
+/// the learning curve bit-identical to the serial protocol (see
+/// `train` / `model` module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Overlap whenever it can help: pool has background workers and the
+    /// method is not the dense softmax baseline (whose "gather" is the
+    /// whole parameter matrix — every row conflicts).
+    Auto,
+    /// Force the double-buffered protocol (still a no-op for softmax and
+    /// on a serial pool, where the stages degrade to inline calls).
+    On,
+    /// Strictly serial gather → execute → scatter (the reference
+    /// protocol; bit-identical results either way).
+    Off,
+}
+
+impl OverlapMode {
+    /// Default for newly constructed configs: the `REPRO_OVERLAP` env var
+    /// (`auto|on|off`, used by CI to run the test suite under both
+    /// protocols) or [`OverlapMode::Auto`]. An unparsable value panics
+    /// with a clear message rather than silently falling back — a CI leg
+    /// meant to force one protocol must never quietly run the other.
+    pub fn env_default() -> Self {
+        match std::env::var("REPRO_OVERLAP") {
+            Ok(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid REPRO_OVERLAP={v:?}: {e:#}")),
+            Err(_) => OverlapMode::Auto,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverlapMode::Auto => "auto",
+            OverlapMode::On => "on",
+            OverlapMode::Off => "off",
+        }
+    }
+}
+
+impl fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for OverlapMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => OverlapMode::Auto,
+            "on" | "true" | "1" => OverlapMode::On,
+            "off" | "false" | "0" => OverlapMode::Off,
+            other => anyhow::bail!("unknown overlap mode {other:?} (auto|on|off)"),
+        })
+    }
+}
+
 /// Hard cap on the auxiliary (PCA) dimension k: the samplers project raw
 /// features into fixed-size stack buffers of this many floats on the
 /// per-negative-draw hot path (`sampler::AdversarialSampler`), so larger
@@ -327,6 +388,10 @@ pub struct RunConfig {
     /// hardware, 1 = fully serial. Learning curves are bit-identical at
     /// every setting; only wallclock changes.
     pub parallelism: usize,
+    /// Double-buffered step overlap (gather/literal-build of step t+1
+    /// behind the execute of step t). Learning curves are bit-identical
+    /// at every setting; only wallclock changes.
+    pub overlap: OverlapMode,
 }
 
 impl RunConfig {
@@ -344,6 +409,7 @@ impl RunConfig {
             seed: 1,
             pipelined: true,
             parallelism: 0,
+            overlap: OverlapMode::env_default(),
         }
     }
 
@@ -368,6 +434,7 @@ impl RunConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("pipelined", Json::Bool(self.pipelined)),
             ("parallelism", Json::Num(self.parallelism as f64)),
+            ("overlap", Json::Str(self.overlap.to_string())),
         ])
     }
 
@@ -393,6 +460,10 @@ impl RunConfig {
         // optional for configs saved before the parallelism knob existed
         if let Some(p) = v.opt("parallelism") {
             cfg.parallelism = p.as_usize()?;
+        }
+        // optional for configs saved before the overlap knob existed
+        if let Some(o) = v.opt("overlap") {
+            cfg.overlap = o.as_str()?.parse()?;
         }
         cfg.tree.validate()?;
         Ok(cfg)
@@ -443,6 +514,7 @@ mod tests {
         cfg.max_seconds = 7.5;
         cfg.pipelined = false;
         cfg.parallelism = 4;
+        cfg.overlap = OverlapMode::On;
         let back = RunConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.dataset, cfg.dataset);
         assert_eq!(back.method, cfg.method);
@@ -451,6 +523,26 @@ mod tests {
         assert_eq!(back.max_seconds, cfg.max_seconds);
         assert!(!back.pipelined);
         assert_eq!(back.parallelism, 4);
+        assert_eq!(back.overlap, OverlapMode::On);
+    }
+
+    #[test]
+    fn overlap_mode_parses_and_defaults_when_absent_from_json() {
+        assert_eq!("auto".parse::<OverlapMode>().unwrap(), OverlapMode::Auto);
+        assert_eq!("on".parse::<OverlapMode>().unwrap(), OverlapMode::On);
+        assert_eq!("off".parse::<OverlapMode>().unwrap(), OverlapMode::Off);
+        assert_eq!("ON".parse::<OverlapMode>().unwrap(), OverlapMode::On, "case-insensitive");
+        assert!("sideways".parse::<OverlapMode>().is_err());
+        // configs saved before the knob existed must still load
+        let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Uniform);
+        cfg.overlap = OverlapMode::Off;
+        let mut v = cfg.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.remove("overlap");
+        }
+        let back = RunConfig::from_json(&v).unwrap();
+        // absent key falls back to the constructor default (env or Auto)
+        assert_eq!(back.overlap, OverlapMode::env_default());
     }
 
     #[test]

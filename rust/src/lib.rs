@@ -41,7 +41,7 @@ pub mod utils;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::config::{
-        DatasetPreset, Hyper, Method, RunConfig, SyntheticConfig, TreeConfig,
+        DatasetPreset, Hyper, Method, OverlapMode, RunConfig, SyntheticConfig, TreeConfig,
     };
     pub use crate::data::{Dataset, Splits};
     pub use crate::eval::{EvalResult, Evaluator};

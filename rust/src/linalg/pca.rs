@@ -12,6 +12,15 @@
 //! slabs (a pure function of N, never of the worker count), each slab
 //! accumulates its own f64 partial, and partials reduce in slab order —
 //! so the fitted model is bit-identical at every `parallelism` setting.
+//!
+//! The power-iteration/deflation loop is pool-sharded too (PR 4): each
+//! matvec row and each deflation row is an independent computation with a
+//! fixed sequential reduction order, sharded into contiguous row slabs
+//! whose bounds depend only on `(n, workers)` — bit-identical to the
+//! serial loop at every worker count. Below [`PAR_MIN_EIG_DIM`] rows a
+//! pool dispatch costs more than the whole O(n²) product, so small
+//! matrices (including the default K = 64 presets) stay on the serial
+//! path; the parallel path engages for wide feature spaces.
 
 use super::dot;
 use crate::utils::json::Json;
@@ -36,17 +45,54 @@ pub struct Pca {
     pub output_dim: usize,
 }
 
+/// Below this row count the power-iteration matvec and the deflation
+/// update stay serial: at n = 128 a row slab is only a few thousand
+/// multiply-adds per worker, about the cost of the dispatch itself.
+const PAR_MIN_EIG_DIM: usize = 128;
+
+/// `out[i] = m[i, :] · v` with the rows sharded into contiguous slabs over
+/// the pool. Each row's dot uses the exact serial reduction order, so the
+/// result is bit-identical at every worker count (there is no cross-row
+/// reduction to re-order).
+fn matvec_rows(pool: &Pool, m: &[f64], v: &[f64], out: &mut [f64], n: usize) {
+    debug_assert_eq!(v.len(), n);
+    debug_assert_eq!(out.len(), n);
+    let row_dot = |i: usize| -> f64 {
+        m[i * n..(i + 1) * n].iter().zip(v.iter()).map(|(a, b)| a * b).sum()
+    };
+    if pool.is_serial() || n < PAR_MIN_EIG_DIM {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = row_dot(i);
+        }
+        return;
+    }
+    pool.for_each_span(out, 1, |first, span| {
+        for (j, o) in span.iter_mut().enumerate() {
+            *o = row_dot(first + j);
+        }
+    });
+}
+
 /// Dominant eigenvector of a symmetric PSD matrix (row-major n×n) by power
 /// iteration. Returns a unit vector; arbitrary unit vector if the matrix is
 /// (near) zero.
 pub fn dominant_eigenvector(m: &[f64], n: usize, iters: usize, rng: &mut Rng) -> Vec<f32> {
+    dominant_eigenvector_with(m, n, iters, rng, &Pool::serial())
+}
+
+/// [`dominant_eigenvector`] with each iteration's matvec sharded over a
+/// worker pool (module docs) — bit-identical to the serial loop.
+pub fn dominant_eigenvector_with(
+    m: &[f64],
+    n: usize,
+    iters: usize,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Vec<f32> {
     let mut v: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
     let mut tmp = vec![0f64; n];
     for _ in 0..iters {
-        for i in 0..n {
-            let row = &m[i * n..(i + 1) * n];
-            tmp[i] = row.iter().zip(v.iter()).map(|(a, b)| a * b).sum();
-        }
+        matvec_rows(pool, m, &v, &mut tmp, n);
         let nrm = tmp.iter().map(|x| x * x).sum::<f64>().sqrt();
         if nrm < 1e-30 {
             break;
@@ -166,27 +212,34 @@ impl Pca {
             *v /= n as f64;
         }
 
-        // power iteration + deflation stays serial: O(k·iters·K²) is tiny
-        // next to the accumulation above
+        // power iteration + deflation: each matvec row and each deflation
+        // row is independent with a fixed per-row reduction order, so the
+        // loop shards over the pool bit-identically (module docs); small
+        // matrices stay serial below PAR_MIN_EIG_DIM.
         let mut components: Vec<Vec<f32>> = Vec::with_capacity(out_dim);
+        let mut cv = vec![0f64; in_dim];
         for _ in 0..out_dim {
-            let v = dominant_eigenvector(&cov, in_dim, 50, &mut rng);
+            let v = dominant_eigenvector_with(&cov, in_dim, 50, &mut rng, pool);
             // deflate: cov -= lambda v v^T, lambda = v^T cov v
             let vf: Vec<f64> = v.iter().map(|x| *x as f64).collect();
-            let cv: Vec<f64> = (0..in_dim)
-                .map(|i| {
-                    cov[i * in_dim..(i + 1) * in_dim]
-                        .iter()
-                        .zip(vf.iter())
-                        .map(|(a, b)| a * b)
-                        .sum()
-                })
-                .collect();
+            matvec_rows(pool, &cov, &vf, &mut cv, in_dim);
             let lambda: f64 = vf.iter().zip(cv.iter()).map(|(a, b)| a * b).sum();
-            for i in 0..in_dim {
-                for j in 0..in_dim {
-                    cov[i * in_dim + j] -= lambda * vf[i] * vf[j];
+            if pool.is_serial() || in_dim < PAR_MIN_EIG_DIM {
+                for i in 0..in_dim {
+                    for j in 0..in_dim {
+                        cov[i * in_dim + j] -= lambda * vf[i] * vf[j];
+                    }
                 }
+            } else {
+                let vf_ref = &vf;
+                pool.for_each_span(&mut cov, in_dim, |first_row, span| {
+                    for (r, row) in span.chunks_exact_mut(in_dim).enumerate() {
+                        let scale = lambda * vf_ref[first_row + r];
+                        for (c, x) in row.iter_mut().zip(vf_ref.iter()) {
+                            *c -= scale * x;
+                        }
+                    }
+                });
             }
             components.push(v);
         }
@@ -367,5 +420,43 @@ mod tests {
         let m = vec![4.0, 0.0, 0.0, 1.0];
         let v = dominant_eigenvector(&m, 2, 100, &mut rng);
         assert!(v[0].abs() > 0.999, "{v:?}");
+    }
+
+    /// Random PSD matrix above the parallel-matvec floor: the pooled power
+    /// iteration must reproduce the serial one bit for bit.
+    #[test]
+    fn dominant_eigenvector_parallel_bit_identical() {
+        let n = PAR_MIN_EIG_DIM + 33; // engage the parallel path, ragged spans
+        let mut rng = Rng::new(17);
+        let g: Vec<f64> = (0..n * n).map(|_| rng.normal() as f64).collect();
+        // m = g^T g / n is symmetric PSD
+        let mut m = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let s: f64 = (0..n).map(|l| g[l * n + i] * g[l * n + j]).sum();
+                m[i * n + j] = s / n as f64;
+            }
+        }
+        let reference = dominant_eigenvector(&m, n, 30, &mut Rng::new(5));
+        for workers in [2, 3, 7] {
+            let v = dominant_eigenvector_with(&m, n, 30, &mut Rng::new(5), &Pool::new(workers));
+            assert_eq!(v, reference, "workers={workers}");
+        }
+    }
+
+    /// Full fit above the matvec floor (wide feature space): parallel
+    /// power iteration + deflation must keep the fit bit-identical.
+    #[test]
+    fn fit_parallel_bit_identical_above_eig_floor() {
+        let (n, kin) = (500usize, PAR_MIN_EIG_DIM + 16);
+        let mut rng = Rng::new(19);
+        let data: Vec<f32> = (0..n * kin).map(|_| rng.normal()).collect();
+        let reference = Pca::fit(&data, n, kin, 3, 23);
+        for workers in [2, 5] {
+            let p = Pca::fit_with(&data, n, kin, 3, 23, &Pool::new(workers));
+            assert_eq!(p.mean, reference.mean, "workers={workers}");
+            assert_eq!(p.components, reference.components, "workers={workers}");
+            assert_eq!(p.proj_bias, reference.proj_bias, "workers={workers}");
+        }
     }
 }

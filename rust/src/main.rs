@@ -10,6 +10,8 @@
 //! repro train        --dataset tiny --method adversarial --seconds 30
 //!                    [--parallelism N]  (0 = auto; curves are identical
 //!                    at every setting, only wallclock changes)
+//!                    [--overlap auto|on|off]  (double-buffered step
+//!                    engine; curves identical either way)
 //! repro exp table1
 //! repro exp figure1  --dataset wiki-sim --seconds 60 [--methods adv,uniform]
 //! repro exp appendix-a2 --seconds 60
@@ -129,6 +131,7 @@ fn train(args: &Args) -> Result<()> {
             c.eval_points = args.get("eval-points", 2048)?;
             c.pipelined = !args.flag("no-pipeline")?;
             c.parallelism = args.get("parallelism", 0)?;
+            c.overlap = args.get("overlap", c.overlap)?;
             c
         }
     };

@@ -4,6 +4,14 @@
 //! State is one accumulator per parameter: G += g²; θ -= ρ g / (√G + ε).
 //! Kept separate from [`super::ParamStore`] so trainers can reset or swap
 //! optimizer state without touching parameters.
+//!
+//! Under the double-buffered step engine ([`crate::train`]), the Adagrad
+//! scatter is the **only** writer of parameters and accumulators between
+//! the eager gather of the next step and its post-scatter patch
+//! ([`super::ParamStore::patch_leased`]): the row-lease protocol stamps
+//! every row this scatter will touch *before* the eager gather starts, so
+//! overlapped and serial runs apply the exact same `update_row_kernel`
+//! sequence per row — learning curves stay bit-identical.
 
 /// Adagrad accumulators for a [C, K] weight matrix + [C] bias vector.
 #[derive(Clone, Debug)]

@@ -15,6 +15,21 @@
 //! are bit-identical to the serial path. The softmax baseline's dense
 //! scatter has the same treatment ([`ParamStore::apply_dense_par`]) with
 //! contiguous disjoint row spans per shard.
+//!
+//! # Conflict-aware row leasing (double-buffered steps)
+//!
+//! The overlapped step engine ([`crate::train`]) gathers step *t+1*'s rows
+//! **while step *t* is still executing on the device**, i.e. before *t*'s
+//! scatter has landed. [`RowLeases`] makes that safe and bit-exact:
+//! [`ParamStore::lease_rows`] stamps every row of *t*'s update set with a
+//! fresh lease id before the eager gather starts, the eager gather
+//! ([`ParamStore::gather_leased_shard`]) skips stamped rows, and after
+//! `apply_sparse_par(t)` lands, [`ParamStore::patch_leased`] re-gathers
+//! exactly the skipped slots. Since the scatter writes only leased rows,
+//! every slot of the output ends up holding the post-scatter value — the
+//! gathered buffers are bit-identical to a serial gather performed after
+//! the scatter, at every worker count. Stamps are epochs, not flags, so
+//! the map is never cleared: a stale stamp can never equal a live lease id.
 
 pub mod adagrad;
 
@@ -26,6 +41,30 @@ use crate::utils::{Pool, Rng, SharedMut};
 /// (thread spawn overhead would dominate).
 const PAR_MIN_LABELS: usize = 64;
 
+/// Per-row lease stamps for the double-buffered step engine (module docs).
+///
+/// `stamp[y]` holds the id of the last lease that covered row `y`; ids are
+/// handed out monotonically from 1, so the zero-initialized map means "no
+/// row leased" and stale stamps from retired leases are inert without any
+/// clearing pass.
+#[derive(Clone, Debug)]
+pub struct RowLeases {
+    stamp: Vec<u64>,
+    next_id: u64,
+}
+
+impl RowLeases {
+    fn new(num_classes: usize) -> Self {
+        Self { stamp: vec![0u64; num_classes], next_id: 0 }
+    }
+
+    /// Is row `y` covered by lease `id`?
+    #[inline]
+    pub fn is_leased(&self, y: usize, id: u64) -> bool {
+        self.stamp[y] == id
+    }
+}
+
 /// Dense parameter matrix (W, b) with per-coordinate Adagrad accumulators.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
@@ -35,6 +74,8 @@ pub struct ParamStore {
     pub w: Vec<f32>,
     pub b: Vec<f32>,
     pub opt: Adagrad,
+    /// Touched-row epoch map for the overlapped step protocol.
+    pub leases: RowLeases,
 }
 
 impl ParamStore {
@@ -47,6 +88,7 @@ impl ParamStore {
             w: vec![0f32; num_classes * feat_dim],
             b: vec![0f32; num_classes],
             opt: Adagrad::new(num_classes, feat_dim, lr),
+            leases: RowLeases::new(num_classes),
         }
     }
 
@@ -163,6 +205,88 @@ impl ParamStore {
                 }
             }
         });
+    }
+
+    /// Lease every row named in `label_sets` (the pos+neg label sets of
+    /// the step about to execute) under a fresh lease id. Rows leased here
+    /// are exactly the rows the step's scatter will update, so the
+    /// overlapped eager gather of the *next* step must skip them and
+    /// [`ParamStore::patch_leased`] must re-read them once the scatter has
+    /// landed (module docs).
+    pub fn lease_rows(&mut self, label_sets: &[&[u32]]) -> u64 {
+        self.leases.next_id += 1;
+        let id = self.leases.next_id;
+        for labels in label_sets {
+            for &y in labels.iter() {
+                self.leases.stamp[y as usize] = id;
+            }
+        }
+        id
+    }
+
+    /// One shard of the conflict-aware eager gather: copy batch slot `i`
+    /// (for every `i` with `labels[i] % num_shards == shard`) into the
+    /// output views, **skipping** rows currently covered by `lease` —
+    /// those rows are about to be rewritten by the in-flight step's
+    /// scatter and are patched afterwards. Runs concurrently with the
+    /// device execute via [`Pool::submit_sharded`]; nothing writes the
+    /// parameters during that window, so the reads are race-free.
+    ///
+    /// Safety contract (upheld by the shard map, as in
+    /// [`ParamStore::gather_par`]): batch slot `i` is written only by the
+    /// shard owning `labels[i]`, and the views must cover
+    /// `labels.len() * feat_dim` / `labels.len()` elements.
+    pub fn gather_leased_shard(
+        &self,
+        labels: &[u32],
+        lease: u64,
+        num_shards: usize,
+        shard: usize,
+        w_view: &SharedMut<'_, f32>,
+        b_view: &SharedMut<'_, f32>,
+    ) {
+        debug_assert_eq!(w_view.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(b_view.len(), labels.len());
+        let k = self.feat_dim;
+        for (i, &y) in labels.iter().enumerate() {
+            let yu = y as usize;
+            if yu % num_shards != shard || self.leases.is_leased(yu, lease) {
+                continue;
+            }
+            // SAFETY: slot i has exactly one writer (the shard owning
+            // labels[i]); see the method's safety contract.
+            unsafe {
+                w_view.slice_mut(i * k, k).copy_from_slice(self.row(y));
+                *b_view.get_mut(i) = self.b[yu];
+            }
+        }
+    }
+
+    /// Complete an eager gather after the conflicting scatter has landed:
+    /// re-copy every batch slot whose row is covered by `lease` (exactly
+    /// the slots [`ParamStore::gather_leased_shard`] skipped). Returns the
+    /// number of patched slots. After this, the output buffers are
+    /// bit-identical to a serial gather performed after the scatter.
+    pub fn patch_leased(
+        &self,
+        labels: &[u32],
+        lease: u64,
+        w_out: &mut [f32],
+        b_out: &mut [f32],
+    ) -> usize {
+        debug_assert_eq!(w_out.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(b_out.len(), labels.len());
+        let k = self.feat_dim;
+        let mut patched = 0;
+        for (i, &y) in labels.iter().enumerate() {
+            let yu = y as usize;
+            if self.leases.is_leased(yu, lease) {
+                w_out[i * k..(i + 1) * k].copy_from_slice(self.row(y));
+                b_out[i] = self.b[yu];
+                patched += 1;
+            }
+        }
+        patched
     }
 
     /// Dense update over all rows (full-softmax baseline).
@@ -311,6 +435,73 @@ mod tests {
             assert_eq!(par.w, serial.w, "workers={workers}");
             assert_eq!(par.b, serial.b, "workers={workers}");
         }
+    }
+
+    /// Leased gather + patch reproduces a serial gather-after-scatter bit
+    /// for bit, even when every row of the next batch conflicts.
+    #[test]
+    fn leased_gather_plus_patch_equals_gather_after_scatter() {
+        let mut rng = Rng::new(31);
+        let (c, k, b) = (23, 6, 120);
+        let mut p = ParamStore::zeros(c, k, 0.1);
+        p.w.iter_mut().for_each(|v| *v = rng.normal());
+        p.b.iter_mut().for_each(|v| *v = rng.normal());
+        // step t's update set and gradients
+        let cur: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let gw: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        // step t+1's labels, overlapping heavily with cur (b >> c)
+        let nxt: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+
+        // serial protocol: scatter, then gather
+        let mut serial = p.clone();
+        serial.apply_sparse(&cur, &gw, &gb);
+        let mut w_ref = vec![0f32; b * k];
+        let mut b_ref = vec![0f32; b];
+        serial.gather(&nxt, &mut w_ref, &mut b_ref);
+
+        for workers in [1usize, 2, 3, 5] {
+            let pool = Pool::new(workers);
+            let mut par = p.clone();
+            let lease = par.lease_rows(&[&cur]);
+            let mut w_out = vec![f32::NAN; b * k]; // poisoned: every slot must be written
+            let mut b_out = vec![f32::NAN; b];
+            {
+                let w_view = SharedMut::new(&mut w_out);
+                let b_view = SharedMut::new(&mut b_out);
+                let par_ref = &par;
+                let nxt_ref = &nxt;
+                let shards = pool.stage_shards();
+                let handle = pool.submit_sharded(move |shard| {
+                    par_ref.gather_leased_shard(nxt_ref, lease, shards, shard, &w_view, &b_view);
+                });
+                handle.join();
+            }
+            par.apply_sparse_par(&pool, &cur, &gw, &gb);
+            let patched = par.patch_leased(&nxt, lease, &mut w_out, &mut b_out);
+            let expect_patched =
+                nxt.iter().filter(|&&y| cur.contains(&y)).count();
+            assert_eq!(patched, expect_patched, "workers={workers}");
+            assert_eq!(w_out, w_ref, "workers={workers}");
+            assert_eq!(b_out, b_ref, "workers={workers}");
+        }
+    }
+
+    /// Stale stamps from an old lease never leak into a newer lease's
+    /// conflict checks.
+    #[test]
+    fn lease_ids_do_not_alias_across_steps() {
+        let mut p = ParamStore::zeros(8, 2, 0.1);
+        let l1 = p.lease_rows(&[&[1u32, 3]]);
+        let l2 = p.lease_rows(&[&[3u32, 5]]);
+        assert_ne!(l1, l2);
+        assert!(!p.leases.is_leased(1, l2), "row 1 belongs to the old lease only");
+        assert!(p.leases.is_leased(3, l2), "row 3 re-leased under the new id");
+        assert!(p.leases.is_leased(5, l2));
+        assert!(!p.leases.is_leased(0, l2));
+        // the old id is retired: nothing should match it after re-lease
+        assert!(p.leases.is_leased(1, l1), "non-conflicting old row keeps its stamp");
+        assert!(!p.leases.is_leased(3, l1), "re-leased row left the old lease");
     }
 
     #[test]

@@ -2,26 +2,37 @@
 //!
 //! `Literal::create_from_shape_and_untyped_data` copies straight from the
 //! host slice (no element-wise conversion), which keeps the hot path's
-//! literal creation at memcpy speed.
+//! literal creation at memcpy speed. [`LitScratch`] goes one step further
+//! for the step engine: step inputs are recycled after execute and the
+//! next literal of the same byte size reuses the retired literal's storage
+//! in place of a fresh allocation, so steady-state literal creation is
+//! allocation-free.
 
 use anyhow::{Context, Result};
 
+/// Check `data`'s element count against `dims` and view it as raw bytes
+/// (single home of the validation + unsafe cast for every literal
+/// constructor in this module).
+fn checked_bytes<T>(data: &[T], dims: &[usize], what: &str) -> Result<&[u8]> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "{what}: {} elements for dims {dims:?}", data.len());
+    // SAFETY: any initialized slice is readable as its raw bytes; the
+    // length is the slice's exact byte size.
+    Ok(unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    })
+}
+
 /// f32 literal with the given dims from a host slice.
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product::<usize>().max(1);
-    anyhow::ensure!(n == data.len(), "lit_f32: {} elements for dims {dims:?}", data.len());
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let bytes = checked_bytes(data, dims, "lit_f32")?;
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
         .context("create f32 literal")
 }
 
 /// i32 literal with the given dims from a host slice.
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product::<usize>().max(1);
-    anyhow::ensure!(n == data.len(), "lit_i32: {} elements for dims {dims:?}", data.len());
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let bytes = checked_bytes(data, dims, "lit_i32")?;
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
         .context("create i32 literal")
 }
@@ -39,6 +50,73 @@ pub fn read_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
 /// Copy a literal into an existing f32 buffer (avoids an allocation).
 pub fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
     lit.copy_raw_to::<f32>(out).context("copy f32 literal")
+}
+
+/// Recycling pool for step-input literals (module docs).
+///
+/// The step engine returns each step's inputs via [`LitScratch::recycle`]
+/// after the execute; [`LitScratch::lit_f32`] / [`LitScratch::lit_i32`]
+/// then refill a retired literal of the same byte size in place
+/// (`Literal::refill_untyped`, a host-stub extension of the vendored
+/// `xla`; against the real crate this degrades to per-call creation).
+/// Step shapes repeat every step, so the free list stays tiny and
+/// steady-state literal creation performs zero allocations.
+#[derive(Default)]
+pub struct LitScratch {
+    free: Vec<xla::Literal>,
+}
+
+impl LitScratch {
+    pub fn new() -> Self {
+        Self { free: Vec::new() }
+    }
+
+    /// f32 literal with the given dims, reusing retired storage if a
+    /// same-size literal is available.
+    pub fn lit_f32(&mut self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes = checked_bytes(data, dims, "lit_f32")?;
+        self.refill(xla::ElementType::F32, dims, bytes)
+    }
+
+    /// i32 literal with the given dims, reusing retired storage if a
+    /// same-size literal is available.
+    pub fn lit_i32(&mut self, data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes = checked_bytes(data, dims, "lit_i32")?;
+        self.refill(xla::ElementType::S32, dims, bytes)
+    }
+
+    /// Return a retired literal's storage to the pool.
+    pub fn recycle(&mut self, lit: xla::Literal) {
+        self.free.push(lit);
+    }
+
+    /// Retired literals currently available for reuse.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    fn refill(
+        &mut self,
+        ty: xla::ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<xla::Literal> {
+        // Exact byte-size match keeps refills at pure memcpy (no regrow);
+        // both element types here are 4 bytes wide, so retyping is free.
+        let pos = self
+            .free
+            .iter()
+            .position(|l| l.element_count() * l.element_type().byte_size() == bytes.len());
+        match pos {
+            Some(i) => {
+                let mut lit = self.free.swap_remove(i);
+                lit.refill_untyped(ty, dims, bytes).context("refill literal")?;
+                Ok(lit)
+            }
+            None => xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+                .context("create literal"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +151,44 @@ mod tests {
         let mut out = vec![0f32; 8];
         read_f32_into(&lit, &mut out).unwrap();
         assert_eq!(out, data);
+    }
+
+    #[test]
+    fn scratch_recycles_same_size_literals() {
+        let mut scratch = LitScratch::new();
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let lit = scratch.lit_f32(&a, &[2, 2]).unwrap();
+        assert_eq!(read_f32(&lit).unwrap(), a);
+        scratch.recycle(lit);
+        assert_eq!(scratch.free_count(), 1);
+        // same byte size: reuses the retired literal (free list drains)
+        let b = vec![9.0f32, 8.0, 7.0, 6.0];
+        let lit2 = scratch.lit_f32(&b, &[4]).unwrap();
+        assert_eq!(scratch.free_count(), 0);
+        assert_eq!(read_f32(&lit2).unwrap(), b);
+        assert_eq!(lit2.dims(), &[4]);
+        scratch.recycle(lit2);
+        // different byte size: fresh creation, free list untouched
+        let c = vec![1.0f32; 6];
+        let lit3 = scratch.lit_f32(&c, &[6]).unwrap();
+        assert_eq!(scratch.free_count(), 1);
+        assert_eq!(read_f32(&lit3).unwrap(), c);
+    }
+
+    #[test]
+    fn scratch_retypes_between_f32_and_i32() {
+        let mut scratch = LitScratch::new();
+        let lit = scratch.lit_f32(&[1.5f32, -2.5], &[2]).unwrap();
+        scratch.recycle(lit);
+        let ints = scratch.lit_i32(&[3i32, -4], &[2]).unwrap();
+        assert_eq!(scratch.free_count(), 0, "4-byte-wide retype reuses the buffer");
+        assert_eq!(read_i32(&ints).unwrap(), vec![3, -4]);
+    }
+
+    #[test]
+    fn scratch_checks_shapes() {
+        let mut scratch = LitScratch::new();
+        assert!(scratch.lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(scratch.lit_i32(&[1, 2, 3], &[2, 2]).is_err());
     }
 }

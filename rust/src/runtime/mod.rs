@@ -9,7 +9,7 @@
 pub mod literal;
 pub mod manifest;
 
-pub use literal::{lit_f32, lit_i32, read_f32, read_i32};
+pub use literal::{lit_f32, lit_i32, read_f32, read_f32_into, read_i32, LitScratch};
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
 
 use anyhow::{bail, Context, Result};

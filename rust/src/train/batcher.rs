@@ -44,6 +44,17 @@ const STREAM_BATCH: u64 = 2;
 /// [`RawBatch::alloc`] + [`BatchGen::fill_next`] — the pipeline recycles
 /// them through a return channel, so steady-state batch assembly is
 /// allocation-free.
+///
+/// **Slot-aware recycling:** the double-buffered step engine
+/// ([`crate::train::StepEngine`]) keeps two batches in flight and returns
+/// batch *t* only after fetching *t+1*, so recycling runs one batch behind
+/// fetching. That is safe by construction: recycles still happen in batch
+/// order, so the recycle round-robin keeps pairing each buffer with the
+/// worker that produced it, and the per-worker channel depth
+/// (`PIPELINE_DEPTH_PER_WORKER` = 2) covers the extra outstanding buffer.
+/// Even a dropped (never-recycled) batch — e.g. engine teardown with a
+/// prefetched slot, or an aborted step — only degrades that worker to a
+/// fresh allocation, never a stall.
 #[derive(Clone, Debug)]
 pub struct RawBatch {
     /// Features, [B, K] row-major.

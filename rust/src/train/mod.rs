@@ -1,14 +1,45 @@
 //! Training coordinator: per-method update rules over the AOT HLO step
-//! artifacts, with a host-parallel, deterministic step pipeline.
+//! artifacts, with a host-parallel, deterministic step pipeline and a
+//! double-buffered step engine.
 //!
-//! # Step protocol
+//! # Step protocol: a stage graph over two slots
 //!
-//! The step protocol for sampling-based methods is gather → execute →
-//! scatter: rust gathers the 2B touched parameter rows, the HLO artifact
-//! (Pallas gradient core) computes the fused loss + row gradients, rust
-//! scatters them back through sparse Adagrad. Cost per step is O(B·K) on
-//! the host plus the kernel, independent of C — the property that makes
-//! negative sampling scale (Sec. 2.1).
+//! A sampling-method step is a graph of five stages: **gather** the 2B
+//! touched parameter rows, **pack** them (plus the batch's features and
+//! `lpn` corrections) into literals, **execute** the HLO artifact (Pallas
+//! gradient core) on the PJRT runtime, **read back** the row gradients,
+//! and **scatter** them through sparse Adagrad. Cost per step is O(B·K)
+//! on the host plus the kernel, independent of C — the property that
+//! makes negative sampling scale (Sec. 2.1).
+//!
+//! [`StepEngine`] runs that graph over **two in-flight step slots**
+//! ([`StepSlot`]: own gather/readback scratch + reusable literal
+//! buffers). With overlap enabled, while step *t* executes on the
+//! coordinator thread (PJRT handles are not `Send`), step *t+1*'s host
+//! work — parameter gather, `lpn` literal packing, and the x-literal
+//! build — runs concurrently on the background workers
+//! ([`Pool::submit_sharded`]):
+//!
+//! ```text
+//!   coordinator:  …execute(t)─────────┐ readback(t) scatter(t) patch(t+1)
+//!   pool workers: gather(t+1) lits(t+1)┘        (join before scatter)
+//! ```
+//!
+//! **Conflict-aware row leasing** keeps this bit-exact: before the stage
+//! launches, the rows step *t* will update are leased
+//! ([`ParamStore::lease_rows`]); the eager gather skips leased rows and
+//! [`ParamStore::patch_leased`] re-gathers exactly those slots after
+//! *t*'s scatter lands. Every gathered buffer therefore holds precisely
+//! what the serial gather-after-scatter would have read — the learning
+//! curve is bit-identical to the serial protocol at every `parallelism`
+//! setting and with overlap on or off (`RunConfig::overlap`, default
+//! auto). The dense softmax baseline always runs the serial protocol:
+//! its "gather" is the whole parameter matrix, so every row conflicts.
+//!
+//! Step-input literals recycle through a per-slot
+//! [`crate::runtime::LitScratch`]: after execute(t), t's input literals
+//! retire into the slot's scratch and step t+2 refills them in place —
+//! steady-state literal creation allocates nothing.
 //!
 //! # Performance architecture: pipeline, sharding, determinism
 //!
@@ -55,8 +86,10 @@
 //!   there is no drain-then-join race and no stop flag.
 //!
 //! PJRT execution itself stays on the coordinator thread (the runtime
-//! handles are not `Send`); the pipeline overlaps batch generation with
-//! it, and the pool parallelizes the host stages around it.
+//! handles are not `Send`); the batch pipeline overlaps batch generation
+//! with it, the double-buffered engine overlaps the *next step's*
+//! gather/literal stages with it, and the pool parallelizes the remaining
+//! host stages around it.
 
 pub mod batcher;
 pub mod curve;
@@ -64,13 +97,13 @@ pub mod curve;
 pub use batcher::{BatchGen, BatchMode, RawBatch, SamplerKind};
 pub use curve::{CurvePoint, LearningCurve};
 
-use crate::config::{Method, RunConfig};
+use crate::config::{Method, OverlapMode, RunConfig};
 use crate::data::{Dataset, Splits};
 use crate::eval::{EvalResult, Evaluator, LpnCache};
 use crate::model::ParamStore;
-use crate::runtime::{lit_f32, lit_i32, read_f32, Executable, Registry};
+use crate::runtime::{read_f32, read_f32_into, Executable, LitScratch, Registry};
 use crate::sampler::{AdversarialSampler, FrequencySampler, UniformSampler};
-use crate::utils::{Pool, Rng, StopWatch};
+use crate::utils::{Pool, Rng, SharedMut, StopWatch};
 use anyhow::{Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -217,6 +250,503 @@ impl Drop for Pipeline {
     }
 }
 
+/// The device half of a step: anything that can execute a prepared input
+/// set and return the output tuple (loss + gradients) in manifest order.
+/// [`Executable`] is the production implementation; tests and benches
+/// drive the engine with deterministic host mocks (the vendored `xla`
+/// stub cannot execute HLO).
+pub trait StepExecutor {
+    fn run_step(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>>;
+}
+
+impl StepExecutor for Executable {
+    fn run_step(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run(inputs)
+    }
+}
+
+/// Executable input positions shared by the NS-like and pairwise layouts:
+/// `[x, wp, bp, wn, bn, …tail…]` where the tail is `[lpn_p, lpn_n, lam]`
+/// (NS/NCE) or `[scale, lam]` (OVE/A&R). Softmax uses
+/// `[x, w, b, y, lam]`, assembled inline in the serial path.
+const IN_X: usize = 0;
+const IN_WP: usize = 1;
+const IN_BP: usize = 2;
+const IN_WN: usize = 3;
+const IN_BN: usize = 4;
+
+/// Executable input count for a batch mode.
+fn num_inputs(mode: BatchMode) -> usize {
+    match mode {
+        BatchMode::NsLike => 8,   // x, wp, bp, wn, bn, lpn_p, lpn_n, lam
+        BatchMode::Pairwise => 7, // x, wp, bp, wn, bn, scale, lam
+        BatchMode::Softmax => 5,  // x, w, b, y, lam
+    }
+}
+
+/// One of the two in-flight step slots of the double-buffered engine: the
+/// step being executed and the step being prepared each own a full set of
+/// gather/readback scratch and literal buffers, so the stages of
+/// consecutive steps never contend (module docs).
+struct StepSlot {
+    /// The slot's assembled batch (present from fetch until the step's
+    /// scatter has landed and the buffers return to the pipeline).
+    batch: Option<RawBatch>,
+    /// Executable inputs by position, sealed in two stages: batch-derived
+    /// literals during the background stage, parameter-row literals after
+    /// the patch.
+    lits: Vec<Option<xla::Literal>>,
+    /// Error raised by the background literal build (single-writer cell;
+    /// surfaced on the coordinator at the join point).
+    lit_err: Option<anyhow::Error>,
+    /// Recycler for retired step-input literals (allocation-free refills).
+    scratch: LitScratch,
+    /// Gather buffers for the positive/negative rows; after execute they
+    /// double as the gradient readback buffers.
+    wp: Vec<f32>,
+    bp: Vec<f32>,
+    wn: Vec<f32>,
+    bn: Vec<f32>,
+    /// Gather + literals reflect the current parameters and the slot can
+    /// be executed as-is.
+    prepared: bool,
+}
+
+impl StepSlot {
+    /// `with_gather` sizes the row scratch: false for slots that never
+    /// gather (softmax — the dense path reads the whole matrix — and the
+    /// second slot of a serial-protocol engine, which is never prepared).
+    fn new(batch_size: usize, feat_dim: usize, n_inputs: usize, with_gather: bool) -> Self {
+        let (wlen, blen) = if with_gather {
+            (batch_size * feat_dim, batch_size)
+        } else {
+            (0, 0)
+        };
+        Self {
+            batch: None,
+            lits: (0..n_inputs).map(|_| None).collect(),
+            lit_err: None,
+            scratch: LitScratch::new(),
+            wp: vec![0f32; wlen],
+            bp: vec![0f32; blen],
+            wn: vec![0f32; wlen],
+            bn: vec![0f32; blen],
+            prepared: false,
+        }
+    }
+
+    /// Retire any sealed literals back into the slot's scratch.
+    fn recycle_lits(&mut self) {
+        for s in self.lits.iter_mut() {
+            if let Some(lit) = s.take() {
+                self.scratch.recycle(lit);
+            }
+        }
+    }
+}
+
+/// Move a sealed slot's literals out for the execute call.
+fn take_inputs(lits: &mut [Option<xla::Literal>]) -> Vec<xla::Literal> {
+    lits.iter_mut()
+        .map(|s| s.take().expect("slot literals sealed before execute"))
+        .collect()
+}
+
+/// Build the batch-derived inputs (x, lpn/scale, lam) for a slot. The
+/// parameter-row literals are built separately, after the gathered rows
+/// are final ([`build_param_lits`]). Runs either inline (serial protocol)
+/// or on stage shard 0 of the background stage.
+fn build_batch_lits(
+    scratch: &mut LitScratch,
+    lits: &mut [Option<xla::Literal>],
+    batch: &RawBatch,
+    mode: BatchMode,
+    b: usize,
+    k: usize,
+    lam: f32,
+) -> Result<()> {
+    lits[IN_X] = Some(scratch.lit_f32(&batch.x, &[b, k])?);
+    match mode {
+        BatchMode::NsLike => {
+            lits[5] = Some(scratch.lit_f32(&batch.lpn_p, &[b])?);
+            lits[6] = Some(scratch.lit_f32(&batch.lpn_n, &[b])?);
+            lits[7] = Some(scratch.lit_f32(&[lam], &[1])?);
+        }
+        BatchMode::Pairwise => {
+            lits[5] = Some(scratch.lit_f32(&batch.lpn_n, &[b])?);
+            lits[6] = Some(scratch.lit_f32(&[lam], &[1])?);
+        }
+        BatchMode::Softmax => unreachable!("softmax inputs are assembled inline"),
+    }
+    Ok(())
+}
+
+/// Seal a slot's parameter-row literals from its (final) gather buffers.
+fn build_param_lits(slot: &mut StepSlot, b: usize, k: usize) -> Result<()> {
+    slot.lits[IN_WP] = Some(slot.scratch.lit_f32(&slot.wp, &[b, k])?);
+    slot.lits[IN_BP] = Some(slot.scratch.lit_f32(&slot.bp, &[b])?);
+    slot.lits[IN_WN] = Some(slot.scratch.lit_f32(&slot.wn, &[b, k])?);
+    slot.lits[IN_BN] = Some(slot.scratch.lit_f32(&slot.bn, &[b])?);
+    Ok(())
+}
+
+/// The double-buffered step engine (module docs): owns the two step slots
+/// and runs the stage graph either strictly serially or with step t+1's
+/// host stages overlapped behind step t's execute. Parameters, pool and
+/// batch source stay with the caller so tests and benches can drive the
+/// engine with mock executors.
+pub struct StepEngine {
+    mode: BatchMode,
+    batch_size: usize,
+    feat_dim: usize,
+    lambda: f32,
+    overlap: bool,
+    slots: [StepSlot; 2],
+    /// Slot holding the fully prepared next step, if any.
+    pending: Option<usize>,
+    // softmax scratch: labels as i32 + dense gradient readback (reused
+    // across steps instead of per-step allocations)
+    y_i32: Vec<i32>,
+    gw_dense: Vec<f32>,
+    gb_dense: Vec<f32>,
+    /// Batch slots re-gathered by the post-scatter patch (engine lifetime).
+    pub rows_patched: u64,
+    /// Steps that ran the overlapped protocol.
+    pub steps_overlapped: u64,
+}
+
+impl StepEngine {
+    pub fn new(
+        mode: BatchMode,
+        batch_size: usize,
+        feat_dim: usize,
+        lambda: f32,
+        overlap: bool,
+    ) -> Self {
+        let n = num_inputs(mode);
+        let gather0 = mode != BatchMode::Softmax;
+        let gather1 = gather0 && overlap; // slot 1 exists only for overlap
+        Self {
+            mode,
+            batch_size,
+            feat_dim,
+            lambda,
+            overlap,
+            slots: [
+                StepSlot::new(batch_size, feat_dim, n, gather0),
+                StepSlot::new(batch_size, feat_dim, n, gather1),
+            ],
+            pending: None,
+            y_i32: Vec::new(),
+            gw_dense: Vec::new(),
+            gb_dense: Vec::new(),
+            rows_patched: 0,
+            steps_overlapped: 0,
+        }
+    }
+
+    /// Does this engine run the overlapped protocol? (Softmax always runs
+    /// serially: its dense update conflicts with every row.)
+    pub fn overlap_enabled(&self) -> bool {
+        self.overlap && self.mode != BatchMode::Softmax
+    }
+
+    /// Drop any prefetched step state. Call after mutating the parameters
+    /// outside the engine (e.g. [`StepEngine::apply_batch`] does this
+    /// internally): the prefetched gather would otherwise be stale against
+    /// the serial protocol. The prefetched batch itself is kept — it is
+    /// the next batch of the deterministic stream — and is re-gathered on
+    /// the next step.
+    pub fn invalidate_prefetch(&mut self) {
+        for slot in self.slots.iter_mut() {
+            slot.prepared = false;
+            slot.recycle_lits();
+        }
+    }
+
+    /// Run one full step of the configured protocol; returns the mean
+    /// per-example loss. Bit-identical results with overlap on or off.
+    pub fn step(
+        &mut self,
+        exec: &dyn StepExecutor,
+        params: &mut ParamStore,
+        pool: &Pool,
+        source: &mut BatchSource,
+    ) -> Result<f64> {
+        if !self.overlap_enabled() {
+            let batch = source.next();
+            let result = self.run_serial(exec, params, pool, &batch);
+            source.recycle(batch);
+            return result;
+        }
+        self.step_overlapped(exec, params, pool, source)
+    }
+
+    /// Serial protocol on a caller-supplied batch. Invalidates any
+    /// prefetched slot first (the scatter below would make it stale).
+    pub fn apply_batch(
+        &mut self,
+        exec: &dyn StepExecutor,
+        params: &mut ParamStore,
+        pool: &Pool,
+        batch: &RawBatch,
+    ) -> Result<f64> {
+        self.invalidate_prefetch();
+        self.run_serial(exec, params, pool, batch)
+    }
+
+    /// gather → pack → execute → readback → scatter, all on the calling
+    /// thread (pool-sharded within each stage). The reference protocol
+    /// the overlapped path must match bit for bit.
+    fn run_serial(
+        &mut self,
+        exec: &dyn StepExecutor,
+        params: &mut ParamStore,
+        pool: &Pool,
+        batch: &RawBatch,
+    ) -> Result<f64> {
+        let b = self.batch_size;
+        let k = self.feat_dim;
+        let lam = self.lambda;
+        match self.mode {
+            BatchMode::NsLike | BatchMode::Pairwise => {
+                let mode = self.mode;
+                let slot = &mut self.slots[0];
+                params.gather_par(pool, &batch.pos, &mut slot.wp, &mut slot.bp);
+                params.gather_par(pool, &batch.neg, &mut slot.wn, &mut slot.bn);
+                build_batch_lits(&mut slot.scratch, &mut slot.lits, batch, mode, b, k, lam)?;
+                build_param_lits(slot, b, k)?;
+                let inputs = take_inputs(&mut slot.lits);
+                let result = exec.run_step(&inputs).context(match mode {
+                    BatchMode::NsLike => "ns/nce step",
+                    _ => "ove step",
+                });
+                for lit in inputs {
+                    slot.scratch.recycle(lit);
+                }
+                let outs = result?;
+                let loss = read_f32(&outs[0])?;
+                // read the row gradients into the (now free) gather
+                // buffers instead of allocating — perf pass iteration 3
+                read_f32_into(&outs[1], &mut slot.wp)?;
+                read_f32_into(&outs[2], &mut slot.bp)?;
+                read_f32_into(&outs[3], &mut slot.wn)?;
+                read_f32_into(&outs[4], &mut slot.bn)?;
+                params.apply_sparse_par(pool, &batch.pos, &slot.wp, &slot.bp);
+                params.apply_sparse_par(pool, &batch.neg, &slot.wn, &slot.bn);
+                Ok(loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64)
+            }
+            BatchMode::Softmax => {
+                let c = params.num_classes;
+                // reusable i32 label + dense-gradient scratch (these were
+                // per-step allocations before the engine refactor)
+                self.y_i32.clear();
+                self.y_i32.extend(batch.pos.iter().map(|&v| v as i32));
+                self.gw_dense.resize(c * k, 0.0);
+                self.gb_dense.resize(c, 0.0);
+                let slot = &mut self.slots[0];
+                slot.lits[0] = Some(slot.scratch.lit_f32(&batch.x, &[b, k])?);
+                slot.lits[1] = Some(slot.scratch.lit_f32(&params.w, &[c, k])?);
+                slot.lits[2] = Some(slot.scratch.lit_f32(&params.b, &[c])?);
+                slot.lits[3] = Some(slot.scratch.lit_i32(&self.y_i32, &[b])?);
+                slot.lits[4] = Some(slot.scratch.lit_f32(&[lam], &[1])?);
+                let inputs = take_inputs(&mut slot.lits);
+                let result = exec.run_step(&inputs).context("softmax step");
+                for lit in inputs {
+                    slot.scratch.recycle(lit);
+                }
+                let outs = result?;
+                let loss = read_f32(&outs[0])?;
+                read_f32_into(&outs[1], &mut self.gw_dense)?;
+                read_f32_into(&outs[2], &mut self.gb_dense)?;
+                params.apply_dense_par(pool, &self.gw_dense, &self.gb_dense);
+                Ok(loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64)
+            }
+        }
+    }
+
+    /// Bring `idx`'s slot to "prepared" through the serial stages (cold
+    /// start and post-invalidation re-preparation).
+    fn prepare_slot(&mut self, idx: usize, params: &ParamStore, pool: &Pool) -> Result<()> {
+        let b = self.batch_size;
+        let k = self.feat_dim;
+        let lam = self.lambda;
+        let mode = self.mode;
+        let slot = &mut self.slots[idx];
+        slot.recycle_lits();
+        let batch = slot.batch.as_ref().expect("prepare_slot needs a fetched batch");
+        params.gather_par(pool, &batch.pos, &mut slot.wp, &mut slot.bp);
+        params.gather_par(pool, &batch.neg, &mut slot.wn, &mut slot.bn);
+        build_batch_lits(&mut slot.scratch, &mut slot.lits, batch, mode, b, k, lam)?;
+        build_param_lits(slot, b, k)?;
+        slot.prepared = true;
+        Ok(())
+    }
+
+    /// The overlapped protocol (module docs): execute step t while step
+    /// t+1's gather + batch-literal stages run on the background workers,
+    /// then scatter t and patch t+1's leased rows.
+    fn step_overlapped(
+        &mut self,
+        exec: &dyn StepExecutor,
+        params: &mut ParamStore,
+        pool: &Pool,
+        source: &mut BatchSource,
+    ) -> Result<f64> {
+        let b = self.batch_size;
+        let k = self.feat_dim;
+        let lam = self.lambda;
+        let mode = self.mode;
+
+        // Current step's slot: the prepared pending slot, or a cold start
+        // (first step, or the step after an aborted one — residue from an
+        // abort is dropped; the pipeline tolerates unreturned buffers).
+        let cur_idx = match self.pending.take() {
+            Some(i) => i,
+            None => {
+                for slot in self.slots.iter_mut() {
+                    slot.batch = None;
+                    slot.recycle_lits();
+                    slot.prepared = false;
+                }
+                self.slots[0].batch = Some(source.next());
+                0
+            }
+        };
+        if !self.slots[cur_idx].prepared {
+            // cold start or an external invalidation: serial preparation
+            self.prepare_slot(cur_idx, params, pool)?;
+        }
+        let nxt_idx = 1 - cur_idx;
+        {
+            let nxt = &mut self.slots[nxt_idx];
+            debug_assert!(nxt.batch.is_none() && !nxt.prepared);
+            nxt.batch = Some(source.next());
+            nxt.lit_err = None;
+        }
+
+        let (cur, nxt) = {
+            let (a, z) = self.slots.split_at_mut(1);
+            if cur_idx == 0 {
+                (&mut a[0], &mut z[0])
+            } else {
+                (&mut z[0], &mut a[0])
+            }
+        };
+
+        // Lease step t's update set, then launch t+1's host stages on the
+        // background workers while t executes here. Nothing writes the
+        // parameters until the stage is joined, so the eager gather is
+        // race-free; leased (conflicting) rows are skipped and patched
+        // after the scatter below.
+        let cur_batch = cur.batch.as_ref().expect("prepared slot holds its batch");
+        let lease = params.lease_rows(&[&cur_batch.pos, &cur_batch.neg]);
+        let exec_result;
+        {
+            let nxt_batch: &RawBatch = nxt.batch.as_ref().unwrap();
+            let wp_view = SharedMut::new(&mut nxt.wp);
+            let bp_view = SharedMut::new(&mut nxt.bp);
+            let wn_view = SharedMut::new(&mut nxt.wn);
+            let bn_view = SharedMut::new(&mut nxt.bn);
+            let lits_view = SharedMut::new(nxt.lits.as_mut_slice());
+            let scratch_view = SharedMut::new(std::slice::from_mut(&mut nxt.scratch));
+            let err_view = SharedMut::new(std::slice::from_mut(&mut nxt.lit_err));
+            let params_ref: &ParamStore = params;
+            let shards = pool.stage_shards();
+            let stage = pool.submit_sharded(move |shard| {
+                if shard == 0 {
+                    // SAFETY: stage shard 0 is the only writer of the
+                    // literal array, the scratch and the error cell.
+                    let (scratch, lits, err) = unsafe {
+                        (
+                            &mut scratch_view.slice_mut(0, 1)[0],
+                            lits_view.slice_mut(0, lits_view.len()),
+                            &mut err_view.slice_mut(0, 1)[0],
+                        )
+                    };
+                    if let Err(e) = build_batch_lits(scratch, lits, nxt_batch, mode, b, k, lam)
+                    {
+                        *err = Some(e);
+                    }
+                }
+                params_ref
+                    .gather_leased_shard(&nxt_batch.pos, lease, shards, shard, &wp_view, &bp_view);
+                params_ref
+                    .gather_leased_shard(&nxt_batch.neg, lease, shards, shard, &wn_view, &bn_view);
+            });
+
+            // Device half of step t: the coordinator blocks here — this is
+            // the latency the background stage hides.
+            let inputs = take_inputs(&mut cur.lits);
+            exec_result = exec.run_step(&inputs);
+            stage.join();
+            // retire t's inputs for reuse by step t+2 in this slot
+            for lit in inputs {
+                cur.scratch.recycle(lit);
+            }
+        }
+        cur.prepared = false;
+        // Transient-failure contract: on an execute failure, batch t is
+        // lost without a scatter — exactly as in the serial protocol,
+        // which recycles the failed batch — and the prefetched batch t+1
+        // is handed back as an *unprepared* pending slot, so a retrying
+        // caller resumes on the serial batch stream with the serial
+        // parameters (tests/overlap_parity.rs pins this). The other error
+        // exits are deterministic configuration faults, not transient,
+        // and don't promise cross-protocol parity: a background
+        // literal-build failure also drops step t (its successful execute
+        // is discarded unscattered) but still salvages t+1, and a
+        // readback/seal shape mismatch below returns before t's scatter
+        // and falls back to the cold-start reset on the next call.
+        if let Some(e) = nxt.lit_err.take() {
+            nxt.recycle_lits();
+            self.pending = Some(nxt_idx);
+            source.recycle(cur.batch.take().expect("current slot holds its batch"));
+            return Err(e.context("background literal build"));
+        }
+        let outs = match exec_result {
+            Ok(outs) => outs,
+            Err(e) => {
+                nxt.recycle_lits();
+                self.pending = Some(nxt_idx);
+                source.recycle(cur.batch.take().expect("current slot holds its batch"));
+                return Err(e.context(match mode {
+                    BatchMode::NsLike => "ns/nce step",
+                    _ => "ove step",
+                }));
+            }
+        };
+
+        // Readback + scatter of step t (reusing t's gather buffers).
+        let loss = read_f32(&outs[0])?;
+        read_f32_into(&outs[1], &mut cur.wp)?;
+        read_f32_into(&outs[2], &mut cur.bp)?;
+        read_f32_into(&outs[3], &mut cur.wn)?;
+        read_f32_into(&outs[4], &mut cur.bn)?;
+        params.apply_sparse_par(pool, &cur_batch.pos, &cur.wp, &cur.bp);
+        params.apply_sparse_par(pool, &cur_batch.neg, &cur.wn, &cur.bn);
+        let mean_loss = loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64;
+
+        // Patch t+1's leased rows now that t's scatter has landed, then
+        // seal its parameter literals: the slot is fully prepared.
+        {
+            let nxt_batch = nxt.batch.as_ref().unwrap();
+            self.rows_patched +=
+                params.patch_leased(&nxt_batch.pos, lease, &mut nxt.wp, &mut nxt.bp) as u64;
+            self.rows_patched +=
+                params.patch_leased(&nxt_batch.neg, lease, &mut nxt.wn, &mut nxt.bn) as u64;
+        }
+        build_param_lits(nxt, b, k)?;
+        nxt.prepared = true;
+        self.steps_overlapped += 1;
+
+        // Retire step t's batch buffers to the pipeline and hand over.
+        source.recycle(cur.batch.take().expect("current slot holds its batch"));
+        self.pending = Some(nxt_idx);
+        Ok(mean_loss)
+    }
+}
+
 /// A prepared training run: data, sampler, parameters, compiled step.
 pub struct TrainRun {
     pub cfg: RunConfig,
@@ -230,17 +760,13 @@ pub struct TrainRun {
     pub aux_fit_seconds: f64,
     /// Worker pool for the sharded host stages (gather/scatter/eval).
     pool: Pool,
-    mode: BatchMode,
     source: BatchSource,
+    /// The double-buffered (or serial) stage graph over the step slots.
+    engine: StepEngine,
     step: usize,
     /// Eq. 5 correction cache for the fixed eval subset (built lazily on
     /// the first corrected evaluation; exact because the tree is frozen).
     lpn_cache: Option<LpnCache>,
-    // scratch
-    wp: Vec<f32>,
-    bp: Vec<f32>,
-    wn: Vec<f32>,
-    bn: Vec<f32>,
 }
 
 impl TrainRun {
@@ -347,6 +873,15 @@ impl TrainRun {
         let eval_set = splits.test.subsample(cfg.eval_points, &mut rng.split(2));
         let b = cfg.batch_size;
         let k = data.feat_dim;
+        // Overlap needs at least one background worker to hide the stage
+        // behind the execute; on a serial pool (or single hardware thread)
+        // the protocol degrades to inline calls, so auto turns it off.
+        let overlap = match cfg.overlap {
+            OverlapMode::On => true,
+            OverlapMode::Off => false,
+            OverlapMode::Auto => multi_core && pool.num_workers() > 1,
+        };
+        let engine = StepEngine::new(mode, b, k, cfg.hyper.lambda, overlap);
         Ok(Self {
             cfg: cfg.clone(),
             params: ParamStore::zeros(c, k, cfg.hyper.lr),
@@ -357,14 +892,10 @@ impl TrainRun {
             aux,
             aux_fit_seconds,
             pool,
-            mode,
             source,
+            engine,
             step: 0,
             lpn_cache: None,
-            wp: vec![0f32; b * k],
-            bp: vec![0f32; b],
-            wn: vec![0f32; b * k],
-            bn: vec![0f32; b],
         })
     }
 
@@ -376,77 +907,48 @@ impl TrainRun {
         &self.data
     }
 
-    /// Run one training step; returns the mean per-example loss.
+    /// Run one training step; returns the mean per-example loss. With
+    /// overlap enabled this also advances the prefetched next step (see
+    /// [`StepEngine`]); results are bit-identical either way.
     pub fn step_once(&mut self) -> Result<f64> {
-        let batch = self.source.next();
-        let result = self.apply_batch(&batch);
-        self.source.recycle(batch);
-        let loss = result?;
+        let loss = self.engine.step(
+            self.step_exec.as_ref(),
+            &mut self.params,
+            &self.pool,
+            &mut self.source,
+        )?;
         self.step += 1;
         Ok(loss)
     }
 
-    /// Execute + scatter one assembled batch (public for benches).
+    /// Execute + scatter one assembled batch through the strictly serial
+    /// protocol (public for benches). Any prefetched overlapped step is
+    /// invalidated first and transparently re-gathered on the next
+    /// [`TrainRun::step_once`] — the caller's batch is applied with exact
+    /// serial semantics, and the engine's own batch stream resumes where
+    /// it left off (note the stream runs one batch ahead under overlap,
+    /// so interleaving external batches reorders *between* the two
+    /// streams, never within either).
     pub fn apply_batch(&mut self, batch: &RawBatch) -> Result<f64> {
-        let b = self.cfg.batch_size;
-        let k = self.data.feat_dim;
-        let lam = [self.cfg.hyper.lambda];
-        let x_lit = lit_f32(&batch.x, &[b, k])?;
-        let lam_lit = lit_f32(&lam, &[1])?;
+        self.engine.apply_batch(
+            self.step_exec.as_ref(),
+            &mut self.params,
+            &self.pool,
+            batch,
+        )
+    }
 
-        let mean_loss = match self.mode {
-            BatchMode::NsLike | BatchMode::Pairwise => {
-                self.params
-                    .gather_par(&self.pool, &batch.pos, &mut self.wp, &mut self.bp);
-                self.params
-                    .gather_par(&self.pool, &batch.neg, &mut self.wn, &mut self.bn);
-                let wp = lit_f32(&self.wp, &[b, k])?;
-                let bp = lit_f32(&self.bp, &[b])?;
-                let wn = lit_f32(&self.wn, &[b, k])?;
-                let bn = lit_f32(&self.bn, &[b])?;
-                let outs = if self.mode == BatchMode::NsLike {
-                    let lpn_p = lit_f32(&batch.lpn_p, &[b])?;
-                    let lpn_n = lit_f32(&batch.lpn_n, &[b])?;
-                    self.step_exec
-                        .run(&[x_lit, wp, bp, wn, bn, lpn_p, lpn_n, lam_lit])
-                        .context("ns/nce step")?
-                } else {
-                    let scale = lit_f32(&batch.lpn_n, &[b])?;
-                    self.step_exec
-                        .run(&[x_lit, wp, bp, wn, bn, scale, lam_lit])
-                        .context("ove step")?
-                };
-                let loss = read_f32(&outs[0])?;
-                // read the row gradients into the (now free) gather
-                // buffers instead of allocating — perf pass iteration 3
-                crate::runtime::literal::read_f32_into(&outs[1], &mut self.wp)?;
-                crate::runtime::literal::read_f32_into(&outs[2], &mut self.bp)?;
-                crate::runtime::literal::read_f32_into(&outs[3], &mut self.wn)?;
-                crate::runtime::literal::read_f32_into(&outs[4], &mut self.bn)?;
-                self.params
-                    .apply_sparse_par(&self.pool, &batch.pos, &self.wp, &self.bp);
-                self.params
-                    .apply_sparse_par(&self.pool, &batch.neg, &self.wn, &self.bn);
-                loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64
-            }
-            BatchMode::Softmax => {
-                let c = self.params.num_classes;
-                let w = lit_f32(&self.params.w, &[c, k])?;
-                let bb = lit_f32(&self.params.b, &[c])?;
-                let y: Vec<i32> = batch.pos.iter().map(|&v| v as i32).collect();
-                let y_lit = lit_i32(&y, &[b])?;
-                let outs = self
-                    .step_exec
-                    .run(&[x_lit, w, bb, y_lit, lam_lit])
-                    .context("softmax step")?;
-                let loss = read_f32(&outs[0])?;
-                let gw = read_f32(&outs[1])?;
-                let gb = read_f32(&outs[2])?;
-                self.params.apply_dense_par(&self.pool, &gw, &gb);
-                loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64
-            }
-        };
-        Ok(mean_loss)
+    /// Engine introspection (overlap + patch counters; tests/benches).
+    pub fn engine(&self) -> &StepEngine {
+        &self.engine
+    }
+
+    /// Drop prefetched step state after mutating [`TrainRun::params`]
+    /// directly (the engine re-gathers on the next step). Without this, an
+    /// external parameter edit between overlapped steps would train the
+    /// next step on pre-edit rows.
+    pub fn invalidate_prefetch(&mut self) {
+        self.engine.invalidate_prefetch();
     }
 
     /// Evaluate current parameters on the held-out eval subset, applying

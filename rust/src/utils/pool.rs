@@ -12,6 +12,11 @@
 //! * [`Pool::for_each_span`] — split a contiguous output buffer into
 //!   per-worker spans aligned to an item size; span bounds depend only on
 //!   `(len, workers)`, never on timing.
+//! * [`Pool::submit_sharded`] — the asynchronous variant of `run_sharded`
+//!   for the double-buffered step engine: the stage runs on the background
+//!   workers only, leaving the calling thread free to drive a non-`Send`
+//!   stage (the PJRT execute) concurrently; the returned [`StageHandle`]
+//!   joins the stage before the next pool dispatch.
 //!
 //! Workers are spawned **once** at pool construction and parked on a
 //! condvar between jobs, so a dispatch costs a lock + wakeup (~a few µs)
@@ -193,7 +198,10 @@ impl Pool {
         });
         {
             let mut st = inner.state.lock().unwrap();
-            debug_assert_eq!(st.remaining, 0, "run_sharded is not reentrant");
+            assert_eq!(
+                st.remaining, 0,
+                "pool dispatch while another job or background stage is in flight"
+            );
             st.job = Some(job);
             st.generation = st.generation.wrapping_add(1);
             st.remaining = self.workers - 1;
@@ -242,6 +250,115 @@ impl Pool {
             let span = unsafe { view.slice_mut(lo * item_len, (hi - lo) * item_len) };
             f(lo, span);
         });
+    }
+
+    /// Shard count a background stage ([`Pool::submit_sharded`]) runs
+    /// with: the spawned workers only — the calling thread is deliberately
+    /// not enlisted — so `workers - 1`; 1 for a serial pool, where
+    /// submission degrades to an inline call.
+    pub fn stage_shards(&self) -> usize {
+        if self.inner.is_some() {
+            self.workers - 1
+        } else {
+            1
+        }
+    }
+
+    /// Dispatch `f(shard)` for every `shard in 0..stage_shards()` on the
+    /// background workers and return immediately, leaving the calling
+    /// thread free to run a non-`Send` stage — the PJRT execute — while
+    /// the pool works. The shard map must be a pure function of the data,
+    /// exactly as for [`Pool::run_sharded`].
+    ///
+    /// The returned [`StageHandle`] owns the closure; call
+    /// [`StageHandle::join`] (or drop it) before the next pool dispatch.
+    /// Worker panics re-raise at `join`; a dropped-without-join handle
+    /// leaves the panic flag set for the next dispatcher. On a serial pool
+    /// there is no background thread: `f(0)` runs inline before this
+    /// returns, so the caller's stage protocol stays valid — there is
+    /// simply nothing to overlap.
+    pub fn submit_sharded<'p, F>(&'p self, f: F) -> StageHandle<'p>
+    where
+        F: Fn(usize) + Sync + 'p,
+    {
+        let Some(inner) = &self.inner else {
+            f(0);
+            return StageHandle { inner: None, _job: None, joined: true };
+        };
+        // Workers identify as pool shards 1..workers; shift to stage
+        // shards 0..workers-1 so the caller's shard map covers exactly the
+        // ids that run.
+        let job: Box<dyn Fn(usize) + Sync + 'p> = Box::new(move |shard| f(shard - 1));
+        let trait_obj: &(dyn Fn(usize) + Sync) = &*job;
+        // SAFETY (lifetime erasure): the handle owns the boxed closure (a
+        // stable heap address) and neither `join` nor `drop` returns until
+        // `remaining == 0`, i.e. until no worker can touch the pointer.
+        let jp = JobPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                trait_obj,
+            )
+        });
+        {
+            let mut st = inner.state.lock().unwrap();
+            assert_eq!(
+                st.remaining, 0,
+                "pool dispatch while another job or background stage is in flight"
+            );
+            st.job = Some(jp);
+            st.generation = st.generation.wrapping_add(1);
+            st.remaining = self.workers - 1;
+            inner.work_cv.notify_all();
+        }
+        StageHandle { inner: Some(inner.as_ref()), _job: Some(job), joined: false }
+    }
+}
+
+/// A background stage dispatched by [`Pool::submit_sharded`]. Holds the
+/// stage closure alive for the workers; joining (or dropping) the handle
+/// blocks until every worker has finished, which is what keeps the
+/// lifetime-erased job pointer valid for the workers' whole execution.
+pub struct StageHandle<'p> {
+    /// None for the serial-pool inline fallback (already complete).
+    inner: Option<&'p PoolInner>,
+    /// Owns the closure the workers dereference (stable boxed address).
+    _job: Option<Box<dyn Fn(usize) + Sync + 'p>>,
+    joined: bool,
+}
+
+impl StageHandle<'_> {
+    /// Block until every worker has finished the stage, then re-raise any
+    /// worker panic on the calling thread.
+    pub fn join(mut self) {
+        self.wait();
+        self.joined = true;
+        if let Some(inner) = self.inner {
+            let mut st = inner.state.lock().unwrap();
+            if st.panicked {
+                st.panicked = false;
+                drop(st);
+                panic!("pool worker panicked during background stage");
+            }
+        }
+    }
+
+    fn wait(&self) {
+        if let Some(inner) = self.inner {
+            let mut st = inner.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = inner.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+    }
+}
+
+impl Drop for StageHandle<'_> {
+    fn drop(&mut self) {
+        // Always wait (soundness); panic propagation happens only in
+        // `join` — re-panicking from drop during an unwind would abort.
+        if !self.joined {
+            self.wait();
+        }
     }
 }
 
@@ -442,5 +559,102 @@ mod tests {
     fn from_parallelism_zero_is_auto() {
         assert!(Pool::from_parallelism(0).num_workers() >= 1);
         assert_eq!(Pool::from_parallelism(3).num_workers(), 3);
+    }
+
+    #[test]
+    fn submit_sharded_runs_every_stage_shard_once() {
+        for workers in [1usize, 2, 3, 8] {
+            let pool = Pool::new(workers);
+            let n = pool.stage_shards();
+            assert_eq!(n, if workers == 1 { 1 } else { workers - 1 });
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let handle = pool.submit_sharded(|shard| {
+                hits[shard].fetch_add(1, Ordering::Relaxed);
+            });
+            handle.join();
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn submit_sharded_overlaps_with_caller_work() {
+        // The stage makes progress while the calling thread is busy with
+        // its own (here: trivial) work, and join synchronizes the writes.
+        let pool = Pool::new(4);
+        let mut buf = vec![0usize; 1000];
+        let n = pool.stage_shards();
+        {
+            let view = SharedMut::new(&mut buf);
+            let view_ref = &view;
+            let handle = pool.submit_sharded(move |shard| {
+                for i in 0..1000 {
+                    if i % n == shard {
+                        // SAFETY: index i written only by stage shard i % n.
+                        unsafe { *view_ref.get_mut(i) = i + 1 };
+                    }
+                }
+            });
+            // caller-side "execute" stage
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            assert!(acc > 0);
+            handle.join();
+        }
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i + 1));
+    }
+
+    #[test]
+    fn submit_then_run_sharded_sequence_is_clean() {
+        // A joined stage leaves the pool ready for synchronous dispatches
+        // (the engine's execute → join → scatter sequence).
+        let pool = Pool::new(3);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let h = pool.submit_sharded(|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            h.join();
+            pool.run_sharded(|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 50 * (2 + 3));
+    }
+
+    #[test]
+    fn stage_panic_propagates_at_join() {
+        let pool = Pool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let h = pool.submit_sharded(|shard| {
+                if shard == 0 {
+                    panic!("stage boom");
+                }
+            });
+            h.join();
+        }));
+        assert!(result.is_err());
+        // pool still usable afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run_sharded(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn serial_pool_stage_runs_inline() {
+        let pool = Pool::serial();
+        let hits = AtomicUsize::new(0);
+        let h = pool.submit_sharded(|shard| {
+            assert_eq!(shard, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        // inline fallback: complete before join
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        h.join();
     }
 }

@@ -98,6 +98,31 @@ fn pca_fit_bit_identical_across_worker_counts() {
     }
 }
 
+/// PR 4: the pooled power-iteration matvec engages above its dimension
+/// floor (128); a wide synthetic feature space must still fit to the
+/// exact serial bits at every worker count.
+#[test]
+fn pca_fit_bit_identical_above_parallel_matvec_floor() {
+    let (n, kin) = (700usize, 150usize);
+    let mut rng = Rng::new(41);
+    // low-rank structure + noise so the components are well-defined
+    let dir: Vec<f32> = (0..kin).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+    let data: Vec<f32> = (0..n)
+        .flat_map(|_| {
+            let a = 3.0 * rng.normal();
+            let noise: Vec<f32> = (0..kin).map(|_| 0.3 * rng.normal()).collect();
+            dir.iter().zip(noise).map(move |(d, e)| a * d + e).collect::<Vec<f32>>()
+        })
+        .collect();
+    let reference = Pca::fit(&data, n, kin, 4, 9);
+    for workers in WORKER_COUNTS {
+        let p = Pca::fit_with(&data, n, kin, 4, 9, &Pool::new(workers));
+        assert_eq!(p.mean, reference.mean, "mean differs at workers={workers}");
+        assert_eq!(p.components, reference.components, "components differ at workers={workers}");
+        assert_eq!(p.proj_bias, reference.proj_bias, "proj_bias differs at workers={workers}");
+    }
+}
+
 #[test]
 fn sampler_fit_bit_identical_across_worker_counts() {
     let splits = tiny_splits();

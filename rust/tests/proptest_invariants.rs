@@ -222,6 +222,70 @@ fn prop_sharded_gather_scatter_match_serial() {
     });
 }
 
+/// Row-lease invariant (PR 4): for arbitrary shapes, adversarial pos/neg
+/// label overlap between consecutive steps, and any worker count, the
+/// eager leased gather (run as a background stage, skipping the in-flight
+/// step's rows) followed by the post-scatter patch returns buffers
+/// bit-identical to a serial gather performed after the scatter.
+#[test]
+fn prop_leased_gather_patch_is_bit_identical() {
+    for_all_seeds(10, |rng| {
+        let c = 2 + rng.below(30); // small C ⇒ heavy forced conflicts
+        let k = 1 + rng.below(12);
+        let b = 32 + rng.below(200);
+        let mut p = ParamStore::zeros(c, k, 0.1);
+        // non-trivial starting parameters + accumulators
+        let warm: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let wgw: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let wgb: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        p.apply_sparse(&warm, &wgw, &wgb);
+        // step t's update set: half the label space, duplicated
+        let cur: Vec<u32> = (0..b).map(|_| rng.below(c.div_ceil(2)) as u32).collect();
+        let gw: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        // step t+1's labels: biased into the same half ⇒ dense conflicts
+        let nxt: Vec<u32> = (0..b)
+            .map(|_| {
+                if rng.bernoulli(0.7) {
+                    rng.below(c.div_ceil(2)) as u32
+                } else {
+                    rng.below(c) as u32
+                }
+            })
+            .collect();
+
+        // serial reference: scatter then gather
+        let mut serial = p.clone();
+        serial.apply_sparse(&cur, &gw, &gb);
+        let mut w_ref = vec![0f32; b * k];
+        let mut b_ref = vec![0f32; b];
+        serial.gather(&nxt, &mut w_ref, &mut b_ref);
+
+        // leased protocol at a random worker count
+        let workers = 1 + rng.below(6);
+        let pool = Pool::new(workers);
+        let lease = p.lease_rows(&[&cur]);
+        let mut w_out = vec![f32::NAN; b * k]; // every slot must be written
+        let mut b_out = vec![f32::NAN; b];
+        {
+            let w_view = adv_softmax::utils::SharedMut::new(&mut w_out);
+            let b_view = adv_softmax::utils::SharedMut::new(&mut b_out);
+            let (p_ref, nxt_ref) = (&p, &nxt);
+            let shards = pool.stage_shards();
+            pool.submit_sharded(move |shard| {
+                p_ref.gather_leased_shard(nxt_ref, lease, shards, shard, &w_view, &b_view);
+            })
+            .join();
+        }
+        p.apply_sparse_par(&pool, &cur, &gw, &gb);
+        let patched = p.patch_leased(&nxt, lease, &mut w_out, &mut b_out);
+        let expect = nxt.iter().filter(|&&y| cur.contains(&y)).count();
+        assert_eq!(patched, expect, "C={c} k={k} b={b} workers={workers}");
+        assert_eq!(w_out, w_ref, "C={c} k={k} b={b} workers={workers}");
+        assert_eq!(b_out, b_ref, "C={c} k={k} b={b} workers={workers}");
+    });
+}
+
 /// Sampler invariant: every sampler's log_prob is consistent with its
 /// empirical sampling distribution (KL ≈ 0 on a coarse histogram).
 #[test]

@@ -157,6 +157,35 @@ impl Literal {
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
         Err(Error("stub literal is not a tuple".into()))
     }
+
+    /// **Host-stub extension** (not in the real crate): refill this
+    /// literal in place from raw bytes, reusing its byte buffer's
+    /// allocation. The step engine's literal scratch
+    /// (`runtime::literal::LitScratch`) recycles retired step inputs
+    /// through this; a build against the real `xla` crate must fall back
+    /// to per-call [`Literal::create_from_shape_and_untyped_data`].
+    pub fn refill_untyped(
+        &mut self,
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<()> {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        if n * ty.byte_size() != data.len() {
+            return Err(Error(format!(
+                "literal byte size {} does not match shape {dims:?} ({} elements of {} bytes)",
+                data.len(),
+                n,
+                ty.byte_size()
+            )));
+        }
+        self.ty = ty;
+        self.dims.clear();
+        self.dims.extend_from_slice(dims);
+        self.data.clear();
+        self.data.extend_from_slice(data); // reuses the Vec's capacity
+        Ok(())
+    }
 }
 
 /// Parsed HLO module text (held verbatim; compilation is gated).
@@ -243,5 +272,28 @@ mod tests {
     #[test]
     fn runtime_is_gated() {
         assert!(PjRtClient::cpu().is_err());
+    }
+
+    #[test]
+    fn refill_reuses_storage_and_checks_shape() {
+        let a = [1.0f32, 2.0];
+        let bytes: Vec<u8> = a.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &bytes).unwrap();
+        let before = lit.data.as_ptr();
+        let b = [-3.5f32, 4.25];
+        let bytes2: Vec<u8> = b.iter().flat_map(|v| v.to_le_bytes()).collect();
+        lit.refill_untyped(ElementType::F32, &[2], &bytes2).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), b);
+        assert_eq!(lit.data.as_ptr(), before, "same-size refill must reuse the buffer");
+        // shape/byte mismatch rejected, literal left usable
+        assert!(lit.refill_untyped(ElementType::F32, &[3], &bytes2).is_err());
+        assert_eq!(lit.to_vec::<f32>().unwrap(), b);
+        // retyping to a same-width element type is allowed
+        let ints = [7i32];
+        let ibytes: Vec<u8> = ints.iter().flat_map(|v| v.to_le_bytes()).collect();
+        lit.refill_untyped(ElementType::S32, &[1], &ibytes).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), ints);
+        assert_eq!(lit.dims(), &[1]);
     }
 }
