@@ -11,7 +11,7 @@
 //! the real xla runtime) are unavailable; all host-side cases always run.
 
 use adv_softmax::config::{
-    DatasetPreset, Method, OverlapMode, RunConfig, SyntheticConfig, TreeConfig,
+    DatasetPreset, Method, OverlapMode, RunConfig, ServeConfig, SyntheticConfig, TreeConfig,
 };
 use adv_softmax::data::Splits;
 use adv_softmax::eval::LpnCache;
@@ -19,6 +19,7 @@ use adv_softmax::linalg::Pca;
 use adv_softmax::model::ParamStore;
 use adv_softmax::runtime::{lit_f32, read_f32, Registry};
 use adv_softmax::sampler::{AdversarialSampler, NoiseSampler};
+use adv_softmax::serve::{Predictor, ServingModel};
 use adv_softmax::train::{
     BatchGen, BatchMode, BatchSource, SamplerKind, StepEngine, StepExecutor, TrainRun,
 };
@@ -56,6 +57,12 @@ const KERNEL_PAIRS: [(&str, &str, &str); 2] = [
 /// kernel speedups).
 const OVERLAP_PAIRS: [(&str, &str, &str); 1] =
     [("step_overlap", "train/step(serial)", "train/step(overlapped)")];
+
+/// (summary key, exact-oracle case, beam-retrieval case) for the serving
+/// top-k path (PR 5 acceptance bar: beam ≥ 2× over the exact O(C) sweep
+/// at C ≥ 10k; diffed against the committed baseline like the rest).
+const SERVE_PAIRS: [(&str, &str, &str); 1] =
+    [("serve_beam", "serve/topk(exact)", "serve/topk(beam)")];
 
 #[derive(Default)]
 struct Report {
@@ -123,6 +130,14 @@ impl Report {
                 })
                 .collect(),
         );
+        let serve_speedups = Json::Obj(
+            SERVE_PAIRS
+                .iter()
+                .filter_map(|(key, s, p)| {
+                    self.speedup(s, p).map(|x| (key.to_string(), Json::Num(x)))
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("bench", Json::Str("hot_path".into())),
             ("parallel_workers", Json::Num(PAR as f64)),
@@ -130,6 +145,7 @@ impl Report {
             ("speedups_serial_over_parallel", speedups),
             ("speedups_scalar_over_kernel", kernel_speedups),
             ("speedups_step_overlap", overlap_speedups),
+            ("speedups_serve", serve_speedups),
         ])
     }
 }
@@ -302,6 +318,67 @@ fn main() -> anyhow::Result<()> {
     });
     report.record("eval/lpn_cache(workers=4)", s);
 
+    // --- serving top-k: exact O(C) oracle sweep vs tree-guided beam
+    // search + exact re-rank, at C = 16384 (above the 10k acceptance bar).
+    // Synthetic random tree like the kernel bench (depth 14, forced-free)
+    // with an axis-projection PCA and random classifier rows; raw-ξ
+    // scoring isolates retrieval cost (correction costs land on both
+    // paths identically). 64 queries per iteration amortize scratch setup
+    // the way the request batcher does in serving.
+    {
+        let (sc, sk, saux, sq) = (16_384usize, 64usize, 16usize, 64usize);
+        let mut srng2 = Rng::new(51);
+        let tw: Vec<f32> = (0..(sc - 1) * saux).map(|_| 0.3 * srng2.normal()).collect();
+        let tb: Vec<f32> = (0..sc - 1).map(|_| 0.1 * srng2.normal()).collect();
+        let stree = Tree {
+            aux_dim: saux,
+            num_classes: sc,
+            num_leaves: sc,
+            depth: 14,
+            w: tw,
+            b: tb,
+            forced: vec![0; sc - 1],
+            label_of_leaf: (0..sc as u32).collect(),
+            leaf_of_label: (0..sc as u32).collect(),
+        };
+        let skern = TreeKernel::build(&stree);
+        let spca = Pca {
+            mean: vec![0.0; sk],
+            components: (0..saux)
+                .map(|i| {
+                    let mut row = vec![0f32; sk];
+                    row[i] = 1.0;
+                    row
+                })
+                .collect(),
+            proj_bias: vec![0.0; saux],
+            input_dim: sk,
+            output_dim: saux,
+        };
+        let saux_model = AdversarialSampler { pca: spca, tree: stree, kernel: skern };
+        let model = ServingModel {
+            num_classes: sc,
+            feat_dim: sk,
+            w: (0..sc * sk).map(|_| 0.1 * srng2.normal()).collect(),
+            b: (0..sc).map(|_| 0.01 * srng2.normal()).collect(),
+            aux: Some(saux_model),
+            correct_bias: false,
+        };
+        let queries: Vec<f32> = (0..sq * sk).map(|_| srng2.normal()).collect();
+        let serve_pool = Pool::serial();
+        let exact_pred =
+            Predictor::new(&model, ServeConfig { exact: true, ..Default::default() }).unwrap();
+        let beam_pred = Predictor::new(&model, ServeConfig::default()).unwrap();
+        let s = bench.run("serve/topk(exact)", || {
+            black_box(exact_pred.predict_batch_with(black_box(&queries), sq, &serve_pool));
+        });
+        report.record("serve/topk(exact)", s);
+        let s = bench.run("serve/topk(beam)", || {
+            black_box(beam_pred.predict_batch_with(black_box(&queries), sq, &serve_pool));
+        });
+        report.record("serve/topk(beam)", s);
+    }
+
     // --- step engine: serial protocol vs double-buffered overlap (PR 4).
     // The PJRT execute is gated in this environment, so the device half is
     // a deterministic host mock: the logistic-NS row gradients recomputed
@@ -471,6 +548,11 @@ fn main() -> anyhow::Result<()> {
     for (key, serial, overlapped) in OVERLAP_PAIRS {
         if let Some(x) = report.speedup(serial, overlapped) {
             println!("speedup {key:<16} {x:>6.2}x  (serial vs double-buffered step)");
+        }
+    }
+    for (key, exact, beamed) in SERVE_PAIRS {
+        if let Some(x) = report.speedup(exact, beamed) {
+            println!("speedup {key:<16} {x:>6.2}x  (exact O(C) sweep vs beam top-k)");
         }
     }
     let out = "BENCH_hot_path.json";

@@ -222,6 +222,55 @@ impl TreeConfig {
     }
 }
 
+/// Serving knobs for `repro serve` / `repro predict` (the serving twin of
+/// [`RunConfig`]): beam width of the tree-guided candidate retrieval,
+/// predictions returned per query, and the exact-oracle toggle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Beam width B of the tree descent: frontier nodes kept per level.
+    /// The final level expands to up to 2B leaf candidates, which the
+    /// scorer re-ranks exactly. Ignored when `exact` is set.
+    pub beam: usize,
+    /// Top-k predictions returned per query (clamped to C).
+    pub k: usize,
+    /// Score all C classes (the O(C) oracle sweep) instead of beam
+    /// retrieval. Exact but ~C/(B·log C) times more work per query.
+    pub exact: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { beam: 64, k: 5, exact: false }
+    }
+}
+
+impl ServeConfig {
+    /// Reject knob values that would otherwise fail inside the predictor.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.beam >= 1, "beam width must be at least 1");
+        anyhow::ensure!(self.k >= 1, "top-k must be at least 1");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("beam", Json::Num(self.beam as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("exact", Json::Bool(self.exact)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let cfg = Self {
+            beam: v.get("beam")?.as_usize()?,
+            k: v.get("k")?.as_usize()?,
+            exact: v.get("exact")?.as_bool()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Dataset presets simulating the paper's benchmarks at laptop scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetPreset {
@@ -568,6 +617,18 @@ mod tests {
         cfg.tree.aux_dim = 0;
         assert!(RunConfig::from_json(&cfg.to_json()).is_err());
         assert!(TreeConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn serve_config_validates_and_roundtrips() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert!(!cfg.exact);
+        let back = ServeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, cfg);
+        assert!(ServeConfig { beam: 0, ..cfg }.validate().is_err());
+        assert!(ServeConfig { k: 0, ..cfg }.validate().is_err());
     }
 
     #[test]

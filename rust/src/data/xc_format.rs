@@ -60,15 +60,29 @@ pub fn parse_xc<R: BufRead>(reader: R, feat_dim: usize) -> Result<Dataset> {
         }
         let mut parts = line.split_whitespace();
         let label_field = parts.next().unwrap_or("");
-        // keep the smallest label id (paper's "first label" after sorting)
-        let y = label_field
-            .split(',')
-            .filter_map(|t| t.parse::<u32>().ok())
-            .min();
-        let Some(y) = y else { continue }; // unlabeled -> drop
-        if y as usize >= l {
-            bail!("line {}: label {} out of range (L={})", lineno + 2, y, l);
+        // keep the smallest label id (paper's "first label" after sorting);
+        // tokens that don't parse as labels mean the field is actually a
+        // feature (unlabeled line), but every id that *does* parse must be
+        // in range — a silent out-of-range duplicate would mask corrupt
+        // files (load error, never a downstream panic)
+        let mut y: Option<u32> = None;
+        for tok in label_field.split(',') {
+            let v = match tok.parse::<u32>() {
+                Ok(v) => v,
+                // an all-digit token that overflows u32 is an out-of-range
+                // id, not a feature field — reject it like any other
+                // too-large label instead of silently skipping it
+                Err(_) if !tok.is_empty() && tok.bytes().all(|b| b.is_ascii_digit()) => {
+                    bail!("line {}: label {tok} out of range (L={})", lineno + 2, l)
+                }
+                Err(_) => continue,
+            };
+            if v as usize >= l {
+                bail!("line {}: label {} out of range (L={})", lineno + 2, v, l);
+            }
+            y = Some(y.map_or(v, |m| m.min(v)));
         }
+        let Some(y) = y else { continue }; // unlabeled -> drop
 
         row.iter_mut().for_each(|v| *v = 0.0);
         for tok in parts {
@@ -148,6 +162,49 @@ mod tests {
     fn rejects_label_out_of_range() {
         let s = "1 10 5\n7 0:1.0\n";
         assert!(parse_xc(Cursor::new(s), 8).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_label_in_any_position() {
+        // the smallest label is in range, but a later id is corrupt: must
+        // be a load error, not a silently dropped token
+        let s = "1 10 5\n2,99 0:1.0\n";
+        let err = parse_xc(Cursor::new(s), 8).unwrap_err();
+        assert!(err.to_string().contains("99"), "error names the bad id: {err}");
+        // upper boundary: L itself is out of range, L-1 is fine
+        assert!(parse_xc(Cursor::new("1 10 5\n5 0:1.0\n"), 8).is_err());
+        assert!(parse_xc(Cursor::new("1 10 5\n4 0:1.0\n"), 8).is_ok());
+        // an id too large for u32 must also be a load error, not a
+        // silently skipped token
+        let s = "1 10 5\n3,99999999999999999999 0:1.0\n";
+        assert!(parse_xc(Cursor::new(s), 8).is_err());
+    }
+
+    #[test]
+    fn duplicate_labels_in_one_example_collapse_to_one_point() {
+        let s = "1 10 5\n3,3,3,1,3 0:1.0\n";
+        let d = parse_xc(Cursor::new(s), 8).unwrap();
+        assert_eq!(d.len(), 1, "one example, not one per duplicate");
+        assert_eq!(d.labels, vec![1], "smallest id wins over duplicates");
+    }
+
+    #[test]
+    fn tolerates_blank_lines_and_trailing_whitespace() {
+        // interior blank line, trailing spaces/tabs, no final newline
+        let s = "3 10 5\n\n2 0:1.0   \n\t\n1 1:2.0\t\n4 2:0.5";
+        let d = parse_xc(Cursor::new(s), 8).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.labels, vec![2, 1, 4]);
+        for i in 0..d.len() {
+            let n: f32 = d.x(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn file_of_only_blank_lines_is_a_load_error() {
+        let s = "2 10 5\n\n   \n\t\n";
+        assert!(parse_xc(Cursor::new(s), 8).is_err(), "no labeled points");
     }
 
     #[test]

@@ -9,14 +9,19 @@
 //!
 //! For the proposed method, prediction scores are ξ_y(x) + log p_n(y|x)
 //! (Theorem 1 / Eq. 5); the correction matrix is produced per chunk by the
-//! auxiliary tree's activation sweep.
+//! auxiliary tree's activation sweep. All host-side per-class score math
+//! lives in the shared [`crate::score::Scorer`] core (the reference
+//! evaluator below is orchestration over it); this module adds only the
+//! HLO-chunk plumbing — literal packing, correction-block slicing, and
+//! the streaming LSE merge across chunks.
 
 use crate::data::Dataset;
 use crate::linalg::lse_merge;
 use crate::model::ParamStore;
 use crate::runtime::{lit_f32, lit_i32, read_f32, read_i32, Executable, Registry};
 use crate::sampler::AdversarialSampler;
-use crate::utils::Pool;
+use crate::score::{ScoreScratch, Scorer};
+use crate::utils::{Pool, PAR_MIN_MERGE_ROWS};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
@@ -24,11 +29,6 @@ use std::sync::Arc;
 const PAD_BIAS: f32 = -1.0e30;
 /// Sentinel the eval artifact returns for "true label not in this chunk".
 const NEG_INF_SENTINEL: f32 = -1.0e30;
-/// Below this many batch rows the per-chunk streaming merge stays serial:
-/// each row's merge is ~10 flops, so a pool dispatch (a few µs) only pays
-/// for itself on large eval batches. (The `lpn_blk` slicing loop next to
-/// it moves O(B·Cc) bytes per chunk and parallelizes unconditionally.)
-const PAR_MIN_MERGE_ROWS: usize = 4096;
 
 /// Aggregate predictive metrics over an evaluation set.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -352,12 +352,11 @@ pub fn evaluate_reference(
 /// order — and thus the last ulp of `log_likelihood` — can differ between
 /// worker counts; `accuracy` and `n` are exact everywhere).
 ///
-/// Within each shard, examples run in 8-row blocks: the dense ξ scores go
-/// through the tiled [`crate::linalg::affine_dots_tile`] kernel (each
-/// parameter row streamed once per block) and the Eq. 5 correction through
-/// the tree kernel's batched activation sweep
-/// ([`AdversarialSampler::log_prob_all_block`]). Per-example results are
-/// bit-identical to the naive per-row loops.
+/// Within each shard, examples run in 8-row blocks through the canonical
+/// [`Scorer`] (the tiled ξ sweep plus the Eq. 5 correction via the tree
+/// kernel's batched activation sweep — see [`crate::score`]); per-example
+/// results are bit-identical to the naive per-row loops, and this function
+/// predates the scorer, so its outputs are unchanged bit for bit.
 pub fn evaluate_reference_with(
     params: &ParamStore,
     data: &Dataset,
@@ -369,10 +368,12 @@ pub fn evaluate_reference_with(
     let n = data.len();
     let shards = pool.num_workers();
     let per = n.div_ceil(shards.max(1)).max(1);
+    let scorer = Scorer::from_params(params, corrector);
     let mut partials = vec![(0f64, 0usize); shards];
     {
         let partials_view = crate::utils::SharedMut::new(&mut partials);
         let partials_ref = &partials_view;
+        let scorer_ref = &scorer;
         pool.run_sharded(move |shard| {
             let lo = (shard * per).min(n);
             let hi = ((shard + 1) * per).min(n);
@@ -380,41 +381,19 @@ pub fn evaluate_reference_with(
             let mut correct = 0usize;
             let tile = crate::tree::LANES;
             let mut scores_blk = vec![0f32; tile * c];
-            let mut lpn_blk = vec![0f32; if corrector.is_some() { tile * c } else { 0 }];
-            let mut scratch = crate::sampler::LpnBlockScratch::default();
+            let mut scratch = ScoreScratch::default();
             let mut blo = lo;
             while blo < hi {
                 let bhi = (blo + tile).min(hi);
                 let mb = bhi - blo;
                 let x_blk = &data.features[blo * k..bhi * k];
-                crate::linalg::affine_dots_tile(
-                    &params.w,
-                    &params.b,
-                    k,
-                    x_blk,
-                    mb,
-                    &mut scores_blk[..mb * c],
-                    c,
-                    0,
-                );
-                if let Some(adv) = corrector {
-                    adv.log_prob_all_block_with(x_blk, mb, &mut lpn_blk[..mb * c], &mut scratch);
-                    for (s, l) in scores_blk[..mb * c].iter_mut().zip(lpn_blk[..mb * c].iter())
-                    {
-                        *s += *l;
-                    }
-                }
+                scorer_ref.score_block_with(x_blk, mb, &mut scores_blk[..mb * c], &mut scratch);
                 for j in 0..mb {
                     let scores = &scores_blk[j * c..(j + 1) * c];
-                    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
-                    let lse = m + se.ln();
+                    let lse = crate::score::row_lse(scores);
                     let y = data.y(blo + j) as usize;
                     sum_loglik += (scores[y] - lse) as f64;
-                    let argmax = (0..c)
-                        .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
-                        .unwrap();
-                    if argmax == y {
+                    if crate::score::row_argmax(scores) == y {
                         correct += 1;
                     }
                 }

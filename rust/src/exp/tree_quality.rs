@@ -5,7 +5,8 @@
 use super::{print_table, write_csv};
 use crate::config::{DatasetPreset, SyntheticConfig, TreeConfig};
 use crate::data::Splits;
-use crate::sampler::{AdversarialSampler, FrequencySampler, NoiseSampler, UniformSampler};
+use crate::sampler::{AdversarialSampler, FrequencySampler, UniformSampler};
+use crate::score::mean_noise_loglik;
 use anyhow::Result;
 
 #[derive(Clone, Debug)]
@@ -28,18 +29,12 @@ pub fn run(preset: DatasetPreset, aux_dim: usize, seed: u64) -> Result<TreeQuali
     let freq = FrequencySampler::from_dataset(&splits.train, 1.0)?;
     let uni = UniformSampler::new(splits.train.num_classes);
 
-    let mean_ll = |s: &dyn NoiseSampler| -> f64 {
-        let d = &splits.test;
-        (0..d.len())
-            .map(|i| s.log_prob(d.x(i), d.y(i)) as f64)
-            .sum::<f64>()
-            / d.len() as f64
-    };
+    // per-class scoring routed through the shared scoring core
     let q = TreeQuality {
         fit_seconds,
-        tree_test_ll: mean_ll(&adv),
-        freq_test_ll: mean_ll(&freq),
-        uniform_test_ll: mean_ll(&uni),
+        tree_test_ll: mean_noise_loglik(&adv, &splits.test),
+        freq_test_ll: mean_noise_loglik(&freq, &splits.test),
+        uniform_test_ll: mean_noise_loglik(&uni, &splits.test),
     };
 
     let rows = vec![

@@ -8,10 +8,12 @@
 //!   `python/compile/`, AOT-lowered to HLO text in `artifacts/`.
 //! * **L3 (this crate)** — the coordinator: auxiliary adversarial tree
 //!   model ([`tree`], [`sampler`]), training loop and baselines
-//!   ([`train`]), chunked evaluation with Eq. 5 bias removal ([`eval`]),
-//!   the PJRT runtime ([`runtime`]), datasets ([`data`]) and the
-//!   experiment harness ([`exp`]) that regenerates every table and figure
-//!   of the paper.
+//!   ([`train`]), chunked evaluation with Eq. 5 bias removal ([`eval`])
+//!   over the shared scoring core ([`score`]), the serving subsystem
+//!   ([`serve`]: tree-guided beam top-k + batched predict pipeline), the
+//!   PJRT runtime ([`runtime`]), datasets ([`data`]) and the experiment
+//!   harness ([`exp`]) that regenerates every table and figure of the
+//!   paper.
 //!
 //! Quick start (see `examples/quickstart.rs`):
 //!
@@ -34,6 +36,8 @@ pub mod linalg;
 pub mod model;
 pub mod runtime;
 pub mod sampler;
+pub mod score;
+pub mod serve;
 pub mod train;
 pub mod tree;
 pub mod utils;
@@ -41,7 +45,8 @@ pub mod utils;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::config::{
-        DatasetPreset, Hyper, Method, OverlapMode, RunConfig, SyntheticConfig, TreeConfig,
+        DatasetPreset, Hyper, Method, OverlapMode, RunConfig, ServeConfig, SyntheticConfig,
+        TreeConfig,
     };
     pub use crate::data::{Dataset, Splits};
     pub use crate::eval::{EvalResult, Evaluator};
@@ -50,6 +55,8 @@ pub mod prelude {
     pub use crate::sampler::{
         AdversarialSampler, FrequencySampler, NoiseSampler, UniformSampler,
     };
+    pub use crate::score::Scorer;
+    pub use crate::serve::{Predictor, RequestBatcher, ServingModel};
     pub use crate::train::{LearningCurve, TrainRun};
     pub use crate::tree::Tree;
     pub use crate::utils::Rng;

@@ -12,6 +12,18 @@
 //!                    at every setting, only wallclock changes)
 //!                    [--overlap auto|on|off]  (double-buffered step
 //!                    engine; curves identical either way)
+//!                    [--save-model model.json]  (serving checkpoint:
+//!                    classifier rows + aux tree, no optimizer state)
+//! repro serve        --model model.json (--input queries.txt | --eval
+//!                    --dataset tiny) [--k 5] [--beam 64] [--exact]
+//!                    [--parallelism N] [--out preds.txt]
+//!                    (batched top-k: tree-guided beam retrieval + exact
+//!                    re-rank; --exact runs the O(C) oracle sweep; --eval
+//!                    reports P@1 / recall@k on the held-out test split)
+//! repro predict      --model model.json --input queries.txt [--k 5]
+//!                    [--beam 64] [--exact] [--parallelism N]
+//!                    (one-at-a-time submission through the request
+//!                    batcher; results bit-identical to one big batch)
 //! repro exp table1
 //! repro exp figure1  --dataset wiki-sim --seconds 60 [--methods adv,uniform]
 //! repro exp appendix-a2 --seconds 60
@@ -19,19 +31,24 @@
 //! repro exp tree-quality --dataset wiki-sim
 //! repro exp ablation-bias|ablation-k|ablation-reg --dataset tiny
 //! ```
+//!
+//! Query files for serve/predict hold one query per line: `feat_dim`
+//! whitespace-separated floats (blank lines skipped). Predictions print
+//! one line per query: `label:score` pairs, best first.
 
-use adv_softmax::config::{DatasetPreset, Method, RunConfig, SyntheticConfig};
+use adv_softmax::config::{DatasetPreset, Method, RunConfig, ServeConfig, SyntheticConfig};
 use adv_softmax::data::Splits;
 use adv_softmax::exp;
 use adv_softmax::runtime::Registry;
 use adv_softmax::sampler::AdversarialSampler;
+use adv_softmax::serve::{evaluate_serving, Predictor, RequestBatcher, ServingModel, TopK};
 use adv_softmax::train::TrainRun;
 use adv_softmax::utils::cli::Args;
 use adv_softmax::utils::Pool;
-use anyhow::{bail, Result};
-use std::path::PathBuf;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: repro <data-stats|tree-fit|train|exp> [options]
+const USAGE: &str = "usage: repro <data-stats|tree-fit|train|serve|predict|exp> [options]
   global: --artifacts <dir>
   run `repro help` for the full command list (also in rust/src/main.rs)";
 
@@ -48,6 +65,8 @@ fn main() -> Result<()> {
         Some("data-stats") => data_stats(&args),
         Some("tree-fit") => tree_fit(&args),
         Some("train") => train(&args),
+        Some("serve") => serve(&args),
+        Some("predict") => predict(&args),
         Some("exp") => run_exp(&args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -136,6 +155,7 @@ fn train(args: &Args) -> Result<()> {
         }
     };
     let out: Option<PathBuf> = args.get_opt("out")?;
+    let save_model: Option<PathBuf> = args.get_opt("save-model")?;
     args.finish()?;
 
     let splits = Splits::synthetic(&SyntheticConfig::preset(cfg.dataset));
@@ -151,6 +171,158 @@ fn train(args: &Args) -> Result<()> {
     if let Some(path) = out {
         curve.append_csv(&path)?;
         println!("curve appended to {path:?}");
+    }
+    if let Some(path) = save_model {
+        run.serving_model().save(&path)?;
+        println!("serving model saved to {path:?}");
+    }
+    Ok(())
+}
+
+/// Parse a serve/predict query file: one query per line, `feat_dim`
+/// whitespace-separated floats; blank lines are skipped.
+fn read_queries(path: &Path, feat_dim: usize) -> Result<(Vec<f32>, usize)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut xs = Vec::new();
+    let mut m = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let before = xs.len();
+        for tok in line.split_whitespace() {
+            let v: f32 = tok
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: {tok:?}: {e}", lineno + 1))?;
+            xs.push(v);
+        }
+        anyhow::ensure!(
+            xs.len() - before == feat_dim,
+            "line {}: {} features, model expects {}",
+            lineno + 1,
+            xs.len() - before,
+            feat_dim
+        );
+        m += 1;
+    }
+    anyhow::ensure!(m > 0, "no queries in {path:?}");
+    Ok((xs, m))
+}
+
+fn format_topk(t: &TopK) -> String {
+    t.labels
+        .iter()
+        .zip(t.scores.iter())
+        .map(|(y, s)| format!("{y}:{s:.4}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn serve_config_from(args: &Args) -> Result<ServeConfig> {
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        beam: args.get("beam", defaults.beam)?,
+        k: args.get("k", defaults.k)?,
+        exact: args.flag("exact")?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model_path: PathBuf = args.require("model")?;
+    let cfg = serve_config_from(args)?;
+    let parallelism: usize = args.get("parallelism", 0)?;
+    let input: Option<PathBuf> = args.get_opt("input")?;
+    let do_eval = args.flag("eval")?;
+    let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
+    let out: Option<PathBuf> = args.get_opt("out")?;
+    args.finish()?;
+    anyhow::ensure!(
+        do_eval || input.is_some(),
+        "serve needs --input <queries.txt> and/or --eval"
+    );
+
+    let model = ServingModel::load(&model_path)?;
+    let pred = Predictor::new(&model, cfg)?;
+    let pool = Pool::from_parallelism(parallelism);
+    println!(
+        "model: C={} K={} aux={} correction={}  mode={}  k={}",
+        model.num_classes,
+        model.feat_dim,
+        model.aux.is_some(),
+        model.correct_bias,
+        if cfg.exact { "exact".to_string() } else { format!("beam={}", cfg.beam) },
+        pred.k(),
+    );
+
+    if do_eval {
+        let splits = Splits::synthetic(&SyntheticConfig::preset(dataset));
+        anyhow::ensure!(
+            splits.test.feat_dim == model.feat_dim,
+            "dataset {dataset} has K={} but the model expects K={}",
+            splits.test.feat_dim,
+            model.feat_dim
+        );
+        let t0 = std::time::Instant::now();
+        let metrics = evaluate_serving(&pred, &splits.test, &pool);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "eval {dataset} ({} queries): P@1 {:.4}  recall@{} {:.4}  \
+             ({:.0} queries/s over {} workers)",
+            metrics.n,
+            metrics.p_at_1,
+            metrics.k,
+            metrics.recall_at_k,
+            metrics.n as f64 / dt.max(1e-9),
+            pool.num_workers(),
+        );
+    }
+
+    if let Some(path) = input {
+        let (xs, m) = read_queries(&path, model.feat_dim)?;
+        let t0 = std::time::Instant::now();
+        let preds = pred.predict_batch_with(&xs, m, &pool);
+        let dt = t0.elapsed().as_secs_f64();
+        let mut text = String::new();
+        for t in &preds {
+            text.push_str(&format_topk(t));
+            text.push('\n');
+        }
+        match out {
+            Some(p) => {
+                std::fs::write(&p, &text)?;
+                println!(
+                    "{m} predictions written to {p:?} ({:.0} queries/s)",
+                    m as f64 / dt.max(1e-9)
+                );
+            }
+            None => print!("{text}"),
+        }
+    }
+    Ok(())
+}
+
+fn predict(args: &Args) -> Result<()> {
+    let model_path: PathBuf = args.require("model")?;
+    let input: PathBuf = args.require("input")?;
+    let cfg = serve_config_from(args)?;
+    let parallelism: usize = args.get("parallelism", 0)?;
+    args.finish()?;
+
+    let model = ServingModel::load(&model_path)?;
+    let pred = Predictor::new(&model, cfg)?;
+    let pool = Pool::from_parallelism(parallelism);
+    let (xs, m) = read_queries(&input, model.feat_dim)?;
+    // one-at-a-time submission coalesced by the request batcher — results
+    // are bit-identical to one big batch and come back in submission order
+    let mut batcher = RequestBatcher::new(&pred);
+    for j in 0..m {
+        batcher.submit(&xs[j * model.feat_dim..(j + 1) * model.feat_dim]);
+    }
+    for t in batcher.flush_with(&pool) {
+        println!("{}", format_topk(&t));
     }
     Ok(())
 }

@@ -90,7 +90,18 @@ pub struct FrequencySampler {
 }
 
 impl FrequencySampler {
+    /// Build from a dataset's empirical label counts. `smoothing` must be
+    /// finite and non-negative — validated here with a clear error, since
+    /// a NaN/∞/negative value would otherwise surface downstream as NaN
+    /// alias weights or an opaque alias-table rejection far from the
+    /// misconfigured call site. (`smoothing = 0` is valid: unseen labels
+    /// then get log-probability −∞, which Eq. 6 callers must smooth away
+    /// themselves.)
     pub fn from_dataset(data: &Dataset, smoothing: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            smoothing.is_finite() && smoothing >= 0.0,
+            "frequency smoothing must be finite and >= 0, got {smoothing}"
+        );
         let counts = data.label_counts();
         let weights: Vec<f64> = counts.iter().map(|&c| c as f64 + smoothing).collect();
         Ok(Self { table: AliasTable::new(&weights)? })
@@ -381,6 +392,22 @@ mod tests {
             assert_eq!(s0.log_prob(&[], unseen as u32), f32::NEG_INFINITY);
             assert!(s1.log_prob(&[], unseen as u32).is_finite());
         }
+    }
+
+    #[test]
+    fn frequency_sampler_rejects_degenerate_smoothing() {
+        let d = tiny_splits().train;
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -1e-9] {
+            let err = FrequencySampler::from_dataset(&d, bad)
+                .err()
+                .unwrap_or_else(|| panic!("smoothing {bad} must be rejected"));
+            assert!(
+                err.to_string().contains("smoothing"),
+                "error must name the knob: {err}"
+            );
+        }
+        assert!(FrequencySampler::from_dataset(&d, 0.0).is_ok());
+        assert!(FrequencySampler::from_dataset(&d, 2.5).is_ok());
     }
 
     #[test]

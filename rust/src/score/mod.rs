@@ -1,0 +1,392 @@
+//! Shared per-class scoring core.
+//!
+//! Before this module, the Eq. 5 prediction score
+//! `ξ_y(x) + log p_n(y|x)` (Theorem 1) was assembled in three places: the
+//! pure-rust reference evaluator's dense sweep, the chunked HLO
+//! evaluator's correction-block plumbing, and the experiment harness via
+//! the training run. [`Scorer`] is now the one canonical host-side
+//! implementation: the dense ξ sweep runs through the tiled
+//! [`crate::linalg::affine_dots_tile`] kernel and the correction through
+//! the auxiliary sampler's batched activation sweep
+//! ([`AdversarialSampler::log_prob_all_block_with`]), in exactly the
+//! floating-point order the evaluator always used — so routing the eval
+//! and serving paths through the scorer changes no output bit.
+//!
+//! The serving subsystem ([`crate::serve`]) builds on the same core:
+//! [`Scorer::score_candidates_with`] re-ranks a tree-retrieved candidate
+//! set with the identical per-score math (canonical [`crate::linalg::dot`]
+//! order, root→leaf correction accumulation), so a beam-retrieved
+//! candidate's score is bit-identical to the same label's score in the
+//! exact O(C) sweep — the property that makes beam + re-rank reproduce
+//! the exact oracle's ranking whenever the candidate set covers it.
+
+use crate::data::Dataset;
+use crate::linalg::{affine_dots_tile, dot};
+use crate::model::ParamStore;
+use crate::sampler::{AdversarialSampler, LpnBlockScratch, NoiseSampler};
+
+/// Reusable buffers for [`Scorer`] sweeps: the correction block (`m · C`
+/// floats, grown once) plus the sampler's projection/activation scratch
+/// and a projected-features row for candidate scoring.
+#[derive(Default)]
+pub struct ScoreScratch {
+    lpn: Vec<f32>,
+    lpn_blk: LpnBlockScratch,
+    proj: Vec<f32>,
+}
+
+/// Canonical per-class scorer over a dense affine classifier
+/// `ξ_y(x) = w_y·x + b_y`, optionally bias-corrected per Eq. 5 to
+/// `ξ_y(x) + log p_n(y|x)`.
+///
+/// Borrows raw parameter slices so it serves both the live training
+/// [`ParamStore`] ([`Scorer::from_params`]) and the optimizer-free
+/// [`crate::serve::ServingModel`] snapshot.
+pub struct Scorer<'a> {
+    w: &'a [f32],
+    b: &'a [f32],
+    pub num_classes: usize,
+    pub feat_dim: usize,
+    corrector: Option<&'a AdversarialSampler>,
+}
+
+impl<'a> Scorer<'a> {
+    /// Scorer over raw row-major `[C, K]` weights and `[C]` biases.
+    /// `corrector = Some` applies the Eq. 5 correction to every score.
+    pub fn new(
+        w: &'a [f32],
+        b: &'a [f32],
+        feat_dim: usize,
+        corrector: Option<&'a AdversarialSampler>,
+    ) -> Self {
+        assert!(feat_dim > 0, "scorer needs a positive feature dim");
+        assert_eq!(w.len(), b.len() * feat_dim, "weight/bias shape mismatch");
+        if let Some(adv) = corrector {
+            assert_eq!(
+                adv.tree.num_classes,
+                b.len(),
+                "corrector label space must match the classifier"
+            );
+            assert_eq!(
+                adv.pca.input_dim, feat_dim,
+                "corrector PCA input dim must match the classifier feature dim"
+            );
+        }
+        Self { w, b, num_classes: b.len(), feat_dim, corrector }
+    }
+
+    /// Scorer over a training parameter store.
+    pub fn from_params(
+        params: &'a ParamStore,
+        corrector: Option<&'a AdversarialSampler>,
+    ) -> Self {
+        Self::new(&params.w, &params.b, params.feat_dim, corrector)
+    }
+
+    /// Does this scorer apply the Eq. 5 correction?
+    pub fn is_corrected(&self) -> bool {
+        self.corrector.is_some()
+    }
+
+    /// Fill `out[j * C..(j + 1) * C]` with the scores of all C classes for
+    /// an `[m, K]` block of raw feature rows. The ξ sweep runs through the
+    /// tiled [`affine_dots_tile`] kernel and the correction through the
+    /// sampler's batched activation sweep, both documented bit-identical
+    /// per row to their scalar forms — so results do not depend on how
+    /// callers block rows. Callers looping over many rows should block at
+    /// [`crate::tree::LANES`] to bound the correction scratch (`m·C`
+    /// floats) like the eval sweeps do.
+    pub fn score_block_with(
+        &self,
+        xs: &[f32],
+        m: usize,
+        out: &mut [f32],
+        scratch: &mut ScoreScratch,
+    ) {
+        let c = self.num_classes;
+        let k = self.feat_dim;
+        debug_assert_eq!(xs.len(), m * k);
+        debug_assert_eq!(out.len(), m * c);
+        affine_dots_tile(self.w, self.b, k, xs, m, out, c, 0);
+        if let Some(adv) = self.corrector {
+            if scratch.lpn.len() < m * c {
+                scratch.lpn.resize(m * c, 0.0);
+            }
+            adv.log_prob_all_block_with(xs, m, &mut scratch.lpn[..m * c], &mut scratch.lpn_blk);
+            for (s, l) in out.iter_mut().zip(scratch.lpn[..m * c].iter()) {
+                *s += *l;
+            }
+        }
+    }
+
+    /// Scores of all C classes for one raw feature row (the m = 1 block).
+    pub fn score_all_with(&self, x: &[f32], out: &mut [f32], scratch: &mut ScoreScratch) {
+        self.score_block_with(x, 1, out, scratch);
+    }
+
+    /// Exact scores for an explicit candidate set (the serving re-rank):
+    /// `out[i]` = score of `labels[i]` for raw feature row `x`. Each score
+    /// is bit-identical to the same label's entry in a dense
+    /// [`Scorer::score_block_with`] sweep — the ξ dot uses the canonical
+    /// [`dot`] order [`affine_dots_tile`] uses per score, and the
+    /// correction walks the tree root→leaf in the same accumulation order
+    /// as the sweep's prefix pass ([`crate::tree::Tree::log_prob`] docs).
+    pub fn score_candidates_with(
+        &self,
+        x: &[f32],
+        labels: &[u32],
+        out: &mut [f32],
+        scratch: &mut ScoreScratch,
+    ) {
+        if let Some(adv) = self.corrector {
+            let ka = adv.aux_dim();
+            if scratch.proj.len() < ka {
+                scratch.proj.resize(ka, 0.0);
+            }
+            adv.project(x, &mut scratch.proj[..ka]);
+            self.score_candidates_projected(x, &scratch.proj[..ka], labels, out);
+        } else {
+            self.score_candidates_projected(x, &[], labels, out);
+        }
+    }
+
+    /// [`Scorer::score_candidates_with`] with a caller-supplied projection
+    /// of `x` into the corrector's aux space (`proj` is ignored when the
+    /// scorer is uncorrected). The serving beam path projects once for the
+    /// tree descent and reuses that projection here, instead of paying the
+    /// O(aux_dim · K) PCA projection twice per query.
+    pub fn score_candidates_projected(
+        &self,
+        x: &[f32],
+        proj: &[f32],
+        labels: &[u32],
+        out: &mut [f32],
+    ) {
+        let k = self.feat_dim;
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(out.len(), labels.len());
+        for (o, &y) in out.iter_mut().zip(labels.iter()) {
+            let yu = y as usize;
+            debug_assert!(yu < self.num_classes);
+            *o = dot(&self.w[yu * k..(yu + 1) * k], x) + self.b[yu];
+        }
+        if let Some(adv) = self.corrector {
+            debug_assert_eq!(proj.len(), adv.aux_dim());
+            for (o, &y) in out.iter_mut().zip(labels.iter()) {
+                *o += adv.tree.log_prob(proj, y);
+            }
+        }
+    }
+}
+
+/// Streaming-free log-sum-exp of one dense score row, in the reference
+/// evaluator's exact floating-point order (max fold, then the sum of
+/// shifted exps in index order).
+#[inline]
+pub fn row_lse(scores: &[f32]) -> f32 {
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+    m + se.ln()
+}
+
+/// Argmax of one dense score row, in the reference evaluator's exact
+/// semantics (ties resolve to the largest index, as `max_by` does).
+#[inline]
+pub fn row_argmax(scores: &[f32]) -> usize {
+    (0..scores.len())
+        .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
+        .expect("argmax of an empty score row")
+}
+
+/// Insert `(y, s)` into `out`, kept sorted by (score desc, label asc) and
+/// truncated to `k` entries. The tie-break makes top-k selection a pure
+/// function of the score set — identical at any parallelism and for any
+/// insertion order of distinct labels.
+pub fn push_topk(out: &mut Vec<(u32, f32)>, k: usize, y: u32, s: f32) {
+    if k == 0 {
+        return;
+    }
+    if out.len() == k {
+        let (wy, ws) = out[k - 1];
+        if !(s > ws || (s == ws && y < wy)) {
+            return;
+        }
+        out.pop();
+    }
+    let pos = out.partition_point(|&(py, ps)| ps > s || (ps == s && py < y));
+    out.insert(pos, (y, s));
+}
+
+/// Deterministic top-k over a dense per-class score row: highest score
+/// first, ties toward the smaller label id. O(C · k); k is tiny.
+pub fn topk_from_scores(scores: &[f32], k: usize, out: &mut Vec<(u32, f32)>) {
+    out.clear();
+    for (y, &s) in scores.iter().enumerate() {
+        push_topk(out, k, y as u32, s);
+    }
+}
+
+/// [`topk_from_scores`] over sparse (label, score) pairs (the re-rank of a
+/// retrieved candidate set). Same ordering semantics.
+pub fn topk_from_pairs(
+    pairs: impl Iterator<Item = (u32, f32)>,
+    k: usize,
+    out: &mut Vec<(u32, f32)>,
+) {
+    out.clear();
+    for (y, s) in pairs {
+        push_topk(out, k, y, s);
+    }
+}
+
+/// Mean held-out log-likelihood of a noise model (one `log_prob` per
+/// point). The experiment harness's aux-model quality table routes its
+/// per-class scoring through here instead of open-coding the sweep.
+pub fn mean_noise_loglik(sampler: &dyn NoiseSampler, data: &Dataset) -> f64 {
+    let n = data.len();
+    assert!(n > 0, "empty evaluation set");
+    (0..n)
+        .map(|i| sampler.log_prob(data.x(i), data.y(i)) as f64)
+        .sum::<f64>()
+        / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetPreset, SyntheticConfig, TreeConfig};
+    use crate::data::Splits;
+    use crate::utils::Rng;
+
+    fn toy_params(c: usize, k: usize, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut p = ParamStore::zeros(c, k, 0.1);
+        p.w.iter_mut().for_each(|v| *v = rng.normal());
+        p.b.iter_mut().for_each(|v| *v = 0.1 * rng.normal());
+        p
+    }
+
+    #[test]
+    fn uncorrected_block_matches_naive_dots() {
+        let (c, k, m) = (17, 9, 11);
+        let p = toy_params(c, k, 1);
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let scorer = Scorer::from_params(&p, None);
+        let mut out = vec![0f32; m * c];
+        scorer.score_block_with(&xs, m, &mut out, &mut ScoreScratch::default());
+        for j in 0..m {
+            for y in 0..c {
+                let expect =
+                    dot(&p.w[y * k..(y + 1) * k], &xs[j * k..(j + 1) * k]) + p.b[y];
+                assert_eq!(out[j * c + y].to_bits(), expect.to_bits(), "row {j} label {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrected_candidates_match_dense_sweep_bitwise() {
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 2048;
+        cfg.n_test = 64;
+        let splits = Splits::synthetic(&cfg);
+        let tcfg = TreeConfig { aux_dim: 6, ..Default::default() };
+        let (adv, _) = AdversarialSampler::fit(&splits.train, &tcfg, 5);
+        let c = splits.train.num_classes;
+        let k = splits.train.feat_dim;
+        let p = toy_params(c, k, 3);
+        let scorer = Scorer::from_params(&p, Some(&adv));
+        let mut scratch = ScoreScratch::default();
+        let mut dense = vec![0f32; c];
+        let labels: Vec<u32> = (0..c as u32).step_by(7).collect();
+        let mut sparse = vec![0f32; labels.len()];
+        for i in 0..8 {
+            let x = splits.test.x(i);
+            scorer.score_all_with(x, &mut dense, &mut scratch);
+            scorer.score_candidates_with(x, &labels, &mut sparse, &mut scratch);
+            for (s, &y) in sparse.iter().zip(labels.iter()) {
+                assert_eq!(
+                    s.to_bits(),
+                    dense[y as usize].to_bits(),
+                    "row {i} label {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_rows_are_batch_size_invariant() {
+        // scoring a row alone or inside a block must agree bit for bit —
+        // the contract behind batched-vs-one-at-a-time serving parity
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 2048;
+        cfg.n_test = 40;
+        let splits = Splits::synthetic(&cfg);
+        let tcfg = TreeConfig { aux_dim: 6, ..Default::default() };
+        let (adv, _) = AdversarialSampler::fit(&splits.train, &tcfg, 5);
+        let c = splits.train.num_classes;
+        let k = splits.train.feat_dim;
+        let p = toy_params(c, k, 4);
+        let scorer = Scorer::from_params(&p, Some(&adv));
+        let mut scratch = ScoreScratch::default();
+        let m = 11; // ragged vs the 8-wide tile
+        let xs = &splits.test.features[..m * k];
+        let mut block = vec![0f32; m * c];
+        scorer.score_block_with(xs, m, &mut block, &mut scratch);
+        let mut single = vec![0f32; c];
+        for j in 0..m {
+            scorer.score_all_with(&xs[j * k..(j + 1) * k], &mut single, &mut scratch);
+            for y in 0..c {
+                assert_eq!(
+                    single[y].to_bits(),
+                    block[j * c + y].to_bits(),
+                    "row {j} label {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_orders_and_breaks_ties_deterministically() {
+        let scores = [1.0f32, 3.0, 3.0, -1.0, 2.0];
+        let mut out = Vec::new();
+        topk_from_scores(&scores, 3, &mut out);
+        assert_eq!(out, vec![(1, 3.0), (2, 3.0), (4, 2.0)]);
+        // pair form with a different insertion order picks the same set
+        let mut out2 = Vec::new();
+        topk_from_pairs(
+            [(4u32, 2.0f32), (2, 3.0), (0, 1.0), (1, 3.0), (3, -1.0)].into_iter(),
+            3,
+            &mut out2,
+        );
+        assert_eq!(out, out2);
+        // k larger than the candidate set returns everything, sorted
+        let mut all = Vec::new();
+        topk_from_scores(&scores, 10, &mut all);
+        assert_eq!(all.len(), 5);
+        assert_eq!(all[0], (1, 3.0));
+        assert_eq!(all[4], (3, -1.0));
+    }
+
+    #[test]
+    fn row_reductions_match_naive() {
+        let mut rng = Rng::new(9);
+        let scores: Vec<f32> = (0..33).map(|_| 3.0 * rng.normal()).collect();
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+        assert_eq!(row_lse(&scores).to_bits(), (m + se.ln()).to_bits());
+        let am = row_argmax(&scores);
+        assert!(scores.iter().all(|&s| s <= scores[am]));
+    }
+
+    #[test]
+    fn mean_noise_loglik_matches_manual_loop() {
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 2048;
+        let splits = Splits::synthetic(&cfg);
+        let s = crate::sampler::UniformSampler::new(splits.train.num_classes);
+        let got = mean_noise_loglik(&s, &splits.test);
+        let expect = -(splits.train.num_classes as f64).ln();
+        assert!((got - expect).abs() < 1e-6, "{got} vs {expect}");
+    }
+}

@@ -1,0 +1,639 @@
+//! Serving subsystem: immutable model snapshots, tree-guided top-k
+//! prediction, and a batched predict pipeline over the worker pool.
+//!
+//! The paper's auxiliary tree answers class-probability queries in
+//! O(log C) — exactly the structure serving needs. Prediction is the
+//! retrieve-then-rank recipe used by production extreme-classification
+//! systems: a beam-search descent of the tree
+//! ([`crate::tree::TreeKernel::beam_topk`]) proposes the `2·beam` most
+//! probable labels under `q(·|x)` in O(beam · d · log C), and the trained
+//! classifier rows re-rank the candidates **exactly** through the shared
+//! [`Scorer`] core — each candidate's score is bit-identical to the same
+//! label's entry in the exact O(C) sweep, so beam + re-rank reproduces
+//! the oracle's ranking whenever the candidate set covers it. The exact
+//! sweep stays available as the oracle ([`ServeConfig::exact`]).
+//!
+//! # Determinism contract
+//!
+//! Prediction is a pure per-query function: rows shard over the [`Pool`]
+//! in contiguous spans with one writer per row and no cross-row reduction,
+//! so results are **bit-identical** at every `parallelism` setting and for
+//! batched vs one-at-a-time submission — the same discipline as the
+//! training hot path (PR 1–4). The [`RequestBatcher`] coalesces
+//! individually submitted queries into one block (lane-width tiles inside
+//! the scorer) and returns results in submission order.
+//!
+//! # Pieces
+//!
+//! * [`ServingModel`] — an immutable checkpoint: classifier rows (no
+//!   Adagrad state) + the auxiliary sampler (PCA + tree + kernel),
+//!   JSON-serializable (`repro train --save-model` writes one).
+//! * [`Predictor`] — top-k prediction over a model under a
+//!   [`ServeConfig`]; [`Predictor::predict_batch_with`] is the batched
+//!   pool-sharded entry point.
+//! * [`RequestBatcher`] — request coalescing for one-at-a-time callers.
+//! * [`evaluate_serving`] — P@1 / recall@k on held-out data
+//!   (`repro serve --eval`).
+
+use crate::config::ServeConfig;
+use crate::data::Dataset;
+use crate::model::ParamStore;
+use crate::sampler::AdversarialSampler;
+use crate::score::{self, ScoreScratch, Scorer};
+use crate::tree::{BeamScratch, LANES};
+use crate::utils::json::Json;
+use crate::utils::{Pool, SharedMut, PAR_MIN_MERGE_ROWS};
+use anyhow::Result;
+use std::path::Path;
+
+/// Label slot left unfilled when a query yields fewer than k candidates
+/// (possible only when `2·beam < k`).
+const PAD_LABEL: u32 = u32::MAX;
+
+/// An immutable serving checkpoint: the trained classifier rows plus the
+/// frozen auxiliary model, with no optimizer state. Loaded once, shared
+/// read-only across every worker of the predict pipeline.
+#[derive(Clone, Debug)]
+pub struct ServingModel {
+    pub num_classes: usize,
+    pub feat_dim: usize,
+    /// Row-major `[C, K]` classifier weights.
+    pub w: Vec<f32>,
+    /// `[C]` classifier biases.
+    pub b: Vec<f32>,
+    /// Auxiliary model (PCA + tree + kernel): candidate retrieval for the
+    /// beam path, Eq. 5 correction when `correct_bias` is set.
+    pub aux: Option<AdversarialSampler>,
+    /// Score with the Eq. 5 correction `ξ + log p_n` (true for models
+    /// trained with the adversarial method — `Method::corrects_bias`).
+    pub correct_bias: bool,
+}
+
+impl ServingModel {
+    /// Snapshot a training run's parameters + auxiliary model.
+    pub fn from_parts(
+        params: &ParamStore,
+        aux: Option<&AdversarialSampler>,
+        correct_bias: bool,
+    ) -> Self {
+        assert!(
+            !correct_bias || aux.is_some(),
+            "bias correction needs the auxiliary model"
+        );
+        Self {
+            num_classes: params.num_classes,
+            feat_dim: params.feat_dim,
+            w: params.w.clone(),
+            b: params.b.clone(),
+            aux: aux.cloned(),
+            correct_bias,
+        }
+    }
+
+    /// The model's canonical scorer (corrected iff `correct_bias`).
+    pub fn scorer(&self) -> Scorer<'_> {
+        let corrector = if self.correct_bias { self.aux.as_ref() } else { None };
+        Scorer::new(&self.w, &self.b, self.feat_dim, corrector)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_classes", Json::Num(self.num_classes as f64)),
+            ("feat_dim", Json::Num(self.feat_dim as f64)),
+            ("w", Json::arr_f32(&self.w)),
+            ("b", Json::arr_f32(&self.b)),
+            ("correct_bias", Json::Bool(self.correct_bias)),
+            (
+                "aux",
+                match &self.aux {
+                    Some(adv) => adv.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let num_classes = v.get("num_classes")?.as_usize()?;
+        let feat_dim = v.get("feat_dim")?.as_usize()?;
+        let aux = match v.opt("aux") {
+            None | Some(Json::Null) => None,
+            Some(a) => Some(AdversarialSampler::from_json(a)?),
+        };
+        let m = Self {
+            num_classes,
+            feat_dim,
+            w: v.get("w")?.to_vec_f32()?,
+            b: v.get("b")?.to_vec_f32()?,
+            correct_bias: v.get("correct_bias")?.as_bool()?,
+            aux,
+        };
+        anyhow::ensure!(m.num_classes >= 1 && m.feat_dim >= 1, "empty model shape");
+        anyhow::ensure!(
+            m.w.len() == m.num_classes * m.feat_dim,
+            "w size {} != C*K = {}",
+            m.w.len(),
+            m.num_classes * m.feat_dim
+        );
+        anyhow::ensure!(
+            m.b.len() == m.num_classes,
+            "b size {} != C = {}",
+            m.b.len(),
+            m.num_classes
+        );
+        if let Some(adv) = &m.aux {
+            anyhow::ensure!(
+                adv.pca.input_dim == m.feat_dim,
+                "aux PCA input dim {} != model feat dim {}",
+                adv.pca.input_dim,
+                m.feat_dim
+            );
+            anyhow::ensure!(
+                adv.tree.num_classes == m.num_classes,
+                "aux tree C {} != model C {}",
+                adv.tree.num_classes,
+                m.num_classes
+            );
+        }
+        anyhow::ensure!(
+            !m.correct_bias || m.aux.is_some(),
+            "correct_bias set but checkpoint has no auxiliary model"
+        );
+        Ok(m)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        Ok(std::fs::write(path, self.to_json().to_string())?)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+/// Top-k predictions for one query: labels with their scores, best first
+/// (ties toward the smaller label id).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopK {
+    pub labels: Vec<u32>,
+    pub scores: Vec<f32>,
+}
+
+/// Per-worker prediction scratch (grown once per span, reused per row).
+struct PredictScratch {
+    score: ScoreScratch,
+    beam: BeamScratch,
+    dense: Vec<f32>,
+    cands: Vec<(u32, f32)>,
+    cand_labels: Vec<u32>,
+    cand_scores: Vec<f32>,
+    topk: Vec<(u32, f32)>,
+}
+
+impl PredictScratch {
+    fn new() -> Self {
+        Self {
+            score: ScoreScratch::default(),
+            beam: BeamScratch::default(),
+            dense: Vec::new(),
+            cands: Vec::new(),
+            cand_labels: Vec::new(),
+            cand_scores: Vec::new(),
+            topk: Vec::new(),
+        }
+    }
+}
+
+/// Top-k predictor over an immutable [`ServingModel`] under a
+/// [`ServeConfig`]. Cheap to construct; holds no mutable state, so one
+/// predictor is shared read-only by every pool worker.
+pub struct Predictor<'a> {
+    model: &'a ServingModel,
+    cfg: ServeConfig,
+    /// Effective k (requested k clamped to C).
+    k: usize,
+}
+
+impl<'a> Predictor<'a> {
+    pub fn new(model: &'a ServingModel, cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        if !cfg.exact {
+            anyhow::ensure!(
+                model.aux.is_some(),
+                "beam prediction needs the auxiliary tree; use exact=true \
+                 for models without one"
+            );
+        }
+        Ok(Self { model, cfg, k: cfg.k.min(model.num_classes) })
+    }
+
+    /// Predictions per query (requested k clamped to C).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn cfg(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Top-k for a single query (the m = 1 batch; bit-identical to the
+    /// same row inside any batch).
+    pub fn predict_one(&self, x: &[f32]) -> TopK {
+        self.predict_batch_with(x, 1, &Pool::serial())
+            .pop()
+            .expect("one query in, one prediction out")
+    }
+
+    /// Batched top-k over an `[m, K]` block of query rows, sharded over
+    /// the pool in contiguous row spans (one writer per row, results in
+    /// row order) — bit-identical at every worker count.
+    pub fn predict_batch_with(&self, xs: &[f32], m: usize, pool: &Pool) -> Vec<TopK> {
+        let kf = self.model.feat_dim;
+        assert_eq!(xs.len(), m * kf, "query block must be [m, K] row-major");
+        let kk = self.k;
+        let mut labels = vec![PAD_LABEL; m * kk];
+        let mut scores = vec![f32::NEG_INFINITY; m * kk];
+        if pool.is_serial() || m <= 1 {
+            self.fill_span(xs, m, &mut labels, &mut scores);
+        } else {
+            let shards = pool.num_workers();
+            let per = m.div_ceil(shards);
+            let l_view = SharedMut::new(&mut labels);
+            let s_view = SharedMut::new(&mut scores);
+            let l_ref = &l_view;
+            let s_ref = &s_view;
+            pool.run_sharded(move |shard| {
+                let lo = (shard * per).min(m);
+                let hi = ((shard + 1) * per).min(m);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: row spans [lo, hi) are disjoint across shards by
+                // construction; each output slot has exactly one writer.
+                let (l, s) = unsafe {
+                    (
+                        l_ref.slice_mut(lo * kk, (hi - lo) * kk),
+                        s_ref.slice_mut(lo * kk, (hi - lo) * kk),
+                    )
+                };
+                self.fill_span(&xs[lo * kf..hi * kf], hi - lo, l, s);
+            });
+        }
+        (0..m)
+            .map(|j| {
+                let row_l = &labels[j * kk..(j + 1) * kk];
+                let row_s = &scores[j * kk..(j + 1) * kk];
+                let filled = row_l.iter().position(|&y| y == PAD_LABEL).unwrap_or(kk);
+                TopK {
+                    labels: row_l[..filled].to_vec(),
+                    scores: row_s[..filled].to_vec(),
+                }
+            })
+            .collect()
+    }
+
+    /// Score `rows` query rows into per-row (label, score) slots of width
+    /// `self.k`. Pure per-row function — the unit both the sharded batch
+    /// path and the serial path run.
+    fn fill_span(&self, xs: &[f32], rows: usize, labels: &mut [u32], scores: &mut [f32]) {
+        let kf = self.model.feat_dim;
+        let kk = self.k;
+        debug_assert_eq!(xs.len(), rows * kf);
+        debug_assert_eq!(labels.len(), rows * kk);
+        debug_assert_eq!(scores.len(), rows * kk);
+        let scorer = self.model.scorer();
+        let mut scratch = PredictScratch::new();
+        if self.cfg.exact {
+            self.fill_span_exact(&scorer, xs, rows, labels, scores, &mut scratch);
+        } else {
+            self.fill_span_beam(&scorer, xs, rows, labels, scores, &mut scratch);
+        }
+    }
+
+    /// The O(C) oracle: dense sweep in lane-width tiles, then top-k.
+    fn fill_span_exact(
+        &self,
+        scorer: &Scorer<'_>,
+        xs: &[f32],
+        rows: usize,
+        labels: &mut [u32],
+        scores: &mut [f32],
+        scratch: &mut PredictScratch,
+    ) {
+        let kf = self.model.feat_dim;
+        let c = self.model.num_classes;
+        let kk = self.k;
+        if scratch.dense.len() < LANES * c {
+            scratch.dense.resize(LANES * c, 0.0);
+        }
+        let mut j = 0;
+        while j < rows {
+            let hi = (j + LANES).min(rows);
+            let mb = hi - j;
+            scorer.score_block_with(
+                &xs[j * kf..hi * kf],
+                mb,
+                &mut scratch.dense[..mb * c],
+                &mut scratch.score,
+            );
+            for t in 0..mb {
+                score::topk_from_scores(&scratch.dense[t * c..(t + 1) * c], kk, &mut scratch.topk);
+                write_row(
+                    &scratch.topk,
+                    &mut labels[(j + t) * kk..(j + t + 1) * kk],
+                    &mut scores[(j + t) * kk..(j + t + 1) * kk],
+                );
+            }
+            j = hi;
+        }
+    }
+
+    /// Retrieve-then-rank: beam descent proposes candidates, the scorer
+    /// re-ranks them exactly.
+    fn fill_span_beam(
+        &self,
+        scorer: &Scorer<'_>,
+        xs: &[f32],
+        rows: usize,
+        labels: &mut [u32],
+        scores: &mut [f32],
+        scratch: &mut PredictScratch,
+    ) {
+        let kf = self.model.feat_dim;
+        let kk = self.k;
+        let aux = self.model.aux.as_ref().expect("checked at Predictor::new");
+        let ka = aux.aux_dim();
+        let mut proj = vec![0f32; ka];
+        for t in 0..rows {
+            let x = &xs[t * kf..(t + 1) * kf];
+            aux.project(x, &mut proj);
+            aux.kernel
+                .beam_topk(&proj, self.cfg.beam, &mut scratch.cands, &mut scratch.beam);
+            scratch.cand_labels.clear();
+            scratch
+                .cand_labels
+                .extend(scratch.cands.iter().map(|&(y, _)| y));
+            scratch.cand_scores.clear();
+            scratch.cand_scores.resize(scratch.cand_labels.len(), 0.0);
+            // the descent's projection doubles as the correction input —
+            // one PCA projection per query, not two
+            scorer.score_candidates_projected(
+                x,
+                &proj,
+                &scratch.cand_labels,
+                &mut scratch.cand_scores,
+            );
+            score::topk_from_pairs(
+                scratch
+                    .cand_labels
+                    .iter()
+                    .copied()
+                    .zip(scratch.cand_scores.iter().copied()),
+                kk,
+                &mut scratch.topk,
+            );
+            write_row(
+                &scratch.topk,
+                &mut labels[t * kk..(t + 1) * kk],
+                &mut scores[t * kk..(t + 1) * kk],
+            );
+        }
+    }
+}
+
+/// Copy a top-k list into one row's output slots (unfilled slots keep
+/// their PAD_LABEL / −∞ initialization).
+fn write_row(topk: &[(u32, f32)], labels: &mut [u32], scores: &mut [f32]) {
+    for (i, &(y, s)) in topk.iter().enumerate() {
+        labels[i] = y;
+        scores[i] = s;
+    }
+}
+
+/// Coalesces individually submitted queries into one batch for the
+/// pool-sharded predict path (which tiles rows at lane width internally).
+/// Results come back in submission order regardless of pool width — the
+/// deterministic merge order of the serving pipeline.
+pub struct RequestBatcher<'a> {
+    pred: &'a Predictor<'a>,
+    xs: Vec<f32>,
+    pending: usize,
+}
+
+impl<'a> RequestBatcher<'a> {
+    pub fn new(pred: &'a Predictor<'a>) -> Self {
+        Self { pred, xs: Vec::new(), pending: 0 }
+    }
+
+    /// Queue one query; returns its slot in the next flush's result order.
+    pub fn submit(&mut self, x: &[f32]) -> usize {
+        assert_eq!(x.len(), self.pred.model.feat_dim, "query feature dim mismatch");
+        self.xs.extend_from_slice(x);
+        self.pending += 1;
+        self.pending - 1
+    }
+
+    /// Queued-but-unflushed query count.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Run every queued query as one batch over the pool; results are in
+    /// submission order. Buffers are retained for the next fill.
+    pub fn flush_with(&mut self, pool: &Pool) -> Vec<TopK> {
+        let m = self.pending;
+        if m == 0 {
+            return Vec::new();
+        }
+        let out = self.pred.predict_batch_with(&self.xs, m, pool);
+        self.xs.clear();
+        self.pending = 0;
+        out
+    }
+}
+
+/// Serving quality metrics over a labeled held-out set.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeMetrics {
+    /// Fraction of queries whose top-1 prediction is the true label.
+    pub p_at_1: f64,
+    /// Fraction of queries whose true label appears in the top-k.
+    pub recall_at_k: f64,
+    /// The k the recall was measured at.
+    pub k: usize,
+    /// Queries evaluated.
+    pub n: usize,
+}
+
+/// P@1 / recall@k of a predictor on held-out data (`repro serve --eval`).
+/// The heavy per-row prediction shards over the pool; the ~10-flop per-row
+/// hit merge stays serial below the shared [`PAR_MIN_MERGE_ROWS`] floor,
+/// exactly like the chunked evaluator's streaming merge.
+pub fn evaluate_serving(pred: &Predictor<'_>, data: &Dataset, pool: &Pool) -> ServeMetrics {
+    assert!(!data.is_empty(), "empty evaluation set");
+    assert_eq!(data.feat_dim, pred.model.feat_dim, "eval set feature dim mismatch");
+    let n = data.len();
+    let preds = pred.predict_batch_with(&data.features, n, pool);
+    // bit 0: top-1 hit, bit 1: top-k hit — one writer per row
+    let mut flags = vec![0u8; n];
+    let merge = |first: usize, span: &mut [u8]| {
+        for (t, f) in span.iter_mut().enumerate() {
+            let i = first + t;
+            let truth = data.y(i);
+            let p = &preds[i];
+            let mut v = 0u8;
+            if p.labels.first() == Some(&truth) {
+                v |= 1;
+            }
+            if p.labels.contains(&truth) {
+                v |= 2;
+            }
+            *f = v;
+        }
+    };
+    if pool.is_serial() || n < PAR_MIN_MERGE_ROWS {
+        merge(0, &mut flags);
+    } else {
+        pool.for_each_span(&mut flags, 1, merge);
+    }
+    let hits1 = flags.iter().filter(|&&f| f & 1 != 0).count();
+    let hitsk = flags.iter().filter(|&&f| f & 2 != 0).count();
+    ServeMetrics {
+        p_at_1: hits1 as f64 / n as f64,
+        recall_at_k: hitsk as f64 / n as f64,
+        k: pred.k(),
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::Rng;
+
+    /// A hand-built model over C=8, K=4 whose scores are trivially
+    /// predictable (w = scaled one-hot rows), without an auxiliary tree.
+    fn onehot_model() -> ServingModel {
+        let (c, k) = (8usize, 4usize);
+        let mut w = vec![0f32; c * k];
+        for y in 0..c {
+            w[y * k + y % k] = (y + 1) as f32;
+        }
+        ServingModel {
+            num_classes: c,
+            feat_dim: k,
+            w,
+            b: vec![0f32; c],
+            aux: None,
+            correct_bias: false,
+        }
+    }
+
+    #[test]
+    fn exact_predictor_ranks_by_score() {
+        let m = onehot_model();
+        let cfg = ServeConfig { exact: true, k: 3, ..Default::default() };
+        let pred = Predictor::new(&m, cfg).unwrap();
+        // x = e0: scores are w[y][0]: labels 0 and 4 score 1.0 and 5.0,
+        // everything else 0 ⇒ top-3 = [4, 0, then smallest zero label 1]
+        let top = pred.predict_one(&[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(top.labels, vec![4, 0, 1]);
+        assert_eq!(top.scores[0], 5.0);
+        assert_eq!(top.scores[1], 1.0);
+        assert_eq!(top.scores[2], 0.0);
+    }
+
+    #[test]
+    fn beam_predictor_requires_aux() {
+        let m = onehot_model();
+        assert!(Predictor::new(&m, ServeConfig::default()).is_err());
+        assert!(Predictor::new(&m, ServeConfig { exact: true, ..Default::default() }).is_ok());
+    }
+
+    #[test]
+    fn k_clamps_to_num_classes() {
+        let m = onehot_model();
+        let cfg = ServeConfig { exact: true, k: 100, ..Default::default() };
+        let pred = Predictor::new(&m, cfg).unwrap();
+        assert_eq!(pred.k(), 8);
+        let top = pred.predict_one(&[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(top.labels.len(), 8);
+    }
+
+    #[test]
+    fn batcher_returns_results_in_submission_order() {
+        let m = onehot_model();
+        let cfg = ServeConfig { exact: true, k: 1, ..Default::default() };
+        let pred = Predictor::new(&m, cfg).unwrap();
+        let mut batcher = RequestBatcher::new(&pred);
+        let queries: Vec<Vec<f32>> = (0..5)
+            .map(|i| {
+                let mut x = vec![0f32; 4];
+                x[i % 4] = 1.0;
+                x
+            })
+            .collect();
+        for (i, q) in queries.iter().enumerate() {
+            assert_eq!(batcher.submit(q), i);
+        }
+        assert_eq!(batcher.pending(), 5);
+        let out = batcher.flush_with(&Pool::serial());
+        assert_eq!(batcher.pending(), 0);
+        assert_eq!(out.len(), 5);
+        for (q, top) in queries.iter().zip(out.iter()) {
+            assert_eq!(top, &pred.predict_one(q));
+        }
+        assert!(batcher.flush_with(&Pool::serial()).is_empty());
+    }
+
+    #[test]
+    fn serving_eval_counts_hits() {
+        let m = onehot_model();
+        let cfg = ServeConfig { exact: true, k: 2, ..Default::default() };
+        let pred = Predictor::new(&m, cfg).unwrap();
+        // queries = e_{y%4} scaled; the top-scoring label for e_j is the
+        // largest y with y % 4 == j, i.e. y ∈ {4,5,6,7}
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for y in 4..8u32 {
+            let mut x = vec![0f32; 4];
+            x[(y % 4) as usize] = 1.0;
+            feats.extend_from_slice(&x);
+            labels.push(y);
+        }
+        let data = Dataset::new(feats, labels, 4, 8);
+        let metrics = evaluate_serving(&pred, &data, &Pool::serial());
+        assert_eq!(metrics.n, 4);
+        assert_eq!(metrics.k, 2);
+        assert_eq!(metrics.p_at_1, 1.0);
+        assert_eq!(metrics.recall_at_k, 1.0);
+    }
+
+    #[test]
+    fn model_json_rejects_shape_mismatches() {
+        let m = onehot_model();
+        let good = m.to_json();
+        assert!(ServingModel::from_json(&good).is_ok());
+        let mut bad = m.clone();
+        bad.w.pop();
+        assert!(ServingModel::from_json(&bad.to_json()).is_err());
+        let mut bad = m.clone();
+        bad.b.push(0.0);
+        assert!(ServingModel::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn predictions_invariant_to_worker_count_on_toy_model() {
+        let m = onehot_model();
+        let cfg = ServeConfig { exact: true, k: 3, ..Default::default() };
+        let pred = Predictor::new(&m, cfg).unwrap();
+        let mut rng = Rng::new(4);
+        let n = 37;
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.normal()).collect();
+        let base = pred.predict_batch_with(&xs, n, &Pool::serial());
+        for workers in [2usize, 3, 5] {
+            let par = pred.predict_batch_with(&xs, n, &Pool::new(workers));
+            assert_eq!(par, base, "workers={workers}");
+        }
+    }
+}

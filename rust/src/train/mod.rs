@@ -951,6 +951,17 @@ impl TrainRun {
         self.engine.invalidate_prefetch();
     }
 
+    /// Immutable serving snapshot of the current parameters plus the
+    /// frozen auxiliary model — classifier rows only, no Adagrad state —
+    /// for the serve/predict pipeline (`repro train --save-model`).
+    pub fn serving_model(&self) -> crate::serve::ServingModel {
+        crate::serve::ServingModel::from_parts(
+            &self.params,
+            self.aux.as_deref(),
+            self.cfg.method.corrects_bias(),
+        )
+    }
+
     /// Evaluate current parameters on the held-out eval subset, applying
     /// the Eq. 5 bias correction iff the method calls for it.
     pub fn evaluate_now(&mut self) -> Result<EvalResult> {

@@ -325,6 +325,79 @@ impl TreeKernel {
     pub fn node_activations(&self, x_proj: &[f32], out: &mut [f32]) {
         self.node_activations_batch(x_proj, 1, out);
     }
+
+    /// Tree-guided candidate generation for serving: a beam-search descent
+    /// that keeps the `beam` highest-`log q(prefix|x)` frontier nodes per
+    /// level and expands each to its two children (forced nodes contribute
+    /// their single reachable child at unchanged log-probability), so the
+    /// final level yields up to `2 · beam` leaf candidates. Fills `out`
+    /// with `(label, log q(label|x))` pairs sorted by log-probability
+    /// descending (ties toward the smaller label id); padding leaves are
+    /// excluded. O(beam · aux_dim · log C) per query — the retrieval step
+    /// of the serve path, re-ranked exactly by [`crate::score::Scorer`].
+    ///
+    /// Determinism: a pure function of `(x_proj, beam)` built from the
+    /// canonical [`dot`] / [`log_sigmoid_pair`] kernels with a total
+    /// tie-break, so results are bit-identical at any `parallelism` and
+    /// for batched vs one-at-a-time submission. A candidate's log q is
+    /// accumulated root→leaf exactly like scalar [`Tree::log_prob`], so
+    /// the two agree bit for bit (pinned in tests).
+    pub fn beam_topk(
+        &self,
+        x_proj: &[f32],
+        beam: usize,
+        out: &mut Vec<(u32, f32)>,
+        scratch: &mut BeamScratch,
+    ) {
+        let k = self.aux_dim;
+        debug_assert_eq!(x_proj.len(), k);
+        assert!(beam >= 1, "beam width must be at least 1");
+        let frontier = &mut scratch.frontier;
+        let next = &mut scratch.next;
+        frontier.clear();
+        frontier.push((0.0, 0u32)); // (log q prefix, heap node): the root
+        for level in &self.levels {
+            if frontier.len() > beam {
+                // (log q desc, node asc): a total order, so the kept set is
+                // a pure function of the prefix probabilities
+                frontier.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                frontier.truncate(beam);
+            }
+            next.clear();
+            for &(lp, node) in frontier.iter() {
+                let local = node as usize - level.first;
+                match level.forced[local] {
+                    1 => next.push((lp, 2 * node + 2)),
+                    -1 => next.push((lp, 2 * node + 1)),
+                    _ => {
+                        let a = dot(&level.w[local * k..(local + 1) * k], x_proj)
+                            + level.b[local];
+                        let (lsr, lsl) = log_sigmoid_pair(a);
+                        next.push((lp + lsl, 2 * node + 1));
+                        next.push((lp + lsr, 2 * node + 2));
+                    }
+                }
+            }
+            std::mem::swap(frontier, next);
+        }
+        out.clear();
+        let base = self.num_leaves - 1;
+        for &(lp, node) in frontier.iter() {
+            let label = self.label_of_leaf[node as usize - base];
+            if label != PADDING {
+                out.push((label, lp));
+            }
+        }
+        out.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    }
+}
+
+/// Reusable frontier buffers for [`TreeKernel::beam_topk`] (grown once,
+/// fully rewritten per query — per-query descents are allocation-free).
+#[derive(Default)]
+pub struct BeamScratch {
+    frontier: Vec<(f32, u32)>,
+    next: Vec<(f32, u32)>,
 }
 
 #[cfg(test)]
@@ -419,6 +492,63 @@ mod tests {
             assert_eq!(&batch[j * nn..(j + 1) * nn], &single[..], "row {j}");
             kern.node_activations(&x_projs[j * 2..(j + 1) * 2], &mut single);
             assert_eq!(&batch[j * nn..(j + 1) * nn], &single[..], "row {j} (m=1 path)");
+        }
+    }
+
+    #[test]
+    fn full_beam_enumerates_every_label_with_exact_log_probs() {
+        // beam >= num_leaves never prunes: candidates are exactly the real
+        // labels, each with a log q bit-identical to the scalar walker
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        let x = [0.4f32, -0.9];
+        let mut out = Vec::new();
+        let mut scratch = BeamScratch::default();
+        kern.beam_topk(&x, t.num_leaves, &mut out, &mut scratch);
+        assert_eq!(out.len(), 3, "padding leaf must be excluded");
+        for &(y, lp) in &out {
+            let expect = t.log_prob(&x, y);
+            assert_eq!(lp.to_bits(), expect.to_bits(), "label {y}");
+        }
+        // sorted by log q descending
+        for w in out.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn beam_one_is_the_greedy_descent() {
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        let mut out = Vec::new();
+        let mut scratch = BeamScratch::default();
+        for x in [[2.0f32, 2.0], [-2.0, -2.0], [0.1, -3.0]] {
+            kern.beam_topk(&x, 1, &mut out, &mut scratch);
+            assert!(!out.is_empty() && out.len() <= 2);
+            // the top candidate's log q must be the max over the candidates
+            // and match the scalar log_prob of its own label
+            let best = out[0];
+            assert_eq!(best.1.to_bits(), t.log_prob(&x, best.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn beam_candidates_cover_the_most_probable_label() {
+        // with beam >= 2 on the toy tree, the argmax of the full
+        // conditional must always appear among the candidates
+        let t = toy_tree();
+        let kern = TreeKernel::build(&t);
+        let mut out = Vec::new();
+        let mut scratch = BeamScratch::default();
+        let mut all = vec![0f32; 3];
+        for x in [[1.5f32, 0.3], [-1.0, 2.0], [0.0, 0.0], [3.0, -3.0]] {
+            t.log_prob_all(&x, &mut all);
+            let argmax = (0..3).max_by(|&a, &b| all[a].total_cmp(&all[b])).unwrap() as u32;
+            kern.beam_topk(&x, 2, &mut out, &mut scratch);
+            assert!(
+                out.iter().any(|&(y, _)| y == argmax),
+                "x {x:?}: argmax {argmax} missing from {out:?}"
+            );
         }
     }
 

@@ -36,7 +36,7 @@ pub mod fit;
 pub mod kernel;
 
 pub use fit::FitStats;
-pub use kernel::{TreeKernel, LANES};
+pub use kernel::{BeamScratch, TreeKernel, LANES};
 
 use crate::linalg::{dot, log_sigmoid_pair, sig_terms};
 use crate::utils::json::Json;

@@ -41,6 +41,14 @@ use std::marker::PhantomData;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// Minimum independent-row count for a per-row *merge* dispatch to pay for
+/// itself: each row's merge is ~10 flops, so a pool dispatch (a few µs)
+/// only wins on large batches. Shared by the chunked evaluator's streaming
+/// LSE/argmax merge ([`crate::eval::Evaluator::evaluate_cached_with`]) and
+/// the serving metrics merge ([`crate::serve::evaluate_serving`]) so the
+/// two floors cannot drift apart.
+pub const PAR_MIN_MERGE_ROWS: usize = 4096;
+
 /// Lifetime-erased pointer to the job closure of the current generation.
 /// Only dereferenced by workers between the generation bump and the final
 /// `remaining` decrement, an interval during which `run_sharded` keeps the

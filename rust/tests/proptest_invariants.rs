@@ -346,6 +346,64 @@ fn prop_alias_table_support() {
     });
 }
 
+/// Alias-table invariant: empirical sampling frequencies match the
+/// normalized weights within a Monte-Carlo tolerance, for arbitrary
+/// weight vectors (including zero-weight outcomes).
+#[test]
+fn prop_alias_sampling_frequencies_match_weights() {
+    for_all_seeds(8, |rng| {
+        let n = 2 + rng.below(24);
+        let weights: Vec<f64> = (0..n)
+            .map(|_| if rng.bernoulli(0.15) { 0.0 } else { rng.next_f64() + 0.05 })
+            .collect();
+        if weights.iter().sum::<f64>() == 0.0 {
+            return;
+        }
+        let t = AliasTable::new(&weights).unwrap();
+        let total: f64 = weights.iter().sum();
+        let draws = 80_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[t.sample(rng)] += 1;
+        }
+        for i in 0..n {
+            let p = weights[i] / total;
+            let emp = counts[i] as f64 / draws as f64;
+            let tol = 4.0 * (p / draws as f64).sqrt() + 2e-3;
+            assert!(
+                (p - emp).abs() < tol,
+                "n={n} outcome {i}: p={p:.5} emp={emp:.5} tol={tol:.5}"
+            );
+        }
+    });
+}
+
+/// Alias-table invariant: draws are a pure function of (weights, RNG
+/// state) — equal seeds give bit-identical draw streams, and rebuilding
+/// the table from the same weights changes nothing.
+#[test]
+fn prop_alias_equal_seeds_give_identical_draw_streams() {
+    for_all_seeds(12, |rng| {
+        let n = 1 + rng.below(40);
+        let weights: Vec<f64> = (0..n).map(|_| rng.next_f64() + 0.01).collect();
+        let t1 = AliasTable::new(&weights).unwrap();
+        let t2 = AliasTable::new(&weights).unwrap();
+        let seed = rng.next_u64();
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        for step in 0..2000 {
+            let (a, b) = (t1.sample(&mut r1), t2.sample(&mut r2));
+            assert_eq!(a, b, "seed {seed:#x} diverged at draw {step}");
+        }
+        // the streams consumed the RNGs identically too
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // and log_probs are bit-identical across rebuilds
+        for i in 0..n {
+            assert_eq!(t1.log_prob(i).to_bits(), t2.log_prob(i).to_bits());
+        }
+    });
+}
+
 /// Streaming LSE merge is associative-equivalent to the global reduction
 /// for arbitrary chunkings.
 #[test]

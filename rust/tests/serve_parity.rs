@@ -1,0 +1,238 @@
+//! Serving-path parity: beam-search + exact re-rank vs the O(C) oracle,
+//! bit-determinism across worker counts and submission patterns, and
+//! checkpoint roundtrips. Pure host path — no PJRT artifacts needed.
+
+use adv_softmax::config::{DatasetPreset, ServeConfig, SyntheticConfig, TreeConfig};
+use adv_softmax::data::{Dataset, Splits};
+use adv_softmax::sampler::AdversarialSampler;
+use adv_softmax::serve::{evaluate_serving, Predictor, RequestBatcher, ServingModel, TopK};
+use adv_softmax::utils::Pool;
+use std::sync::OnceLock;
+
+/// Shared fixture: the aux-tree fit is the expensive part, so build the
+/// model once for the whole test binary.
+fn centroid_model() -> &'static (ServingModel, Dataset) {
+    static MODEL: OnceLock<(ServingModel, Dataset)> = OnceLock::new();
+    MODEL.get_or_init(build_centroid_model)
+}
+
+/// A trained-shaped model without PJRT: centroid classifier rows (w_y =
+/// scaled mean of class-y training features — the convex objective's
+/// rough direction) plus the genuinely fitted auxiliary tree, with the
+/// Eq. 5 correction on, over the tiny preset (C = 256, K = 64).
+fn build_centroid_model() -> (ServingModel, Dataset) {
+    let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+    cfg.n_train = 4096;
+    cfg.n_test = 512;
+    let splits = Splits::synthetic(&cfg);
+    let train = &splits.train;
+    let (c, k) = (train.num_classes, train.feat_dim);
+    let mut w = vec![0f32; c * k];
+    let mut counts = vec![0f32; c];
+    for i in 0..train.len() {
+        let y = train.y(i) as usize;
+        counts[y] += 1.0;
+        for (wv, xv) in w[y * k..(y + 1) * k].iter_mut().zip(train.x(i).iter()) {
+            *wv += *xv;
+        }
+    }
+    for y in 0..c {
+        if counts[y] > 0.0 {
+            let scale = 4.0 / counts[y];
+            for wv in w[y * k..(y + 1) * k].iter_mut() {
+                *wv *= scale;
+            }
+        }
+    }
+    let tcfg = TreeConfig { aux_dim: 8, ..Default::default() };
+    let (aux, _) = AdversarialSampler::fit(train, &tcfg, 5);
+    let model = ServingModel {
+        num_classes: c,
+        feat_dim: k,
+        w,
+        b: vec![0f32; c],
+        aux: Some(aux),
+        correct_bias: true,
+    };
+    (model, splits.test)
+}
+
+fn assert_preds_bit_eq(a: &[TopK], b: &[TopK], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (pa, pb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(pa.labels, pb.labels, "{ctx}: labels of query {i}");
+        let sa: Vec<u32> = pa.scores.iter().map(|s| s.to_bits()).collect();
+        let sb: Vec<u32> = pb.scores.iter().map(|s| s.to_bits()).collect();
+        assert_eq!(sa, sb, "{ctx}: score bits of query {i}");
+    }
+}
+
+/// Acceptance bar: at the default beam width, beam + exact re-rank
+/// recovers ≥ 95% of the exact O(C) oracle's top-k on held-out data.
+#[test]
+fn beam_rerank_recall_vs_exact_oracle() {
+    let (model, test) = centroid_model();
+    let exact = Predictor::new(model, ServeConfig { exact: true, ..Default::default() })
+        .unwrap();
+    let beam = Predictor::new(model, ServeConfig::default()).unwrap();
+    let pool = Pool::serial();
+    let n = test.len().min(256);
+    let xs = &test.features[..n * test.feat_dim];
+    let po = exact.predict_batch_with(xs, n, &pool);
+    let pb = beam.predict_batch_with(xs, n, &pool);
+    let kk = exact.k();
+    let (mut hit, mut tot) = (0usize, 0usize);
+    for (o, b) in po.iter().zip(pb.iter()) {
+        assert_eq!(o.labels.len(), kk, "oracle returns a full top-{kk}");
+        for y in o.labels.iter() {
+            tot += 1;
+            if b.labels.contains(y) {
+                hit += 1;
+            }
+        }
+    }
+    let recall = hit as f64 / tot as f64;
+    assert!(
+        recall >= 0.95,
+        "recall@{kk} of beam (B={}) vs exact oracle: {recall:.4} < 0.95",
+        ServeConfig::default().beam
+    );
+}
+
+/// Acceptance bar: predictions are bit-identical across
+/// `parallelism ∈ {1, 2, 7}` and for batched vs one-at-a-time submission,
+/// on both the beam and the exact path.
+#[test]
+fn predictions_bit_identical_across_parallelism_and_batching() {
+    let (model, test) = centroid_model();
+    let kf = test.feat_dim;
+    let n = 131; // ragged vs every lane/span boundary
+    let xs = &test.features[..n * kf];
+    for exact in [false, true] {
+        let cfg = ServeConfig { exact, ..Default::default() };
+        let pred = Predictor::new(model, cfg).unwrap();
+        let ctx = if exact { "exact" } else { "beam" };
+        let base = pred.predict_batch_with(xs, n, &Pool::new(1));
+        for workers in [2usize, 7] {
+            let par = pred.predict_batch_with(xs, n, &Pool::new(workers));
+            assert_preds_bit_eq(&base, &par, &format!("{ctx}, workers={workers}"));
+        }
+        // one-at-a-time submission matches the batch row for row
+        for i in (0..n).step_by(13) {
+            let one = pred.predict_one(&xs[i * kf..(i + 1) * kf]);
+            assert_preds_bit_eq(
+                std::slice::from_ref(&base[i]),
+                std::slice::from_ref(&one),
+                &format!("{ctx}, single query {i}"),
+            );
+        }
+    }
+}
+
+/// The request batcher's coalesced flush equals the direct batch, in
+/// submission order, at several pool widths.
+#[test]
+fn request_batcher_matches_direct_batch() {
+    let (model, test) = centroid_model();
+    let kf = test.feat_dim;
+    let n = 67;
+    let xs = &test.features[..n * kf];
+    let pred = Predictor::new(model, ServeConfig::default()).unwrap();
+    let direct = pred.predict_batch_with(xs, n, &Pool::serial());
+    for workers in [1usize, 3] {
+        let pool = Pool::new(workers);
+        let mut batcher = RequestBatcher::new(&pred);
+        for i in 0..n {
+            assert_eq!(batcher.submit(&xs[i * kf..(i + 1) * kf]), i);
+        }
+        let flushed = batcher.flush_with(&pool);
+        assert_preds_bit_eq(&direct, &flushed, &format!("batcher, workers={workers}"));
+    }
+}
+
+/// With the beam wide enough to cover every leaf, the candidate set is the
+/// whole label space and the re-ranked top-k must equal the exact oracle
+/// bit for bit — the score-parity contract between
+/// `Scorer::score_candidates_with` and the dense sweep, end to end.
+#[test]
+fn full_beam_equals_exact_oracle_bitwise() {
+    let (shared, test) = centroid_model();
+    let kf = test.feat_dim;
+    let n = 64;
+    let xs = &test.features[..n * kf];
+    for correct_bias in [true, false] {
+        let mut model = shared.clone();
+        model.correct_bias = correct_bias;
+        let exact = Predictor::new(&model, ServeConfig { exact: true, ..Default::default() })
+            .unwrap();
+        let full = Predictor::new(
+            &model,
+            ServeConfig { beam: model.num_classes, ..Default::default() },
+        )
+        .unwrap();
+        let po = exact.predict_batch_with(xs, n, &Pool::serial());
+        let pf = full.predict_batch_with(xs, n, &Pool::serial());
+        assert_preds_bit_eq(&po, &pf, &format!("correct_bias={correct_bias}"));
+    }
+}
+
+/// Checkpoint roundtrip: a saved-and-reloaded model predicts bit-
+/// identically, on both paths.
+#[test]
+fn serving_model_checkpoint_roundtrip() {
+    let (model, test) = centroid_model();
+    let path = std::env::temp_dir().join("adv_softmax_test_serving_model.json");
+    model.save(&path).unwrap();
+    let back = ServingModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.num_classes, model.num_classes);
+    assert_eq!(back.feat_dim, model.feat_dim);
+    assert_eq!(back.correct_bias, model.correct_bias);
+    let kf = test.feat_dim;
+    let n = 32;
+    let xs = &test.features[..n * kf];
+    for exact in [false, true] {
+        let cfg = ServeConfig { exact, ..Default::default() };
+        let a = Predictor::new(model, cfg).unwrap().predict_batch_with(
+            xs,
+            n,
+            &Pool::serial(),
+        );
+        let b = Predictor::new(&back, cfg)
+            .unwrap()
+            .predict_batch_with(xs, n, &Pool::serial());
+        assert_preds_bit_eq(&a, &b, if exact { "exact" } else { "beam" });
+    }
+}
+
+/// The serving eval workload (`repro serve --eval`) reports sane metrics:
+/// the centroid model beats chance by a wide margin, recall@k dominates
+/// P@1, and the beam path lands close to the oracle.
+#[test]
+fn serving_eval_metrics_sane_and_beam_close_to_exact() {
+    let (model, test) = centroid_model();
+    let exact = Predictor::new(model, ServeConfig { exact: true, ..Default::default() })
+        .unwrap();
+    let beam = Predictor::new(model, ServeConfig::default()).unwrap();
+    let pool = Pool::new(3);
+    let me = evaluate_serving(&exact, test, &pool);
+    let mb = evaluate_serving(&beam, test, &pool);
+    assert_eq!(me.n, test.len());
+    for m in [&me, &mb] {
+        assert!(m.p_at_1 > 0.1, "well above 1/C = {:.4}: {:.4}", 1.0 / 256.0, m.p_at_1);
+        assert!(m.recall_at_k >= m.p_at_1);
+        assert!(m.recall_at_k <= 1.0);
+    }
+    assert!(
+        (me.p_at_1 - mb.p_at_1).abs() <= 0.05,
+        "beam P@1 {:.4} vs exact {:.4}",
+        mb.p_at_1,
+        me.p_at_1
+    );
+    assert!(
+        (me.recall_at_k - mb.recall_at_k).abs() <= 0.05,
+        "beam recall {:.4} vs exact {:.4}",
+        mb.recall_at_k,
+        me.recall_at_k
+    );
+}
