@@ -11,7 +11,8 @@
 //! the real xla runtime) are unavailable; all host-side cases always run.
 
 use adv_softmax::config::{
-    DatasetPreset, Method, OverlapMode, RunConfig, ServeConfig, SyntheticConfig, TreeConfig,
+    DaemonConfig, DatasetPreset, Method, OverlapMode, RunConfig, ServeConfig, SyntheticConfig,
+    TreeConfig,
 };
 use adv_softmax::data::Splits;
 use adv_softmax::eval::LpnCache;
@@ -19,6 +20,7 @@ use adv_softmax::linalg::Pca;
 use adv_softmax::model::ParamStore;
 use adv_softmax::runtime::{lit_f32, read_f32, Registry};
 use adv_softmax::sampler::{AdversarialSampler, NoiseSampler};
+use adv_softmax::serve::daemon::{Daemon, ManualClock, RealClock};
 use adv_softmax::serve::{Predictor, ServingModel};
 use adv_softmax::train::{
     BatchGen, BatchMode, BatchSource, SamplerKind, StepEngine, StepExecutor, TrainRun,
@@ -29,6 +31,7 @@ use adv_softmax::utils::bench::{black_box, Bench, BenchStats};
 use adv_softmax::utils::json::Json;
 use adv_softmax::utils::{Pool, Rng};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Worker count for the parallel variants (the acceptance-bar setting).
 const PAR: usize = 4;
@@ -325,6 +328,7 @@ fn main() -> anyhow::Result<()> {
     // scoring isolates retrieval cost (correction costs land on both
     // paths identically). 64 queries per iteration amortize scratch setup
     // the way the request batcher does in serving.
+    let daemon_json: Json;
     {
         let (sc, sk, saux, sq) = (16_384usize, 64usize, 16usize, 64usize);
         let mut srng2 = Rng::new(51);
@@ -356,14 +360,14 @@ fn main() -> anyhow::Result<()> {
             output_dim: saux,
         };
         let saux_model = AdversarialSampler { pca: spca, tree: stree, kernel: skern };
-        let model = ServingModel {
+        let model = Arc::new(ServingModel {
             num_classes: sc,
             feat_dim: sk,
             w: (0..sc * sk).map(|_| 0.1 * srng2.normal()).collect(),
             b: (0..sc).map(|_| 0.01 * srng2.normal()).collect(),
             aux: Some(saux_model),
             correct_bias: false,
-        };
+        });
         let queries: Vec<f32> = (0..sq * sk).map(|_| srng2.normal()).collect();
         let serve_pool = Pool::serial();
         let exact_pred =
@@ -377,6 +381,133 @@ fn main() -> anyhow::Result<()> {
             black_box(beam_pred.predict_batch_with(black_box(&queries), sq, &serve_pool));
         });
         report.record("serve/topk(beam)", s);
+
+        // --- serving daemon load generator (PR 6, same C = 16384 model).
+        // Closed loop: 32 virtual clients with one outstanding request
+        // each; when every client is waiting the input is quiet, so
+        // pump(true) flushes — throughput and latency percentiles of the
+        // admission + micro-batch + worker pipeline end to end. CI diffs
+        // `closed_qps` against benches/hot_path_baseline.json.
+        let dcfg = DaemonConfig {
+            queue_capacity: 1024,
+            deadline_ms: 250,
+            max_batch: 64,
+            degrade_beams: vec![16, 4],
+            overload_trip: 3,
+            worker_timeout_ms: 10_000,
+        };
+        let mut d = Daemon::new(
+            model.clone(),
+            ServeConfig::default(),
+            dcfg,
+            PAR,
+            None,
+            Box::new(RealClock::new()),
+        )?;
+        let n_closed = 1024usize;
+        let v_clients = 32usize;
+        let mut starts = vec![Duration::ZERO; n_closed];
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(n_closed);
+        let (mut issued, mut done, mut inflight) = (0usize, 0usize, 0usize);
+        let t0 = Instant::now();
+        while done < n_closed {
+            while issued < n_closed && inflight < v_clients {
+                let qi = issued % sq;
+                let (id, immediate) = d.submit_features(&queries[qi * sk..(qi + 1) * sk]);
+                starts[id as usize] = t0.elapsed();
+                issued += 1;
+                match immediate {
+                    Some(_) => done += 1, // shed at admission (not closed-loop normal)
+                    None => inflight += 1,
+                }
+            }
+            for r in d.pump(true) {
+                let waited = t0.elapsed().saturating_sub(starts[r.id as usize]);
+                lat_ms.push(waited.as_secs_f64() * 1e3);
+                done += 1;
+                inflight -= 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let cs = d.stats();
+        let closed_qps = (cs.ok + cs.degraded) as f64 / wall.max(1e-9);
+        lat_ms.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if lat_ms.is_empty() {
+                return 0.0;
+            }
+            lat_ms[((lat_ms.len() - 1) as f64 * p) as usize]
+        };
+        let (closed_p50, closed_p99) = (pct(0.50), pct(0.99));
+
+        // Open loop: seeded bursty arrivals on a virtual clock (bursts
+        // model a stalled upstream flushing its backlog; stalls push
+        // queued requests past their deadline), so the shed / degraded /
+        // deadline accounting is reproducible regardless of machine
+        // speed. Rates are recorded for the trajectory file, not floored.
+        let ocfg = DaemonConfig {
+            queue_capacity: 40,
+            deadline_ms: 20,
+            max_batch: 16,
+            degrade_beams: vec![16, 4],
+            overload_trip: 1,
+            worker_timeout_ms: 10_000,
+        };
+        let oclock = ManualClock::new();
+        let mut d = Daemon::new(
+            model.clone(),
+            ServeConfig::default(),
+            ocfg,
+            PAR,
+            None,
+            Box::new(oclock.clone()),
+        )?;
+        let mut arng = Rng::new(4242);
+        let n_open = 1024usize;
+        let mut submitted = 0usize;
+        while submitted < n_open {
+            if arng.next_f64() < 0.08 {
+                let burst = 24 + arng.below(32);
+                for _ in 0..burst.min(n_open - submitted) {
+                    let qi = submitted % sq;
+                    d.submit_features(&queries[qi * sk..(qi + 1) * sk]);
+                    submitted += 1;
+                }
+            } else {
+                oclock.advance(1 + arng.below(3) as u64);
+                let qi = submitted % sq;
+                d.submit_features(&queries[qi * sk..(qi + 1) * sk]);
+                submitted += 1;
+            }
+            if arng.next_f64() < 0.05 {
+                oclock.advance(25); // stall past the deadline
+            }
+            d.pump(false);
+        }
+        oclock.advance(25);
+        d.drain();
+        let os = d.stats();
+        let total = (os.submitted as f64).max(1.0);
+        daemon_json = Json::obj(vec![
+            ("closed_clients", Json::Num(v_clients as f64)),
+            ("closed_requests", Json::Num(n_closed as f64)),
+            ("closed_qps", Json::Num(closed_qps)),
+            ("closed_p50_ms", Json::Num(closed_p50)),
+            ("closed_p99_ms", Json::Num(closed_p99)),
+            ("open_requests", Json::Num(os.submitted as f64)),
+            ("open_ok_rate", Json::Num(os.ok as f64 / total)),
+            ("open_degraded_rate", Json::Num(os.degraded as f64 / total)),
+            ("open_shed_rate", Json::Num(os.shed_queue_full as f64 / total)),
+            ("open_deadline_rate", Json::Num(os.rejected_deadline as f64 / total)),
+        ]);
+        println!(
+            "serve_daemon closed-loop {closed_qps:.0} qps (p50 {closed_p50:.2} ms, \
+             p99 {closed_p99:.2} ms, clients={v_clients})"
+        );
+        println!(
+            "serve_daemon open-loop ok={} degraded={} shed={} deadline={} of {}",
+            os.ok, os.degraded, os.shed_queue_full, os.rejected_deadline, os.submitted
+        );
     }
 
     // --- step engine: serial protocol vs double-buffered overlap (PR 4).
@@ -556,7 +687,11 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let out = "BENCH_hot_path.json";
-    std::fs::write(out, report.to_json().to_string())?;
+    let mut json = report.to_json();
+    if let Json::Obj(m) = &mut json {
+        m.insert("serve_daemon".to_string(), daemon_json);
+    }
+    std::fs::write(out, json.to_string())?;
     println!("wrote {out}");
     Ok(())
 }

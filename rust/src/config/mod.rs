@@ -271,6 +271,111 @@ impl ServeConfig {
     }
 }
 
+/// Daemon knobs for `repro serve --daemon` (see `serve::daemon`): bounded
+/// admission, deadline-aware micro-batching, and the graceful-degradation
+/// beam ladder.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DaemonConfig {
+    /// Admission queue bound; requests past it get a typed `rejected`
+    /// response (load shedding, never a silent drop).
+    pub queue_capacity: usize,
+    /// Per-request latency budget in milliseconds: requests still queued
+    /// past it are cancelled with a typed `rejected` response, and a
+    /// quarter of it is the micro-batch coalescing window.
+    pub deadline_ms: u64,
+    /// Hard cap on requests coalesced into one predict batch.
+    pub max_batch: usize,
+    /// Degradation ladder: beam widths stepped through (left to right)
+    /// under sustained overload, restored as the queue drains. Each must
+    /// be narrower than the previous (and than the serving beam). Empty
+    /// disables degradation. Ignored on the exact path.
+    pub degrade_beams: Vec<usize>,
+    /// Consecutive overloaded flushes (queue at least half full after a
+    /// batch) before stepping one tier down the ladder.
+    pub overload_trip: usize,
+    /// Supervisor patience: a predict batch not answered within this many
+    /// milliseconds abandons the worker and respawns it.
+    pub worker_timeout_ms: u64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 1024,
+            deadline_ms: 50,
+            max_batch: 64,
+            degrade_beams: vec![16, 4],
+            overload_trip: 3,
+            worker_timeout_ms: 2000,
+        }
+    }
+}
+
+impl DaemonConfig {
+    /// Coalescing window: wait at most this long for co-batchable
+    /// requests before flushing (a quarter of the latency budget, so
+    /// queue wait + batch compute fit inside the deadline).
+    pub fn coalesce_ms(&self) -> u64 {
+        (self.deadline_ms / 4).max(1)
+    }
+
+    /// Queue depth treated as "overloaded" after a flush.
+    pub fn shed_highwater(&self) -> usize {
+        (self.queue_capacity / 2).max(1)
+    }
+
+    /// Reject knob values that would otherwise wedge or crash the daemon.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.queue_capacity >= 1, "queue capacity must be at least 1");
+        anyhow::ensure!(self.deadline_ms >= 1, "deadline must be at least 1 ms");
+        anyhow::ensure!(self.max_batch >= 1, "max batch must be at least 1");
+        anyhow::ensure!(self.overload_trip >= 1, "overload trip must be at least 1");
+        anyhow::ensure!(
+            self.worker_timeout_ms >= self.deadline_ms,
+            "worker timeout {} ms below the request deadline {} ms",
+            self.worker_timeout_ms,
+            self.deadline_ms
+        );
+        for (i, &b) in self.degrade_beams.iter().enumerate() {
+            anyhow::ensure!(b >= 1, "degradation tier {i} has beam 0");
+            if i > 0 {
+                anyhow::ensure!(
+                    b < self.degrade_beams[i - 1],
+                    "degradation tiers must narrow strictly: tier {i} beam {b} \
+                     not below tier {} beam {}",
+                    i - 1,
+                    self.degrade_beams[i - 1]
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_capacity", Json::Num(self.queue_capacity as f64)),
+            ("deadline_ms", Json::Num(self.deadline_ms as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("degrade_beams", Json::arr_usize(&self.degrade_beams)),
+            ("overload_trip", Json::Num(self.overload_trip as f64)),
+            ("worker_timeout_ms", Json::Num(self.worker_timeout_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let cfg = Self {
+            queue_capacity: v.get("queue_capacity")?.as_usize()?,
+            deadline_ms: v.get("deadline_ms")?.as_u64()?,
+            max_batch: v.get("max_batch")?.as_usize()?,
+            degrade_beams: v.get("degrade_beams")?.to_vec_usize()?,
+            overload_trip: v.get("overload_trip")?.as_usize()?,
+            worker_timeout_ms: v.get("worker_timeout_ms")?.as_u64()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Dataset presets simulating the paper's benchmarks at laptop scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetPreset {
@@ -629,6 +734,37 @@ mod tests {
         assert_eq!(back, cfg);
         assert!(ServeConfig { beam: 0, ..cfg }.validate().is_err());
         assert!(ServeConfig { k: 0, ..cfg }.validate().is_err());
+    }
+
+    #[test]
+    fn daemon_config_validates_and_roundtrips() {
+        let cfg = DaemonConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.coalesce_ms(), cfg.deadline_ms / 4);
+        assert_eq!(cfg.shed_highwater(), cfg.queue_capacity / 2);
+        let back =
+            DaemonConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(DaemonConfig { queue_capacity: 0, ..cfg.clone() }.validate().is_err());
+        assert!(DaemonConfig { deadline_ms: 0, ..cfg.clone() }.validate().is_err());
+        assert!(DaemonConfig { max_batch: 0, ..cfg.clone() }.validate().is_err());
+        assert!(DaemonConfig { overload_trip: 0, ..cfg.clone() }.validate().is_err());
+        // worker timeout may not undercut the deadline
+        assert!(DaemonConfig { worker_timeout_ms: 10, ..cfg.clone() }.validate().is_err());
+        // ladder must narrow strictly and never hit zero
+        assert!(DaemonConfig { degrade_beams: vec![16, 16], ..cfg.clone() }
+            .validate()
+            .is_err());
+        assert!(DaemonConfig { degrade_beams: vec![4, 16], ..cfg.clone() }
+            .validate()
+            .is_err());
+        assert!(DaemonConfig { degrade_beams: vec![16, 0], ..cfg.clone() }
+            .validate()
+            .is_err());
+        assert!(DaemonConfig { degrade_beams: vec![], ..cfg }.validate().is_ok());
+        // tiny deadlines still coalesce for at least a millisecond
+        let tight = DaemonConfig { deadline_ms: 2, worker_timeout_ms: 2000, ..Default::default() };
+        assert_eq!(tight.coalesce_ms(), 1);
     }
 
     #[test]

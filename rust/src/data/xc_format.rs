@@ -38,22 +38,30 @@ pub fn parse_xc<R: BufRead>(reader: R, feat_dim: usize) -> Result<Dataset> {
     let mut lines = reader.lines();
     let header = lines
         .next()
-        .context("xc file is empty")?
-        .context("cannot read header")?;
+        .context("xc file is empty (no header on line 1)")?
+        .context("line 1: cannot read header")?;
     let mut hp = header.split_whitespace();
-    let n: usize = hp.next().context("header: missing N")?.parse()?;
-    let _f: usize = hp.next().context("header: missing F")?.parse()?;
-    let l: usize = hp.next().context("header: missing L")?.parse()?;
+    let mut header_field = |name: &str| -> Result<usize> {
+        let tok = hp
+            .next()
+            .with_context(|| format!("line 1: header missing {name} (want \"N F L\")"))?;
+        tok.parse()
+            .with_context(|| format!("line 1: header {name} {tok:?} is not a count"))
+    };
+    let n: usize = header_field("N")?;
+    let _f: usize = header_field("F")?;
+    let l: usize = header_field("L")?;
     if l == 0 {
-        bail!("header declares zero labels");
+        bail!("line 1: header declares zero labels");
     }
 
     let mut features = Vec::new();
     let mut labels: Vec<u32> = Vec::new();
     let mut row = vec![0f32; feat_dim];
 
+    // data lines are 1-based line 2 onward (the header is line 1)
     for (lineno, line) in lines.enumerate() {
-        let line = line.with_context(|| format!("line {}", lineno + 2))?;
+        let line = line.with_context(|| format!("line {}: cannot read", lineno + 2))?;
         let line = line.trim();
         if line.is_empty() {
             continue;
@@ -89,8 +97,12 @@ pub fn parse_xc<R: BufRead>(reader: R, feat_dim: usize) -> Result<Dataset> {
             let Some((f, v)) = tok.split_once(':') else {
                 bail!("line {}: bad feature token {:?}", lineno + 2, tok);
             };
-            let f: u64 = f.parse().with_context(|| format!("line {}", lineno + 2))?;
-            let v: f32 = v.parse().with_context(|| format!("line {}", lineno + 2))?;
+            let f: u64 = f.parse().with_context(|| {
+                format!("line {}: feature index {f:?} is not an integer", lineno + 2)
+            })?;
+            let v: f32 = v.parse().with_context(|| {
+                format!("line {}: feature value {v:?} is not a number", lineno + 2)
+            })?;
             let (bucket, sign) = hash_feature(f, feat_dim);
             row[bucket] += sign * v;
         }
@@ -217,6 +229,47 @@ mod tests {
     fn rejects_empty() {
         assert!(parse_xc(Cursor::new(""), 8).is_err());
         assert!(parse_xc(Cursor::new("0 10 5\n"), 8).is_err());
+    }
+
+    /// Chained anyhow context, innermost last — where the line number lives.
+    fn err_chain(input: &str) -> String {
+        format!("{:#}", parse_xc(Cursor::new(input), 8).unwrap_err())
+    }
+
+    #[test]
+    fn every_parse_error_reports_a_one_based_line_number() {
+        // header errors are all "line 1"
+        assert!(err_chain("").contains("line 1"), "empty file: {}", err_chain(""));
+        for (name, bad_header) in [("N", ""), ("F", "4"), ("L", "4 100")] {
+            let s = format!("{bad_header}\nx");
+            let msg = err_chain(&s);
+            assert!(msg.contains("line 1"), "missing {name}: {msg}");
+            assert!(msg.contains(name), "missing {name} named: {msg}");
+        }
+        for bad_header in ["x 100 10", "4 x 10", "4 100 x"] {
+            let msg = err_chain(&format!("{bad_header}\n"));
+            assert!(msg.contains("line 1"), "non-numeric header {bad_header:?}: {msg}");
+            assert!(msg.contains("\"x\""), "offending token named: {msg}");
+        }
+        let msg = err_chain("4 100 0\n");
+        assert!(msg.contains("line 1"), "zero labels: {msg}");
+
+        // data-line errors name the 1-based physical line (header = line 1,
+        // so the first data line is line 2)
+        let cases = [
+            // (input, expected line tag, expected token mention)
+            ("1 10 5\n7 0:1.0\n", "line 2", "7"), // label out of range
+            ("2 10 5\n1 0:1.0\n2,9 0:1.0\n", "line 3", "9"), // later line, later position
+            ("1 10 5\n3,99999999999999999999 0:1.0\n", "line 2", "99999999999999999999"),
+            ("1 10 5\n1 zzz\n", "line 2", "zzz"), // feature token without colon
+            ("1 10 5\n1 x:1.0\n", "line 2", "\"x\""), // bad feature index
+            ("1 10 5\n1 0:y\n", "line 2", "\"y\""), // bad feature value
+        ];
+        for (input, line_tag, token) in cases {
+            let msg = err_chain(input);
+            assert!(msg.contains(line_tag), "{input:?}: wrong line in {msg:?}");
+            assert!(msg.contains(token), "{input:?}: token not named in {msg:?}");
+        }
     }
 
     #[test]

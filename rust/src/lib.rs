@@ -10,7 +10,9 @@
 //!   model ([`tree`], [`sampler`]), training loop and baselines
 //!   ([`train`]), chunked evaluation with Eq. 5 bias removal ([`eval`])
 //!   over the shared scoring core ([`score`]), the serving subsystem
-//!   ([`serve`]: tree-guided beam top-k + batched predict pipeline), the
+//!   ([`serve`]: tree-guided beam top-k + batched predict pipeline + the
+//!   fault-tolerant [`serve::daemon`] with deterministic fault injection
+//!   via [`serve::faults`]), the
 //!   PJRT runtime ([`runtime`]), datasets ([`data`]) and the experiment
 //!   harness ([`exp`]) that regenerates every table and figure of the
 //!   paper.
@@ -45,8 +47,8 @@ pub mod utils;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::config::{
-        DatasetPreset, Hyper, Method, OverlapMode, RunConfig, ServeConfig, SyntheticConfig,
-        TreeConfig,
+        DaemonConfig, DatasetPreset, Hyper, Method, OverlapMode, RunConfig, ServeConfig,
+        SyntheticConfig, TreeConfig,
     };
     pub use crate::data::{Dataset, Splits};
     pub use crate::eval::{EvalResult, Evaluator};
@@ -56,6 +58,8 @@ pub mod prelude {
         AdversarialSampler, FrequencySampler, NoiseSampler, UniformSampler,
     };
     pub use crate::score::Scorer;
+    pub use crate::serve::daemon::{Daemon, DaemonStats};
+    pub use crate::serve::faults::FaultPlan;
     pub use crate::serve::{Predictor, RequestBatcher, ServingModel};
     pub use crate::train::{LearningCurve, TrainRun};
     pub use crate::tree::Tree;

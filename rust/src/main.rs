@@ -20,6 +20,17 @@
 //!                    (batched top-k: tree-guided beam retrieval + exact
 //!                    re-rank; --exact runs the O(C) oracle sweep; --eval
 //!                    reports P@1 / recall@k on the held-out test split)
+//! repro serve        --model model.json --daemon [--socket /path.sock]
+//!                    [--deadline-ms 50] [--queue 1024] [--max-batch 64]
+//!                    [--tiers 16,4] [--worker-timeout-ms 2000]
+//!                    [--faults seed=7,panic=0.02,slow=0.05:3,malform=0.05]
+//!                    (fault-tolerant long-lived loop over stdin/stdout,
+//!                    or a Unix socket with --socket: bounded admission,
+//!                    deadline-aware micro-batching, beam degradation
+//!                    under overload, supervised predict workers; the
+//!                    fault plan — also via REPRO_FAULTS — injects
+//!                    reproducible worker panics / slow stages / malformed
+//!                    requests for chaos testing)
 //! repro predict      --model model.json --input queries.txt [--k 5]
 //!                    [--beam 64] [--exact] [--parallelism N]
 //!                    (one-at-a-time submission through the request
@@ -35,18 +46,40 @@
 //! Query files for serve/predict hold one query per line: `feat_dim`
 //! whitespace-separated floats (blank lines skipped). Predictions print
 //! one line per query: `label:score` pairs, best first.
+//!
+//! # Daemon line protocol
+//!
+//! One request per line (same float format as query files); blank lines
+//! are ignored and the line `shutdown` drains the queue and exits. Every
+//! request gets exactly one response line, tagged with the client's
+//! 0-based request index:
+//!
+//! ```text
+//! <idx> ok <label:score> ...            served at the full beam
+//! <idx> degraded beam=<B> <label:score> ...
+//!                                       served under overload at reduced
+//!                                       beam B (bit-exact for that B)
+//! <idx> rejected <queue-full|deadline>  load-shed at admission, or
+//!                                       cancelled past its latency budget
+//! <idx> error <message>                 malformed request / worker crash
+//! ```
 
-use adv_softmax::config::{DatasetPreset, Method, RunConfig, ServeConfig, SyntheticConfig};
+use adv_softmax::config::{
+    DaemonConfig, DatasetPreset, Method, RunConfig, ServeConfig, SyntheticConfig,
+};
 use adv_softmax::data::Splits;
 use adv_softmax::exp;
 use adv_softmax::runtime::Registry;
 use adv_softmax::sampler::AdversarialSampler;
+use adv_softmax::serve::daemon::{self, Daemon, RealClock};
+use adv_softmax::serve::faults::FaultPlan;
 use adv_softmax::serve::{evaluate_serving, Predictor, RequestBatcher, ServingModel, TopK};
 use adv_softmax::train::TrainRun;
 use adv_softmax::utils::cli::Args;
 use adv_softmax::utils::Pool;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const USAGE: &str = "usage: repro <data-stats|tree-fit|train|serve|predict|exp> [options]
   global: --artifacts <dir>
@@ -234,6 +267,9 @@ fn serve(args: &Args) -> Result<()> {
     let model_path: PathBuf = args.require("model")?;
     let cfg = serve_config_from(args)?;
     let parallelism: usize = args.get("parallelism", 0)?;
+    if args.flag("daemon")? {
+        return serve_daemon(args, &model_path, cfg, parallelism);
+    }
     let input: Option<PathBuf> = args.get_opt("input")?;
     let do_eval = args.flag("eval")?;
     let dataset: DatasetPreset = args.get("dataset", DatasetPreset::Tiny)?;
@@ -241,7 +277,7 @@ fn serve(args: &Args) -> Result<()> {
     args.finish()?;
     anyhow::ensure!(
         do_eval || input.is_some(),
-        "serve needs --input <queries.txt> and/or --eval"
+        "serve needs --input <queries.txt> and/or --eval (or --daemon)"
     );
 
     let model = ServingModel::load(&model_path)?;
@@ -301,6 +337,76 @@ fn serve(args: &Args) -> Result<()> {
             None => print!("{text}"),
         }
     }
+    Ok(())
+}
+
+/// `repro serve --daemon`: the fault-tolerant long-lived request loop
+/// (see the module docs for the line protocol and `serve::daemon` for the
+/// robustness contract). Banner and final stats go to stderr — stdout is
+/// the response channel in stdin mode.
+fn serve_daemon(
+    args: &Args,
+    model_path: &Path,
+    cfg: ServeConfig,
+    parallelism: usize,
+) -> Result<()> {
+    let d = DaemonConfig::default();
+    let dcfg = DaemonConfig {
+        queue_capacity: args.get("queue", d.queue_capacity)?,
+        deadline_ms: args.get("deadline-ms", d.deadline_ms)?,
+        max_batch: args.get("max-batch", d.max_batch)?,
+        degrade_beams: match args.get_opt::<String>("tiers")? {
+            Some(s) => s
+                .split(',')
+                .map(|t| t.trim().parse())
+                .collect::<Result<_, _>>()
+                .context("--tiers wants comma-separated beam widths, e.g. 16,4")?,
+            None => d.degrade_beams,
+        },
+        overload_trip: d.overload_trip,
+        worker_timeout_ms: args.get("worker-timeout-ms", d.worker_timeout_ms)?,
+    };
+    let faults = match args.get_opt::<String>("faults")? {
+        Some(spec) => Some(FaultPlan::parse(&spec)?),
+        None => FaultPlan::from_env()?,
+    };
+    let socket: Option<PathBuf> = args.get_opt("socket")?;
+    args.finish()?;
+
+    let model = Arc::new(ServingModel::load(model_path)?);
+    eprintln!(
+        "daemon: C={} K={} mode={} k={} queue={} deadline={}ms max-batch={} tiers={:?}",
+        model.num_classes,
+        model.feat_dim,
+        if cfg.exact { "exact".to_string() } else { format!("beam={}", cfg.beam) },
+        cfg.k,
+        dcfg.queue_capacity,
+        dcfg.deadline_ms,
+        dcfg.max_batch,
+        dcfg.degrade_beams,
+    );
+    if let Some(plan) = &faults {
+        eprintln!("daemon: fault injection active ({})", plan.describe());
+    }
+    let mut daemon = Daemon::new(
+        model,
+        cfg,
+        dcfg,
+        parallelism,
+        faults,
+        Box::new(RealClock::new()),
+    )?;
+    let stats = match socket {
+        Some(path) => {
+            eprintln!("daemon: listening on {path:?} (send \"shutdown\" to stop)");
+            daemon::run_socket_daemon(&mut daemon, &path)?
+        }
+        None => {
+            eprintln!("daemon: reading stdin (EOF or \"shutdown\" to stop)");
+            daemon::run_stdin_daemon(&mut daemon)?
+        }
+    };
+    eprintln!("daemon: {}", stats.summary());
     Ok(())
 }
 

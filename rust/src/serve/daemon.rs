@@ -1,0 +1,1127 @@
+//! Fault-tolerant serving daemon: bounded admission, deadline-aware
+//! micro-batching, graceful degradation, and a supervised predict worker.
+//!
+//! `repro serve --daemon` turns the one-shot predict pipeline into a
+//! long-lived request loop (stdin line protocol or a Unix socket). The
+//! robustness contract, enforced by `tests/daemon_chaos.rs`:
+//!
+//! * **No silent drops.** Every submitted request gets exactly one typed
+//!   response: `ok`, `degraded`, `rejected` (load shed or deadline), or
+//!   `error` (malformed request / worker crash).
+//! * **Bounded admission.** The queue never grows past
+//!   [`DaemonConfig::queue_capacity`]; overflow is shed with a typed
+//!   `rejected queue-full` response at submit time.
+//! * **Deadline-aware batching.** Requests coalesce into micro-batches for
+//!   up to a quarter of the latency budget ([`DaemonConfig::coalesce_ms`])
+//!   or until [`DaemonConfig::max_batch`]; requests still queued past
+//!   their deadline are cancelled with `rejected deadline`, never served
+//!   stale.
+//! * **Graceful degradation.** Sustained overload (queue at least half
+//!   full for [`DaemonConfig::overload_trip`] consecutive flushes) steps
+//!   the beam width down [`DaemonConfig::degrade_beams`]; responses are
+//!   tagged `degraded beam=B` and remain **bit-exact for that beam width**
+//!   — degradation shrinks the candidate set, it never corrupts the Eq. 5
+//!   score. The full beam is restored as the queue drains.
+//! * **Panic isolation.** Prediction runs on a supervised worker thread;
+//!   a panicking (or wedged) worker yields `error` responses for its batch
+//!   and is respawned — the daemon itself never crashes.
+//!
+//! Time is injected through the [`Clock`] trait so batching and deadline
+//! decisions are testable with a [`ManualClock`]; combined with the seeded
+//! [`FaultPlan`] (a pure function of the request id), a chaos run's
+//! fault/response trace is reproducible.
+//!
+//! # Line protocol
+//!
+//! One request per line: `feat_dim` whitespace-separated floats. One
+//! response line per request, in per-client submission order:
+//!
+//! ```text
+//! <idx> ok <label:score> ...
+//! <idx> degraded beam=<B> <label:score> ...
+//! <idx> rejected <queue-full|deadline>
+//! <idx> error <message>
+//! ```
+//!
+//! where `<idx>` counts the client's requests from 0. Blank lines are
+//! ignored; the line `shutdown` drains the queue and exits the loop.
+
+use crate::config::{DaemonConfig, ServeConfig};
+use crate::serve::faults::FaultPlan;
+use crate::serve::{Predictor, ServingModel, TopK};
+use crate::utils::Pool;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Receiver wait while the queue is empty (new input interrupts it).
+const IDLE_POLL_MS: u64 = 200;
+
+/// Millisecond clock injected into the daemon. Deadline and coalescing
+/// decisions go through this, so tests drive them with a [`ManualClock`].
+pub trait Clock: Send {
+    fn now_ms(&self) -> u64;
+}
+
+/// Wall clock (milliseconds since construction).
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-cranked clock for deterministic tests; clones share the time.
+#[derive(Clone, Default)]
+pub struct ManualClock(Arc<AtomicU64>);
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, ms: u64) {
+        self.0.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, ms: u64) {
+        self.0.store(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Why a request was rejected (typed — shedding is never a silent drop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Admission queue at capacity when the request arrived.
+    QueueFull,
+    /// Still queued when its latency budget ran out.
+    DeadlineExceeded,
+}
+
+impl RejectReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::DeadlineExceeded => "deadline",
+        }
+    }
+}
+
+/// The four response shapes of the line protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseKind {
+    Ok(TopK),
+    /// Served under overload at a reduced beam width; still bit-exact for
+    /// that width.
+    Degraded { beam: usize, topk: TopK },
+    Rejected(RejectReason),
+    /// Malformed request, or the worker crashed under this batch.
+    Error(String),
+}
+
+/// One response, addressed by the daemon-global request id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub kind: ResponseKind,
+}
+
+/// Daemon counters. Every submitted request is accounted for exactly once:
+/// `submitted = malformed + shed_queue_full + admitted` and
+/// `admitted = ok + degraded + rejected_deadline + errored + still-queued`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DaemonStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub ok: u64,
+    pub degraded: u64,
+    pub shed_queue_full: u64,
+    pub rejected_deadline: u64,
+    pub malformed: u64,
+    /// Worker-crash error responses (panic or timeout), per request.
+    pub errored: u64,
+    pub batches: u64,
+    pub worker_panics: u64,
+    pub worker_timeouts: u64,
+    pub respawns: u64,
+    pub tier_changes: u64,
+}
+
+impl DaemonStats {
+    /// The exactly-one-response invariant, given the current queue depth.
+    pub fn accounted(&self, queued: usize) -> bool {
+        self.submitted == self.malformed + self.shed_queue_full + self.admitted
+            && self.admitted
+                == self.ok + self.degraded + self.rejected_deadline + self.errored + queued as u64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} ok={} degraded={} shed={} deadline={} malformed={} \
+             errors={} batches={} respawns={}",
+            self.submitted,
+            self.ok,
+            self.degraded,
+            self.shed_queue_full,
+            self.rejected_deadline,
+            self.malformed,
+            self.errored,
+            self.batches,
+            self.respawns
+        )
+    }
+}
+
+/// An admitted request waiting for a micro-batch slot.
+struct Pending {
+    id: u64,
+    x: Vec<f32>,
+    /// Past this instant the request is cancelled, not served.
+    deadline_ms: u64,
+    /// Past this instant the request stops waiting for co-batchable
+    /// arrivals and forces a flush.
+    coalesce_due_ms: u64,
+}
+
+/// A predict batch shipped to the supervised worker.
+struct BatchJob {
+    m: usize,
+    xs: Vec<f32>,
+    cfg: ServeConfig,
+    /// Injected slow stage (milliseconds of sleep before predicting).
+    slow_ms: u64,
+    /// Injected panic: the poisoned request id, if any.
+    panic_on: Option<u64>,
+}
+
+enum WorkerOutcome {
+    Done(Vec<TopK>),
+    /// The worker died under this batch: `panicked` distinguishes a panic
+    /// (channel closed) from a supervisor timeout (worker abandoned).
+    Crashed { panicked: bool },
+}
+
+/// The supervised predict worker: prediction runs on a dedicated thread
+/// so a panicking request kills that thread, not the daemon. The
+/// supervisor detects the death (reply channel disconnect) or a wedge
+/// (reply timeout), respawns the worker, and reports the batch as crashed
+/// so the daemon can answer every affected request with a typed error.
+struct PredictWorker {
+    model: Arc<ServingModel>,
+    parallelism: usize,
+    job_tx: Option<Sender<BatchJob>>,
+    reply_rx: Receiver<Vec<TopK>>,
+    handle: Option<JoinHandle<()>>,
+    respawns: u64,
+}
+
+impl PredictWorker {
+    fn new(model: Arc<ServingModel>, parallelism: usize) -> Self {
+        let (job_tx, reply_rx, handle) = Self::spawn(model.clone(), parallelism);
+        Self {
+            model,
+            parallelism,
+            job_tx: Some(job_tx),
+            reply_rx,
+            handle: Some(handle),
+            respawns: 0,
+        }
+    }
+
+    fn spawn(
+        model: Arc<ServingModel>,
+        parallelism: usize,
+    ) -> (Sender<BatchJob>, Receiver<Vec<TopK>>, JoinHandle<()>) {
+        let (job_tx, job_rx) = mpsc::channel::<BatchJob>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Vec<TopK>>();
+        let handle = thread::Builder::new()
+            .name("predict-worker".into())
+            .spawn(move || {
+                let pool = if parallelism == 0 { Pool::auto() } else { Pool::new(parallelism) };
+                while let Ok(job) = job_rx.recv() {
+                    if job.slow_ms > 0 {
+                        thread::sleep(Duration::from_millis(job.slow_ms));
+                    }
+                    if let Some(id) = job.panic_on {
+                        panic!("injected fault: worker panic on request {id}");
+                    }
+                    let pred = Predictor::new(&model, job.cfg)
+                        .expect("batch config pre-validated by Daemon::new");
+                    let out = pred.predict_batch_with(&job.xs, job.m, &pool);
+                    if reply_tx.send(out).is_err() {
+                        break; // supervisor abandoned us after a timeout
+                    }
+                }
+            })
+            .expect("spawn predict worker thread");
+        (job_tx, reply_rx, handle)
+    }
+
+    /// Replace the worker. `join_old` when the old thread already died
+    /// (panic unwound — reap it, swallowing the payload); a wedged thread
+    /// is abandoned instead, and exits on its next reply send.
+    fn respawn(&mut self, join_old: bool) {
+        self.job_tx = None;
+        if let Some(h) = self.handle.take() {
+            if join_old {
+                let _ = h.join();
+            }
+        }
+        let (tx, rx, handle) = Self::spawn(self.model.clone(), self.parallelism);
+        self.job_tx = Some(tx);
+        self.reply_rx = rx;
+        self.handle = Some(handle);
+        self.respawns += 1;
+    }
+
+    fn run_batch(&mut self, job: BatchJob, timeout: Duration) -> WorkerOutcome {
+        let sent = match &self.job_tx {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        };
+        if !sent {
+            // the worker died between batches; reap and replace it
+            self.respawn(true);
+            return WorkerOutcome::Crashed { panicked: true };
+        }
+        match self.reply_rx.recv_timeout(timeout) {
+            Ok(out) => WorkerOutcome::Done(out),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.respawn(true);
+                WorkerOutcome::Crashed { panicked: true }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                self.respawn(false);
+                WorkerOutcome::Crashed { panicked: false }
+            }
+        }
+    }
+}
+
+impl Drop for PredictWorker {
+    fn drop(&mut self) {
+        // hang up the job channel so the worker loop exits, then reap it
+        self.job_tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The serving daemon core: single-threaded admission/batching/degradation
+/// state machine in front of the supervised predict worker. Transports
+/// ([`run_stdin_daemon`], [`run_socket_daemon`]) feed it lines and write
+/// its responses; tests drive [`Daemon::submit_line`] / [`Daemon::pump`]
+/// directly against a [`ManualClock`].
+pub struct Daemon {
+    model: Arc<ServingModel>,
+    serve: ServeConfig,
+    cfg: DaemonConfig,
+    faults: Option<FaultPlan>,
+    clock: Box<dyn Clock>,
+    queue: VecDeque<Pending>,
+    next_id: u64,
+    /// Current degradation tier: 0 = full beam, t > 0 = degrade_beams[t-1].
+    tier: usize,
+    overload_streak: usize,
+    worker: PredictWorker,
+    stats: DaemonStats,
+}
+
+impl Daemon {
+    pub fn new(
+        model: Arc<ServingModel>,
+        serve: ServeConfig,
+        cfg: DaemonConfig,
+        parallelism: usize,
+        faults: Option<FaultPlan>,
+        clock: Box<dyn Clock>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        // validate the serving config and every degradation tier against
+        // the model now — the worker must never see an invalid batch config
+        let _ = Predictor::new(&model, serve)?;
+        if !serve.exact {
+            for (i, &b) in cfg.degrade_beams.iter().enumerate() {
+                anyhow::ensure!(
+                    b < serve.beam,
+                    "degradation tier {i} beam {b} not below the serving beam {}",
+                    serve.beam
+                );
+                let _ = Predictor::new(&model, ServeConfig { beam: b, ..serve })?;
+            }
+        }
+        let worker = PredictWorker::new(model.clone(), parallelism);
+        Ok(Self {
+            model,
+            serve,
+            cfg,
+            faults,
+            clock,
+            queue: VecDeque::new(),
+            next_id: 0,
+            tier: 0,
+            overload_streak: 0,
+            worker,
+            stats: DaemonStats::default(),
+        })
+    }
+
+    pub fn stats(&self) -> DaemonStats {
+        self.stats
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Current degradation tier (0 = full beam).
+    pub fn tier(&self) -> usize {
+        self.tier
+    }
+
+    /// Swap the fault plan mid-run (chaos tests inject and then clear
+    /// faults to check recovery).
+    pub fn set_faults(&mut self, faults: Option<FaultPlan>) {
+        self.faults = faults;
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stats.submitted += 1;
+        id
+    }
+
+    /// Submit one protocol line. Returns the assigned request id and, for
+    /// requests answered at admission (malformed or shed), the immediate
+    /// response; admitted requests answer later through [`Daemon::pump`].
+    pub fn submit_line(&mut self, line: &str) -> (u64, Option<ResponseKind>) {
+        let id = self.alloc_id();
+        let corrupted;
+        let effective = match &self.faults {
+            Some(f) if f.malform(id) => {
+                corrupted = f.corrupt_line(line);
+                corrupted.as_str()
+            }
+            _ => line,
+        };
+        match self.parse_query(effective) {
+            Ok(x) => (id, self.admit(id, x)),
+            Err(msg) => {
+                self.stats.malformed += 1;
+                (id, Some(ResponseKind::Error(msg)))
+            }
+        }
+    }
+
+    /// Submit one pre-parsed query (the load-generator path).
+    pub fn submit_features(&mut self, x: &[f32]) -> (u64, Option<ResponseKind>) {
+        let id = self.alloc_id();
+        if x.len() != self.model.feat_dim {
+            self.stats.malformed += 1;
+            let msg = format!(
+                "malformed request: got {} features, model expects {}",
+                x.len(),
+                self.model.feat_dim
+            );
+            return (id, Some(ResponseKind::Error(msg)));
+        }
+        (id, self.admit(id, x.to_vec()))
+    }
+
+    fn parse_query(&self, line: &str) -> std::result::Result<Vec<f32>, String> {
+        let mut x = Vec::with_capacity(self.model.feat_dim);
+        for tok in line.split_whitespace() {
+            let v: f32 = tok
+                .parse()
+                .map_err(|_| format!("malformed request: {tok:?} is not a number"))?;
+            if !v.is_finite() {
+                return Err(format!("malformed request: non-finite feature {tok:?}"));
+            }
+            x.push(v);
+        }
+        if x.len() != self.model.feat_dim {
+            return Err(format!(
+                "malformed request: got {} features, model expects {}",
+                x.len(),
+                self.model.feat_dim
+            ));
+        }
+        Ok(x)
+    }
+
+    fn admit(&mut self, id: u64, x: Vec<f32>) -> Option<ResponseKind> {
+        if self.queue.len() >= self.cfg.queue_capacity {
+            self.stats.shed_queue_full += 1;
+            return Some(ResponseKind::Rejected(RejectReason::QueueFull));
+        }
+        let now = self.clock.now_ms();
+        self.queue.push_back(Pending {
+            id,
+            x,
+            deadline_ms: now + self.cfg.deadline_ms,
+            coalesce_due_ms: now + self.cfg.coalesce_ms(),
+        });
+        self.stats.admitted += 1;
+        None
+    }
+
+    /// Advance the batching state machine: cancel requests past their
+    /// deadline, then flush micro-batches while a flush condition holds —
+    /// queue at [`DaemonConfig::max_batch`], the oldest request's
+    /// coalescing window expired, or `idle` (the input went quiet, so
+    /// waiting longer buys nothing). Returns the responses produced.
+    pub fn pump(&mut self, idle: bool) -> Vec<Response> {
+        let mut out = Vec::new();
+        loop {
+            // FIFO queue + uniform budget ⇒ expired requests are at the
+            // front; cancel with a typed rejection, never serve stale
+            let now = self.clock.now_ms();
+            while let Some(p) = self.queue.front() {
+                if now < p.deadline_ms {
+                    break;
+                }
+                let p = self.queue.pop_front().expect("front exists");
+                self.stats.rejected_deadline += 1;
+                out.push(Response {
+                    id: p.id,
+                    kind: ResponseKind::Rejected(RejectReason::DeadlineExceeded),
+                });
+            }
+            let due = match self.queue.front() {
+                None => break,
+                Some(p) => now >= p.coalesce_due_ms,
+            };
+            if !(idle || due || self.queue.len() >= self.cfg.max_batch) {
+                break;
+            }
+            self.flush_batch(&mut out);
+        }
+        debug_assert!(self.stats.accounted(self.queue.len()), "response accounting broke");
+        out
+    }
+
+    /// Flush everything regardless of coalescing windows (shutdown path).
+    pub fn drain(&mut self) -> Vec<Response> {
+        let out = self.pump(true);
+        debug_assert!(self.queue.is_empty());
+        out
+    }
+
+    /// How long until the oldest queued request forces action (its
+    /// coalescing window or deadline, whichever is sooner); `None` when
+    /// the queue is empty. Transports use this as their receive timeout.
+    pub fn next_due_in(&self) -> Option<Duration> {
+        let now = self.clock.now_ms();
+        self.queue.front().map(|p| {
+            let due = p.coalesce_due_ms.min(p.deadline_ms);
+            Duration::from_millis(due.saturating_sub(now).max(1))
+        })
+    }
+
+    /// The beam the next batch runs at, and whether that is degraded.
+    fn effective_beam(&self) -> (usize, bool) {
+        if self.serve.exact || self.tier == 0 {
+            (self.serve.beam, false)
+        } else {
+            (self.cfg.degrade_beams[self.tier - 1], true)
+        }
+    }
+
+    fn flush_batch(&mut self, out: &mut Vec<Response>) {
+        let take = self.queue.len().min(self.cfg.max_batch);
+        debug_assert!(take > 0);
+        let kf = self.model.feat_dim;
+        let mut ids = Vec::with_capacity(take);
+        let mut xs = Vec::with_capacity(take * kf);
+        let mut slow_ms = 0u64;
+        let mut panic_on = None;
+        for _ in 0..take {
+            let p = self.queue.pop_front().expect("take <= queue len");
+            if let Some(f) = &self.faults {
+                if let Some(ms) = f.slow_stage(p.id) {
+                    slow_ms = slow_ms.max(ms);
+                }
+                if panic_on.is_none() && f.worker_panic(p.id) {
+                    panic_on = Some(p.id);
+                }
+            }
+            xs.extend_from_slice(&p.x);
+            ids.push(p.id);
+        }
+        let (beam, degraded) = self.effective_beam();
+        let job = BatchJob {
+            m: ids.len(),
+            xs,
+            cfg: ServeConfig { beam, ..self.serve },
+            slow_ms,
+            panic_on,
+        };
+        self.stats.batches += 1;
+        let timeout = Duration::from_millis(self.cfg.worker_timeout_ms);
+        match self.worker.run_batch(job, timeout) {
+            WorkerOutcome::Done(topks) => {
+                debug_assert_eq!(topks.len(), ids.len());
+                for (id, topk) in ids.into_iter().zip(topks) {
+                    let kind = if degraded {
+                        self.stats.degraded += 1;
+                        ResponseKind::Degraded { beam, topk }
+                    } else {
+                        self.stats.ok += 1;
+                        ResponseKind::Ok(topk)
+                    };
+                    out.push(Response { id, kind });
+                }
+            }
+            WorkerOutcome::Crashed { panicked } => {
+                let what = if panicked {
+                    self.stats.worker_panics += 1;
+                    "predict worker panicked under this batch"
+                } else {
+                    self.stats.worker_timeouts += 1;
+                    "predict worker timed out under this batch"
+                };
+                for id in ids {
+                    self.stats.errored += 1;
+                    out.push(Response { id, kind: ResponseKind::Error(what.to_string()) });
+                }
+            }
+        }
+        self.stats.respawns = self.worker.respawns;
+        self.update_degradation();
+    }
+
+    /// Post-flush degradation controller: a sustained half-full queue
+    /// steps one tier down the beam ladder; a drained queue steps back up.
+    fn update_degradation(&mut self) {
+        if self.serve.exact || self.cfg.degrade_beams.is_empty() {
+            return;
+        }
+        if self.queue.len() >= self.cfg.shed_highwater() {
+            self.overload_streak += 1;
+            if self.overload_streak >= self.cfg.overload_trip
+                && self.tier < self.cfg.degrade_beams.len()
+            {
+                self.tier += 1;
+                self.overload_streak = 0;
+                self.stats.tier_changes += 1;
+            }
+        } else {
+            self.overload_streak = 0;
+            if self.queue.is_empty() && self.tier > 0 {
+                self.tier -= 1;
+                self.stats.tier_changes += 1;
+            }
+        }
+    }
+}
+
+/// One unit of transport input for [`run_loop`].
+pub enum Inbound {
+    Line { client: usize, line: String },
+    Shutdown,
+}
+
+/// Render a response in the line protocol (`idx` is the per-client
+/// request index).
+pub fn format_line(idx: u64, kind: &ResponseKind) -> String {
+    match kind {
+        ResponseKind::Ok(topk) => format!("{idx} ok {}", format_pairs(topk)),
+        ResponseKind::Degraded { beam, topk } => {
+            format!("{idx} degraded beam={beam} {}", format_pairs(topk))
+        }
+        ResponseKind::Rejected(r) => format!("{idx} rejected {}", r.name()),
+        ResponseKind::Error(msg) => format!("{idx} error {msg}"),
+    }
+}
+
+fn format_pairs(topk: &TopK) -> String {
+    topk.labels
+        .iter()
+        .zip(topk.scores.iter())
+        .map(|(y, s)| format!("{y}:{s:.6}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn dispatch<F: FnMut(usize, u64, &ResponseKind)>(
+    route: &mut HashMap<u64, (usize, u64)>,
+    responses: Vec<Response>,
+    emit: &mut F,
+) {
+    for r in responses {
+        if let Some((client, idx)) = route.remove(&r.id) {
+            emit(client, idx, &r.kind);
+        }
+    }
+}
+
+/// The transport-agnostic daemon loop: pull [`Inbound`] lines from `rx`,
+/// feed the daemon, and emit `(client, idx, response)` triples in
+/// per-client submission order. Exits on [`Inbound::Shutdown`], a
+/// `shutdown` line, or a disconnected channel — draining the queue first
+/// so every admitted request is answered.
+pub fn run_loop<F: FnMut(usize, u64, &ResponseKind)>(
+    daemon: &mut Daemon,
+    rx: &Receiver<Inbound>,
+    mut emit: F,
+) -> DaemonStats {
+    let mut route: HashMap<u64, (usize, u64)> = HashMap::new();
+    let mut counters: HashMap<usize, u64> = HashMap::new();
+    let mut open = true;
+    while open {
+        let wait = daemon
+            .next_due_in()
+            .unwrap_or(Duration::from_millis(IDLE_POLL_MS));
+        match rx.recv_timeout(wait) {
+            Ok(first) => {
+                let mut burst = vec![first];
+                while let Ok(more) = rx.try_recv() {
+                    burst.push(more);
+                }
+                for msg in burst {
+                    match msg {
+                        Inbound::Shutdown => open = false,
+                        Inbound::Line { client, line } => {
+                            let text = line.trim();
+                            if text.is_empty() {
+                                continue;
+                            }
+                            if text == "shutdown" {
+                                open = false;
+                                continue;
+                            }
+                            let counter = counters.entry(client).or_insert(0);
+                            let idx = *counter;
+                            *counter += 1;
+                            let (id, immediate) = daemon.submit_line(text);
+                            match immediate {
+                                Some(kind) => emit(client, idx, &kind),
+                                None => {
+                                    route.insert(id, (client, idx));
+                                }
+                            }
+                        }
+                    }
+                }
+                dispatch(&mut route, daemon.pump(false), &mut emit);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                dispatch(&mut route, daemon.pump(true), &mut emit);
+            }
+            Err(RecvTimeoutError::Disconnected) => open = false,
+        }
+    }
+    dispatch(&mut route, daemon.drain(), &mut emit);
+    daemon.stats()
+}
+
+/// Serve the line protocol over stdin/stdout until EOF or `shutdown`.
+pub fn run_stdin_daemon(daemon: &mut Daemon) -> Result<DaemonStats> {
+    let (tx, rx) = mpsc::channel();
+    // detached on purpose: the reader parks on stdin and exits on EOF or
+    // when the loop side hangs up the channel
+    thread::Builder::new()
+        .name("stdin-reader".into())
+        .spawn(move || {
+            for line in std::io::stdin().lock().lines() {
+                let Ok(line) = line else { break };
+                if tx.send(Inbound::Line { client: 0, line }).is_err() {
+                    return;
+                }
+            }
+            let _ = tx.send(Inbound::Shutdown);
+        })
+        .context("spawn stdin reader")?;
+    let mut out = std::io::stdout().lock();
+    let stats = run_loop(daemon, &rx, |_, idx, kind| {
+        let _ = writeln!(out, "{}", format_line(idx, kind));
+        let _ = out.flush();
+    });
+    Ok(stats)
+}
+
+/// Serve the line protocol on a Unix socket until a client sends
+/// `shutdown`. Each connection is an independent client with its own
+/// request indices; responses go back on the connection that asked.
+#[cfg(unix)]
+pub fn run_socket_daemon(daemon: &mut Daemon, path: &Path) -> Result<DaemonStats> {
+    use std::io::BufReader;
+    use std::os::unix::net::{UnixListener, UnixStream};
+
+    if path.exists() {
+        std::fs::remove_file(path).with_context(|| format!("remove stale socket {path:?}"))?;
+    }
+    let listener =
+        UnixListener::bind(path).with_context(|| format!("bind unix socket {path:?}"))?;
+    listener
+        .set_nonblocking(true)
+        .context("set socket listener non-blocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let writers: Arc<Mutex<HashMap<usize, UnixStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (tx, rx) = mpsc::channel();
+    let acceptor = {
+        let stop = stop.clone();
+        let writers = writers.clone();
+        thread::Builder::new()
+            .name("socket-accept".into())
+            .spawn(move || {
+                let mut next_client = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let client = next_client;
+                            next_client += 1;
+                            if let Ok(writer) = stream.try_clone() {
+                                writers.lock().unwrap().insert(client, writer);
+                            }
+                            let tx = tx.clone();
+                            let writers = writers.clone();
+                            let _ = thread::Builder::new()
+                                .name(format!("socket-client-{client}"))
+                                .spawn(move || {
+                                    for line in BufReader::new(stream).lines() {
+                                        let Ok(line) = line else { break };
+                                        if tx.send(Inbound::Line { client, line }).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    writers.lock().unwrap().remove(&client);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawn socket acceptor")?
+    };
+    let stats = {
+        let writers = writers.clone();
+        run_loop(daemon, &rx, move |client, idx, kind| {
+            if let Some(w) = writers.lock().unwrap().get_mut(&client) {
+                let _ = writeln!(w, "{}", format_line(idx, kind));
+            }
+        })
+    };
+    stop.store(true, Ordering::SeqCst);
+    let _ = acceptor.join();
+    std::fs::remove_file(path).ok();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The hand-built C=8, K=4 one-hot model (no aux tree ⇒ exact path),
+    /// mirroring the fixture in `serve::tests`.
+    fn onehot_model() -> Arc<ServingModel> {
+        let (c, k) = (8usize, 4usize);
+        let mut w = vec![0f32; c * k];
+        for y in 0..c {
+            w[y * k + y % k] = (y + 1) as f32;
+        }
+        Arc::new(ServingModel {
+            num_classes: c,
+            feat_dim: k,
+            w,
+            b: vec![0f32; c],
+            aux: None,
+            correct_bias: false,
+        })
+    }
+
+    fn exact_cfg() -> ServeConfig {
+        ServeConfig { exact: true, k: 3, ..Default::default() }
+    }
+
+    fn manual_daemon(cfg: DaemonConfig, faults: Option<FaultPlan>) -> (Daemon, ManualClock) {
+        let clock = ManualClock::new();
+        let daemon = Daemon::new(
+            onehot_model(),
+            exact_cfg(),
+            cfg,
+            1,
+            faults,
+            Box::new(clock.clone()),
+        )
+        .unwrap();
+        (daemon, clock)
+    }
+
+    fn query(hot: usize) -> Vec<f32> {
+        let mut x = vec![0f32; 4];
+        x[hot % 4] = 1.0;
+        x
+    }
+
+    fn line(hot: usize) -> String {
+        query(hot)
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    #[test]
+    fn admission_sheds_past_capacity_with_typed_rejections() {
+        let cfg = DaemonConfig { queue_capacity: 2, ..Default::default() };
+        let (mut daemon, _clock) = manual_daemon(cfg, None);
+        assert_eq!(daemon.submit_line(&line(0)), (0, None));
+        assert_eq!(daemon.submit_line(&line(1)), (1, None));
+        let (id, kind) = daemon.submit_line(&line(2));
+        assert_eq!(id, 2);
+        assert_eq!(kind, Some(ResponseKind::Rejected(RejectReason::QueueFull)));
+        let out = daemon.pump(true);
+        assert_eq!(out.len(), 2, "both admitted requests answered");
+        assert!(out.iter().all(|r| matches!(r.kind, ResponseKind::Ok(_))));
+        let stats = daemon.stats();
+        assert_eq!(stats.shed_queue_full, 1);
+        assert_eq!(stats.ok, 2);
+        assert!(stats.accounted(daemon.queue_len()));
+    }
+
+    #[test]
+    fn queued_requests_past_deadline_are_cancelled_not_served() {
+        let cfg = DaemonConfig { deadline_ms: 20, ..Default::default() };
+        let (mut daemon, clock) = manual_daemon(cfg, None);
+        let (id0, none) = daemon.submit_line(&line(0));
+        assert!(none.is_none());
+        clock.advance(21);
+        let (id1, _) = daemon.submit_line(&line(1));
+        let out = daemon.pump(true);
+        assert_eq!(out.len(), 2);
+        assert_eq!(
+            out[0],
+            Response {
+                id: id0,
+                kind: ResponseKind::Rejected(RejectReason::DeadlineExceeded)
+            }
+        );
+        assert!(matches!(&out[1], Response { id, kind: ResponseKind::Ok(_) } if *id == id1));
+        assert_eq!(daemon.stats().rejected_deadline, 1);
+        assert!(daemon.stats().accounted(daemon.queue_len()));
+    }
+
+    #[test]
+    fn coalescing_waits_for_the_window_and_max_batch_flushes_early() {
+        let cfg = DaemonConfig { deadline_ms: 40, max_batch: 2, ..Default::default() };
+        let coalesce = cfg.coalesce_ms();
+        let (mut daemon, clock) = manual_daemon(cfg, None);
+        // one queued request inside its window: nothing flushes
+        daemon.submit_line(&line(0));
+        assert!(daemon.pump(false).is_empty());
+        assert_eq!(daemon.next_due_in(), Some(Duration::from_millis(coalesce)));
+        // a second request hits max_batch: flush without waiting
+        daemon.submit_line(&line(1));
+        let out = daemon.pump(false);
+        assert_eq!(out.len(), 2);
+        assert_eq!(daemon.stats().batches, 1, "coalesced into one batch");
+        // a lone request flushes once its window expires
+        daemon.submit_line(&line(2));
+        assert!(daemon.pump(false).is_empty());
+        clock.advance(coalesce);
+        assert_eq!(daemon.pump(false).len(), 1);
+        assert!(daemon.stats().accounted(daemon.queue_len()));
+    }
+
+    #[test]
+    fn malformed_lines_get_typed_errors_and_never_queue() {
+        let (mut daemon, _clock) = manual_daemon(DaemonConfig::default(), None);
+        for bad in ["1 2 x 4", "1 2 3", "1 2 3 4 5", "nan 0 0 0"] {
+            let (_, kind) = daemon.submit_line(bad);
+            match kind {
+                Some(ResponseKind::Error(msg)) => {
+                    assert!(msg.contains("malformed request"), "line {bad:?}: {msg}");
+                }
+                other => panic!("line {bad:?} should be a typed error, got {other:?}"),
+            }
+        }
+        assert_eq!(daemon.queue_len(), 0);
+        assert_eq!(daemon.stats().malformed, 4);
+        assert!(daemon.stats().accounted(0));
+    }
+
+    #[test]
+    fn worker_panic_is_isolated_and_recovery_is_bit_exact() {
+        let plan = FaultPlan { panic_rate: 1.0, ..FaultPlan::disabled(1) };
+        let (mut daemon, _clock) = manual_daemon(DaemonConfig::default(), Some(plan));
+        daemon.submit_line(&line(0));
+        let out = daemon.drain();
+        assert_eq!(out.len(), 1);
+        assert!(
+            matches!(&out[0].kind, ResponseKind::Error(msg) if msg.contains("panicked")),
+            "got {:?}",
+            out[0].kind
+        );
+        assert_eq!(daemon.stats().worker_panics, 1);
+        assert_eq!(daemon.stats().respawns, 1);
+        // faults cleared: the respawned worker serves bit-identically to a
+        // plain predictor
+        daemon.set_faults(None);
+        daemon.submit_line(&line(0));
+        let out = daemon.drain();
+        let model = onehot_model();
+        let expect = Predictor::new(&model, exact_cfg()).unwrap().predict_one(&query(0));
+        match &out[0].kind {
+            ResponseKind::Ok(topk) => assert_eq!(topk, &expect),
+            other => panic!("expected ok after recovery, got {other:?}"),
+        }
+        assert!(daemon.stats().accounted(daemon.queue_len()));
+    }
+
+    #[test]
+    fn wedged_worker_times_out_and_is_replaced() {
+        // a slow stage far past the supervisor's patience models a wedged
+        // worker: the batch gets typed errors, the worker is abandoned and
+        // respawned, and the daemon keeps serving
+        let plan = FaultPlan { slow_rate: 1.0, slow_ms: 300, ..FaultPlan::disabled(2) };
+        let cfg = DaemonConfig { deadline_ms: 40, worker_timeout_ms: 40, ..Default::default() };
+        let (mut daemon, _clock) = manual_daemon(cfg, Some(plan));
+        daemon.submit_line(&line(0));
+        let out = daemon.drain();
+        assert_eq!(out.len(), 1);
+        assert!(
+            matches!(&out[0].kind, ResponseKind::Error(msg) if msg.contains("timed out")),
+            "got {:?}",
+            out[0].kind
+        );
+        assert_eq!(daemon.stats().worker_timeouts, 1);
+        assert_eq!(daemon.stats().respawns, 1);
+        // the replacement worker serves normally once faults stop
+        daemon.set_faults(None);
+        daemon.submit_line(&line(1));
+        let out = daemon.drain();
+        assert!(matches!(&out[0].kind, ResponseKind::Ok(_)), "got {:?}", out[0].kind);
+        assert!(daemon.stats().accounted(daemon.queue_len()));
+    }
+
+    #[test]
+    fn declared_slow_stage_within_patience_completes_ok() {
+        let plan = FaultPlan { slow_rate: 1.0, slow_ms: 5, ..FaultPlan::disabled(3) };
+        let (mut daemon, _clock) = manual_daemon(DaemonConfig::default(), Some(plan));
+        daemon.submit_line(&line(0));
+        let out = daemon.drain();
+        assert!(matches!(&out[0].kind, ResponseKind::Ok(_)), "got {:?}", out[0].kind);
+        assert_eq!(daemon.stats().worker_timeouts, 0);
+        assert_eq!(daemon.stats().respawns, 0);
+    }
+
+    #[test]
+    fn exact_mode_never_degrades() {
+        let cfg = DaemonConfig {
+            queue_capacity: 8,
+            max_batch: 1,
+            overload_trip: 1,
+            ..Default::default()
+        };
+        let (mut daemon, _clock) = manual_daemon(cfg, None);
+        for i in 0..8 {
+            daemon.submit_line(&line(i));
+        }
+        let out = daemon.drain();
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|r| matches!(r.kind, ResponseKind::Ok(_))));
+        assert_eq!(daemon.tier(), 0);
+        assert_eq!(daemon.stats().degraded, 0);
+    }
+
+    #[test]
+    fn run_loop_answers_in_submission_order_and_drains_on_shutdown() {
+        let model = onehot_model();
+        let daemon = Daemon::new(
+            model.clone(),
+            exact_cfg(),
+            DaemonConfig { deadline_ms: 1000, ..Default::default() },
+            1,
+            None,
+            Box::new(RealClock::new()),
+        );
+        let mut daemon = daemon.unwrap();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(Inbound::Line { client: 0, line: line(i) }).unwrap();
+        }
+        tx.send(Inbound::Line { client: 0, line: "not a number".into() })
+            .unwrap();
+        tx.send(Inbound::Line { client: 0, line: "shutdown".into() })
+            .unwrap();
+        let mut got = Vec::new();
+        let stats = run_loop(&mut daemon, &rx, |client, idx, kind| {
+            got.push((client, idx, kind.clone()));
+        });
+        assert_eq!(got.len(), 4, "three queries + one typed error");
+        let idxs: Vec<u64> = got.iter().map(|(_, idx, _)| *idx).collect();
+        let mut sorted = idxs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        for (_, idx, kind) in &got {
+            match kind {
+                ResponseKind::Ok(topk) => {
+                    let expect = Predictor::new(&model, exact_cfg())
+                        .unwrap()
+                        .predict_one(&query(*idx as usize));
+                    assert_eq!(topk, &expect, "request {idx}");
+                }
+                ResponseKind::Error(msg) => {
+                    assert_eq!(*idx, 3);
+                    assert!(msg.contains("malformed request"));
+                }
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        assert_eq!(stats.ok, 3);
+        assert_eq!(stats.malformed, 1);
+        assert!(stats.accounted(0));
+    }
+
+    #[test]
+    fn format_line_covers_every_tag() {
+        let topk = TopK { labels: vec![4, 0], scores: vec![5.0, 1.0] };
+        assert_eq!(format_line(0, &ResponseKind::Ok(topk.clone())), "0 ok 4:5.000000 0:1.000000");
+        assert_eq!(
+            format_line(1, &ResponseKind::Degraded { beam: 16, topk }),
+            "1 degraded beam=16 4:5.000000 0:1.000000"
+        );
+        assert_eq!(
+            format_line(2, &ResponseKind::Rejected(RejectReason::QueueFull)),
+            "2 rejected queue-full"
+        );
+        assert_eq!(
+            format_line(3, &ResponseKind::Rejected(RejectReason::DeadlineExceeded)),
+            "3 rejected deadline"
+        );
+        assert_eq!(format_line(4, &ResponseKind::Error("boom".into())), "4 error boom");
+    }
+}

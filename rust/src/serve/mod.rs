@@ -34,6 +34,14 @@
 //! * [`RequestBatcher`] — request coalescing for one-at-a-time callers.
 //! * [`evaluate_serving`] — P@1 / recall@k on held-out data
 //!   (`repro serve --eval`).
+//! * [`daemon`] — the fault-tolerant long-lived request loop
+//!   (`repro serve --daemon`): bounded admission, deadline-aware
+//!   micro-batching, graceful beam degradation, supervised workers.
+//! * [`faults`] — seeded, reproducible fault injection for chaos tests
+//!   (`REPRO_FAULTS`).
+
+pub mod daemon;
+pub mod faults;
 
 use crate::config::ServeConfig;
 use crate::data::Dataset;
@@ -162,12 +170,40 @@ impl ServingModel {
         Ok(m)
     }
 
+    /// Crash-safe checkpoint write: the payload goes to a temp file in the
+    /// target directory (same filesystem, so the rename is atomic) and
+    /// replaces `path` only once fully written — a crash mid-save leaves
+    /// any previous checkpoint intact, never a truncated one.
     pub fn save(&self, path: &Path) -> Result<()> {
-        Ok(std::fs::write(path, self.to_json().to_string())?)
+        use anyhow::Context;
+        let dir = match path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d,
+            _ => Path::new("."),
+        };
+        let stem = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("serving_model.json");
+        let tmp = dir.join(format!(".{stem}.tmp.{}", std::process::id()));
+        if let Err(e) = std::fs::write(&tmp, self.to_json().to_string()) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e).with_context(|| format!("write checkpoint temp file {}", tmp.display()));
+        }
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e)
+                .with_context(|| format!("atomically replace checkpoint {}", path.display()));
+        }
+        Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Self> {
-        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+        use anyhow::Context;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read serving model {}", path.display()))?;
+        let json = Json::parse(&text)
+            .with_context(|| format!("parse serving model {}", path.display()))?;
+        Self::from_json(&json).with_context(|| format!("invalid serving model {}", path.display()))
     }
 }
 
@@ -607,6 +643,87 @@ mod tests {
         assert_eq!(metrics.k, 2);
         assert_eq!(metrics.p_at_1, 1.0);
         assert_eq!(metrics.recall_at_k, 1.0);
+    }
+
+    #[test]
+    fn batcher_empty_flush_consecutive_flushes_and_reuse() {
+        let m = onehot_model();
+        let cfg = ServeConfig { exact: true, k: 2, ..Default::default() };
+        let pred = Predictor::new(&m, cfg).unwrap();
+        let pool = Pool::serial();
+        let mut batcher = RequestBatcher::new(&pred);
+        // empty flush is a no-op, repeatedly
+        assert!(batcher.flush_with(&pool).is_empty());
+        assert!(batcher.flush_with(&pool).is_empty());
+        assert_eq!(batcher.pending(), 0);
+        // first fill
+        let qs: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                let mut x = vec![0f32; 4];
+                x[i] = 1.0;
+                x
+            })
+            .collect();
+        for q in &qs {
+            batcher.submit(q);
+        }
+        let first = batcher.flush_with(&pool);
+        assert_eq!(first.len(), 3);
+        for (q, top) in qs.iter().zip(first.iter()) {
+            assert_eq!(top, &pred.predict_one(q), "pinned to predict_one");
+        }
+        // consecutive flush right after: empty again, state fully reset
+        assert!(batcher.flush_with(&pool).is_empty());
+        // reuse after flush: slots restart at 0 and results still match
+        let q = vec![0.0, 0.0, 0.0, 1.0];
+        assert_eq!(batcher.submit(&q), 0);
+        let second = batcher.flush_with(&pool);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0], pred.predict_one(&q));
+    }
+
+    #[test]
+    fn truncated_checkpoint_rejected_with_path_in_error() {
+        let m = onehot_model();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("adv_softmax_trunc_ckpt_{}.json", std::process::id()));
+        m.save(&path).unwrap();
+        // simulate a torn write from a non-atomic saver: keep half the bytes
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = ServingModel::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(path.display().to_string().as_str()),
+            "error names the offending path: {msg}"
+        );
+        std::fs::remove_file(&path).ok();
+        // and a missing file also names the path
+        let err = ServingModel::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains(path.display().to_string().as_str()));
+    }
+
+    #[test]
+    fn save_is_atomic_replace_leaving_no_temp_files() {
+        let m = onehot_model();
+        let dir = std::env::temp_dir().join(format!("adv_softmax_save_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        // overwrite an existing checkpoint in place
+        let mut m2 = m.clone();
+        m2.b[0] = 42.0;
+        m2.save(&path).unwrap();
+        let back = ServingModel::load(&path).unwrap();
+        assert_eq!(back.b[0], 42.0);
+        // the temp file never survives a successful save
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "model.json")
+            .collect();
+        assert!(leftovers.is_empty(), "stray files after save: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -281,7 +281,8 @@ impl Pool {
     /// The returned [`StageHandle`] owns the closure; call
     /// [`StageHandle::join`] (or drop it) before the next pool dispatch.
     /// Worker panics re-raise at `join`; a dropped-without-join handle
-    /// leaves the panic flag set for the next dispatcher. On a serial pool
+    /// swallows the stage's panic (re-panicking from drop would abort
+    /// during an unwind) and leaves the pool clean. On a serial pool
     /// there is no background thread: `f(0)` runs inline before this
     /// returns, so the caller's stage protocol stays valid — there is
     /// simply nothing to overlap.
@@ -364,8 +365,13 @@ impl Drop for StageHandle<'_> {
     fn drop(&mut self) {
         // Always wait (soundness); panic propagation happens only in
         // `join` — re-panicking from drop during an unwind would abort.
+        // The swallowed panic must also clear the shared flag, or the
+        // *next* unrelated dispatcher would re-raise it as its own.
         if !self.joined {
             self.wait();
+            if let Some(inner) = self.inner {
+                inner.state.lock().unwrap().panicked = false;
+            }
         }
     }
 }
@@ -651,6 +657,37 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn dropped_panicked_stage_does_not_poison_next_dispatch() {
+        // Regression: a StageHandle dropped without join used to leave the
+        // shared `panicked` flag set, so the *next* unrelated dispatcher
+        // re-raised a panic that wasn't its own.
+        let pool = Pool::new(3);
+        {
+            let h = pool.submit_sharded(|shard| {
+                if shard == 0 {
+                    panic!("dropped stage boom");
+                }
+            });
+            drop(h); // swallow by design — but must leave the pool clean
+        }
+        let hits = AtomicUsize::new(0);
+        pool.run_sharded(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3, "next dispatch ran clean");
+        // and an explicitly joined panicking stage still propagates
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.submit_sharded(|shard| {
+                if shard == 1 {
+                    panic!("joined stage boom");
+                }
+            })
+            .join();
+        }));
+        assert!(result.is_err(), "join still re-raises worker panics");
     }
 
     #[test]

@@ -1,0 +1,400 @@
+//! Chaos acceptance for the serving daemon: under a seeded fault plan the
+//! daemon never crashes or hangs, answers every submitted request exactly
+//! once with a typed response, serves degraded responses bit-exactly at
+//! the tagged beam width, reproduces the same response trace run over
+//! run, and recovers bit-identically once faults stop.
+//!
+//! The CI chaos job overrides the plan through `REPRO_FAULTS`; every
+//! assertion here is plan-agnostic (response *shapes* and accounting, not
+//! fault counts), so any valid plan must pass.
+
+use adv_softmax::config::{DaemonConfig, DatasetPreset, ServeConfig, SyntheticConfig, TreeConfig};
+use adv_softmax::data::{Dataset, Splits};
+use adv_softmax::sampler::AdversarialSampler;
+use adv_softmax::serve::daemon::{self, Daemon, ManualClock, RealClock, ResponseKind};
+use adv_softmax::serve::faults::FaultPlan;
+use adv_softmax::serve::{Predictor, ServingModel, TopK};
+use std::sync::{Arc, OnceLock};
+
+/// Shared fixture (mirrors `tests/serve_parity.rs`): centroid classifier
+/// rows plus a genuinely fitted auxiliary tree over the tiny preset
+/// (C = 256, K = 64), built once per test binary.
+fn centroid_model() -> &'static (ServingModel, Dataset) {
+    static MODEL: OnceLock<(ServingModel, Dataset)> = OnceLock::new();
+    MODEL.get_or_init(|| {
+        let mut cfg = SyntheticConfig::preset(DatasetPreset::Tiny);
+        cfg.n_train = 4096;
+        cfg.n_test = 512;
+        let splits = Splits::synthetic(&cfg);
+        let train = &splits.train;
+        let (c, k) = (train.num_classes, train.feat_dim);
+        let mut w = vec![0f32; c * k];
+        let mut counts = vec![0f32; c];
+        for i in 0..train.len() {
+            let y = train.y(i) as usize;
+            counts[y] += 1.0;
+            for (wv, xv) in w[y * k..(y + 1) * k].iter_mut().zip(train.x(i).iter()) {
+                *wv += *xv;
+            }
+        }
+        for y in 0..c {
+            if counts[y] > 0.0 {
+                let scale = 4.0 / counts[y];
+                for wv in w[y * k..(y + 1) * k].iter_mut() {
+                    *wv *= scale;
+                }
+            }
+        }
+        let tcfg = TreeConfig { aux_dim: 8, ..Default::default() };
+        let (aux, _) = AdversarialSampler::fit(train, &tcfg, 5);
+        let model = ServingModel {
+            num_classes: c,
+            feat_dim: k,
+            w,
+            b: vec![0f32; c],
+            aux: Some(aux),
+            correct_bias: true,
+        };
+        (model, splits.test)
+    })
+}
+
+fn arc_model() -> Arc<ServingModel> {
+    Arc::new(centroid_model().0.clone())
+}
+
+/// Test query i as a protocol line (float `Display` round-trips exactly,
+/// so the parsed query is bit-identical to the dataset row).
+fn query_line(test: &Dataset, i: usize) -> String {
+    test.x(i % test.len())
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn assert_topk_bit_eq(got: &TopK, want: &TopK, ctx: &str) {
+    assert_eq!(got.labels, want.labels, "{ctx}: labels");
+    let gb: Vec<u32> = got.scores.iter().map(|s| s.to_bits()).collect();
+    let wb: Vec<u32> = want.scores.iter().map(|s| s.to_bits()).collect();
+    assert_eq!(gb, wb, "{ctx}: score bits");
+}
+
+/// Reference predictions at a given beam width, computed one query at a
+/// time — per the serving determinism contract this IS the fault-free
+/// daemon output for that beam.
+fn oracle_at_beam(beam: usize) -> Predictor<'static> {
+    let (model, _) = centroid_model();
+    Predictor::new(model, ServeConfig { beam, ..Default::default() }).unwrap()
+}
+
+/// Sustained overload steps the beam down the configured ladder, tags the
+/// responses, serves them bit-exactly at the reduced width, and restores
+/// the full beam as the queue drains.
+#[test]
+fn degradation_steps_down_ladder_bit_exactly_and_restores() {
+    let (model, test) = centroid_model();
+    let cfg = DaemonConfig {
+        queue_capacity: 32,
+        deadline_ms: 100_000, // manual clock never advances: no deadline noise
+        max_batch: 4,
+        degrade_beams: vec![16, 4],
+        overload_trip: 2,
+        worker_timeout_ms: 100_000, // must cover the deadline (cfg.validate)
+    };
+    // the clock never advances: batching is driven purely by drain()
+    let mut d = Daemon::new(
+        arc_model(),
+        ServeConfig::default(),
+        cfg,
+        1,
+        None,
+        Box::new(ManualClock::new()),
+    )
+    .unwrap();
+
+    // fill the queue to capacity, then drain: flushes of 4 leave the queue
+    // above the highwater (16) long enough to trip each tier in turn.
+    // Expected tier per flush: 0,0 (streak trips after flush 2), 1,1
+    // (trips again), 2,2,2,2 (last flush empties the queue -> back to 1).
+    let n = 32usize;
+    for i in 0..n {
+        let (id, immediate) = d.submit_features(test.x(i));
+        assert_eq!(id, i as u64);
+        assert!(immediate.is_none(), "request {i} admitted");
+    }
+    let out = d.drain();
+    assert_eq!(out.len(), n, "every admitted request answered");
+
+    let full = oracle_at_beam(ServeConfig::default().beam);
+    let deg16 = oracle_at_beam(16);
+    let deg4 = oracle_at_beam(4);
+    for r in &out {
+        let i = r.id as usize;
+        let want_beam = match i {
+            0..=7 => None,
+            8..=15 => Some(16usize),
+            _ => Some(4usize),
+        };
+        match (&r.kind, want_beam) {
+            (ResponseKind::Ok(topk), None) => {
+                assert_topk_bit_eq(topk, &full.predict_one(test.x(i)), &format!("request {i}"));
+            }
+            (ResponseKind::Degraded { beam, topk }, Some(want)) => {
+                assert_eq!(*beam, want, "request {i} tier");
+                let oracle = if want == 16 { &deg16 } else { &deg4 };
+                assert_topk_bit_eq(
+                    topk,
+                    &oracle.predict_one(test.x(i)),
+                    &format!("request {i} (degraded beam={want})"),
+                );
+            }
+            (kind, want) => panic!("request {i}: got {kind:?}, expected beam {want:?}"),
+        }
+    }
+    let stats = d.stats();
+    assert_eq!(stats.ok, 8);
+    assert_eq!(stats.degraded, 24);
+    assert_eq!(stats.tier_changes, 3, "two step-downs plus one restore");
+    assert_eq!(d.tier(), 1, "last flush emptied the queue: one tier back up");
+
+    // the queue stays drained: each further flush-to-empty restores one
+    // tier, and service at tier 0 is full-beam `ok` again
+    let (_, none) = d.submit_features(test.x(0));
+    assert!(none.is_none());
+    let out = d.drain();
+    assert!(
+        matches!(&out[0].kind, ResponseKind::Degraded { beam: 16, .. }),
+        "still one tier down: {:?}",
+        out[0].kind
+    );
+    assert_eq!(d.tier(), 0, "restored to the full beam");
+    let (id, none) = d.submit_features(test.x(1));
+    assert!(none.is_none());
+    let out = d.drain();
+    assert_eq!(out[0].id, id);
+    match &out[0].kind {
+        ResponseKind::Ok(topk) => {
+            assert_topk_bit_eq(topk, &full.predict_one(test.x(1)), "after restore")
+        }
+        other => panic!("expected full-beam ok after restore, got {other:?}"),
+    }
+    assert!(d.stats().accounted(d.queue_len()));
+}
+
+/// The chaos plan: `REPRO_FAULTS` when set (the CI chaos job), else a
+/// fixed seeded mix of all three fault kinds. An unparsable override is a
+/// hard failure — the chaos leg must never quietly run clean.
+fn chaos_plan() -> FaultPlan {
+    FaultPlan::from_env()
+        .expect("REPRO_FAULTS must parse")
+        .unwrap_or_else(|| {
+            FaultPlan::parse("seed=1337,panic=0.12,slow=0.2:3,malform=0.15").unwrap()
+        })
+}
+
+const CHAOS_N: usize = 120;
+
+/// One deterministic chaos run: a fixed submission schedule over a manual
+/// clock, returning the daemon and the full `(id, response)` trace.
+fn chaos_run(plan: &FaultPlan) -> (Daemon, Vec<(u64, ResponseKind)>) {
+    let (_, test) = centroid_model();
+    let cfg = DaemonConfig {
+        queue_capacity: 10,
+        deadline_ms: 40,
+        max_batch: 8,
+        degrade_beams: vec![16, 4],
+        overload_trip: 2,
+        worker_timeout_ms: 2000, // declared slow stages must never wedge
+    };
+    let clock = ManualClock::new();
+    let mut d = Daemon::new(
+        arc_model(),
+        ServeConfig::default(),
+        cfg,
+        2,
+        Some(plan.clone()),
+        Box::new(clock.clone()),
+    )
+    .unwrap();
+    let mut trace = Vec::new();
+    for i in 0..CHAOS_N {
+        clock.advance((i % 3) as u64);
+        let (id, immediate) = d.submit_line(&query_line(test, i));
+        assert_eq!(id, i as u64, "ids are the submission order");
+        if let Some(kind) = immediate {
+            trace.push((id, kind));
+        }
+        if i % 6 == 5 {
+            for r in d.pump(false) {
+                trace.push((r.id, r.kind));
+            }
+        }
+        if i % 17 == 16 {
+            clock.advance(11); // blow past the coalescing window
+            for r in d.pump(true) {
+                trace.push((r.id, r.kind));
+            }
+        }
+    }
+    for r in d.drain() {
+        trace.push((r.id, r.kind));
+    }
+    (d, trace)
+}
+
+/// The headline chaos test: exactly one typed response per submitted
+/// request, every successful response bit-exact at its tagged beam width,
+/// an identical trace on a second run, and bit-identical fault-free
+/// service after the plan is cleared.
+#[test]
+fn chaos_never_drops_requests_and_recovers_bit_identically() {
+    let plan = chaos_plan();
+    let (_, test) = centroid_model();
+    let (mut d, trace) = chaos_run(&plan);
+
+    // exactly one response per submitted request
+    assert_eq!(trace.len(), CHAOS_N, "one response per request");
+    let mut ids: Vec<u64> = trace.iter().map(|(id, _)| *id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..CHAOS_N as u64).collect::<Vec<_>>(), "each request exactly once");
+    let stats = d.stats();
+    assert_eq!(stats.submitted, CHAOS_N as u64);
+    assert!(stats.accounted(0), "accounting holds after drain: {stats:?}");
+    assert_eq!(
+        stats.respawns,
+        stats.worker_panics + stats.worker_timeouts,
+        "every crash respawns the worker exactly once"
+    );
+
+    // every response is typed and, when served, bit-exact for its beam
+    let full = oracle_at_beam(ServeConfig::default().beam);
+    let deg16 = oracle_at_beam(16);
+    let deg4 = oracle_at_beam(4);
+    for (id, kind) in &trace {
+        let i = *id as usize;
+        match kind {
+            ResponseKind::Ok(topk) => {
+                assert_topk_bit_eq(topk, &full.predict_one(test.x(i)), &format!("request {i}"));
+            }
+            ResponseKind::Degraded { beam, topk } => {
+                let oracle = match beam {
+                    16 => &deg16,
+                    4 => &deg4,
+                    other => panic!("request {i}: beam {other} not on the ladder"),
+                };
+                assert_topk_bit_eq(
+                    topk,
+                    &oracle.predict_one(test.x(i)),
+                    &format!("request {i} (degraded beam={beam})"),
+                );
+            }
+            ResponseKind::Rejected(_) => {} // typed shed or deadline cancel
+            ResponseKind::Error(msg) => {
+                assert!(
+                    msg.contains("malformed request")
+                        || msg.contains("panicked")
+                        || msg.contains("timed out"),
+                    "request {i}: untyped error {msg:?}"
+                );
+            }
+        }
+    }
+
+    // chaos is reproducible: the same plan over the same schedule yields
+    // the identical trace, fault for fault, bit for bit
+    let (_, trace2) = chaos_run(&plan);
+    assert_eq!(trace, trace2, "chaos trace must reproduce exactly");
+
+    // recovery: clear the faults, let the tier restore, and service is
+    // bit-identical to a run where no fault ever fired
+    d.set_faults(None);
+    while d.tier() > 0 {
+        let (_, none) = d.submit_features(test.x(0));
+        assert!(none.is_none());
+        d.drain();
+    }
+    // 8 queries fit the chaos queue (capacity 10) without shedding
+    for i in 0..8 {
+        let (_, none) = d.submit_features(test.x(i));
+        assert!(none.is_none(), "post-recovery request {i} admitted");
+    }
+    let out = d.drain();
+    assert_eq!(out.len(), 8);
+    for r in &out {
+        match &r.kind {
+            ResponseKind::Ok(topk) => {
+                let i = (r.id - out[0].id) as usize;
+                assert_topk_bit_eq(
+                    topk,
+                    &full.predict_one(test.x(i)),
+                    &format!("post-recovery request {i}"),
+                );
+            }
+            other => panic!("post-recovery response not ok: {other:?}"),
+        }
+    }
+    assert!(d.stats().accounted(0));
+}
+
+/// Socket transport smoke test: a client connects, sends a query, a
+/// malformed line and `shutdown`, and gets exactly one typed response per
+/// line back on its own connection.
+#[cfg(unix)]
+#[test]
+fn socket_round_trip_answers_every_line() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::time::Duration;
+
+    let (_, test) = centroid_model();
+    let path = std::env::temp_dir().join(format!(
+        "adv_softmax_daemon_chaos_{}.sock",
+        std::process::id()
+    ));
+    let mut d = Daemon::new(
+        arc_model(),
+        ServeConfig::default(),
+        DaemonConfig { deadline_ms: 1000, ..Default::default() },
+        1,
+        None,
+        Box::new(RealClock::new()),
+    )
+    .unwrap();
+    let server = {
+        let path = path.clone();
+        std::thread::spawn(move || daemon::run_socket_daemon(&mut d, &path).unwrap())
+    };
+    // the daemon binds shortly after spawn; poll instead of racing it
+    let mut stream = loop {
+        match UnixStream::connect(&path) {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{}", query_line(test, 0)).unwrap();
+    writeln!(stream, "definitely not floats").unwrap();
+    writeln!(stream, "shutdown").unwrap();
+    stream.flush().unwrap();
+    let mut lines = Vec::new();
+    for _ in 0..2 {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "daemon closed early");
+        lines.push(line.trim().to_string());
+    }
+    let stats = server.join().unwrap();
+    assert_eq!(stats.ok, 1);
+    assert_eq!(stats.malformed, 1);
+    assert!(stats.accounted(0));
+    // responses carry the per-client request index; arrival order may
+    // differ (the malformed error is answered at admission)
+    lines.sort();
+    assert!(lines[0].starts_with("0 ok "), "query response: {:?}", lines[0]);
+    assert!(
+        lines[1].starts_with("1 error") && lines[1].contains("malformed request"),
+        "malformed response: {:?}",
+        lines[1]
+    );
+    assert!(!path.exists(), "socket file removed on shutdown");
+}
