@@ -1,0 +1,26 @@
+// repro-lint fixture: floating-point reductions outside linalg's
+// canonical-order kernels. Integer reductions and order-insensitive
+// min/max folds are exempt.
+
+pub fn float_sum(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() //~ ERROR float-reduce
+}
+
+pub fn multiline_sum(xs: &[f32]) -> f32 {
+    let total: f32 = xs
+        .iter()
+        .sum(); //~ ERROR float-reduce
+    total
+}
+
+pub fn additive_fold(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |acc, x| acc + x) //~ ERROR float-reduce
+}
+
+pub fn int_sum_is_fine(xs: &[u64]) -> u64 {
+    xs.iter().sum()
+}
+
+pub fn max_fold_is_fine(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}

@@ -1,0 +1,30 @@
+// repro-lint fixture: iteration over hash-ordered containers leaks the
+// hasher's order into results; point lookups are fine.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn sum_values(counts: &HashMap<u64, u64>) -> u64 {
+    let mut total = 0;
+    for v in counts.values() { //~ ERROR hash-iteration
+        total += v;
+    }
+    total
+}
+
+pub fn collect_members(seen: &HashSet<u32>) -> Vec<u32> {
+    let mut out = Vec::new();
+    for m in seen { //~ ERROR hash-iteration
+        out.push(*m);
+    }
+    out
+}
+
+pub fn drain_all(counts: &mut HashMap<u64, u64>) {
+    counts.drain(); //~ ERROR hash-iteration
+}
+
+pub fn lookups_are_fine(counts: &mut HashMap<u64, u64>) -> Option<u64> {
+    counts.insert(1, 2);
+    counts.remove(&3);
+    counts.get(&1).copied()
+}

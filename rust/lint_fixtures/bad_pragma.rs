@@ -1,0 +1,20 @@
+// repro-lint fixture: allow pragmas must be well-formed, name a known
+// rule, and carry a justification; a malformed pragma is itself a
+// violation and suppresses nothing.
+
+use std::time::Instant;
+
+pub fn unclosed_pragma_does_not_suppress() -> Instant {
+    // repro-lint: allow(wall-clock without a closing paren //~ ERROR pragma
+    Instant::now() //~ ERROR wall-clock
+}
+
+pub fn unknown_rule_pragma() -> Instant {
+    // repro-lint: allow(no-such-rule) because reasons //~ ERROR pragma
+    Instant::now() //~ ERROR wall-clock
+}
+
+pub fn justified_pragma_suppresses() -> Instant {
+    // repro-lint: allow(wall-clock) fixture demonstrates a sanctioned read
+    Instant::now()
+}

@@ -1,0 +1,22 @@
+// repro-lint fixture: raw thread spawns outside utils/pool.rs. All
+// threads must come from the pool layer so shutdown, naming, and panic
+// propagation stay centralized.
+
+use std::thread;
+
+pub fn spawn_wrong() {
+    thread::spawn(|| {}); //~ ERROR thread-spawn
+}
+
+pub fn builder_wrong() {
+    let b = thread::Builder::new().name("rogue".into()); //~ ERROR thread-spawn
+    let _ = b.spawn(|| {});
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn spawns_in_tests_still_fail() {
+        std::thread::spawn(|| {}); //~ ERROR thread-spawn
+    }
+}

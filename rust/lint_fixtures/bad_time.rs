@@ -1,0 +1,22 @@
+// repro-lint fixture: direct wall-clock reads outside the clock layer.
+
+use std::time::Instant;
+
+pub fn elapsed_wrong() -> f64 {
+    let t0 = Instant::now(); //~ ERROR wall-clock
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn epoch_wrong() -> std::time::SystemTime { //~ ERROR wall-clock
+    std::time::SystemTime::now() //~ ERROR wall-clock
+}
+
+#[cfg(test)]
+mod tests {
+    // timing inside tests is exempt: tests assert determinism, they do not
+    // produce reproducible results
+    #[test]
+    fn timing_in_tests_is_fine() {
+        let _ = std::time::Instant::now();
+    }
+}

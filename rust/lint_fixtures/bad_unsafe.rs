@@ -1,0 +1,18 @@
+// repro-lint fixture: `unsafe` without a safety justification must fail.
+// Trailing ERROR markers name the rule expected on that line; the lint
+// test compares its diagnostics against these markers exactly.
+// (Not compiled — this directory is excluded from the cargo targets and
+// skipped by the tree walk.)
+
+pub fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.get_unchecked(0) } //~ ERROR safety-comment
+}
+
+pub struct Cell(*mut f32);
+
+unsafe impl Send for Cell {} //~ ERROR safety-comment
+
+pub fn documented(xs: &[f32]) -> f32 {
+    // SAFETY: caller guarantees xs is non-empty (checked at the call site).
+    unsafe { *xs.get_unchecked(0) }
+}

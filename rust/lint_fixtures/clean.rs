@@ -1,0 +1,54 @@
+// repro-lint fixture: a file exercising every rule's *sanctioned* form.
+// Must produce zero diagnostics.
+
+use std::collections::HashMap;
+
+pub fn documented_unsafe(xs: &[f32], i: usize) -> f32 {
+    assert!(i < xs.len());
+    // SAFETY: bounds asserted above; the reference is read-only and does
+    // not outlive xs.
+    unsafe { *xs.get_unchecked(i) }
+}
+
+/// Reads one element without bounds checks.
+///
+/// # Safety
+/// `i` must be in bounds for `xs`.
+pub unsafe fn doc_safety_section(xs: &[f32], i: usize) -> f32 {
+    *xs.get_unchecked(i)
+}
+
+pub fn point_lookups(counts: &mut HashMap<u64, u64>) -> u64 {
+    counts.insert(7, 1);
+    counts.get(&7).copied().unwrap_or(0)
+}
+
+pub fn integer_reduction(xs: &[u32]) -> u32 {
+    xs.iter().sum()
+}
+
+pub fn order_insensitive_fold(xs: &[f32]) -> f32 {
+    xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+pub fn justified_float_sum(xs: &[f64]) -> f64 {
+    // repro-lint: allow(float-reduce) serial iterator sum in input order
+    let total: f64 = xs.iter().sum();
+    total
+}
+
+pub fn prose_mentions_are_ignored() -> &'static str {
+    // Instant::now, SystemTime, thread::spawn, and unsafe in comments or
+    // strings are not violations.
+    "Instant::now thread::spawn unsafe HashMap.iter()"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_and_float_sums_in_tests_are_exempt() {
+        let t0 = std::time::Instant::now();
+        let s: f64 = [1.0f64, 2.0].iter().sum();
+        assert!(s > 2.9 && t0.elapsed().as_secs() < 3600);
+    }
+}

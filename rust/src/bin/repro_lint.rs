@@ -1,0 +1,109 @@
+//! repro-lint CLI: static determinism/safety audit over the source tree.
+//!
+//! Usage:
+//!   repro_lint [--json] [PATH ...]
+//!
+//! With no PATH arguments, lints this crate's `src/` tree. Each PATH may be
+//! a directory (walked recursively for `.rs` files; `target/`, `vendor/`,
+//! `lint_fixtures/`, and `.git/` are skipped) or a single file.
+//!
+//! Output: one `file:line: [rule] message` diagnostic per violation, sorted,
+//! followed by a summary line — or, with `--json`, a single JSON object
+//! `{"files": N, "violations": [...], "clean": bool}` on stdout.
+//!
+//! Exit status: 0 when the tree is clean, 1 when violations were found,
+//! 2 on usage or I/O errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use adv_softmax::lint::{lint_source, lint_tree, Diagnostic, LintConfig, RuleId};
+use adv_softmax::utils::json::Json;
+
+fn usage() -> ! {
+    eprintln!("usage: repro_lint [--json] [PATH ...]");
+    eprintln!("rules: {}", rule_names().join(", "));
+    std::process::exit(2);
+}
+
+fn rule_names() -> Vec<&'static str> {
+    RuleId::ALL.iter().map(|r| r.name()).collect()
+}
+
+fn main() -> ExitCode {
+    let mut json_mode = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json_mode = true,
+            "--help" | "-h" => usage(),
+            other if other.starts_with('-') => {
+                eprintln!("repro_lint: unknown flag {other:?}");
+                usage();
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if paths.is_empty() {
+        paths.push(Path::new(env!("CARGO_MANIFEST_DIR")).join("src"));
+    }
+
+    let cfg = LintConfig::default();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut files = 0usize;
+    for path in &paths {
+        if path.is_dir() {
+            match lint_tree(path, &cfg) {
+                Ok((d, n)) => {
+                    diags.extend(d);
+                    files += n;
+                }
+                Err(e) => {
+                    eprintln!("repro_lint: {e:#}");
+                    return ExitCode::from(2);
+                }
+            }
+        } else {
+            match std::fs::read_to_string(path) {
+                Ok(source) => {
+                    files += 1;
+                    diags.extend(lint_source(&path.to_string_lossy(), &source, &cfg));
+                }
+                Err(e) => {
+                    eprintln!("repro_lint: reading {}: {e}", path.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+
+    if json_mode {
+        let out = Json::obj(vec![
+            ("files", Json::Num(files as f64)),
+            (
+                "violations",
+                Json::Arr(diags.iter().map(|d| d.to_json()).collect()),
+            ),
+            ("clean", Json::Bool(diags.is_empty())),
+        ]);
+        println!("{out}");
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        if diags.is_empty() {
+            println!("repro-lint: {files} files clean");
+        } else {
+            println!(
+                "repro-lint: {} violation(s) in {files} file(s) scanned",
+                diags.len()
+            );
+        }
+    }
+    if diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

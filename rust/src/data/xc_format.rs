@@ -106,7 +106,7 @@ pub fn parse_xc<R: BufRead>(reader: R, feat_dim: usize) -> Result<Dataset> {
             let (bucket, sign) = hash_feature(f, feat_dim);
             row[bucket] += sign * v;
         }
-        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let norm = crate::linalg::sum_f32(row.iter().map(|v| v * v)).sqrt();
         if norm > 0.0 {
             row.iter_mut().for_each(|v| *v /= norm);
         }

@@ -403,7 +403,7 @@ pub fn evaluate_reference_with(
             unsafe { *partials_ref.get_mut(shard) = (sum_loglik, correct) };
         });
     }
-    let sum_loglik: f64 = partials.iter().map(|p| p.0).sum();
+    let sum_loglik: f64 = crate::linalg::sum_f64(partials.iter().map(|p| p.0));
     let correct: usize = partials.iter().map(|p| p.1).sum();
     EvalResult {
         log_likelihood: sum_loglik / n as f64,

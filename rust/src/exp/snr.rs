@@ -168,7 +168,7 @@ pub fn run(opts: &SnrOpts) -> Result<Vec<SnrPoint>> {
     // marginal p_D(y) replicated across contexts
     let mut marginal = vec![0f64; g * c];
     for y in 0..c {
-        let m: f64 = (0..g).map(|gi| p_d[gi * c + y]).sum::<f64>() / g as f64;
+        let m: f64 = crate::linalg::sum_f64((0..g).map(|gi| p_d[gi * c + y])) / g as f64;
         for gi in 0..g {
             marginal[gi * c + y] = m;
         }

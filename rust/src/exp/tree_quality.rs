@@ -7,6 +7,7 @@ use crate::config::{DatasetPreset, SyntheticConfig, TreeConfig};
 use crate::data::Splits;
 use crate::sampler::{AdversarialSampler, FrequencySampler, UniformSampler};
 use crate::score::mean_noise_loglik;
+use crate::utils::StopWatch;
 use anyhow::Result;
 
 #[derive(Clone, Debug)]
@@ -22,9 +23,9 @@ pub fn run(preset: DatasetPreset, aux_dim: usize, seed: u64) -> Result<TreeQuali
     let splits = Splits::synthetic(&syn);
     let cfg = TreeConfig { aux_dim, ..Default::default() };
 
-    let t0 = std::time::Instant::now();
+    let t0 = StopWatch::started();
     let (adv, stats) = AdversarialSampler::fit(&splits.train, &cfg, seed);
-    let fit_seconds = t0.elapsed().as_secs_f64();
+    let fit_seconds = t0.elapsed_secs();
 
     let freq = FrequencySampler::from_dataset(&splits.train, 1.0)?;
     let uni = UniformSampler::new(splits.train.num_classes);

@@ -35,6 +35,7 @@ pub mod data;
 pub mod eval;
 pub mod exp;
 pub mod linalg;
+pub mod lint;
 pub mod model;
 pub mod runtime;
 pub mod sampler;

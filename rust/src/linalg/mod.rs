@@ -52,6 +52,61 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Canonical sequential f64 sum: one accumulator, strictly in iteration
+/// order. This is the reduction order every accumulation outside the hot
+/// dot-product path already used (`iter().sum()` is specified to fold
+/// left-to-right), centralized here so repro-lint's `float-reduce` rule
+/// can deny ad-hoc reductions everywhere else without changing a bit of
+/// any existing result.
+#[inline]
+pub fn sum_f64(xs: impl IntoIterator<Item = f64>) -> f64 {
+    let mut s = 0f64;
+    for x in xs {
+        s += x;
+    }
+    s
+}
+
+/// Canonical sequential f32 sum (see [`sum_f64`]).
+#[inline]
+pub fn sum_f32(xs: impl IntoIterator<Item = f32>) -> f32 {
+    let mut s = 0f32;
+    for x in xs {
+        s += x;
+    }
+    s
+}
+
+/// Sequential-order f64 dot product. Unlike the f32 [`dot`], the f64 dots
+/// live on cold control paths (Newton steps, split objectives) whose
+/// existing code summed terms strictly left-to-right — this keeps that
+/// order, bit for bit.
+///
+/// Contract: `a.len() == b.len()` (debug-checked; release truncates to the
+/// shorter slice, matching [`dot`]).
+#[inline]
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Sequential-order mixed dot `Σ a[i] * (b[i] as f64)` for f64 weight
+/// vectors against f32 features (tree-fit Newton/objective paths). Same
+/// order contract as [`dot_f64`].
+#[inline]
+pub fn dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        s += x * (*y as f64);
+    }
+    s
+}
+
 /// Tiled batch of affine row scores: for every row `i` of `w` (`[rows, k]`
 /// row-major, `rows = b.len()`) and every example `j` of `xs` (`[m, k]`),
 ///

@@ -1,0 +1,340 @@
+//! repro-lint — a static determinism/safety audit over this repo's sources.
+//!
+//! The reproduction's core claims (variance reduction, M-workers == 1-worker
+//! bit parity, replayable serving) all rest on invariants that used to live
+//! in comments: no stray wall-clock reads, no hash-order iteration, one
+//! canonical floating-point reduction order, every `unsafe` justified, all
+//! threads owned by the pool layer. This module turns those conventions
+//! into deny-by-default lint rules with file:line diagnostics, an explicit
+//! allowlist for the few sanctioned sites, and inline pragmas (e.g.
+//! `// repro-lint: allow(float-reduce) why this site is sound`) for
+//! justified one-offs.
+//!
+//! Run it locally with `cargo run --bin repro_lint` (add `--json` for
+//! machine-readable output); CI runs it on every PR. The rule semantics are
+//! documented in [`rules`] and the full contract in `rust/DETERMINISM.md`.
+
+mod rules;
+mod scan;
+
+pub use rules::SAFETY_LOOKBACK;
+
+use std::fmt;
+use std::path::Path;
+
+use crate::utils::json::Json;
+use anyhow::{Context, Result};
+
+/// Identifier of one lint rule. `name()` is the stable string used in
+/// diagnostics, JSON output, allow pragmas, and fixture markers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// `unsafe` without a nearby `// SAFETY:` / `# Safety` comment.
+    SafetyComment,
+    /// `Instant::now` / `SystemTime` outside the sanctioned clock layer.
+    WallClock,
+    /// Iteration over a `HashMap`/`HashSet` binding (hash order leaks).
+    HashIteration,
+    /// Floating-point `.sum()`/`.fold()` outside linalg's canonical kernels.
+    FloatReduce,
+    /// `thread::spawn`/`thread::Builder` outside `utils/pool.rs`.
+    ThreadSpawn,
+    /// Malformed allow pragma (unknown rule or missing justification).
+    Pragma,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 6] = [
+        RuleId::SafetyComment,
+        RuleId::WallClock,
+        RuleId::HashIteration,
+        RuleId::FloatReduce,
+        RuleId::ThreadSpawn,
+        RuleId::Pragma,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::SafetyComment => "safety-comment",
+            RuleId::WallClock => "wall-clock",
+            RuleId::HashIteration => "hash-iteration",
+            RuleId::FloatReduce => "float-reduce",
+            RuleId::ThreadSpawn => "thread-spawn",
+            RuleId::Pragma => "pragma",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<RuleId> {
+        RuleId::ALL.into_iter().find(|r| r.name() == name)
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// '/'-normalized path as given to the linter (relative under a tree walk).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: RuleId,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+impl Diagnostic {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("rule", Json::Str(self.rule.name().to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// Per-rule file allowlist. Entries ending in `/` exempt a whole directory
+/// (matched anywhere in the path); other entries match by path suffix.
+pub struct LintConfig {
+    file_allow: Vec<(RuleId, &'static str)>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            file_allow: vec![
+                // The clock layer and the benchmark harness are the only
+                // sanctioned wall-clock readers.
+                (RuleId::WallClock, "utils/timer.rs"),
+                (RuleId::WallClock, "utils/bench.rs"),
+                // linalg owns the canonical reduction orders; bench timing
+                // statistics are not part of any reproducible result.
+                (RuleId::FloatReduce, "linalg/"),
+                (RuleId::FloatReduce, "utils/bench.rs"),
+                // All threads are born in the pool layer.
+                (RuleId::ThreadSpawn, "utils/pool.rs"),
+                // Hash containers in the bench harness only feed reports.
+                (RuleId::HashIteration, "utils/bench.rs"),
+            ],
+        }
+    }
+}
+
+impl LintConfig {
+    pub fn file_allowed(&self, rule: RuleId, path: &str) -> bool {
+        self.file_allow.iter().any(|&(r, pat)| {
+            r == rule
+                && if pat.ends_with('/') {
+                    path.contains(pat)
+                } else {
+                    path.ends_with(pat)
+                }
+        })
+    }
+}
+
+/// Lint one file's source text. `path` is used for allowlist matching and
+/// diagnostics; backslashes are normalized to `/` first.
+pub fn lint_source(path: &str, source: &str, cfg: &LintConfig) -> Vec<Diagnostic> {
+    let norm = path.replace('\\', "/");
+    let lines = scan::scan(source);
+    rules::check_file(&norm, &lines, cfg)
+}
+
+/// Directories never linted under a tree walk: build output, vendored
+/// third-party code, the deliberate-violation corpus, and VCS metadata.
+const SKIP_DIRS: [&str; 4] = ["target", "vendor", "lint_fixtures", ".git"];
+
+/// Recursively lint every `.rs` file under `root` (sorted walk, so output
+/// order is stable). Returns the diagnostics plus the number of files seen.
+pub fn lint_tree(root: &Path, cfg: &LintConfig) -> Result<(Vec<Diagnostic>, usize)> {
+    let mut diags = Vec::new();
+    let mut files = 0usize;
+    walk(root, root, cfg, &mut diags, &mut files)?;
+    Ok((diags, files))
+}
+
+fn walk(
+    root: &Path,
+    dir: &Path,
+    cfg: &LintConfig,
+    diags: &mut Vec<Diagnostic>,
+    files: &mut usize,
+) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("reading directory {}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if SKIP_DIRS.contains(&name.as_str()) {
+                continue;
+            }
+            walk(root, &path, cfg, diags, files)?;
+        } else if name.ends_with(".rs") {
+            *files += 1;
+            let source = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            diags.extend(lint_source(&rel, &source, cfg));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+    use std::path::PathBuf;
+
+    fn fixtures_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("lint_fixtures")
+    }
+
+    /// Parse the `//~ ERROR <rule>` markers a fixture annotates itself with.
+    fn expected_markers(source: &str) -> BTreeSet<(usize, String)> {
+        let mut out = BTreeSet::new();
+        for (i, line) in source.lines().enumerate() {
+            let mut rest = line;
+            while let Some(pos) = rest.find("//~ ERROR ") {
+                rest = &rest[pos + "//~ ERROR ".len()..];
+                let rule = rest
+                    .split_whitespace()
+                    .next()
+                    .expect("marker names a rule")
+                    .to_string();
+                assert!(
+                    RuleId::from_name(&rule).is_some(),
+                    "fixture marker names unknown rule `{rule}`"
+                );
+                out.insert((i + 1, rule));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn every_fixture_matches_its_markers_exactly() {
+        let dir = fixtures_dir();
+        let cfg = LintConfig::default();
+        let mut entries: Vec<_> = std::fs::read_dir(&dir)
+            .expect("lint_fixtures directory exists")
+            .map(|e| e.expect("readable entry").path())
+            .filter(|p| p.extension().is_some_and(|e| e == "rs"))
+            .collect();
+        entries.sort();
+        assert!(
+            entries.len() >= 6,
+            "expected a corpus of fixtures, found {}",
+            entries.len()
+        );
+        for path in entries {
+            let source = std::fs::read_to_string(&path).expect("readable fixture");
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            let expected = expected_markers(&source);
+            let got: BTreeSet<(usize, String)> = lint_source(&name, &source, &cfg)
+                .into_iter()
+                .map(|d| (d.line, d.rule.name().to_string()))
+                .collect();
+            assert_eq!(
+                got, expected,
+                "fixture {name}: lint output must match its //~ ERROR markers"
+            );
+        }
+    }
+
+    #[test]
+    fn violation_fixtures_fail_and_clean_fixture_passes() {
+        let dir = fixtures_dir();
+        let cfg = LintConfig::default();
+        for (file, should_fail) in [
+            ("bad_unsafe.rs", true),
+            ("bad_time.rs", true),
+            ("bad_hash_iter.rs", true),
+            ("bad_float_reduce.rs", true),
+            ("bad_thread_spawn.rs", true),
+            ("bad_pragma.rs", true),
+            ("clean.rs", false),
+        ] {
+            let path = dir.join(file);
+            let source = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("fixture {file} missing: {e}"));
+            let diags = lint_source(file, &source, &cfg);
+            if should_fail {
+                assert!(!diags.is_empty(), "fixture {file} must trip the lint");
+            } else {
+                assert!(diags.is_empty(), "fixture {file} must be clean: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lint_src_tree_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let (diags, files) = lint_tree(&src, &LintConfig::default()).expect("tree walk");
+        assert!(files > 20, "walk visited the real tree ({files} files)");
+        assert!(
+            diags.is_empty(),
+            "repo source tree must be repro-lint clean:\n{}",
+            diags
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn tree_walk_skips_fixture_and_vendor_dirs() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let (_, files) = lint_tree(root, &LintConfig::default()).expect("tree walk");
+        let (_, src_files) =
+            lint_tree(&root.join("src"), &LintConfig::default()).expect("src walk");
+        // the root walk adds tests/ and benches/, but no vendor or fixture files
+        assert!(files >= src_files, "root walk covers at least src/");
+        let fixture_count = std::fs::read_dir(root.join("lint_fixtures"))
+            .expect("fixtures present")
+            .count();
+        assert!(fixture_count >= 6);
+    }
+
+    #[test]
+    fn diagnostic_formats_as_file_line_rule() {
+        let d = Diagnostic {
+            file: "src/foo.rs".into(),
+            line: 42,
+            rule: RuleId::WallClock,
+            message: "msg".into(),
+        };
+        assert_eq!(d.to_string(), "src/foo.rs:42: [wall-clock] msg");
+        let j = d.to_json().to_string();
+        assert!(j.contains("\"rule\":\"wall-clock\""), "{j}");
+        assert!(j.contains("\"line\":42"), "{j}");
+    }
+
+    #[test]
+    fn rule_names_roundtrip() {
+        for r in RuleId::ALL {
+            assert_eq!(RuleId::from_name(r.name()), Some(r));
+        }
+        assert_eq!(RuleId::from_name("no-such-rule"), None);
+    }
+}

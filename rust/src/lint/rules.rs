@@ -1,0 +1,598 @@
+//! The repro-lint rule set.
+//!
+//! Every rule is **deny by default**: it fires on any match in any file
+//! unless the file is exempted by the built-in allowlist
+//! ([`crate::lint::LintConfig`]) or the exact line carries an inline
+//! pragma naming the rule and a justification, written as
+//! `// repro-lint: allow(wall-clock) justification text here` (the
+//! justification is mandatory; a bare pragma is itself a violation).
+//! Rules that guard *runtime determinism* (wall-clock reads, hash-order
+//! iteration, floating-point reductions) skip `#[cfg(test)]` regions —
+//! tests assert determinism rather than produce results — while the
+//! memory-safety rules (`safety-comment`, `thread-spawn`) apply to test
+//! code too.
+
+use super::scan::ScannedLine;
+use super::{Diagnostic, LintConfig, RuleId};
+
+/// How many lines above an `unsafe` token a `// SAFETY:` comment may sit.
+pub const SAFETY_LOOKBACK: usize = 10;
+
+/// `needle` present in `hay` with non-identifier characters on both sides.
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = hay[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !hay[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = at + needle.len();
+        let after_ok = after >= hay.len()
+            || !hay[after..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let opens = code.matches('{').count() as i64;
+    let closes = code.matches('}').count() as i64;
+    opens - closes
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (attribute line,
+/// header, and braced body). Works for the repo convention of a trailing
+/// `#[cfg(test)] mod tests { … }` as well as individually gated items.
+fn test_regions(lines: &[ScannedLine]) -> Vec<bool> {
+    let mut out = vec![false; lines.len()];
+    let mut pending = false;
+    let mut active = false;
+    let mut depth: i64 = 0;
+    for (i, l) in lines.iter().enumerate() {
+        if active {
+            out[i] = true;
+            depth += brace_delta(&l.code);
+            if depth <= 0 {
+                active = false;
+            }
+            continue;
+        }
+        let code = l.code.trim();
+        if pending {
+            if code.is_empty() {
+                out[i] = true; // comment/blank line between attribute and item
+                continue;
+            }
+            out[i] = true;
+            if l.code.contains('{') {
+                let d = brace_delta(&l.code);
+                if d > 0 {
+                    active = true;
+                    depth = d;
+                }
+                pending = false;
+            } else if code.ends_with(';') {
+                pending = false; // bodyless item, e.g. `#[cfg(test)] use …;`
+            }
+            // other attribute lines (`#[test]`, `#[allow(…)]`) keep pending
+            continue;
+        }
+        if code.starts_with("#[cfg(test)]") {
+            pending = true;
+            out[i] = true;
+            // the attribute and item may share one line
+            if l.code.contains('{') {
+                let d = brace_delta(&l.code);
+                if d > 0 {
+                    active = true;
+                    depth = d;
+                }
+                pending = false;
+            }
+        }
+    }
+    out
+}
+
+/// Inline pragmas parsed from one line's comment text. `bad` is set when a
+/// pragma is present but malformed or missing its justification.
+#[derive(Default)]
+struct Pragmas {
+    allows: Vec<RuleId>,
+    bad: bool,
+}
+
+fn parse_pragmas(comment: &str) -> Pragmas {
+    let mut out = Pragmas::default();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("repro-lint:") {
+        rest = &rest[pos + "repro-lint:".len()..];
+        let body = rest.trim_start();
+        let Some(args) = body.strip_prefix("allow(") else {
+            out.bad = true;
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            out.bad = true;
+            continue;
+        };
+        let rule_name = args[..close].trim();
+        let reason = args[close + 1..].trim();
+        match RuleId::from_name(rule_name) {
+            Some(rule) if !reason.is_empty() => out.allows.push(rule),
+            _ => out.bad = true, // unknown rule or missing justification
+        }
+        rest = &args[close + 1..];
+    }
+    out
+}
+
+/// Split a code line into identifier and single-character punctuation
+/// tokens (whitespace dropped). Enough structure for binding extraction.
+fn tokens(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut ident = String::new();
+    for c in code.chars() {
+        if c.is_alphanumeric() || c == '_' {
+            ident.push(c);
+        } else {
+            if !ident.is_empty() {
+                out.push(std::mem::take(&mut ident));
+            }
+            if !c.is_whitespace() {
+                out.push(c.to_string());
+            }
+        }
+    }
+    if !ident.is_empty() {
+        out.push(ident);
+    }
+    out
+}
+
+fn is_ident_token(tok: &str) -> bool {
+    tok.chars()
+        .next()
+        .is_some_and(|c| c.is_alphabetic() || c == '_')
+}
+
+/// Names bound to `HashMap`/`HashSet` anywhere in the file: variables,
+/// parameters, and struct fields (`name: HashMap<…>` or `name = HashMap::…`,
+/// possibly behind `&`, `mut`, or wrapper generics like `Arc<Mutex<…>>`).
+fn hash_bindings(lines: &[ScannedLine]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for l in lines {
+        let toks = tokens(&l.code);
+        for (idx, t) in toks.iter().enumerate() {
+            if t != "HashMap" && t != "HashSet" {
+                continue;
+            }
+            // walk left across type-ish tokens to the binding separator
+            let mut j = idx;
+            let sep = loop {
+                if j == 0 {
+                    break None;
+                }
+                j -= 1;
+                match toks[j].as_str() {
+                    ":" | "=" => break Some(j),
+                    "&" | "mut" | "<" | ">" | "," => continue,
+                    tok if is_ident_token(tok) => continue,
+                    _ => break None,
+                }
+            };
+            let Some(sep) = sep else { continue };
+            // `::` path segment (e.g. `collections::HashMap`) is no binding
+            if sep >= 1 && toks[sep] == ":" && toks[sep - 1] == ":" {
+                continue;
+            }
+            if sep >= 1 && is_ident_token(&toks[sep - 1]) {
+                let name = toks[sep - 1].clone();
+                if name != "let" && !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+const ITER_METHODS: [&str; 10] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".retain(",
+];
+
+/// `name` followed by an iteration method, or used as a `for … in`
+/// iterable, anywhere in `code`.
+fn iterates_binding(code: &str, name: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(name) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = &code[at + name.len()..];
+        if before_ok && ITER_METHODS.iter().any(|m| after.starts_with(m)) {
+            return true;
+        }
+        start = at + name.len();
+    }
+    if let Some(pos) = code.find(" in ") {
+        if code[..pos].contains("for ") || code[..pos].trim_end().ends_with("for") {
+            let iterable = code[pos + 4..].split('{').next().unwrap_or("");
+            if contains_word(iterable, name)
+                && !iterable.contains(&format!("{name}["))
+                && !iterable.contains(&format!("{name}.get"))
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn has_float_evidence(ctx: &str) -> bool {
+    if ctx.contains("f32") || ctx.contains("f64") {
+        return true;
+    }
+    let b = ctx.as_bytes();
+    b.windows(3)
+        .any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
+}
+
+/// Run every rule over one scanned file. `path` must be '/'-normalized;
+/// it is matched against the config's per-rule file allowlist.
+pub fn check_file(path: &str, lines: &[ScannedLine], cfg: &LintConfig) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let in_test = test_regions(lines);
+    let pragmas: Vec<Pragmas> = lines.iter().map(|l| parse_pragmas(&l.comment)).collect();
+    let bindings = hash_bindings(lines);
+
+    let allowed_inline = |rule: RuleId, i: usize| -> bool {
+        pragmas[i].allows.contains(&rule)
+            || (i > 0 && pragmas[i - 1].allows.contains(&rule))
+    };
+    let mut push = |rule: RuleId, i: usize, msg: String| {
+        diags.push(Diagnostic {
+            file: path.to_string(),
+            line: i + 1,
+            rule,
+            message: msg,
+        });
+    };
+
+    // rolling statement context for the float-reduce rule: code since the
+    // last `;`, so a multi-line `let x: f64 = …\n.sum();` keeps its type
+    // annotation in view
+    let mut stmt = String::new();
+
+    for (i, l) in lines.iter().enumerate() {
+        let code = &l.code;
+
+        if pragmas[i].bad {
+            push(
+                RuleId::Pragma,
+                i,
+                "repro-lint allow pragma is malformed or missing its justification \
+                 (expected `// repro-lint: allow(<rule>) <reason>`)"
+                    .to_string(),
+            );
+        }
+
+        // --- safety-comment: every `unsafe` needs a nearby SAFETY note ---
+        if contains_word(code, "unsafe")
+            && !cfg.file_allowed(RuleId::SafetyComment, path)
+            && !allowed_inline(RuleId::SafetyComment, i)
+        {
+            let lo = i.saturating_sub(SAFETY_LOOKBACK);
+            let documented = lines[lo..=i]
+                .iter()
+                .any(|p| p.comment.contains("SAFETY") || p.comment.contains("# Safety"));
+            if !documented {
+                push(
+                    RuleId::SafetyComment,
+                    i,
+                    format!(
+                        "`unsafe` without a `// SAFETY:` (or `# Safety` doc) comment \
+                         within the preceding {SAFETY_LOOKBACK} lines"
+                    ),
+                );
+            }
+        }
+
+        // --- thread-spawn: all threads come from the pool layer ---
+        if (code.contains("thread::spawn") || code.contains("thread::Builder"))
+            && !cfg.file_allowed(RuleId::ThreadSpawn, path)
+            && !allowed_inline(RuleId::ThreadSpawn, i)
+        {
+            push(
+                RuleId::ThreadSpawn,
+                i,
+                "raw thread spawn outside utils/pool.rs — route it through \
+                 `Pool` or `utils::pool::spawn_named`"
+                    .to_string(),
+            );
+        }
+
+        let stmt_ctx = |line_code: &str| -> String {
+            let mut ctx = stmt.clone();
+            ctx.push(' ');
+            ctx.push_str(line_code);
+            ctx
+        };
+
+        if !in_test[i] {
+            // --- wall-clock: time reads live behind Clock/StopWatch ---
+            if (code.contains("Instant::now") || contains_word(code, "SystemTime"))
+                && !cfg.file_allowed(RuleId::WallClock, path)
+                && !allowed_inline(RuleId::WallClock, i)
+            {
+                push(
+                    RuleId::WallClock,
+                    i,
+                    "direct wall-clock read outside utils/timer.rs / utils/bench.rs — \
+                     use `StopWatch` or the `Clock` trait so time is injectable"
+                        .to_string(),
+                );
+            }
+
+            // --- hash-iteration: hash order must not leak into results ---
+            if !cfg.file_allowed(RuleId::HashIteration, path)
+                && !allowed_inline(RuleId::HashIteration, i)
+            {
+                for name in &bindings {
+                    if iterates_binding(code, name) {
+                        push(
+                            RuleId::HashIteration,
+                            i,
+                            format!(
+                                "iteration over hash-ordered container `{name}` in a \
+                                 deterministic module — hash order leaks into results; \
+                                 use a BTreeMap/sorted keys or keep to point lookups"
+                            ),
+                        );
+                        break;
+                    }
+                }
+            }
+
+            // --- float-reduce: FP reductions go through linalg kernels ---
+            if !cfg.file_allowed(RuleId::FloatReduce, path)
+                && !allowed_inline(RuleId::FloatReduce, i)
+            {
+                let mut flagged = false;
+                for op in [".sum(", ".sum::<", ".fold("] {
+                    let mut from = 0;
+                    while let Some(pos) = code[from..].find(op) {
+                        let at = from + pos;
+                        from = at + op.len();
+                        if flagged {
+                            continue;
+                        }
+                        let after = &code[at..];
+                        if op == ".fold(" && (after.contains("::max") || after.contains("::min"))
+                        {
+                            continue; // order-insensitive min/max fold
+                        }
+                        if has_float_evidence(&stmt_ctx(code)) {
+                            push(
+                                RuleId::FloatReduce,
+                                i,
+                                format!(
+                                    "floating-point `{}` reduction outside linalg's \
+                                     canonical-order kernels — route through \
+                                     `linalg::{{dot, dot_f64, sum_f64, sum_f32}}` or \
+                                     justify with a repro-lint allow",
+                                    op.trim_end_matches(['(', ':', '<'])
+                                ),
+                            );
+                            flagged = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        // update the statement buffer: keep code after the last statement
+        // or block boundary, so one item's types can't leak float evidence
+        // into the next
+        match code.rfind([';', '{', '}']) {
+            Some(pos) => {
+                stmt.clear();
+                stmt.push_str(&code[pos + 1..]);
+            }
+            None => {
+                stmt.push(' ');
+                stmt.push_str(code);
+                // bound pathological statement growth
+                if stmt.len() > 4096 {
+                    let cut = stmt.len() - 2048;
+                    stmt.drain(..cut);
+                }
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{lint_source, LintConfig};
+
+    fn diags(src: &str) -> Vec<(usize, RuleId)> {
+        lint_source("some/module.rs", src, &LintConfig::default())
+            .into_iter()
+            .map(|d| (d.line, d.rule))
+            .collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let src = "fn f() {\n    unsafe { danger() };\n}\n";
+        assert_eq!(diags(src), vec![(2, RuleId::SafetyComment)]);
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let src = "fn f() {\n    // SAFETY: exclusive owner of the cell.\n    unsafe { danger() };\n}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_with_safety_doc_passes() {
+        let src = "/// Does a thing.\n///\n/// # Safety\n/// Caller keeps i in bounds.\npub unsafe fn get(i: usize) {}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_string_or_comment_ignored() {
+        let src = "fn f() {\n    let s = \"unsafe\";\n    // unsafe in prose is fine\n}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fires_and_allowlist_exempts() {
+        let src = "fn f() {\n    let t = std::time::Instant::now();\n}\n";
+        assert_eq!(diags(src), vec![(2, RuleId::WallClock)]);
+        let cfg = LintConfig::default();
+        let d = lint_source("src/utils/timer.rs", src, &cfg);
+        assert!(d.is_empty(), "timer.rs is the sanctioned clock layer");
+    }
+
+    #[test]
+    fn system_time_fires() {
+        let src = "fn f() {\n    let t = std::time::SystemTime::now();\n}\n";
+        assert_eq!(diags(src), vec![(2, RuleId::WallClock)]);
+    }
+
+    #[test]
+    fn hash_iteration_fires_on_tracked_binding() {
+        let src = "use std::collections::HashMap;\nfn f(route: &HashMap<u64, u64>) {\n    for (k, v) in route.iter() {\n        drop((k, v));\n    }\n}\n";
+        assert_eq!(diags(src), vec![(3, RuleId::HashIteration)]);
+    }
+
+    #[test]
+    fn hash_lookup_passes() {
+        let src = "use std::collections::HashMap;\nfn f(route: &mut HashMap<u64, u64>) {\n    route.insert(1, 2);\n    let _ = route.get(&1);\n    route.remove(&1);\n}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn hash_for_loop_fires() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n    for k in &m {\n        drop(k);\n    }\n}\n";
+        assert_eq!(diags(src), vec![(4, RuleId::HashIteration)]);
+    }
+
+    #[test]
+    fn wrapped_binding_is_tracked() {
+        let src = "fn f() {\n    let writers: Arc<Mutex<HashMap<usize, u8>>> = make();\n    let n = writers.keys();\n}\n";
+        assert_eq!(diags(src), vec![(3, RuleId::HashIteration)]);
+    }
+
+    #[test]
+    fn float_sum_fires_int_sum_passes() {
+        let f = "fn f(xs: &[f64]) {\n    let s: f64 = xs.iter().sum();\n}\n";
+        assert_eq!(diags(f), vec![(2, RuleId::FloatReduce)]);
+        let i = "fn f(xs: &[u64]) {\n    let s: u64 = xs.iter().sum();\n}\n";
+        assert!(diags(i).is_empty());
+    }
+
+    #[test]
+    fn multiline_float_sum_fires() {
+        let src = "fn f(xs: &[f64]) {\n    let s: f64 = xs\n        .iter()\n        .sum();\n}\n";
+        assert_eq!(diags(src), vec![(4, RuleId::FloatReduce)]);
+    }
+
+    #[test]
+    fn max_fold_is_exempt() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().cloned().fold(0.0, f64::max)\n}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn additive_float_fold_fires() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().fold(0.0, |a, b| a + b)\n}\n";
+        assert_eq!(diags(src), vec![(2, RuleId::FloatReduce)]);
+    }
+
+    #[test]
+    fn linalg_is_exempt_from_float_reduce() {
+        let src = "fn f(xs: &[f64]) {\n    let s: f64 = xs.iter().sum();\n}\n";
+        let d = lint_source("src/linalg/mod.rs", src, &LintConfig::default());
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_fires_outside_pool() {
+        let src = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(diags(src), vec![(2, RuleId::ThreadSpawn)]);
+        let b = "fn f() {\n    std::thread::Builder::new();\n}\n";
+        assert_eq!(diags(b), vec![(2, RuleId::ThreadSpawn)]);
+        let d = lint_source(
+            "src/utils/pool.rs",
+            "fn f() { std::thread::spawn(|| {}); }\n",
+            &LintConfig::default(),
+        );
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn pragma_with_reason_suppresses() {
+        let src = "fn f(xs: &[f64]) {\n    // repro-lint: allow(float-reduce) serial input-order sum\n    let s: f64 = xs.iter().sum();\n}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_violation() {
+        let src = "fn f(xs: &[f64]) {\n    // repro-lint: allow(float-reduce)\n    let s: f64 = xs.iter().sum();\n}\n";
+        let got = diags(src);
+        assert!(got.contains(&(2, RuleId::Pragma)), "bare pragma flagged: {got:?}");
+        assert!(
+            got.contains(&(3, RuleId::FloatReduce)),
+            "bare pragma must not suppress: {got:?}"
+        );
+    }
+
+    #[test]
+    fn test_modules_are_skipped_for_determinism_rules() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        let t0 = std::time::Instant::now();\n        let s: f64 = [1.0f64].iter().sum();\n    }\n}\n";
+        assert!(diags(src).is_empty());
+    }
+
+    #[test]
+    fn safety_rule_applies_inside_tests_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        unsafe { danger() };\n    }\n}\n";
+        assert_eq!(diags(src), vec![(4, RuleId::SafetyComment)]);
+    }
+
+    #[test]
+    fn safety_lookback_is_bounded() {
+        let mut src = String::from("// SAFETY: too far away.\n");
+        for _ in 0..SAFETY_LOOKBACK {
+            src.push_str("fn pad() {}\n");
+        }
+        src.push_str("fn f() { unsafe { danger() }; }\n");
+        let got = lint_source("some/module.rs", &src, &LintConfig::default());
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rule, RuleId::SafetyComment);
+    }
+}

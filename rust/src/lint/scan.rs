@@ -1,0 +1,280 @@
+//! Lexical line scanner for repro-lint.
+//!
+//! The rule engine must never fire on text inside comments or string
+//! literals (a doc sentence mentioning `HashMap` iteration is not a
+//! violation), and conversely must be able to *read* comments (the
+//! `// SAFETY:` rule and the allow pragmas live there). This module
+//! therefore splits every physical source line into two channels:
+//!
+//! * `code` — the line's characters outside comments, with string and
+//!   char literal *contents* blanked out (the delimiting quotes remain,
+//!   so token shapes like `("…")` survive for statement tracking);
+//! * `comment` — the concatenated text of every comment overlapping the
+//!   line (line, block, and doc comments alike).
+//!
+//! The scanner is a small character-level state machine, not a full
+//! lexer: it understands nested block comments, escapes in string/char
+//! literals, raw and byte strings (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`),
+//! and the lifetime-vs-char-literal ambiguity of `'`. That is exactly the
+//! subset needed to classify characters; everything else stays verbatim.
+
+/// One physical source line, split into code and comment channels.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScannedLine {
+    pub code: String,
+    pub comment: String,
+}
+
+enum State {
+    Code,
+    LineComment,
+    /// Nested depth of `/* … */`.
+    BlockComment(usize),
+    /// Inside `"…"`; escapes respected.
+    Str,
+    /// Inside a raw string closed by `"` followed by this many `#`s.
+    RawStr(usize),
+    /// Inside a char literal, after the opening `'`.
+    Char,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Try to recognize a raw/byte string opener at `chars[i]` (one of `r"`,
+/// `r#…#"`, `b"`, `br"`, `br#…#"`). Returns `(next_index, state)` past the
+/// opening quote on success.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, State)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        // plain byte string b"…"
+        return if j > i { Some((j + 1, State::Str)) } else { None };
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1, State::RawStr(hashes)))
+    } else {
+        None
+    }
+}
+
+/// Split `source` into per-line code/comment channels (see module docs).
+pub fn scan(source: &str) -> Vec<ScannedLine> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = ScannedLine::default();
+    let mut state = State::Code;
+    // last code character emitted, to keep `r`/`b` inside identifiers
+    // (e.g. `attr`, `curb`) from being mistaken for raw-string prefixes
+    let mut prev_code: char = ' ';
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    cur.code.push('"');
+                    prev_code = '"';
+                    state = State::Str;
+                    i += 1;
+                    continue;
+                }
+                if (c == 'r' || c == 'b') && !is_ident_char(prev_code) {
+                    if let Some((next, st)) = raw_string_open(&chars, i) {
+                        cur.code.push('"');
+                        prev_code = '"';
+                        state = st;
+                        i = next;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // char literal iff it closes as one; otherwise lifetime
+                    if chars.get(i + 1) == Some(&'\\') {
+                        cur.code.push('\'');
+                        prev_code = '\'';
+                        state = State::Char;
+                        i += 1;
+                        continue;
+                    }
+                    if chars.get(i + 2) == Some(&'\'')
+                        && chars.get(i + 1).is_some_and(|&n| n != '\'' && n != '\n')
+                    {
+                        cur.code.push('\'');
+                        cur.code.push('\'');
+                        prev_code = '\'';
+                        i += 3;
+                        continue;
+                    }
+                    cur.code.push('\'');
+                    prev_code = '\'';
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(c);
+                prev_code = c;
+                i += 1;
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2; // skip escaped char (contents are blanked anyway)
+                } else if c == '"' {
+                    cur.code.push('"');
+                    prev_code = '"';
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let closed = (1..=hashes).all(|h| chars.get(i + h) == Some(&'#'));
+                    if closed {
+                        cur.code.push('"');
+                        prev_code = '"';
+                        state = State::Code;
+                        i += 1 + hashes;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    prev_code = '\'';
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    // final line without trailing newline
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        scan(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_split_off() {
+        let ls = scan("let x = 1; // trailing note\n// full line\nlet y = 2;\n");
+        assert_eq!(ls[0].code, "let x = 1; ");
+        assert_eq!(ls[0].comment, " trailing note");
+        assert_eq!(ls[1].code, "");
+        assert_eq!(ls[1].comment, " full line");
+        assert_eq!(ls[2].code, "let y = 2;");
+    }
+
+    #[test]
+    fn string_contents_blanked() {
+        let ls = scan("let s = \"Instant::now // not code\";\n");
+        assert_eq!(ls[0].code, "let s = \"\";");
+        assert_eq!(ls[0].comment, "");
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        assert_eq!(codes("let s = r#\"a \"quoted\" b\"#;\n")[0], "let s = \"\";");
+        assert_eq!(codes("let s = r\"plain\";\n")[0], "let s = \"\";");
+        assert_eq!(codes("let s = b\"bytes\";\n")[0], "let s = \"\";");
+        assert_eq!(codes("let s = br#\"raw bytes\"#;\n")[0], "let s = \"\";");
+        // identifier ending in r followed by a string is not a raw string
+        assert_eq!(codes("var\"x\"\n")[0], "var\"\"");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        assert_eq!(codes("fn f<'a>(x: &'a str) {}\n")[0], "fn f<'a>(x: &'a str) {}");
+        assert_eq!(codes("let c = 'x';\n")[0], "let c = '';");
+        assert_eq!(codes("let c = '\\n';\n")[0], "let c = '';");
+        assert_eq!(codes("let c = '\\'';\n")[0], "let c = '';");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ls = scan("a /* one /* two */ still */ b\n");
+        assert_eq!(ls[0].code, "a  b");
+        assert_eq!(ls[0].comment, " one  two  still ");
+    }
+
+    #[test]
+    fn multiline_string_keeps_state() {
+        let ls = scan("let s = \"line one\nline two\";\nlet t = 1;\n");
+        assert_eq!(ls[0].code, "let s = \"");
+        assert_eq!(ls[1].code, "\";");
+        assert_eq!(ls[2].code, "let t = 1;");
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let ls = scan("before /* comment\nspanning */ after\n");
+        assert_eq!(ls[0].code, "before ");
+        assert_eq!(ls[0].comment, " comment");
+        assert_eq!(ls[1].code, " after");
+        assert_eq!(ls[1].comment, "spanning ");
+    }
+}

@@ -76,7 +76,7 @@ use adv_softmax::serve::faults::FaultPlan;
 use adv_softmax::serve::{evaluate_serving, Predictor, RequestBatcher, ServingModel, TopK};
 use adv_softmax::train::TrainRun;
 use adv_softmax::utils::cli::Args;
-use adv_softmax::utils::Pool;
+use adv_softmax::utils::{Pool, StopWatch};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -143,12 +143,12 @@ fn tree_fit(args: &Args) -> Result<()> {
     let cfg = adv_softmax::config::TreeConfig { aux_dim, ..Default::default() };
     cfg.validate()?;
     let pool = Pool::from_parallelism(parallelism);
-    let t0 = std::time::Instant::now();
+    let t0 = StopWatch::started();
     let (adv, stats) = AdversarialSampler::fit_with(&splits.train, &cfg, seed, &pool);
     println!(
         "fitted {} nodes in {:.2}s over {} workers ({} newton iters, {} alternations, {} forced)",
         stats.nodes_fitted,
-        t0.elapsed().as_secs_f64(),
+        t0.elapsed_secs(),
         pool.num_workers(),
         stats.newton_iters_total,
         stats.alternations_total,
@@ -301,9 +301,9 @@ fn serve(args: &Args) -> Result<()> {
             splits.test.feat_dim,
             model.feat_dim
         );
-        let t0 = std::time::Instant::now();
+        let t0 = StopWatch::started();
         let metrics = evaluate_serving(&pred, &splits.test, &pool);
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed_secs();
         println!(
             "eval {dataset} ({} queries): P@1 {:.4}  recall@{} {:.4}  \
              ({:.0} queries/s over {} workers)",
@@ -318,9 +318,9 @@ fn serve(args: &Args) -> Result<()> {
 
     if let Some(path) = input {
         let (xs, m) = read_queries(&path, model.feat_dim)?;
-        let t0 = std::time::Instant::now();
+        let t0 = StopWatch::started();
         let preds = pred.predict_batch_with(&xs, m, &pool);
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed_secs();
         let mut text = String::new();
         for t in &preds {
             text.push_str(&format_topk(t));

@@ -13,7 +13,7 @@ pub use literal::{lit_f32, lit_i32, read_f32, read_f32_into, read_i32, LitScratc
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -75,7 +75,9 @@ impl Executable {
 pub struct Registry {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: HashMap<String, Arc<Executable>>,
+    // BTreeMap so `names()` and error messages list artifacts in a
+    // deterministic (sorted) order, not hash order
+    executables: BTreeMap<String, Arc<Executable>>,
     dir: PathBuf,
 }
 
@@ -86,7 +88,7 @@ impl Registry {
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("load manifest from {dir:?} — run `make artifacts`?"))?;
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut executables = HashMap::new();
+        let mut executables = BTreeMap::new();
         for (name, meta) in &manifest.artifacts {
             let path = dir.join(&meta.file);
             let proto = xla::HloModuleProto::from_text_file(&path)

@@ -185,7 +185,7 @@ impl<'a> Scorer<'a> {
 #[inline]
 pub fn row_lse(scores: &[f32]) -> f32 {
     let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let se: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+    let se: f32 = crate::linalg::sum_f32(scores.iter().map(|s| (s - m).exp()));
     m + se.ln()
 }
 
@@ -245,9 +245,7 @@ pub fn topk_from_pairs(
 pub fn mean_noise_loglik(sampler: &dyn NoiseSampler, data: &Dataset) -> f64 {
     let n = data.len();
     assert!(n > 0, "empty evaluation set");
-    (0..n)
-        .map(|i| sampler.log_prob(data.x(i), data.y(i)) as f64)
-        .sum::<f64>()
+    crate::linalg::sum_f64((0..n).map(|i| sampler.log_prob(data.x(i), data.y(i)) as f64))
         / n as f64
 }
 

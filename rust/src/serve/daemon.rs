@@ -54,67 +54,21 @@ use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::utils::pool::spawn_named;
+
+// The daemon never reads the wall clock directly: all deadline and
+// coalescing decisions go through the injectable `Clock` from the
+// sanctioned clock layer (re-exported here for existing importers).
+pub use crate::utils::timer::{Clock, ManualClock, RealClock};
 
 /// Receiver wait while the queue is empty (new input interrupts it).
 const IDLE_POLL_MS: u64 = 200;
-
-/// Millisecond clock injected into the daemon. Deadline and coalescing
-/// decisions go through this, so tests drive them with a [`ManualClock`].
-pub trait Clock: Send {
-    fn now_ms(&self) -> u64;
-}
-
-/// Wall clock (milliseconds since construction).
-pub struct RealClock {
-    start: Instant,
-}
-
-impl RealClock {
-    pub fn new() -> Self {
-        Self { start: Instant::now() }
-    }
-}
-
-impl Default for RealClock {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Clock for RealClock {
-    fn now_ms(&self) -> u64 {
-        self.start.elapsed().as_millis() as u64
-    }
-}
-
-/// Hand-cranked clock for deterministic tests; clones share the time.
-#[derive(Clone, Default)]
-pub struct ManualClock(Arc<AtomicU64>);
-
-impl ManualClock {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn advance(&self, ms: u64) {
-        self.0.fetch_add(ms, Ordering::SeqCst);
-    }
-
-    pub fn set(&self, ms: u64) {
-        self.0.store(ms, Ordering::SeqCst);
-    }
-}
-
-impl Clock for ManualClock {
-    fn now_ms(&self) -> u64 {
-        self.0.load(Ordering::SeqCst)
-    }
-}
 
 /// Why a request was rejected (typed — shedding is never a silent drop).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -261,26 +215,24 @@ impl PredictWorker {
     ) -> (Sender<BatchJob>, Receiver<Vec<TopK>>, JoinHandle<()>) {
         let (job_tx, job_rx) = mpsc::channel::<BatchJob>();
         let (reply_tx, reply_rx) = mpsc::channel::<Vec<TopK>>();
-        let handle = thread::Builder::new()
-            .name("predict-worker".into())
-            .spawn(move || {
-                let pool = if parallelism == 0 { Pool::auto() } else { Pool::new(parallelism) };
-                while let Ok(job) = job_rx.recv() {
-                    if job.slow_ms > 0 {
-                        thread::sleep(Duration::from_millis(job.slow_ms));
-                    }
-                    if let Some(id) = job.panic_on {
-                        panic!("injected fault: worker panic on request {id}");
-                    }
-                    let pred = Predictor::new(&model, job.cfg)
-                        .expect("batch config pre-validated by Daemon::new");
-                    let out = pred.predict_batch_with(&job.xs, job.m, &pool);
-                    if reply_tx.send(out).is_err() {
-                        break; // supervisor abandoned us after a timeout
-                    }
+        let handle = spawn_named("predict-worker", move || {
+            let pool = if parallelism == 0 { Pool::auto() } else { Pool::new(parallelism) };
+            while let Ok(job) = job_rx.recv() {
+                if job.slow_ms > 0 {
+                    thread::sleep(Duration::from_millis(job.slow_ms));
                 }
-            })
-            .expect("spawn predict worker thread");
+                if let Some(id) = job.panic_on {
+                    panic!("injected fault: worker panic on request {id}");
+                }
+                let pred = Predictor::new(&model, job.cfg)
+                    .expect("batch config pre-validated by Daemon::new");
+                let out = pred.predict_batch_with(&job.xs, job.m, &pool);
+                if reply_tx.send(out).is_err() {
+                    break; // supervisor abandoned us after a timeout
+                }
+            }
+        })
+        .expect("spawn predict worker thread");
         (job_tx, reply_rx, handle)
     }
 
@@ -749,18 +701,16 @@ pub fn run_stdin_daemon(daemon: &mut Daemon) -> Result<DaemonStats> {
     let (tx, rx) = mpsc::channel();
     // detached on purpose: the reader parks on stdin and exits on EOF or
     // when the loop side hangs up the channel
-    thread::Builder::new()
-        .name("stdin-reader".into())
-        .spawn(move || {
-            for line in std::io::stdin().lock().lines() {
-                let Ok(line) = line else { break };
-                if tx.send(Inbound::Line { client: 0, line }).is_err() {
-                    return;
-                }
+    spawn_named("stdin-reader", move || {
+        for line in std::io::stdin().lock().lines() {
+            let Ok(line) = line else { break };
+            if tx.send(Inbound::Line { client: 0, line }).is_err() {
+                return;
             }
-            let _ = tx.send(Inbound::Shutdown);
-        })
-        .context("spawn stdin reader")?;
+        }
+        let _ = tx.send(Inbound::Shutdown);
+    })
+    .context("spawn stdin reader")?;
     let mut out = std::io::stdout().lock();
     let stats = run_loop(daemon, &rx, |_, idx, kind| {
         let _ = writeln!(out, "{}", format_line(idx, kind));
@@ -791,40 +741,36 @@ pub fn run_socket_daemon(daemon: &mut Daemon, path: &Path) -> Result<DaemonStats
     let acceptor = {
         let stop = stop.clone();
         let writers = writers.clone();
-        thread::Builder::new()
-            .name("socket-accept".into())
-            .spawn(move || {
-                let mut next_client = 0usize;
-                while !stop.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let client = next_client;
-                            next_client += 1;
-                            if let Ok(writer) = stream.try_clone() {
-                                writers.lock().unwrap().insert(client, writer);
+        spawn_named("socket-accept", move || {
+            let mut next_client = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let client = next_client;
+                        next_client += 1;
+                        if let Ok(writer) = stream.try_clone() {
+                            writers.lock().unwrap().insert(client, writer);
+                        }
+                        let tx = tx.clone();
+                        let writers = writers.clone();
+                        let _ = spawn_named(&format!("socket-client-{client}"), move || {
+                            for line in BufReader::new(stream).lines() {
+                                let Ok(line) = line else { break };
+                                if tx.send(Inbound::Line { client, line }).is_err() {
+                                    break;
+                                }
                             }
-                            let tx = tx.clone();
-                            let writers = writers.clone();
-                            let _ = thread::Builder::new()
-                                .name(format!("socket-client-{client}"))
-                                .spawn(move || {
-                                    for line in BufReader::new(stream).lines() {
-                                        let Ok(line) = line else { break };
-                                        if tx.send(Inbound::Line { client, line }).is_err() {
-                                            break;
-                                        }
-                                    }
-                                    writers.lock().unwrap().remove(&client);
-                                });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            thread::sleep(Duration::from_millis(20));
-                        }
-                        Err(_) => break,
+                            writers.lock().unwrap().remove(&client);
+                        });
                     }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => break,
                 }
-            })
-            .context("spawn socket acceptor")?
+            }
+        })
+        .context("spawn socket acceptor")?
     };
     let stats = {
         let writers = writers.clone();

@@ -159,30 +159,28 @@ impl BatchSource {
             let (btx, brx) = sync_channel::<RawBatch>(PIPELINE_DEPTH_PER_WORKER);
             let (rtx, rrx) = sync_channel::<RawBatch>(PIPELINE_DEPTH_PER_WORKER);
             let mut wgen = gen.worker(w as u64, m as u64);
-            let handle = std::thread::Builder::new()
-                .name(format!("batch-gen-{w}"))
-                .spawn(move || {
-                    use std::sync::mpsc::TryRecvError;
-                    let (b, k) = (wgen.batch_size(), wgen.feat_dim());
-                    loop {
-                        // Prefer a recycled buffer; fall back to a fresh
-                        // allocation so a caller that drops batches instead
-                        // of recycling degrades to per-batch allocation
-                        // (bounded by the batch channel's backpressure)
-                        // rather than deadlocking the pipeline.
-                        let mut buf = match rrx.try_recv() {
-                            Ok(buf) => buf,
-                            Err(TryRecvError::Empty) => RawBatch::alloc(b, k),
-                            Err(TryRecvError::Disconnected) => break,
-                        };
-                        wgen.fill_next(&mut buf);
-                        // errors once the coordinator closes its end
-                        if btx.send(buf).is_err() {
-                            break;
-                        }
+            let handle = crate::utils::spawn_named(&format!("batch-gen-{w}"), move || {
+                use std::sync::mpsc::TryRecvError;
+                let (b, k) = (wgen.batch_size(), wgen.feat_dim());
+                loop {
+                    // Prefer a recycled buffer; fall back to a fresh
+                    // allocation so a caller that drops batches instead
+                    // of recycling degrades to per-batch allocation
+                    // (bounded by the batch channel's backpressure)
+                    // rather than deadlocking the pipeline.
+                    let mut buf = match rrx.try_recv() {
+                        Ok(buf) => buf,
+                        Err(TryRecvError::Empty) => RawBatch::alloc(b, k),
+                        Err(TryRecvError::Disconnected) => break,
+                    };
+                    wgen.fill_next(&mut buf);
+                    // errors once the coordinator closes its end
+                    if btx.send(buf).is_err() {
+                        break;
                     }
-                })
-                .expect("spawn batch generator");
+                }
+            })
+            .expect("spawn batch generator");
             batch_rx.push(brx);
             buf_tx.push(rtx);
             handles.push(handle);
@@ -534,7 +532,7 @@ impl StepEngine {
                 read_f32_into(&outs[4], &mut slot.bn)?;
                 params.apply_sparse_par(pool, &batch.pos, &slot.wp, &slot.bp);
                 params.apply_sparse_par(pool, &batch.neg, &slot.wn, &slot.bn);
-                Ok(loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64)
+                Ok(crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64)
             }
             BatchMode::Softmax => {
                 let c = params.num_classes;
@@ -560,7 +558,7 @@ impl StepEngine {
                 read_f32_into(&outs[1], &mut self.gw_dense)?;
                 read_f32_into(&outs[2], &mut self.gb_dense)?;
                 params.apply_dense_par(pool, &self.gw_dense, &self.gb_dense);
-                Ok(loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64)
+                Ok(crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64)
             }
         }
     }
@@ -725,7 +723,7 @@ impl StepEngine {
         read_f32_into(&outs[4], &mut cur.bn)?;
         params.apply_sparse_par(pool, &cur_batch.pos, &cur.wp, &cur.bp);
         params.apply_sparse_par(pool, &cur_batch.neg, &cur.wn, &cur.bn);
-        let mean_loss = loss.iter().map(|&l| l as f64).sum::<f64>() / b as f64;
+        let mean_loss = crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64;
 
         // Patch t+1's leased rows now that t's scatter has landed, then
         // seal its parameter literals: the slot is fully prepared.
@@ -801,9 +799,9 @@ impl TrainRun {
 
         // --- auxiliary model (Sec. 3) ---
         let (aux, aux_fit_seconds) = if cfg.method.needs_tree() {
-            let t0 = std::time::Instant::now();
+            let t0 = StopWatch::started();
             let (adv, stats) = AdversarialSampler::fit_with(&data, &cfg.tree, cfg.seed, &pool);
-            let dt = t0.elapsed().as_secs_f64();
+            let dt = t0.elapsed_secs();
             let slowest_level = stats.level_seconds.iter().cloned().fold(0.0, f64::max);
             log::info(&format!(
                 "aux tree fitted: {} nodes, {:.1}s ({} levels over {} workers, \

@@ -30,8 +30,8 @@
 use super::{Forced, Tree, TreeKernel, PADDING};
 use crate::config::TreeConfig;
 use crate::linalg::pca::dominant_eigenvector;
-use crate::linalg::{sigmoid64, solve_spd};
-use crate::utils::{Pool, Rng, SharedMut};
+use crate::linalg::{dot_f64, dot_f64_f32, sigmoid64, solve_spd};
+use crate::utils::{Pool, Rng, SharedMut, StopWatch};
 
 /// RNG stream domain for per-node initialization draws: node `i` uses
 /// `base.stream(STREAM_FIT_NODE, i)`, independent of fitting order.
@@ -109,7 +109,7 @@ pub fn fit_tree_with(
     assert!(c >= 2, "need at least two classes");
     assert_eq!(x_proj.len(), n * k);
     assert_eq!(labels.len(), n);
-    let t0 = std::time::Instant::now();
+    let t0 = StopWatch::started();
 
     let num_leaves = c.next_power_of_two();
     let depth = num_leaves.trailing_zeros() as usize;
@@ -160,7 +160,7 @@ pub fn fit_tree_with(
     }];
 
     while !frontier.is_empty() {
-        let lvl_t0 = std::time::Instant::now();
+        let lvl_t0 = StopWatch::started();
         let n_tasks = frontier.len();
         let mut outcomes: Vec<Option<NodeOutcome>> = Vec::with_capacity(n_tasks);
         outcomes.resize_with(n_tasks, || None);
@@ -212,7 +212,7 @@ pub fn fit_tree_with(
                 next.push(child);
             }
         }
-        stats.level_seconds.push(lvl_t0.elapsed().as_secs_f64());
+        stats.level_seconds.push(lvl_t0.elapsed_secs());
         frontier = next;
     }
 
@@ -224,7 +224,7 @@ pub fn fit_tree_with(
         }
     }
 
-    stats.fit_seconds = t0.elapsed().as_secs_f64();
+    stats.fit_seconds = t0.elapsed_secs();
     // Mean train log-likelihood over the fitted subsample, swept through
     // the freshly rebuilt blocked kernel. Each blocked row is bit-identical
     // to scalar `log_prob`, and the f64 accumulation runs in point order,
@@ -491,8 +491,7 @@ fn split_by_delta(
     let mut delta: Vec<(f64, usize)> = (0..n_r)
         .map(|local| {
             let s = &sums[local * k..(local + 1) * k];
-            let d: f64 = w.iter().zip(s.iter()).map(|(a, b)| a * b).sum::<f64>()
-                + counts[local] as f64 * b;
+            let d: f64 = dot_f64(w, s) + counts[local] as f64 * b;
             (d, local)
         })
         .collect();
@@ -551,13 +550,12 @@ fn newton_ascent(
         for (j, &p) in pts.iter().enumerate() {
             let i = p as usize;
             let x = &x_proj[i * k..(i + 1) * k];
-            let a: f64 =
-                w.iter().zip(x.iter()).map(|(wv, xv)| wv * *xv as f64).sum::<f64>() + b;
+            let a: f64 = dot_f64_f32(w, x) + b;
             let za = zeta_of(j) * a;
             // log sigma(za), stable
             obj += za.min(0.0) - (-za.abs()).exp().ln_1p();
         }
-        obj - lambda_n * (w.iter().map(|v| v * v).sum::<f64>() + b * b)
+        obj - lambda_n * (dot_f64(w, w) + b * b)
     };
 
     let mut obj = objective(w, *b);
@@ -570,8 +568,7 @@ fn newton_ascent(
             let i = p as usize;
             let z = zeta_of(jp);
             let x = &x_proj[i * k..(i + 1) * k];
-            let a: f64 =
-                w.iter().zip(x.iter()).map(|(wv, xv)| wv * *xv as f64).sum::<f64>() + *b;
+            let a: f64 = dot_f64_f32(w, x) + *b;
             let s = sigmoid64(a);
             // ∇ log σ(ζa) = ζ σ(−ζa) x̃ ;  σ(−ζa) = if ζ>0 {1−s} else {s}
             let gcoef = z * if z > 0.0 { 1.0 - s } else { s };
@@ -603,7 +600,7 @@ fn newton_ascent(
             }
         }
 
-        let gnorm: f64 = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        let gnorm: f64 = dot_f64(&grad, &grad).sqrt();
         if gnorm < 1e-8 * (pts.len() as f64).max(1.0) {
             break;
         }
@@ -611,7 +608,7 @@ fn newton_ascent(
 
         // Armijo backtracking: accept the largest t in {1, 1/2, ...} with
         // obj(θ + tδ) ≥ obj(θ) + c t ∇L·δ  (c = 1e-4; ∇L·δ > 0 by SPD).
-        let gdotd: f64 = grad.iter().zip(step.iter()).map(|(g, d)| g * d).sum();
+        let gdotd: f64 = dot_f64(&grad, &step);
         let mut t = 1.0f64;
         let mut accepted = false;
         for _ in 0..30 {
@@ -630,7 +627,7 @@ fn newton_ascent(
         if !accepted {
             break; // numerically flat — we're done
         }
-        let snorm: f64 = step.iter().map(|s| s * s).sum::<f64>().sqrt();
+        let snorm: f64 = dot_f64(&step, &step).sqrt();
         if t * snorm < 1e-10 {
             break;
         }

@@ -20,6 +20,7 @@ impl AliasTable {
     pub fn new(weights: &[f64]) -> anyhow::Result<Self> {
         let n = weights.len();
         anyhow::ensure!(n > 0, "alias table needs at least one outcome");
+        // repro-lint: allow(float-reduce) serial input-order sum (utils must not depend on linalg)
         let total: f64 = weights.iter().sum();
         anyhow::ensure!(
             total > 0.0 && weights.iter().all(|w| *w >= 0.0 && w.is_finite()),

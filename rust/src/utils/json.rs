@@ -136,14 +136,8 @@ impl Json {
     }
 
     // ------------------------------------------------------------------
-    // writing
+    // writing (via Display; `.to_string()` comes from the blanket impl)
     // ------------------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
 
     fn write(&self, out: &mut String) {
         match self {
@@ -181,6 +175,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -10,6 +10,6 @@ pub mod rng;
 pub mod timer;
 
 pub use alias::AliasTable;
-pub use pool::{Pool, SharedMut, PAR_MIN_MERGE_ROWS};
+pub use pool::{spawn_named, Pool, SharedMut, PAR_MIN_MERGE_ROWS};
 pub use rng::Rng;
 pub use timer::StopWatch;

@@ -36,6 +36,9 @@
 //! mutating *disjoint* rows of one buffer. Disjointness is the caller's
 //! obligation (documented per call site); the wrapper only erases the
 //! aliasing rule the borrow checker cannot see across the shard function.
+//! The `shared_mut_audit` cargo feature turns that obligation into a
+//! machine-checked one: every claim is logged and cross-thread overlaps
+//! panic with a diagnostic naming both jobs and ranges.
 
 use std::marker::PhantomData;
 use std::sync::{Arc, Condvar, Mutex};
@@ -48,6 +51,19 @@ use std::thread::JoinHandle;
 /// the serving metrics merge ([`crate::serve::evaluate_serving`]) so the
 /// two floors cannot drift apart.
 pub const PAR_MIN_MERGE_ROWS: usize = 4096;
+
+/// Spawn a named OS thread. This is the single sanctioned thread entry
+/// point outside the pool's own workers: repro-lint's `thread-spawn` rule
+/// denies raw `thread::spawn`/`thread::Builder` everywhere else, so every
+/// thread in the process carries a name (visible in panics and debuggers)
+/// and is accounted for either here or in [`Pool::new`].
+pub fn spawn_named<T, F>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new().name(name.to_string()).spawn(f)
+}
 
 /// Lifetime-erased pointer to the job closure of the current generation.
 /// Only dereferenced by workers between the generation bump and the final
@@ -407,6 +423,125 @@ impl Drop for Pool {
     }
 }
 
+/// Machine-checked disjointness for [`SharedMut`], behind the
+/// `shared_mut_audit` cargo feature.
+///
+/// Every `slice_mut`/`get_mut` call records its claimed index range under
+/// the claiming thread ("job"); a claim overlapping a range held by a
+/// *different* thread panics immediately, naming both jobs and both
+/// ranges. Claims accumulate for the lifetime of the view — every view in
+/// this codebase is created for exactly one pool dispatch, so a view's
+/// claim log spans one parallel job and the check is precisely the
+/// documented disjointness contract. Same-thread re-claims are always
+/// fine: borrows on one thread are sequential.
+#[cfg(feature = "shared_mut_audit")]
+mod audit {
+    use std::sync::Mutex;
+    use std::thread::ThreadId;
+
+    /// All ranges claimed by one thread, sorted and coalesced.
+    struct JobClaims {
+        thread: ThreadId,
+        /// Thread name at first claim (pool workers are `pool-N`, named
+        /// spawns carry their [`super::spawn_named`] name), for diagnostics.
+        name: String,
+        /// Half-open `[start, end)` ranges, sorted, non-overlapping.
+        ranges: Vec<(usize, usize)>,
+    }
+
+    /// Claim log for one [`super::SharedMut`] view.
+    #[derive(Default)]
+    pub struct AuditState {
+        jobs: Mutex<Vec<JobClaims>>,
+    }
+
+    fn thread_label() -> String {
+        let t = std::thread::current();
+        match t.name() {
+            Some(n) => n.to_string(),
+            None => format!("{:?}", t.id()),
+        }
+    }
+
+    /// Insert `[s, e)` into `ranges`, keeping them sorted and coalesced
+    /// (touching or overlapping neighbors merge).
+    fn insert_range(ranges: &mut Vec<(usize, usize)>, mut s: usize, mut e: usize) {
+        let lo = ranges.partition_point(|&(_, re)| re < s);
+        let mut hi = lo;
+        while hi < ranges.len() && ranges[hi].0 <= e {
+            s = s.min(ranges[hi].0);
+            e = e.max(ranges[hi].1);
+            hi += 1;
+        }
+        ranges.splice(lo..hi, [(s, e)]);
+    }
+
+    impl AuditState {
+        /// Record a mutable claim of `[start, start + len)` by the current
+        /// thread; panic if it overlaps any other thread's claim on this
+        /// view.
+        pub fn claim(&self, start: usize, len: usize) {
+            if len == 0 {
+                return;
+            }
+            let end = start + len;
+            let me = std::thread::current().id();
+            let mut jobs = self.jobs.lock().unwrap();
+            for job in jobs.iter() {
+                if job.thread == me {
+                    continue;
+                }
+                // first of the other job's ranges ending after our start
+                let i = job.ranges.partition_point(|&(_, re)| re <= start);
+                if let Some(&(os, oe)) = job.ranges.get(i) {
+                    if os < end {
+                        panic!(
+                            "SharedMut audit: job `{}` claims [{start}, {end}) but it \
+                             overlaps [{os}, {oe}) already claimed by job `{}` on the \
+                             same buffer — the shard map must give every index exactly \
+                             one writer",
+                            thread_label(),
+                            job.name,
+                        );
+                    }
+                }
+            }
+            match jobs.iter_mut().find(|j| j.thread == me) {
+                Some(job) => insert_range(&mut job.ranges, start, end),
+                None => jobs.push(JobClaims {
+                    thread: me,
+                    name: thread_label(),
+                    ranges: vec![(start, end)],
+                }),
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn insert_range_coalesces_neighbors() {
+            let mut r = vec![(0, 4), (8, 12), (20, 24)];
+            insert_range(&mut r, 4, 8); // touches both neighbors
+            assert_eq!(r, vec![(0, 12), (20, 24)]);
+            insert_range(&mut r, 13, 19); // strictly between
+            assert_eq!(r, vec![(0, 12), (13, 19), (20, 24)]);
+            insert_range(&mut r, 2, 30); // swallows everything
+            assert_eq!(r, vec![(0, 30)]);
+        }
+
+        #[test]
+        fn same_thread_overlap_is_not_a_violation() {
+            let a = AuditState::default();
+            a.claim(0, 8);
+            a.claim(4, 8); // same thread: sequential borrows, fine
+            a.claim(0, 1);
+        }
+    }
+}
+
 /// A mutable slice view shareable across pool workers.
 ///
 /// # Safety contract
@@ -416,21 +551,37 @@ impl Drop for Pool {
 /// accesses target **disjoint index ranges** — in this codebase, by
 /// sharding on `row % num_shards` (or contiguous spans) so each index has
 /// exactly one writer.
+///
+/// Build with `--features shared_mut_audit` to machine-check that contract
+/// at runtime: every claim is logged per thread and a cross-thread overlap
+/// panics on the spot, naming both jobs and ranges (see [`audit`] and
+/// `rust/DETERMINISM.md`).
 pub struct SharedMut<'a, T> {
     ptr: *mut T,
     len: usize,
+    /// Claim log for the audit feature. One log per view; views are
+    /// created per pool dispatch, so the log covers exactly one job.
+    #[cfg(feature = "shared_mut_audit")]
+    audit: audit::AuditState,
     _marker: PhantomData<&'a mut [T]>,
 }
 
-// SAFETY: the wrapper is only a pointer + length; sending/sharing it is
-// safe because all dereferences go through the unsafe accessors whose
-// disjointness contract the caller upholds.
+// SAFETY: the wrapper holds only a pointer + length (plus, under the audit
+// feature, a Mutex-guarded claim log, itself Send + Sync); sending/sharing
+// it is safe because all dereferences go through the unsafe accessors
+// whose disjointness contract the caller upholds.
 unsafe impl<T: Send> Send for SharedMut<'_, T> {}
 unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
 
 impl<'a, T> SharedMut<'a, T> {
     pub fn new(slice: &'a mut [T]) -> Self {
-        SharedMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+        SharedMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            #[cfg(feature = "shared_mut_audit")]
+            audit: audit::AuditState::default(),
+            _marker: PhantomData,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -449,6 +600,16 @@ impl<'a, T> SharedMut<'a, T> {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        #[cfg(feature = "shared_mut_audit")]
+        {
+            let end = start.checked_add(len).expect("SharedMut range overflows usize");
+            assert!(
+                end <= self.len,
+                "SharedMut::slice_mut range [{start}, {end}) out of bounds (len {})",
+                self.len
+            );
+            self.audit.claim(start, len);
+        }
         debug_assert!(start + len <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
@@ -461,6 +622,15 @@ impl<'a, T> SharedMut<'a, T> {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        #[cfg(feature = "shared_mut_audit")]
+        {
+            assert!(
+                i < self.len,
+                "SharedMut::get_mut index {i} out of bounds (len {})",
+                self.len
+            );
+            self.audit.claim(i, 1);
+        }
         debug_assert!(i < self.len);
         &mut *self.ptr.add(i)
     }

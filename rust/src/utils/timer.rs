@@ -1,10 +1,19 @@
-//! Pausable stopwatch for learning-curve timing.
+//! The sanctioned clock layer: pausable stopwatch for learning-curve
+//! timing plus the injectable millisecond [`Clock`] used by the serving
+//! daemon.
 //!
 //! Figure 1 plots metrics against *training* wallclock; evaluation passes
 //! must not count. The trainer pauses the watch around evaluation, exactly
 //! like the paper's protocol of shifting curves only by the auxiliary-model
 //! fitting time.
+//!
+//! This module (together with `utils/bench.rs`) is the only place allowed
+//! to read `Instant::now` directly — repro-lint's `wall-clock` rule denies
+//! it everywhere else, so all time-dependent logic stays virtual-time
+//! testable and out of reproducible results.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Accumulating stopwatch that can be paused and resumed.
@@ -65,6 +74,60 @@ impl StopWatch {
     }
 }
 
+/// Millisecond clock injected into time-dependent components (the serving
+/// daemon's deadline/coalescing logic). Production uses [`RealClock`];
+/// tests drive virtual time with a [`ManualClock`].
+pub trait Clock: Send {
+    fn now_ms(&self) -> u64;
+}
+
+/// Wall clock (milliseconds since construction).
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-cranked clock for deterministic tests; clones share the time.
+#[derive(Clone, Default)]
+pub struct ManualClock(Arc<AtomicU64>);
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, ms: u64) {
+        self.0.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, ms: u64) {
+        self.0.store(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +160,24 @@ mod tests {
         let mut w = StopWatch::new();
         w.preload(Duration::from_secs(3));
         assert!(w.elapsed() >= Duration::from_secs(3));
+    }
+
+    #[test]
+    fn manual_clock_is_shared_and_settable() {
+        let c = ManualClock::new();
+        let c2 = c.clone();
+        c.advance(40);
+        assert_eq!(c2.now_ms(), 40);
+        c2.set(7);
+        assert_eq!(c.now_ms(), 7);
+    }
+
+    #[test]
+    fn real_clock_is_monotonic() {
+        let c = RealClock::new();
+        let a = c.now_ms();
+        sleep(Duration::from_millis(5));
+        assert!(c.now_ms() >= a);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Runtime audit of the [`SharedMut`] disjointness contract
+//! (`--features shared_mut_audit`).
+//!
+//! Two directions:
+//!
+//! * **Soundness of the shard maps** — randomized disjoint plans (modulo
+//!   sharding, contiguous spans, random partitions) must never trip the
+//!   audit, using the same seeded-generator pattern as
+//!   `proptest_invariants.rs`.
+//! * **Sensitivity of the audit** — a deliberately overlapping plan must
+//!   panic, and the diagnostic must name both claiming jobs and both
+//!   ranges so the report is actionable without a debugger.
+//!
+//! The rest of the suite doubles as the real-workload audit: CI runs
+//! `cargo test --features shared_mut_audit`, which drives every sharded
+//! path (train, tree fit, PCA, eval, serve) with claims recorded.
+
+#![cfg(feature = "shared_mut_audit")]
+
+use adv_softmax::utils::{Pool, Rng, SharedMut};
+use std::sync::Barrier;
+
+/// Run `prop` over `cases` random seeds; panic with the seed on failure.
+fn for_all_seeds(cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xd15_701A7 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(">>> property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Property: `i % workers == shard` plans (the codebase's scatter pattern)
+/// never trip the audit, for random sizes and worker counts.
+#[test]
+fn prop_modulo_shard_plans_never_trip() {
+    for_all_seeds(24, |rng| {
+        let workers = 2 + rng.below(4);
+        let n = 64 + rng.below(1000);
+        let pool = Pool::new(workers);
+        let mut buf = vec![0usize; n];
+        {
+            let view = SharedMut::new(&mut buf);
+            let view_ref = &view;
+            pool.run_sharded(move |shard| {
+                for i in 0..n {
+                    if i % workers == shard {
+                        // SAFETY: index i is written only by shard i % workers.
+                        unsafe { *view_ref.get_mut(i) = i + 1 };
+                    }
+                }
+            });
+        }
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i + 1));
+    });
+}
+
+/// Property: contiguous-span plans ([`Pool::for_each_span`], which claims
+/// through `slice_mut` internally) never trip the audit.
+#[test]
+fn prop_span_plans_never_trip() {
+    for_all_seeds(24, |rng| {
+        let workers = 1 + rng.below(5);
+        let n_items = 1 + rng.below(200);
+        let item_len = 1 + rng.below(8);
+        let pool = Pool::new(workers);
+        let mut buf = vec![0u32; n_items * item_len];
+        pool.for_each_span(&mut buf, item_len, |first, span| {
+            for (j, v) in span.iter_mut().enumerate() {
+                *v = (first * item_len + j) as u32;
+            }
+        });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32));
+    });
+}
+
+/// Property: random contiguous partitions with round-robin chunk
+/// assignment (mixing `slice_mut` spans of random width) never trip.
+#[test]
+fn prop_random_partition_plans_never_trip() {
+    for_all_seeds(24, |rng| {
+        let workers = 2 + rng.below(4);
+        let n = 50 + rng.below(500);
+        let mut cuts = vec![0usize, n];
+        for _ in 0..6 {
+            cuts.push(rng.below(n + 1));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let chunks: Vec<(usize, usize)> = cuts.windows(2).map(|w| (w[0], w[1])).collect();
+        let pool = Pool::new(workers);
+        let mut buf = vec![0u8; n];
+        {
+            let view = SharedMut::new(&mut buf);
+            let view_ref = &view;
+            let chunks_ref = &chunks;
+            pool.run_sharded(move |shard| {
+                for (t, &(lo, hi)) in chunks_ref.iter().enumerate() {
+                    if t % workers == shard && hi > lo {
+                        // SAFETY: chunk t has exactly one writer (shard t % workers).
+                        let span = unsafe { view_ref.slice_mut(lo, hi - lo) };
+                        span.iter_mut().for_each(|v| *v = 1);
+                    }
+                }
+            });
+        }
+        assert!(buf.iter().all(|&v| v == 1), "every index written exactly once");
+    });
+}
+
+/// A deliberately overlapping plan must panic, and the diagnostic must
+/// name both jobs (thread names) and both ranges. The overlap is made
+/// deterministic with a barrier: the worker (`pool-1`) claims `[0, 8)`
+/// first, then the calling thread claims `[4, 12)` and is vetoed — on the
+/// caller's own thread, so the original panic message propagates through
+/// `run_sharded` unwrapped.
+#[test]
+fn overlapping_claims_panic_naming_both_jobs_and_ranges() {
+    let pool = Pool::new(2);
+    let barrier = Barrier::new(2);
+    let mut buf = vec![0u32; 16];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let view = SharedMut::new(&mut buf);
+        let (view_ref, barrier_ref) = (&view, &barrier);
+        pool.run_sharded(move |shard| {
+            if shard == 1 {
+                // SAFETY: deliberate-overlap fixture; the audit vetoes the
+                // *second* claim before any aliased write can happen.
+                let span = unsafe { view_ref.slice_mut(0, 8) };
+                span[0] = 1;
+                barrier_ref.wait();
+            } else {
+                barrier_ref.wait(); // shard 1's claim lands first
+                // SAFETY: deliberate-overlap fixture (see above).
+                let _ = unsafe { view_ref.slice_mut(4, 8) }; // [4, 12)
+            }
+        });
+    }));
+    let err = result.expect_err("overlapping cross-thread claims must panic");
+    let msg = err
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| err.downcast_ref::<&str>().copied())
+        .unwrap_or("");
+    assert!(msg.contains("SharedMut audit"), "audit diagnostic, got: {msg:?}");
+    assert!(msg.contains("[4, 12)"), "offending range named: {msg:?}");
+    assert!(msg.contains("[0, 8)"), "earlier range named: {msg:?}");
+    assert!(msg.contains("pool-1"), "earlier claimant named: {msg:?}");
+}
+
+/// Same story through `get_mut`: two threads claiming one index panic.
+#[test]
+fn cross_thread_same_index_panics() {
+    let pool = Pool::new(2);
+    let barrier = Barrier::new(2);
+    let mut buf = vec![0u32; 4];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let view = SharedMut::new(&mut buf);
+        let (view_ref, barrier_ref) = (&view, &barrier);
+        pool.run_sharded(move |shard| {
+            if shard == 1 {
+                // SAFETY: deliberate-overlap fixture; audit vetoes the
+                // second claim.
+                unsafe { *view_ref.get_mut(2) = 7 };
+                barrier_ref.wait();
+            } else {
+                barrier_ref.wait();
+                // SAFETY: deliberate-overlap fixture (see above).
+                unsafe { *view_ref.get_mut(2) = 9 };
+            }
+        });
+    }));
+    let err = result.expect_err("same-index cross-thread claims must panic");
+    let msg = err
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| err.downcast_ref::<&str>().copied())
+        .unwrap_or("");
+    assert!(msg.contains("[2, 3)"), "single-index range named: {msg:?}");
+}
+
+/// Overlapping claims from *one* thread are sequential borrows, not data
+/// races: the audit must stay silent.
+#[test]
+fn same_thread_overlapping_claims_are_fine() {
+    let mut buf = vec![0u32; 8];
+    {
+        let view = SharedMut::new(&mut buf);
+        for _ in 0..3 {
+            // SAFETY: single-threaded; the borrows are sequential.
+            let span = unsafe { view.slice_mut(0, 8) };
+            span[0] += 1;
+        }
+        // SAFETY: single-threaded; the borrows are sequential.
+        unsafe { *view.get_mut(0) += 1 };
+    }
+    assert_eq!(buf[0], 4);
+}
+
+/// Under the audit feature, bounds checks are hard asserts even in
+/// release builds: an out-of-range claim panics before any pointer math.
+#[test]
+fn audit_mode_has_hard_bounds_checks() {
+    let mut buf = vec![0u32; 4];
+    let view = SharedMut::new(&mut buf);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // SAFETY: out of bounds on purpose; the audit's hard assert fires
+        // before the pointer is formed.
+        let _ = unsafe { view.get_mut(4) };
+    }));
+    assert!(r.is_err(), "out-of-bounds get_mut must panic under the audit");
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // SAFETY: out of bounds on purpose (see above).
+        let _ = unsafe { view.slice_mut(2, 3) };
+    }));
+    assert!(r.is_err(), "out-of-bounds slice_mut must panic under the audit");
+}
