@@ -6,8 +6,9 @@ Usage: check_hot_path.py BENCH_hot_path.json benches/hot_path_baseline.json
 Compares every entry the baseline tracks (the lane-major kernel speedups
 ``speedups_scalar_over_kernel``, the double-buffered step-engine speedup
 ``speedups_step_overlap``, the serving beam-vs-exact speedup
-``speedups_serve``, the daemon load-generator floor ``serve_daemon`` and,
-when present, the worker-pool ``speedups_serial_over_parallel``) and emits
+``speedups_serve``, the daemon load-generator floor ``serve_daemon``, the
+distributed-round throughput floor ``dist_round`` and, when present, the
+worker-pool ``speedups_serial_over_parallel``) and emits
 a GitHub Actions ``::warning``
 when a measured speedup regresses more than 25% below its baseline value.
 Warn-only by design: shared CI runners are noisy, so regressions flag for a
@@ -24,6 +25,7 @@ TRACKED_SECTIONS = (
     "speedups_step_overlap",
     "speedups_serve",
     "serve_daemon",
+    "dist_round",
     "speedups_serial_over_parallel",
 )
 

@@ -510,6 +510,64 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- distributed round protocol (PR 7): SimNet round throughput.
+    // Pure host path (coordinator + 2 clients on a ManualClock), so it
+    // always runs; small-but-real shapes keep the gradient math and frame
+    // encode/parse on the measured path. The reassign case pays for a full
+    // lease expiry, eviction, deterministic reassignment and a rejoin
+    // through Warmup, so it is the floor for failover cost. CI diffs both
+    // rates against benches/hot_path_baseline.json (higher is better).
+    let dist_round_json: Json;
+    {
+        use adv_softmax::config::DistConfig;
+        use adv_softmax::dist::{Phase, SimNet};
+        let dcfg = DistConfig {
+            clients: 2,
+            rounds: 8,
+            batches_per_round: 8,
+            batch_size: 32,
+            num_classes: 256,
+            feat_dim: 16,
+            lr: 0.05,
+            seed: 11,
+            lease_ms: 1000,
+            resend_ms: 200,
+        };
+        let runs = 3usize;
+        let t0 = Instant::now();
+        for _ in 0..runs {
+            let mut net = SimNet::new(dcfg.clone(), 2, None)?;
+            anyhow::ensure!(net.run_to_completion(5000)?, "dist bench run wedged");
+        }
+        let clean_secs = t0.elapsed().as_secs_f64();
+        let rounds_per_sec = (runs * dcfg.rounds) as f64 / clean_secs.max(1e-9);
+        let t0 = Instant::now();
+        for _ in 0..runs {
+            let mut net = SimNet::new(dcfg.clone(), 2, None)?;
+            while net.coord().phase() != Phase::Train {
+                net.step()?;
+            }
+            net.kill(1);
+            // rejoin before the lease lapses so the failover (eviction,
+            // reassignment, rejoin through Warmup) is all on the clock
+            for _ in 0..10 {
+                net.step()?;
+            }
+            net.rejoin(1);
+            anyhow::ensure!(net.run_to_completion(5000)?, "dist reassign bench run wedged");
+        }
+        let reassign_secs = t0.elapsed().as_secs_f64();
+        let reassign_rounds_per_sec = (runs * dcfg.rounds) as f64 / reassign_secs.max(1e-9);
+        dist_round_json = Json::obj(vec![
+            ("rounds_per_sec", Json::Num(rounds_per_sec)),
+            ("reassign_rounds_per_sec", Json::Num(reassign_rounds_per_sec)),
+        ]);
+        println!(
+            "dist_round clean {rounds_per_sec:.1} rounds/s, kill+rejoin \
+             {reassign_rounds_per_sec:.1} rounds/s (2 clients, B=8x32, C=256)"
+        );
+    }
+
     // --- step engine: serial protocol vs double-buffered overlap (PR 4).
     // The PJRT execute is gated in this environment, so the device half is
     // a deterministic host mock: the logistic-NS row gradients recomputed
@@ -690,6 +748,7 @@ fn main() -> anyhow::Result<()> {
     let mut json = report.to_json();
     if let Json::Obj(m) = &mut json {
         m.insert("serve_daemon".to_string(), daemon_json);
+        m.insert("dist_round".to_string(), dist_round_json);
     }
     std::fs::write(out, json.to_string())?;
     println!("wrote {out}");

@@ -376,6 +376,117 @@ impl DaemonConfig {
     }
 }
 
+/// Knobs for the distributed round protocol (`repro coord` / `repro
+/// worker`, see `dist::`): the shared run shape every member derives its
+/// work from, plus the lease/retransmission timing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistConfig {
+    /// Members the coordinator waits for before the first round starts.
+    pub clients: usize,
+    /// Training rounds to run.
+    pub rounds: usize,
+    /// Batch seqs assigned per round (round r owns seqs
+    /// `[r*batches_per_round, (r+1)*batches_per_round)`).
+    pub batches_per_round: usize,
+    /// Examples per batch.
+    pub batch_size: usize,
+    /// Label-space size of the synthetic workload.
+    pub num_classes: usize,
+    /// Feature dimension of the synthetic workload.
+    pub feat_dim: usize,
+    /// Adagrad learning rate.
+    pub lr: f32,
+    /// The shared run seed: batches, assignments and the synthetic data
+    /// are all pure functions of it.
+    pub seed: u64,
+    /// Lease duration: a client whose last frame is older than this is
+    /// marked dead and its unapplied seqs are reassigned.
+    pub lease_ms: u64,
+    /// Client retransmission interval for unacknowledged updates (also
+    /// paces its resync probe while waiting on a lost `begin`).
+    pub resend_ms: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self {
+            clients: 2,
+            rounds: 8,
+            batches_per_round: 8,
+            batch_size: 64,
+            num_classes: 256,
+            feat_dim: 32,
+            lr: 0.05,
+            seed: 1,
+            lease_ms: 1000,
+            resend_ms: 200,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Heartbeat cadence: renew the lease several times per lease window
+    /// so one dropped heartbeat never kills a healthy client.
+    pub fn heartbeat_ms(&self) -> u64 {
+        (self.lease_ms / 4).max(1)
+    }
+
+    /// Reject knob values that would wedge the round protocol.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.clients >= 1, "need at least 1 client");
+        anyhow::ensure!(self.rounds >= 1, "need at least 1 round");
+        anyhow::ensure!(self.batches_per_round >= 1, "need at least 1 batch per round");
+        anyhow::ensure!(self.batch_size >= 1, "batch size must be at least 1");
+        anyhow::ensure!(self.num_classes >= 2, "need at least 2 classes");
+        anyhow::ensure!(self.feat_dim >= 1, "feature dimension must be at least 1");
+        anyhow::ensure!(
+            self.lr.is_finite() && self.lr > 0.0,
+            "learning rate must be positive and finite"
+        );
+        anyhow::ensure!(self.resend_ms >= 1, "resend interval must be at least 1 ms");
+        anyhow::ensure!(
+            self.lease_ms > self.resend_ms,
+            "lease {} ms must exceed the resend interval {} ms \
+             (a client must get at least one retransmission per lease)",
+            self.lease_ms,
+            self.resend_ms
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clients", Json::Num(self.clients as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("batches_per_round", Json::Num(self.batches_per_round as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("num_classes", Json::Num(self.num_classes as f64)),
+            ("feat_dim", Json::Num(self.feat_dim as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("lease_ms", Json::Num(self.lease_ms as f64)),
+            ("resend_ms", Json::Num(self.resend_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let cfg = Self {
+            clients: v.get("clients")?.as_usize()?,
+            rounds: v.get("rounds")?.as_usize()?,
+            batches_per_round: v.get("batches_per_round")?.as_usize()?,
+            batch_size: v.get("batch_size")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            feat_dim: v.get("feat_dim")?.as_usize()?,
+            lr: v.get("lr")?.as_f64()? as f32,
+            seed: v.get("seed")?.as_u64()?,
+            lease_ms: v.get("lease_ms")?.as_u64()?,
+            resend_ms: v.get("resend_ms")?.as_u64()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Dataset presets simulating the paper's benchmarks at laptop scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetPreset {
@@ -786,5 +897,41 @@ mod tests {
     fn eurlex_fits_softmax_artifact() {
         let c = SyntheticConfig::preset(DatasetPreset::EurlexSim);
         assert_eq!(c.num_classes, 4096, "must match softmax_grad artifact C");
+    }
+
+    #[test]
+    fn dist_config_json_roundtrip() {
+        let cfg = DistConfig {
+            clients: 3,
+            rounds: 5,
+            batches_per_round: 6,
+            batch_size: 32,
+            num_classes: 128,
+            feat_dim: 16,
+            lr: 0.125, // exactly representable: f32 -> f64 -> f32 is lossless
+            seed: 99,
+            lease_ms: 900,
+            resend_ms: 150,
+        };
+        let json = Json::parse(&cfg.to_json().to_string()).unwrap();
+        let back = DistConfig::from_json(&json).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn dist_config_validation_rejects_wedging_knobs() {
+        let ok = DistConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(DistConfig { clients: 0, ..ok.clone() }.validate().is_err());
+        assert!(DistConfig { rounds: 0, ..ok.clone() }.validate().is_err());
+        assert!(DistConfig { batches_per_round: 0, ..ok.clone() }.validate().is_err());
+        assert!(DistConfig { num_classes: 1, ..ok.clone() }.validate().is_err());
+        assert!(DistConfig { lr: 0.0, ..ok.clone() }.validate().is_err());
+        assert!(DistConfig { lr: f32::NAN, ..ok.clone() }.validate().is_err());
+        // a lease shorter than the resend interval could never see a retry
+        assert!(DistConfig { lease_ms: 100, resend_ms: 200, ..ok }.validate().is_err());
+        // heartbeats always land several times per lease
+        let cfg = DistConfig::default();
+        assert!(cfg.heartbeat_ms() * 2 < cfg.lease_ms);
     }
 }

@@ -1,0 +1,607 @@
+//! The client side of the distributed round protocol: a worker that
+//! joins a coordinator, mirrors the round-start parameters in a local
+//! replica, computes its assigned batches' update sets, and survives a
+//! hostile transport.
+//!
+//! Like the [`super::coordinator`], the client is transport-agnostic and
+//! tick-driven: [`DistClient::on_line`] consumes coordinator frames,
+//! [`DistClient::tick`] emits everything time-based (join retries,
+//! heartbeats, resends, resync probes) against the injected
+//! [`Clock`]. The socket worker and the in-memory sim are thin shells.
+//!
+//! **Replica discipline.** The replica is only ever written by (a) a
+//! snapshot install — the coordinator's full bit pattern — or (b) `apply`
+//! frames replayed in the coordinator's commit order. Update sets are
+//! computed against the replica *between* commits, i.e. against exactly
+//! the round-start parameters P_r, which is what makes aggregation
+//! independent of which client computes which batch. Every `begin`
+//! carries the coordinator's parameter checksum; any divergence (dropped
+//! or duplicated `apply`, torn snapshot) is caught there and repaired
+//! with a full resync rather than silently training on skewed weights.
+//!
+//! **Loss recovery.** Un-acked update sets are resent every `resend_ms`;
+//! the coordinator acks duplicates idempotently. If the client is idle
+//! with nothing to resend and hears nothing for two resend windows, it
+//! probes with a `resync`. A typed `unknown-client` error (lease
+//! expired) drops the identity and rejoins through Warmup; `stale-round`
+//! abandons the stale work and resyncs into the current round.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::dist::protocol::{params_checksum, ErrorTag, Frame, SnapPart, UpdateSet};
+use crate::model::ParamStore;
+use crate::utils::timer::Clock;
+use crate::utils::Rng;
+
+/// Stream salt for batch example draws ("batch").
+const BATCH_SALT: u64 = 0x62_61_74_63_68;
+
+/// A deterministic per-batch gradient step: maps (round-start parameters,
+/// batch seq) to one sparse update set. Implementations must be pure —
+/// the same `(params, seq)` must yield the same bits on every client.
+pub trait GradStep: Send {
+    fn compute(&self, params: &ParamStore, seq: u64) -> UpdateSet;
+}
+
+/// The built-in workload: synthetic negative-sampling logistic pairs, the
+/// paper's Sec. 4 surrogate objective on on-the-fly Gaussian features.
+/// The batch is drawn from `Rng(seed).stream(BATCH_SALT, seq)`, so it is
+/// a pure function of the run seed and the batch seq — never of which
+/// client computes it.
+#[derive(Clone, Copy, Debug)]
+pub struct HostNsStep {
+    pub seed: u64,
+    pub c: usize,
+    pub k: usize,
+    pub batch: usize,
+}
+
+impl GradStep for HostNsStep {
+    fn compute(&self, params: &ParamStore, seq: u64) -> UpdateSet {
+        let mut rng = Rng::new(self.seed).stream(BATCH_SALT, seq);
+        let n = self.batch;
+        let mut labels = Vec::with_capacity(2 * n);
+        let mut gw = Vec::with_capacity(2 * n * self.k);
+        let mut gb = Vec::with_capacity(2 * n);
+        let mut losses = Vec::with_capacity(n);
+        for _ in 0..n {
+            let y = rng.below(self.c) as u32;
+            let x: Vec<f32> = (0..self.k).map(|_| rng.normal()).collect();
+            let mut neg = rng.below(self.c) as u32;
+            if neg == y {
+                neg = (neg + 1) % (self.c as u32);
+            }
+            let up = (crate::linalg::dot(&x, params.row(y)) + params.b[y as usize]) as f64;
+            let un = (crate::linalg::dot(&x, params.row(neg)) + params.b[neg as usize]) as f64;
+            // L = ln(1 + e^{-u+}) + ln(1 + e^{u-})  (paper Eq. 3 pair)
+            losses.push((-up).exp().ln_1p() + un.exp().ln_1p());
+            let dp = (-1.0 / (1.0 + up.exp())) as f32;
+            let dn = (1.0 / (1.0 + (-un).exp())) as f32;
+            labels.push(y);
+            for &xi in &x {
+                gw.push(dp * xi);
+            }
+            gb.push(dp);
+            labels.push(neg);
+            for &xi in &x {
+                gw.push(dn * xi);
+            }
+            gb.push(dn);
+        }
+        let loss = crate::linalg::sum_f64(losses) / n as f64;
+        UpdateSet { seq, labels, gw, gb, loss }
+    }
+}
+
+/// Client-side counters (mirrors the coordinator's ledger for tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Update sets computed (first-time, not resends).
+    pub computed: u64,
+    /// Update lines re-emitted by the resend timer.
+    pub resent: u64,
+    /// Acks consumed.
+    pub acked: u64,
+    /// `apply` frames replayed into the replica.
+    pub applies: u64,
+    /// Resync requests sent (checksum mismatch, stale round, idle probe).
+    pub resyncs: u64,
+    /// Identity resets after an `unknown-client` error.
+    pub rejoins: u64,
+    /// Inbound lines that failed to parse (or were not client-bound).
+    pub malformed_in: u64,
+    /// Typed error frames received.
+    pub errors_in: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ClientPhase {
+    /// No identity yet: retry `join` until a `welcome` arrives.
+    Joining,
+    /// Welcomed; installing the snapshot, waiting for the first `begin`.
+    Warmup,
+    /// In the round loop: compute, send, resend, replay commits.
+    Running,
+    /// Coordinator said `shutdown`; emit nothing further.
+    Finished,
+}
+
+/// A protocol client. Owns a replica [`ParamStore`] and the deterministic
+/// [`HostNsStep`]; both are built from the `welcome` frame, so a fresh
+/// process (or a rejoining one) needs nothing but the socket and a name.
+pub struct DistClient {
+    name: String,
+    clock: Box<dyn Clock>,
+    heartbeat_ms: u64,
+    resend_ms: u64,
+    phase: ClientPhase,
+    client: Option<u64>,
+    round: u64,
+    k: usize,
+    replica: Option<ParamStore>,
+    step: Option<HostNsStep>,
+    /// Seqs the coordinator assigned to us this round.
+    assignment: BTreeSet<u64>,
+    /// seq -> encoded update line awaiting an ack.
+    pending: BTreeMap<u64, String>,
+    acked: BTreeSet<u64>,
+    /// Seqs whose `apply` we already replayed (dedupes duplicated frames).
+    applied: BTreeSet<u64>,
+    next_join_ms: u64,
+    last_hb_ms: u64,
+    last_resend_ms: u64,
+    last_progress_ms: u64,
+    stats: ClientStats,
+}
+
+impl DistClient {
+    pub fn new(
+        name: impl Into<String>,
+        clock: Box<dyn Clock>,
+        heartbeat_ms: u64,
+        resend_ms: u64,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            clock,
+            heartbeat_ms: heartbeat_ms.max(1),
+            resend_ms: resend_ms.max(1),
+            phase: ClientPhase::Joining,
+            client: None,
+            round: 0,
+            k: 0,
+            replica: None,
+            step: None,
+            assignment: BTreeSet::new(),
+            pending: BTreeMap::new(),
+            acked: BTreeSet::new(),
+            applied: BTreeSet::new(),
+            next_join_ms: 0,
+            last_hb_ms: 0,
+            last_resend_ms: 0,
+            last_progress_ms: 0,
+            stats: ClientStats::default(),
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.phase == ClientPhase::Finished
+    }
+
+    pub fn client_id(&self) -> Option<u64> {
+        self.client
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn stats(&self) -> ClientStats {
+        self.stats
+    }
+
+    /// The local replica (None until welcomed).
+    pub fn replica(&self) -> Option<&ParamStore> {
+        self.replica.as_ref()
+    }
+
+    fn join_line(&self) -> String {
+        Frame::Join { name: self.name.clone() }.encode(self.k)
+    }
+
+    /// Drop the identity and everything derived from it; the next tick
+    /// rejoins from scratch (the coordinator hands back a fresh id and a
+    /// full snapshot — Warmup again).
+    fn reset_identity(&mut self) {
+        self.phase = ClientPhase::Joining;
+        self.client = None;
+        self.round = 0;
+        self.replica = None;
+        self.step = None;
+        self.assignment.clear();
+        self.pending.clear();
+        self.acked.clear();
+        self.applied.clear();
+    }
+
+    // -- inbound ----------------------------------------------------------
+
+    /// Consume one coordinator line; returns protocol lines to send back.
+    pub fn on_line(&mut self, line: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let text = line.trim();
+        if text.is_empty() || self.phase == ClientPhase::Finished {
+            return out;
+        }
+        let frame = match Frame::parse(text) {
+            Ok(f) => f,
+            Err(_) => {
+                self.stats.malformed_in += 1;
+                return out;
+            }
+        };
+        match frame {
+            Frame::Welcome { client, round, seed, c, k, batch, lr } => {
+                self.on_welcome(client, round, seed, c, k, batch, lr);
+            }
+            Frame::Snap { part, data, .. } => self.on_snap(part, &data),
+            Frame::Begin { round, ranges, csum } => self.on_begin(round, &ranges, csum, &mut out),
+            Frame::Ack { round, seq } => {
+                if round == self.round && self.pending.remove(&seq).is_some() {
+                    self.acked.insert(seq);
+                    self.stats.acked += 1;
+                    self.last_progress_ms = self.clock.now_ms();
+                }
+            }
+            Frame::Apply { round, set } => self.on_apply(round, set),
+            Frame::Error { tag, .. } => self.on_error(tag, &mut out),
+            Frame::Shutdown => self.phase = ClientPhase::Finished,
+            // join/ready/hb/update/resync are coordinator-bound
+            _ => self.stats.malformed_in += 1,
+        }
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_welcome(
+        &mut self,
+        client: u64,
+        round: u64,
+        seed: u64,
+        c: u64,
+        k: u64,
+        batch: u64,
+        lr: f32,
+    ) {
+        self.client = Some(client);
+        self.round = round;
+        self.k = k as usize;
+        self.replica = Some(ParamStore::zeros(c as usize, k as usize, lr));
+        self.step = Some(HostNsStep { seed, c: c as usize, k: k as usize, batch: batch as usize });
+        self.assignment.clear();
+        self.pending.clear();
+        self.acked.clear();
+        self.applied.clear();
+        self.phase = ClientPhase::Warmup;
+        self.last_progress_ms = self.clock.now_ms();
+    }
+
+    fn on_snap(&mut self, part: SnapPart, data: &[f32]) {
+        let Some(replica) = self.replica.as_mut() else { return };
+        let dst: &mut [f32] = match part {
+            SnapPart::W => &mut replica.w,
+            SnapPart::B => &mut replica.b,
+            SnapPart::Gw2 => replica.opt.accumulators_mut().0,
+            SnapPart::Gb2 => replica.opt.accumulators_mut().1,
+        };
+        if dst.len() == data.len() {
+            dst.copy_from_slice(data);
+            self.last_progress_ms = self.clock.now_ms();
+        } else {
+            self.stats.malformed_in += 1;
+        }
+    }
+
+    fn on_begin(&mut self, round: u64, ranges: &[(u64, u64)], csum: u64, out: &mut Vec<String>) {
+        let Some(client) = self.client else { return };
+        let Some(replica) = self.replica.as_ref() else { return };
+        if round < self.round {
+            return; // late frame from a committed round
+        }
+        let now = self.clock.now_ms();
+        self.last_progress_ms = now;
+        if params_checksum(replica) != csum {
+            // replica diverged (lost apply / torn snapshot): full resync
+            self.stats.resyncs += 1;
+            out.push(Frame::Resync { client }.encode(self.k));
+            return;
+        }
+        if round > self.round {
+            self.round = round;
+            self.pending.clear();
+            self.acked.clear();
+            self.applied.clear();
+        }
+        self.assignment = ranges.iter().flat_map(|&(a, b)| a..b).collect();
+        self.phase = ClientPhase::Running;
+        out.push(Frame::Ready { client, round: self.round }.encode(self.k));
+        let todo: Vec<u64> = self
+            .assignment
+            .iter()
+            .filter(|s| !self.acked.contains(s) && !self.pending.contains_key(s))
+            .copied()
+            .collect();
+        if todo.is_empty() {
+            return;
+        }
+        let step = self.step.as_ref().expect("step exists whenever replica does");
+        for seq in todo {
+            let set = step.compute(replica, seq);
+            let line = Frame::Update { client, round: self.round, set }.encode(self.k);
+            out.push(line.clone());
+            self.pending.insert(seq, line);
+            self.stats.computed += 1;
+        }
+        self.last_resend_ms = now;
+    }
+
+    fn on_apply(&mut self, round: u64, set: UpdateSet) {
+        if round != self.round {
+            return; // a commit we already resynced past (or never reach)
+        }
+        if !self.applied.insert(set.seq) {
+            return; // duplicated apply frame: replay exactly once
+        }
+        if let Some(replica) = self.replica.as_mut() {
+            replica.apply_sparse(&set.labels, &set.gw, &set.gb);
+            self.stats.applies += 1;
+            self.last_progress_ms = self.clock.now_ms();
+        }
+    }
+
+    fn on_error(&mut self, tag: ErrorTag, out: &mut Vec<String>) {
+        self.stats.errors_in += 1;
+        match tag {
+            ErrorTag::UnknownClient => {
+                // lease expired while we were partitioned: start over
+                self.stats.rejoins += 1;
+                self.reset_identity();
+                out.push(self.join_line());
+                self.next_join_ms = self.clock.now_ms() + self.resend_ms;
+            }
+            ErrorTag::StaleRound => {
+                // the round committed without us; drop the stale work and
+                // pull the current round's state (first stale error only —
+                // in-flight resends draw more of these)
+                if !self.pending.is_empty() {
+                    self.pending.clear();
+                    if let Some(client) = self.client {
+                        self.stats.resyncs += 1;
+                        out.push(Frame::Resync { client }.encode(self.k));
+                    }
+                }
+            }
+            // our frame got corrupted in flight; the resend timer re-emits
+            // the original from `pending`
+            _ => {}
+        }
+    }
+
+    // -- tick -------------------------------------------------------------
+
+    /// Time-based sends: join retries while identityless, heartbeats to
+    /// keep the lease, resends for un-acked updates, and a resync probe
+    /// when idle too long (two resend windows with no progress).
+    pub fn tick(&mut self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.phase == ClientPhase::Finished {
+            return out;
+        }
+        let now = self.clock.now_ms();
+        let Some(client) = self.client else {
+            if now >= self.next_join_ms {
+                out.push(self.join_line());
+                self.next_join_ms = now + self.resend_ms;
+            }
+            return out;
+        };
+        if now.saturating_sub(self.last_hb_ms) >= self.heartbeat_ms {
+            out.push(Frame::Heartbeat { client, round: self.round }.encode(self.k));
+            self.last_hb_ms = now;
+        }
+        if !self.pending.is_empty() && now.saturating_sub(self.last_resend_ms) >= self.resend_ms {
+            for line in self.pending.values() {
+                out.push(line.clone());
+                self.stats.resent += 1;
+            }
+            self.last_resend_ms = now;
+        }
+        if self.pending.is_empty()
+            && now.saturating_sub(self.last_progress_ms) >= 2 * self.resend_ms
+        {
+            // nothing to resend and the coordinator has gone quiet: the
+            // commit or our assignment may have been lost — ask for it
+            self.stats.resyncs += 1;
+            out.push(Frame::Resync { client }.encode(self.k));
+            self.last_progress_ms = now;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::timer::ManualClock;
+
+    fn client(clock: &ManualClock) -> DistClient {
+        DistClient::new("w0", Box::new(clock.clone()), 50, 200)
+    }
+
+    fn welcome_line(client: u64, round: u64) -> String {
+        let frame = Frame::Welcome {
+            client,
+            round,
+            seed: 7,
+            c: 8,
+            k: 3,
+            batch: 2,
+            lr: 0.1,
+        };
+        frame.encode(3)
+    }
+
+    fn zeros_csum() -> u64 {
+        params_checksum(&ParamStore::zeros(8, 3, 0.1))
+    }
+
+    #[test]
+    fn host_ns_step_is_a_pure_function_of_seed_and_seq() {
+        let step = HostNsStep { seed: 11, c: 16, k: 4, batch: 3 };
+        let params = ParamStore::zeros(16, 4, 0.1);
+        let a = step.compute(&params, 5);
+        let b = step.compute(&params, 5);
+        assert_eq!(a, b, "identical inputs, identical bits");
+        let c = step.compute(&params, 6);
+        assert_ne!(a.labels, c.labels, "different seqs draw different batches");
+        assert_eq!(a.labels.len(), 6, "pos+neg rows per example");
+        assert_eq!(a.gw.len(), 6 * 4);
+        assert_eq!(a.gb.len(), 6);
+        assert!(a.loss.is_finite());
+        assert!(a.labels.iter().all(|&y| y < 16));
+    }
+
+    #[test]
+    fn joins_until_welcomed_then_computes_assignment() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        let out = c.tick();
+        assert_eq!(out.len(), 1);
+        assert!(matches!(Frame::parse(&out[0]), Ok(Frame::Join { .. })));
+        assert!(c.tick().is_empty(), "join retry is rate-limited");
+        clock.advance(200);
+        assert_eq!(c.tick().len(), 1, "unanswered join retries after resend_ms");
+
+        assert!(c.on_line(&welcome_line(4, 0)).is_empty());
+        assert_eq!(c.client_id(), Some(4));
+        let begin = Frame::Begin { round: 0, ranges: vec![(0, 2)], csum: zeros_csum() };
+        let out = c.on_line(&begin.encode(3));
+        assert_eq!(out.len(), 3, "ready + one update per assigned seq");
+        assert!(matches!(Frame::parse(&out[0]), Ok(Frame::Ready { client: 4, round: 0 })));
+        for (i, line) in out[1..].iter().enumerate() {
+            let Ok(Frame::Update { client, round, set }) = Frame::parse(line) else {
+                panic!("expected update, got {line:?}");
+            };
+            assert_eq!((client, round, set.seq), (4, 0, i as u64));
+            assert_eq!(set.gw.len(), set.labels.len() * 3);
+        }
+        assert_eq!(c.stats().computed, 2);
+    }
+
+    #[test]
+    fn unacked_updates_resend_and_acks_retire_them() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        c.on_line(&welcome_line(0, 0));
+        let begin = Frame::Begin { round: 0, ranges: vec![(0, 2)], csum: zeros_csum() };
+        c.on_line(&begin.encode(3));
+        assert!(c.tick().iter().all(|l| !l.contains(" update ")), "too early to resend");
+        clock.advance(200);
+        let out = c.tick();
+        assert_eq!(out.iter().filter(|l| l.contains(" update ")).count(), 2);
+        assert_eq!(c.stats().resent, 2);
+
+        c.on_line(&Frame::Ack { round: 0, seq: 0 }.encode(3));
+        clock.advance(200);
+        let out = c.tick();
+        assert_eq!(out.iter().filter(|l| l.contains(" update ")).count(), 1, "only seq 1 left");
+        assert_eq!(c.stats().acked, 1);
+    }
+
+    #[test]
+    fn checksum_mismatch_asks_for_resync() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        c.on_line(&welcome_line(0, 0));
+        let begin = Frame::Begin { round: 0, ranges: vec![(0, 2)], csum: 0xdead };
+        let out = c.on_line(&begin.encode(3));
+        assert_eq!(out.len(), 1);
+        assert!(matches!(Frame::parse(&out[0]), Ok(Frame::Resync { client: 0 })));
+        assert_eq!(c.stats().resyncs, 1);
+    }
+
+    #[test]
+    fn commit_replay_keeps_the_replica_in_lockstep() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        c.on_line(&welcome_line(0, 0));
+        let begin = Frame::Begin { round: 0, ranges: vec![(0, 2)], csum: zeros_csum() };
+        let updates = c.on_line(&begin.encode(3));
+        // mirror the coordinator: stage both sets, apply in seq order
+        let mut authority = ParamStore::zeros(8, 3, 0.1);
+        let mut applies = Vec::new();
+        for line in &updates[1..] {
+            let Ok(Frame::Update { set, .. }) = Frame::parse(line) else { panic!() };
+            authority.apply_sparse(&set.labels, &set.gw, &set.gb);
+            applies.push(Frame::Apply { round: 0, set }.encode(3));
+        }
+        for line in &applies {
+            assert!(c.on_line(line).is_empty());
+        }
+        // duplicated apply frames replay exactly once
+        assert!(c.on_line(&applies[0]).is_empty());
+        assert_eq!(c.stats().applies, 2);
+        let next = Frame::Begin {
+            round: 1,
+            ranges: vec![(2, 4)],
+            csum: params_checksum(&authority),
+        };
+        let out = c.on_line(&next.encode(3));
+        assert_eq!(c.round(), 1);
+        assert_eq!(out.len(), 3, "checksum matched: ready + two fresh updates");
+        assert_eq!(c.stats().resyncs, 0);
+    }
+
+    #[test]
+    fn unknown_client_error_rejoins_from_scratch() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        c.on_line(&welcome_line(2, 0));
+        let out = c.on_line(&Frame::Error {
+            tag: ErrorTag::UnknownClient,
+            detail: "client 2".into(),
+        }
+        .encode(3));
+        assert_eq!(out.len(), 1);
+        assert!(matches!(Frame::parse(&out[0]), Ok(Frame::Join { .. })));
+        assert_eq!(c.client_id(), None);
+        assert_eq!(c.stats().rejoins, 1);
+        assert!(c.replica().is_none(), "replica discarded with the identity");
+    }
+
+    #[test]
+    fn heartbeats_and_idle_resync_probe_fire_on_schedule() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        c.on_line(&welcome_line(0, 0));
+        clock.advance(50);
+        let out = c.tick();
+        assert!(out.iter().any(|l| l.contains(" hb ")), "heartbeat at heartbeat_ms");
+        // two resend windows with no progress -> resync probe
+        clock.advance(350);
+        let out = c.tick();
+        assert!(out.iter().any(|l| l.contains(" resync ")), "idle probe: {out:?}");
+        assert_eq!(c.stats().resyncs, 1);
+    }
+
+    #[test]
+    fn shutdown_silences_the_client() {
+        let clock = ManualClock::new();
+        let mut c = client(&clock);
+        c.on_line(&welcome_line(0, 0));
+        c.on_line(&Frame::Shutdown.encode(3));
+        assert!(c.finished());
+        clock.advance(10_000);
+        assert!(c.tick().is_empty());
+    }
+}

@@ -1,0 +1,925 @@
+//! The tick-driven coordinator state machine for distributed training
+//! rounds.
+//!
+//! Phases follow the Psyche-style round loop: **WaitingForMembers** (block
+//! until the configured client count joins) → **Warmup** (broadcast the
+//! parameter snapshot and the first assignments, wait for `ready` acks) →
+//! **Train** (collect the round's update sets, ack each, police leases)
+//! → **Witness** (apply the buffered sets in ascending batch-seq order,
+//! record the round, broadcast the commit) → Train … until the configured
+//! round count, then **Done**. All transitions happen in [`Coordinator::tick`]
+//! against the injected [`Clock`], so every one of them is observable and
+//! reproducible under a `ManualClock`.
+//!
+//! **Bit-exactness.** Every update set of round *r* is computed against
+//! the round-start parameters P_r and buffered; nothing is applied until
+//! Witness, which applies the full set in ascending seq order through the
+//! canonical [`ParamStore::apply_sparse`]. P_{r+1} is therefore a pure
+//! function of (P_r, seed, round) — independent of how many clients
+//! computed the sets, which client computed which seq, how frames
+//! interleaved, or whether seqs were reassigned after an eviction. M
+//! clients produce parameters bit-identical to 1 client, faults or not.
+//!
+//! **Robustness.** Clients hold leases renewed by any frame (heartbeats
+//! when otherwise idle). A lease that reaches its deadline marks the
+//! client dead: its unapplied seqs are reassigned deterministically
+//! (ascending seqs, round-robin over ascending survivor ids —
+//! [`reassign_seqs`]), and any later frame from the evicted id draws a
+//! typed `unknown-client` error, which tells the client to rejoin through
+//! Warmup (fresh snapshot, current round state). Every round's ledger is
+//! a [`RoundStats`] whose [`RoundStats::accounted`] invariant mirrors the
+//! serving daemon's `DaemonStats`: updates are applied exactly once —
+//! never lost, never double-applied, never silently skipped.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::DistConfig;
+use crate::dist::protocol::{
+    params_checksum, ErrorTag, Frame, FrameError, SnapPart, UpdateSet,
+};
+use crate::model::ParamStore;
+use crate::utils::timer::Clock;
+use anyhow::Result;
+
+/// Outbound frames, addressed by transport connection id.
+pub type Outbound = Vec<(usize, String)>;
+
+/// The coordinator's lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    WaitingForMembers,
+    Warmup,
+    Train,
+    Witness,
+    Done,
+}
+
+/// One round's ledger. [`RoundStats::accounted`] is the no-loss /
+/// no-double-apply invariant checked at every commit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundStats {
+    pub round: u64,
+    /// Batch seqs this round owns (always `batches_per_round`).
+    pub assigned: u64,
+    /// Update sets applied at Witness.
+    pub applied: u64,
+    /// Valid update frames received for this round (incl. duplicates).
+    pub received: u64,
+    /// Re-delivered seqs (client resend or duplicate-frame fault); acked
+    /// again, never re-applied.
+    pub duplicates: u64,
+    /// Frames for already-committed rounds answered `stale-round`.
+    pub stale: u64,
+    /// Frames rejected with a parse/validation error during this round.
+    pub malformed: u64,
+    /// Seqs moved to survivors after an eviction.
+    pub reassigned: u64,
+    /// Clients whose lease expired during this round.
+    pub evictions: u64,
+    /// Snapshot resyncs served during this round.
+    pub resyncs: u64,
+    /// Bit pattern of the round's mean batch loss (f64).
+    pub loss_bits: u64,
+}
+
+impl RoundStats {
+    /// Exactly-once accounting: every received update frame is either the
+    /// first copy of its seq (applied at Witness) or a duplicate, and at
+    /// commit every assigned seq was applied.
+    pub fn accounted(&self) -> bool {
+        self.received == self.applied + self.duplicates && self.applied == self.assigned
+    }
+
+    pub fn loss(&self) -> f64 {
+        f64::from_bits(self.loss_bits)
+    }
+}
+
+/// Aggregate coordinator counters (across all rounds).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoordStats {
+    pub joins: u64,
+    pub evictions: u64,
+    pub reassigned: u64,
+    pub resyncs: u64,
+    pub duplicates: u64,
+    pub stale: u64,
+    pub malformed: u64,
+    pub heartbeats: u64,
+    pub errors_sent: u64,
+}
+
+impl CoordStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "joins={} evictions={} reassigned={} resyncs={} duplicates={} \
+             stale={} malformed={} heartbeats={}",
+            self.joins,
+            self.evictions,
+            self.reassigned,
+            self.resyncs,
+            self.duplicates,
+            self.stale,
+            self.malformed,
+            self.heartbeats
+        )
+    }
+}
+
+/// Client leases: a deadline per member, renewed by any frame. Expiry is
+/// inclusive — a lease renewed at time t with window L is dead at exactly
+/// t + L, not one tick later.
+#[derive(Clone, Debug, Default)]
+pub struct Leases {
+    lease_ms: u64,
+    deadline: BTreeMap<u64, u64>,
+}
+
+impl Leases {
+    pub fn new(lease_ms: u64) -> Self {
+        Self { lease_ms, deadline: BTreeMap::new() }
+    }
+
+    /// Reset `client`'s deadline to `now_ms + lease_ms`.
+    pub fn renew(&mut self, client: u64, now_ms: u64) {
+        self.deadline.insert(client, now_ms + self.lease_ms);
+    }
+
+    pub fn remove(&mut self, client: u64) {
+        self.deadline.remove(&client);
+    }
+
+    pub fn deadline(&self, client: u64) -> Option<u64> {
+        self.deadline.get(&client).copied()
+    }
+
+    /// Clients whose lease has expired at `now_ms` (deadline <= now),
+    /// ascending.
+    pub fn expired(&self, now_ms: u64) -> Vec<u64> {
+        self.deadline
+            .iter()
+            .filter(|(_, &d)| d <= now_ms)
+            .map(|(&c, _)| c)
+            .collect()
+    }
+}
+
+/// Deterministic reassignment of orphaned batch seqs: seqs ascending,
+/// round-robin over survivors ascending. A pure function of the two sets
+/// — the same eviction always produces the same reassignment, so a chaos
+/// trace replays exactly. (`survivors` must be sorted; callers pass
+/// `BTreeMap` key order.)
+pub fn reassign_seqs(seqs: &[u64], survivors: &[u64]) -> Vec<(u64, u64)> {
+    debug_assert!(survivors.windows(2).all(|w| w[0] < w[1]), "survivors must be sorted");
+    if survivors.is_empty() {
+        return Vec::new();
+    }
+    seqs.iter()
+        .enumerate()
+        .map(|(i, &seq)| (seq, survivors[i % survivors.len()]))
+        .collect()
+}
+
+struct Member {
+    #[allow(dead_code)] // reported in logs; the protocol keys on the id
+    name: String,
+    ready: bool,
+}
+
+/// The coordinator: owns the authoritative [`ParamStore`], assigns batch
+/// seqs, buffers update sets, and commits rounds. Transport-agnostic —
+/// [`Coordinator::on_line`] consumes protocol lines addressed by
+/// connection id and both entry points return outbound `(conn, line)`
+/// pairs; the socket glue and the in-memory sim are thin shells.
+pub struct Coordinator {
+    cfg: DistConfig,
+    clock: Box<dyn Clock>,
+    params: ParamStore,
+    phase: Phase,
+    round: u64,
+    next_client: u64,
+    /// client id → transport connection (and back).
+    conn_of: BTreeMap<u64, usize>,
+    client_of: BTreeMap<usize, u64>,
+    members: BTreeMap<u64, Member>,
+    leases: Leases,
+    /// Current round: seq → owning client.
+    owner: BTreeMap<u64, u64>,
+    /// Current round: seqs with no accepted update yet.
+    missing: BTreeSet<u64>,
+    /// Current round: accepted update sets, keyed (= applied) in seq order.
+    staging: BTreeMap<u64, UpdateSet>,
+    cur: RoundStats,
+    rounds: Vec<RoundStats>,
+    stats: CoordStats,
+}
+
+impl Coordinator {
+    pub fn new(cfg: DistConfig, clock: Box<dyn Clock>) -> Result<Self> {
+        cfg.validate()?;
+        let params = ParamStore::zeros(cfg.num_classes, cfg.feat_dim, cfg.lr);
+        let leases = Leases::new(cfg.lease_ms);
+        Ok(Self {
+            cfg,
+            clock,
+            params,
+            phase: Phase::WaitingForMembers,
+            round: 0,
+            next_client: 0,
+            conn_of: BTreeMap::new(),
+            client_of: BTreeMap::new(),
+            members: BTreeMap::new(),
+            leases,
+            owner: BTreeMap::new(),
+            missing: BTreeSet::new(),
+            staging: BTreeMap::new(),
+            cur: RoundStats::default(),
+            rounds: Vec::new(),
+            stats: CoordStats::default(),
+        })
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    /// The authoritative parameters (P_r for the round in progress).
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    /// Committed rounds, in order.
+    pub fn round_stats(&self) -> &[RoundStats] {
+        &self.rounds
+    }
+
+    /// The learning curve as loss bit patterns, one per committed round.
+    pub fn loss_bits(&self) -> Vec<u64> {
+        self.rounds.iter().map(|r| r.loss_bits).collect()
+    }
+
+    pub fn stats(&self) -> CoordStats {
+        self.stats
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn leases(&self) -> &Leases {
+        &self.leases
+    }
+
+    // -- inbound ----------------------------------------------------------
+
+    /// Consume one protocol line from connection `conn`.
+    pub fn on_line(&mut self, conn: usize, line: &str) -> Outbound {
+        let mut out = Vec::new();
+        let text = line.trim();
+        if text.is_empty() || self.phase == Phase::Done {
+            return out;
+        }
+        match Frame::parse(text) {
+            Ok(frame) => self.on_frame(conn, frame, &mut out),
+            Err(e) => self.reject(conn, e, &mut out),
+        }
+        out
+    }
+
+    fn reject(&mut self, conn: usize, e: FrameError, out: &mut Outbound) {
+        self.stats.malformed += 1;
+        self.cur.malformed += 1;
+        self.send_error(conn, e.tag, &e.detail, out);
+    }
+
+    fn send_error(&mut self, conn: usize, tag: ErrorTag, detail: &str, out: &mut Outbound) {
+        self.stats.errors_sent += 1;
+        let frame = Frame::Error { tag, detail: detail.to_string() };
+        out.push((conn, frame.encode(self.cfg.feat_dim)));
+    }
+
+    fn on_frame(&mut self, conn: usize, frame: Frame, out: &mut Outbound) {
+        match frame {
+            Frame::Join { name } => self.on_join(conn, name, out),
+            Frame::Heartbeat { client, .. } => {
+                if self.check_member(conn, client, out) {
+                    self.stats.heartbeats += 1;
+                }
+            }
+            Frame::Ready { client, round } => {
+                if self.check_member(conn, client, out) && round == self.round {
+                    if let Some(m) = self.members.get_mut(&client) {
+                        m.ready = true;
+                    }
+                }
+            }
+            Frame::Update { client, round, set } => self.on_update(conn, client, round, set, out),
+            Frame::Resync { client } => {
+                if self.check_member(conn, client, out) {
+                    self.stats.resyncs += 1;
+                    self.cur.resyncs += 1;
+                    self.send_sync(conn, client, out);
+                }
+            }
+            // coordinator-bound lines may only be the five client frames
+            _ => {
+                let e = FrameError {
+                    tag: ErrorTag::BadFrame,
+                    detail: "not a client frame".to_string(),
+                };
+                self.reject(conn, e, out);
+            }
+        }
+    }
+
+    /// Membership gate shared by all non-join frames: renews the lease on
+    /// success, answers `unknown-client` (prompting a rejoin) otherwise.
+    fn check_member(&mut self, conn: usize, client: u64, out: &mut Outbound) -> bool {
+        if self.members.contains_key(&client) {
+            self.leases.renew(client, self.clock.now_ms());
+            // follow the client to its current connection (reconnects)
+            if self.conn_of.get(&client) != Some(&conn) {
+                if let Some(&old) = self.conn_of.get(&client) {
+                    self.client_of.remove(&old);
+                }
+                self.conn_of.insert(client, conn);
+                self.client_of.insert(conn, client);
+            }
+            true
+        } else {
+            self.send_error(conn, ErrorTag::UnknownClient, &format!("client {client}"), out);
+            false
+        }
+    }
+
+    fn on_join(&mut self, conn: usize, name: String, out: &mut Outbound) {
+        // a join on a connection that already has a live client is a
+        // restart: evict the old identity first (its seqs reassign)
+        if let Some(&old) = self.client_of.get(&conn) {
+            self.evict(old, out);
+        }
+        let client = self.next_client;
+        self.next_client += 1;
+        self.stats.joins += 1;
+        self.members.insert(client, Member { name, ready: false });
+        self.conn_of.insert(client, conn);
+        self.client_of.insert(conn, client);
+        self.leases.renew(client, self.clock.now_ms());
+        let welcome = Frame::Welcome {
+            client,
+            round: self.round,
+            seed: self.cfg.seed,
+            c: self.cfg.num_classes as u64,
+            k: self.cfg.feat_dim as u64,
+            batch: self.cfg.batch_size as u64,
+            lr: self.cfg.lr,
+        };
+        out.push((conn, welcome.encode(self.cfg.feat_dim)));
+        if self.phase != Phase::WaitingForMembers {
+            // mid-run join: hand over the current round's state (Warmup
+            // from the client's point of view), plus any orphaned seqs
+            let orphans: Vec<u64> = self
+                .missing
+                .iter()
+                .filter(|s| !self.owner.contains_key(s))
+                .copied()
+                .collect();
+            for seq in orphans {
+                self.owner.insert(seq, client);
+            }
+            self.send_sync(conn, client, out);
+        }
+    }
+
+    /// Snapshot + `begin` for one client: the full bit pattern of the
+    /// round-start parameters and the client's current assignment.
+    fn send_sync(&mut self, conn: usize, client: u64, out: &mut Outbound) {
+        for line in self.snapshot_lines() {
+            out.push((conn, line));
+        }
+        if self.phase != Phase::WaitingForMembers {
+            out.push((conn, self.begin_line(client)));
+        }
+    }
+
+    fn snapshot_lines(&self) -> Vec<String> {
+        let (gw2, gb2) = self.params.opt.accumulators();
+        SnapPart::ALL
+            .iter()
+            .map(|&part| {
+                let data = match part {
+                    SnapPart::W => self.params.w.clone(),
+                    SnapPart::B => self.params.b.clone(),
+                    SnapPart::Gw2 => gw2.to_vec(),
+                    SnapPart::Gb2 => gb2.to_vec(),
+                };
+                Frame::Snap { round: self.round, part, data }.encode(self.cfg.feat_dim)
+            })
+            .collect()
+    }
+
+    fn begin_line(&self, client: u64) -> String {
+        let frame = Frame::Begin {
+            round: self.round,
+            ranges: self.ranges_of(client),
+            csum: params_checksum(&self.params),
+        };
+        frame.encode(self.cfg.feat_dim)
+    }
+
+    /// The client's owned seqs, merged into half-open ranges.
+    fn ranges_of(&self, client: u64) -> Vec<(u64, u64)> {
+        let mut ranges: Vec<(u64, u64)> = Vec::new();
+        for (&seq, &o) in &self.owner {
+            if o != client {
+                continue;
+            }
+            match ranges.last_mut() {
+                Some((_, end)) if *end == seq => *end = seq + 1,
+                _ => ranges.push((seq, seq + 1)),
+            }
+        }
+        ranges
+    }
+
+    fn on_update(
+        &mut self,
+        conn: usize,
+        client: u64,
+        round: u64,
+        set: UpdateSet,
+        out: &mut Outbound,
+    ) {
+        if !self.check_member(conn, client, out) {
+            return;
+        }
+        if round != self.round {
+            self.stats.stale += 1;
+            self.cur.stale += 1;
+            let what = if round < self.round { "already committed" } else { "not started" };
+            self.send_error(conn, ErrorTag::StaleRound, &format!("round {round} {what}"), out);
+            return;
+        }
+        // validate the payload against the run shape before staging it
+        let b = self.cfg.batches_per_round as u64;
+        let (lo, hi) = (self.round * b, (self.round + 1) * b);
+        if set.seq < lo || set.seq >= hi {
+            let e = FrameError {
+                tag: ErrorTag::BadFrame,
+                detail: format!("seq {} outside round range [{lo}, {hi})", set.seq),
+            };
+            self.reject(conn, e, out);
+            return;
+        }
+        if set.gw.len() != set.labels.len() * self.cfg.feat_dim
+            || set.gb.len() != set.labels.len()
+        {
+            let e = FrameError {
+                tag: ErrorTag::BadLength,
+                detail: format!("update rows do not match feat_dim {}", self.cfg.feat_dim),
+            };
+            self.reject(conn, e, out);
+            return;
+        }
+        if set.labels.iter().any(|&y| y as usize >= self.cfg.num_classes) {
+            let e = FrameError {
+                tag: ErrorTag::BadFrame,
+                detail: format!("label out of range (c={})", self.cfg.num_classes),
+            };
+            self.reject(conn, e, out);
+            return;
+        }
+        self.cur.received += 1;
+        let seq = set.seq;
+        match self.staging.entry(seq) {
+            std::collections::btree_map::Entry::Occupied(_) => {
+                // resend or duplicate-frame fault: ack again, apply once
+                self.cur.duplicates += 1;
+                self.stats.duplicates += 1;
+            }
+            std::collections::btree_map::Entry::Vacant(slot) => {
+                slot.insert(set);
+                self.missing.remove(&seq);
+            }
+        }
+        let ack = Frame::Ack { round: self.round, seq };
+        out.push((conn, ack.encode(self.cfg.feat_dim)));
+    }
+
+    // -- tick -------------------------------------------------------------
+
+    /// Advance the state machine one tick: police leases, then run the
+    /// current phase's transition if its condition holds. All time comes
+    /// from the injected clock; all outbound frames are returned.
+    pub fn tick(&mut self) -> Outbound {
+        let mut out = Vec::new();
+        if self.phase == Phase::Done {
+            return out;
+        }
+        let now = self.clock.now_ms();
+        for client in self.leases.expired(now) {
+            self.evict(client, &mut out);
+        }
+        match self.phase {
+            Phase::WaitingForMembers => {
+                if self.members.len() >= self.cfg.clients {
+                    self.start_round();
+                    let conns: Vec<(u64, usize)> =
+                        self.conn_of.iter().map(|(&c, &n)| (c, n)).collect();
+                    for (client, conn) in conns {
+                        self.send_sync(conn, client, &mut out);
+                    }
+                    self.phase = Phase::Warmup;
+                }
+            }
+            Phase::Warmup => {
+                if !self.members.is_empty() && self.members.values().all(|m| m.ready) {
+                    self.phase = Phase::Train;
+                }
+            }
+            Phase::Train => {
+                if self.missing.is_empty() {
+                    self.phase = Phase::Witness;
+                }
+            }
+            Phase::Witness => self.commit(&mut out),
+            Phase::Done => {}
+        }
+        out
+    }
+
+    /// Reset the per-round state for `self.round` and deal its seqs to
+    /// the current members in contiguous chunks over ascending ids.
+    fn start_round(&mut self) {
+        let b = self.cfg.batches_per_round as u64;
+        let lo = self.round * b;
+        self.owner.clear();
+        self.staging.clear();
+        self.missing = (lo..lo + b).collect();
+        self.cur = RoundStats { round: self.round, assigned: b, ..RoundStats::default() };
+        let ids: Vec<u64> = self.members.keys().copied().collect();
+        if ids.is_empty() {
+            return; // every seq is orphaned; the next joiner inherits them
+        }
+        let n = b as usize;
+        let per = n / ids.len();
+        let extra = n % ids.len();
+        let mut seq = lo;
+        for (i, &id) in ids.iter().enumerate() {
+            let take = per + usize::from(i < extra);
+            for _ in 0..take {
+                self.owner.insert(seq, id);
+                seq += 1;
+            }
+        }
+    }
+
+    /// Witness: apply the round's staged update sets in ascending seq
+    /// order, record the ledger, and broadcast the commit (`apply` frames
+    /// in the same order, then next round's `begin` — or `shutdown` after
+    /// the final round).
+    fn commit(&mut self, out: &mut Outbound) {
+        debug_assert!(self.missing.is_empty());
+        let mut losses = Vec::with_capacity(self.staging.len());
+        for set in self.staging.values() {
+            self.params.apply_sparse(&set.labels, &set.gw, &set.gb);
+            self.cur.applied += 1;
+            losses.push(set.loss);
+        }
+        let mean = crate::linalg::sum_f64(losses) / self.cur.assigned as f64;
+        self.cur.loss_bits = mean.to_bits();
+        debug_assert!(self.cur.accounted(), "round accounting broke: {:?}", self.cur);
+        self.rounds.push(self.cur);
+        let apply_lines: Vec<String> = self
+            .staging
+            .values()
+            .map(|set| {
+                let frame = Frame::Apply { round: self.round, set: set.clone() };
+                frame.encode(self.cfg.feat_dim)
+            })
+            .collect();
+        self.round += 1;
+        let finished = self.round as usize >= self.cfg.rounds;
+        if finished {
+            let bye = Frame::Shutdown.encode(self.cfg.feat_dim);
+            for &conn in self.conn_of.values() {
+                for line in &apply_lines {
+                    out.push((conn, line.clone()));
+                }
+                out.push((conn, bye.clone()));
+            }
+            self.phase = Phase::Done;
+            return;
+        }
+        self.start_round();
+        let conns: Vec<(u64, usize)> = self.conn_of.iter().map(|(&c, &n)| (c, n)).collect();
+        for (client, conn) in conns {
+            for line in &apply_lines {
+                out.push((conn, line.clone()));
+            }
+            out.push((conn, self.begin_line(client)));
+        }
+        self.phase = Phase::Train;
+    }
+
+    /// Remove a dead client and deterministically reassign its unapplied
+    /// seqs to the survivors, refreshing their assignments.
+    fn evict(&mut self, client: u64, out: &mut Outbound) {
+        if self.members.remove(&client).is_none() {
+            return;
+        }
+        self.leases.remove(client);
+        if let Some(conn) = self.conn_of.remove(&client) {
+            self.client_of.remove(&conn);
+        }
+        self.stats.evictions += 1;
+        self.cur.evictions += 1;
+        let orphaned: Vec<u64> = self
+            .owner
+            .iter()
+            .filter(|&(seq, &o)| o == client && self.missing.contains(seq))
+            .map(|(&seq, _)| seq)
+            .collect();
+        // drop the dead client's ownership entirely (applied seqs stay
+        // applied; unapplied ones move or wait for a joiner)
+        self.owner.retain(|_, o| *o != client);
+        if orphaned.is_empty() {
+            return;
+        }
+        self.cur.reassigned += orphaned.len() as u64;
+        self.stats.reassigned += orphaned.len() as u64;
+        let survivors: Vec<u64> = self.members.keys().copied().collect();
+        for (seq, new_owner) in reassign_seqs(&orphaned, &survivors) {
+            self.owner.insert(seq, new_owner);
+        }
+        // refreshed assignments (the round may now complete without the
+        // dead client); survivors merge, recompute only what's new
+        for &survivor in &survivors {
+            if let Some(&conn) = self.conn_of.get(&survivor) {
+                out.push((conn, self.begin_line(survivor)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::timer::ManualClock;
+
+    // -- leases: expiry exactly at deadline, renewal resets ---------------
+
+    #[test]
+    fn lease_expires_exactly_at_deadline() {
+        let mut leases = Leases::new(100);
+        leases.renew(7, 0);
+        assert_eq!(leases.deadline(7), Some(100));
+        assert!(leases.expired(99).is_empty(), "one ms early is alive");
+        assert_eq!(leases.expired(100), vec![7], "expiry is inclusive at the deadline");
+        assert_eq!(leases.expired(5000), vec![7]);
+    }
+
+    #[test]
+    fn lease_renewal_resets_the_deadline() {
+        let mut leases = Leases::new(100);
+        leases.renew(3, 0);
+        leases.renew(3, 60);
+        assert!(leases.expired(100).is_empty(), "renewal at 60 pushed the deadline to 160");
+        assert!(leases.expired(159).is_empty());
+        assert_eq!(leases.expired(160), vec![3]);
+    }
+
+    #[test]
+    fn expired_reports_all_dead_clients_in_order() {
+        let mut leases = Leases::new(50);
+        leases.renew(9, 0);
+        leases.renew(2, 10);
+        leases.renew(5, 100);
+        assert_eq!(leases.expired(60), vec![2, 9], "ascending ids, both past deadline");
+        leases.remove(9);
+        assert_eq!(leases.expired(60), vec![2]);
+    }
+
+    // -- reassignment: deterministic ordering -----------------------------
+
+    #[test]
+    fn reassignment_is_deterministic_round_robin() {
+        let seqs = [12, 15, 17, 18, 19];
+        let survivors = [2, 5, 9];
+        let want = vec![(12, 2), (15, 5), (17, 9), (18, 2), (19, 5)];
+        assert_eq!(reassign_seqs(&seqs, &survivors), want);
+        // pure: same inputs, same output
+        assert_eq!(reassign_seqs(&seqs, &survivors), want);
+    }
+
+    #[test]
+    fn reassignment_with_no_survivors_is_empty() {
+        assert!(reassign_seqs(&[1, 2, 3], &[]).is_empty());
+    }
+
+    #[test]
+    fn reassignment_to_single_survivor_takes_everything() {
+        assert_eq!(reassign_seqs(&[4, 6], &[11]), vec![(4, 11), (6, 11)]);
+    }
+
+    // -- coordinator state machine ----------------------------------------
+
+    fn test_cfg() -> DistConfig {
+        DistConfig {
+            clients: 1,
+            rounds: 2,
+            batches_per_round: 2,
+            batch_size: 1,
+            num_classes: 4,
+            feat_dim: 2,
+            lr: 0.1,
+            seed: 7,
+            lease_ms: 1000,
+            resend_ms: 100,
+        }
+    }
+
+    fn coord(cfg: DistConfig) -> (Coordinator, ManualClock) {
+        let clock = ManualClock::new();
+        let c = Coordinator::new(cfg, Box::new(clock.clone())).unwrap();
+        (c, clock)
+    }
+
+    fn update_line(client: u64, round: u64, seq: u64) -> String {
+        let set = UpdateSet {
+            seq,
+            labels: vec![1, 3],
+            gw: vec![0.5, -0.5, 0.25, -0.25],
+            gb: vec![0.5, -0.5],
+            loss: 1.25,
+        };
+        Frame::Update { client, round, set }.encode(2)
+    }
+
+    fn kinds(out: &[(usize, String)]) -> Vec<String> {
+        out.iter()
+            .map(|(_, line)| {
+                line.split_whitespace().nth(1).unwrap_or("?").to_string()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_two_round_run_with_one_client() {
+        let (mut c, _clock) = coord(test_cfg());
+        assert_eq!(c.phase(), Phase::WaitingForMembers);
+        assert!(c.tick().is_empty(), "no members yet: nothing to do");
+
+        let out = c.on_line(0, &Frame::Join { name: "w0".into() }.encode(2));
+        assert_eq!(kinds(&out), vec!["welcome"], "snapshot waits for round start");
+        let out = c.tick();
+        assert_eq!(c.phase(), Phase::Warmup);
+        assert_eq!(kinds(&out), vec!["snap", "snap", "snap", "snap", "begin"]);
+        let begin = Frame::parse(&out.last().unwrap().1).unwrap();
+        let Frame::Begin { round, ranges, .. } = begin else { panic!("not begin") };
+        assert_eq!(round, 0);
+        assert_eq!(ranges, vec![(0, 2)], "single member owns the whole round");
+
+        c.on_line(0, &Frame::Ready { client: 0, round: 0 }.encode(2));
+        c.tick();
+        assert_eq!(c.phase(), Phase::Train);
+
+        let out = c.on_line(0, &update_line(0, 0, 0));
+        assert_eq!(kinds(&out), vec!["ack"]);
+        // duplicate of seq 0: acked again, never double-staged
+        let out = c.on_line(0, &update_line(0, 0, 0));
+        assert_eq!(kinds(&out), vec!["ack"]);
+        c.on_line(0, &update_line(0, 0, 1));
+        c.tick(); // Train -> Witness
+        assert_eq!(c.phase(), Phase::Witness);
+        let out = c.tick(); // Witness: commit round 0
+        assert_eq!(c.phase(), Phase::Train);
+        assert_eq!(c.round(), 1);
+        assert_eq!(kinds(&out), vec!["apply", "apply", "begin"]);
+
+        let stats = c.round_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].applied, 2);
+        assert_eq!(stats[0].duplicates, 1);
+        assert!(stats[0].accounted());
+        assert_eq!(stats[0].loss(), 1.25);
+
+        // a stale round-0 update after the commit draws a typed error
+        let out = c.on_line(0, &update_line(0, 0, 1));
+        let err = Frame::parse(&out[0].1).unwrap();
+        assert!(
+            matches!(err, Frame::Error { tag: ErrorTag::StaleRound, .. }),
+            "expected stale-round, got {err:?}"
+        );
+
+        c.on_line(0, &update_line(0, 1, 2));
+        c.on_line(0, &update_line(0, 1, 3));
+        c.tick();
+        let out = c.tick(); // commit round 1: final -> shutdown
+        assert!(c.is_done());
+        assert_eq!(kinds(&out), vec!["apply", "apply", "shutdown"]);
+        assert_eq!(c.round_stats().len(), 2);
+        assert!(c.round_stats().iter().all(|r| r.accounted()));
+        assert!(c.params().w.iter().any(|&x| x != 0.0), "updates reached the parameters");
+    }
+
+    #[test]
+    fn unknown_client_and_malformed_frames_are_typed() {
+        let (mut c, _clock) = coord(test_cfg());
+        let out = c.on_line(0, &Frame::Heartbeat { client: 99, round: 0 }.encode(2));
+        let err = Frame::parse(&out[0].1).unwrap();
+        assert!(matches!(err, Frame::Error { tag: ErrorTag::UnknownClient, .. }));
+
+        let out = c.on_line(0, "not even close");
+        let err = Frame::parse(&out[0].1).unwrap();
+        assert!(matches!(err, Frame::Error { tag: ErrorTag::BadVersion, .. }));
+        assert_eq!(c.stats().malformed, 1);
+    }
+
+    #[test]
+    fn lease_expiry_evicts_and_reassigns_to_survivors() {
+        let mut cfg = test_cfg();
+        cfg.clients = 2;
+        cfg.batches_per_round = 4;
+        let (mut c, clock) = coord(cfg);
+        c.on_line(0, &Frame::Join { name: "a".into() }.encode(2));
+        c.on_line(1, &Frame::Join { name: "b".into() }.encode(2));
+        c.tick(); // -> Warmup, assignments dealt
+        c.on_line(0, &Frame::Ready { client: 0, round: 0 }.encode(2));
+        c.on_line(1, &Frame::Ready { client: 1, round: 0 }.encode(2));
+        c.tick(); // -> Train
+        assert_eq!(c.phase(), Phase::Train);
+        assert_eq!(c.member_count(), 2);
+
+        // client 1 goes silent; client 0 heartbeats past the lease window
+        clock.advance(600);
+        c.on_line(0, &Frame::Heartbeat { client: 0, round: 0 }.encode(2));
+        clock.advance(400); // t=1000: client 1's lease (renewed at ~0) is due
+        let out = c.tick();
+        assert_eq!(c.member_count(), 1, "silent client evicted");
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().reassigned, 2, "the dead client's two seqs moved");
+        // the survivor got a refreshed begin covering the whole round
+        let begin = out
+            .iter()
+            .find_map(|(conn, line)| match Frame::parse(line) {
+                Ok(Frame::Begin { ranges, .. }) => Some((*conn, ranges)),
+                _ => None,
+            })
+            .expect("survivor is told its new assignment");
+        assert_eq!(begin, (0, vec![(0, 4)]));
+
+        // frames from the evicted id now draw unknown-client
+        let out = c.on_line(1, &update_line(1, 0, 3));
+        let err = Frame::parse(&out[0].1).unwrap();
+        assert!(matches!(err, Frame::Error { tag: ErrorTag::UnknownClient, .. }));
+
+        // the survivor finishes the round alone; accounting still closes
+        for seq in 0..4 {
+            c.on_line(0, &update_line(0, 0, seq));
+        }
+        c.tick();
+        c.tick();
+        assert_eq!(c.round(), 1);
+        let r0 = c.round_stats()[0];
+        assert!(r0.accounted(), "{r0:?}");
+        assert_eq!(r0.evictions, 1);
+        assert_eq!(r0.reassigned, 2);
+    }
+
+    #[test]
+    fn rejoin_inherits_orphaned_seqs_when_no_survivors() {
+        let mut cfg = test_cfg();
+        cfg.clients = 1;
+        let (mut c, clock) = coord(cfg);
+        c.on_line(0, &Frame::Join { name: "a".into() }.encode(2));
+        c.tick();
+        c.on_line(0, &Frame::Ready { client: 0, round: 0 }.encode(2));
+        c.tick();
+        assert_eq!(c.phase(), Phase::Train);
+        clock.advance(1000); // sole client dies; nobody to reassign to
+        c.tick();
+        assert_eq!(c.member_count(), 0);
+        assert_eq!(c.phase(), Phase::Train, "round stays open for a joiner");
+
+        let out = c.on_line(3, &Frame::Join { name: "a2".into() }.encode(2));
+        // welcome + full snapshot + begin with the whole orphaned round
+        assert_eq!(kinds(&out), vec!["welcome", "snap", "snap", "snap", "snap", "begin"]);
+        let Frame::Begin { ranges, .. } = Frame::parse(&out.last().unwrap().1).unwrap() else {
+            panic!("expected begin");
+        };
+        assert_eq!(ranges, vec![(0, 2)], "rejoiner inherits every orphaned seq");
+        let Frame::Welcome { client, .. } = Frame::parse(&out[0].1).unwrap() else {
+            panic!("expected welcome");
+        };
+        assert_eq!(client, 1, "rejoiner gets a fresh identity");
+    }
+}

@@ -1,0 +1,162 @@
+//! Distributed training rounds: a fault-tolerant coordinator/client
+//! protocol with drop/rejoin and bit-exact aggregation.
+//!
+//! One host, N processes: a coordinator ([`coordinator`]) drives the
+//! round state machine (WaitingForMembers → Warmup → Train → Witness)
+//! over the virtual-time [`crate::utils::timer::Clock`], assigning each
+//! round's batch seqs to the joined clients ([`client`]) and collecting
+//! their sparse Adagrad update sets over a versioned, length-checked
+//! Unix-socket line protocol ([`protocol`], version `dist1`).
+//!
+//! **The invariant** (the whole point): the committed parameters after
+//! round *r* are a pure function of `(seed, r)` — independent of the
+//! client count, the assignment, frame interleaving, faults, evictions
+//! and rejoins. Every client computes update sets against the round-start
+//! replica; the coordinator buffers them and applies at Witness in
+//! ascending batch-seq order through the canonical
+//! [`crate::model::ParamStore::apply_sparse`]. M clients therefore
+//! produce learning curves bit-identical to 1 client — verified by
+//! `tests/dist_parity.rs`, with kill/rejoin mid-run, and under a seeded
+//! drop/delay/duplicate/corrupt fault mix by `tests/dist_chaos.rs` via
+//! the in-memory [`sim::SimNet`].
+//!
+//! Robustness follows the serving daemon's playbook: leases renewed by
+//! heartbeats, typed error frames (`bad-version`, `bad-frame`,
+//! `bad-field`, `bad-length`, `stale-round`, `unknown-client`),
+//! idempotent acks, deterministic reassignment of a dead client's seqs,
+//! and per-round [`RoundStats`] whose `accounted()` check proves every
+//! update was applied exactly once. Fault injection shares the
+//! [`crate::utils::faults::FaultPlan`] spec (`REPRO_FAULTS`) with the
+//! daemon.
+//!
+//! CLI entry points: `repro coord --clients N` / `repro worker --connect
+//! PATH` (socket glue below); everything else runs in-process.
+
+pub mod client;
+pub mod coordinator;
+pub mod protocol;
+pub mod sim;
+
+pub use client::{ClientStats, DistClient, GradStep, HostNsStep};
+pub use coordinator::{reassign_seqs, CoordStats, Coordinator, Leases, Phase, RoundStats};
+pub use protocol::{params_checksum, ErrorTag, Frame, FrameError, SnapPart, UpdateSet};
+pub use sim::SimNet;
+
+#[cfg(unix)]
+use std::collections::BTreeMap;
+#[cfg(unix)]
+use std::path::Path;
+#[cfg(unix)]
+use std::time::Duration;
+
+#[cfg(unix)]
+use crate::config::DistConfig;
+#[cfg(unix)]
+use crate::utils::faults::{FaultGate, FaultPlan};
+#[cfg(unix)]
+use crate::utils::timer::RealClock;
+#[cfg(unix)]
+use crate::utils::transport::{drain_ready, Inbound, LineClient, LineServer, Recv};
+#[cfg(unix)]
+use anyhow::Result;
+
+/// Poll cadence for the socket event loops.
+#[cfg(unix)]
+const SOCKET_POLL_MS: u64 = 10;
+
+/// Serve a training run over a Unix socket until all rounds commit (or a
+/// raw `shutdown` line arrives). Inbound frames pass through a
+/// [`FaultGate`] (stage `"coord-in"`) so the daemon's `REPRO_FAULTS`
+/// spec exercises the real socket path too; returns the finished
+/// [`Coordinator`] for stats/params inspection.
+#[cfg(unix)]
+pub fn run_coord_socket(
+    cfg: &DistConfig,
+    path: &Path,
+    faults: Option<FaultPlan>,
+) -> Result<Coordinator> {
+    let server = LineServer::bind(path)?;
+    let mut coord = Coordinator::new(cfg.clone(), Box::new(RealClock::new()))?;
+    let loop_clock = RealClock::new();
+    let mut gate = FaultGate::new(faults, "coord-in");
+    // gate-delayed inbound frames, keyed (due_ms, arrival seq)
+    let mut held: BTreeMap<(u64, u64), (usize, String)> = BTreeMap::new();
+    let mut held_seq = 0u64;
+    let mut stop = false;
+    while !coord.is_done() && !stop {
+        let mut inbox: Vec<Inbound> = Vec::new();
+        match server.rx().recv_timeout(Duration::from_millis(SOCKET_POLL_MS)) {
+            Ok(first) => {
+                inbox.push(first);
+                inbox.extend(drain_ready(server.rx()));
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        let now = loop_clock.now_ms();
+        for item in inbox {
+            match item {
+                Inbound::Shutdown => stop = true,
+                Inbound::Line { client, line } => {
+                    if line.trim() == "shutdown" {
+                        stop = true;
+                        continue;
+                    }
+                    let gated = gate.pass(&line);
+                    for delivered in gated.lines {
+                        if gated.delay_ms == 0 {
+                            for (conn, reply) in coord.on_line(client, &delivered) {
+                                server.send(conn, &reply);
+                            }
+                        } else {
+                            held.insert((now + gated.delay_ms, held_seq), (client, delivered));
+                            held_seq += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let due: Vec<(u64, u64)> = held.range(..=(now, u64::MAX)).map(|(&k, _)| k).collect();
+        for key in due {
+            if let Some((client, line)) = held.remove(&key) {
+                for (conn, reply) in coord.on_line(client, &line) {
+                    server.send(conn, &reply);
+                }
+            }
+        }
+        for (conn, reply) in coord.tick() {
+            server.send(conn, &reply);
+        }
+    }
+    server.shutdown();
+    Ok(coord)
+}
+
+/// Run one worker against a coordinator socket until the run finishes
+/// (`shutdown` frame) or the socket closes. Returns the client's
+/// counters.
+#[cfg(unix)]
+pub fn run_worker_socket(
+    path: &Path,
+    name: &str,
+    heartbeat_ms: u64,
+    resend_ms: u64,
+) -> Result<ClientStats> {
+    let mut conn = LineClient::connect_retry(path, 100, 50)?;
+    let mut client = DistClient::new(name, Box::new(RealClock::new()), heartbeat_ms, resend_ms);
+    while !client.finished() {
+        for line in client.tick() {
+            conn.send(&line)?;
+        }
+        match conn.recv_timeout(SOCKET_POLL_MS) {
+            Recv::Line(line) => {
+                for reply in client.on_line(&line) {
+                    conn.send(&reply)?;
+                }
+            }
+            Recv::Timeout => {}
+            Recv::Closed => break,
+        }
+    }
+    Ok(client.stats())
+}

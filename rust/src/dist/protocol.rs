@@ -1,0 +1,600 @@
+//! The dist round protocol's wire format: versioned, length-checked line
+//! frames with typed parse errors.
+//!
+//! Every frame is one text line, `dist1 <type> key=value ...`. Floating
+//! point payloads travel as fixed-width lowercase hex of the IEEE-754 bit
+//! pattern (8 digits per `f32`, 16 per `f64`) — the wire is **bit-exact**
+//! by construction, so a replica that applies the same update sets holds
+//! byte-identical parameters. Vector payloads carry explicit counts and
+//! are length-checked against them; any mismatch, unknown type, or wrong
+//! version parses to a typed [`FrameError`] rather than a panic or a
+//! silent skip, and the peer answers with an `error tag=<tag>` frame.
+//!
+//! Frame inventory (client → coordinator, then coordinator → client):
+//!
+//! ```text
+//! dist1 join name=<token>
+//! dist1 ready client=<id> round=<r>
+//! dist1 hb client=<id> round=<r>
+//! dist1 update client=<id> round=<r> seq=<s> n=<rows> k=<feat> loss=<f64hex> labels=<hex> gw=<hex> gb=<hex>
+//! dist1 resync client=<id>
+//!
+//! dist1 welcome client=<id> round=<r> seed=<u64> c=<classes> k=<feat> batch=<b> lr=<f32hex>
+//! dist1 snap round=<r> part=<w|b|gw2|gb2> n=<count> data=<hex>
+//! dist1 begin round=<r> ranges=<a:b+c:d|-> csum=<u64hex>
+//! dist1 ack round=<r> seq=<s>
+//! dist1 apply round=<r> seq=<s> n=<rows> k=<feat> loss=<f64hex> labels=<hex> gw=<hex> gb=<hex>
+//! dist1 error tag=<tag> detail=<text...>
+//! dist1 shutdown
+//! ```
+//!
+//! Error tags: `bad-version`, `bad-frame`, `bad-field`, `bad-length`,
+//! `stale-round`, `unknown-client`. The first four are parse-level; the
+//! last two are protocol-level (the coordinator rejects frames from
+//! evicted clients or for already-committed rounds, and the client reacts
+//! by rejoining through Warmup).
+
+use crate::model::ParamStore;
+
+/// Protocol version token leading every frame.
+pub const PROTO_VERSION: &str = "dist1";
+
+/// Typed reasons a frame is rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorTag {
+    /// Leading version token is not [`PROTO_VERSION`].
+    BadVersion,
+    /// Unknown frame type or malformed structure.
+    BadFrame,
+    /// A field is missing or fails to parse.
+    BadField,
+    /// A vector payload disagrees with its declared count.
+    BadLength,
+    /// Frame addresses a round the coordinator already committed.
+    StaleRound,
+    /// Frame from a client id the coordinator evicted (or never issued).
+    UnknownClient,
+}
+
+impl ErrorTag {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorTag::BadVersion => "bad-version",
+            ErrorTag::BadFrame => "bad-frame",
+            ErrorTag::BadField => "bad-field",
+            ErrorTag::BadLength => "bad-length",
+            ErrorTag::StaleRound => "stale-round",
+            ErrorTag::UnknownClient => "unknown-client",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "bad-version" => Some(ErrorTag::BadVersion),
+            "bad-frame" => Some(ErrorTag::BadFrame),
+            "bad-field" => Some(ErrorTag::BadField),
+            "bad-length" => Some(ErrorTag::BadLength),
+            "stale-round" => Some(ErrorTag::StaleRound),
+            "unknown-client" => Some(ErrorTag::UnknownClient),
+            _ => None,
+        }
+    }
+}
+
+/// A rejected frame: the tag goes on the wire, the detail in logs/tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FrameError {
+    pub tag: ErrorTag,
+    pub detail: String,
+}
+
+impl FrameError {
+    fn new(tag: ErrorTag, detail: impl Into<String>) -> Self {
+        Self { tag, detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.tag.name(), self.detail)
+    }
+}
+
+/// The four snapshot payloads, in their canonical transmission order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SnapPart {
+    W,
+    B,
+    Gw2,
+    Gb2,
+}
+
+impl SnapPart {
+    pub const ALL: [SnapPart; 4] = [SnapPart::W, SnapPart::B, SnapPart::Gw2, SnapPart::Gb2];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapPart::W => "w",
+            SnapPart::B => "b",
+            SnapPart::Gw2 => "gw2",
+            SnapPart::Gb2 => "gb2",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "w" => Some(SnapPart::W),
+            "b" => Some(SnapPart::B),
+            "gw2" => Some(SnapPart::Gw2),
+            "gb2" => Some(SnapPart::Gb2),
+            _ => None,
+        }
+    }
+}
+
+/// One batch's sparse Adagrad update: the rows touched (positive then
+/// negative labels), their weight/bias gradients, and the batch loss.
+/// A pure function of (round-start parameters, run seed, `seq`), which is
+/// what makes aggregation order the only thing the coordinator must fix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdateSet {
+    pub seq: u64,
+    pub labels: Vec<u32>,
+    /// Row-major gradients, `labels.len() * feat_dim`.
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+    /// Mean per-example loss of the batch.
+    pub loss: f64,
+}
+
+/// A parsed protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Join { name: String },
+    Ready { client: u64, round: u64 },
+    Heartbeat { client: u64, round: u64 },
+    Update { client: u64, round: u64, set: UpdateSet },
+    Resync { client: u64 },
+    Welcome { client: u64, round: u64, seed: u64, c: u64, k: u64, batch: u64, lr: f32 },
+    Snap { round: u64, part: SnapPart, data: Vec<f32> },
+    Begin { round: u64, ranges: Vec<(u64, u64)>, csum: u64 },
+    Ack { round: u64, seq: u64 },
+    Apply { round: u64, set: UpdateSet },
+    Error { tag: ErrorTag, detail: String },
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// hex codecs
+// ---------------------------------------------------------------------------
+
+/// Fixed-width hex of each `f32`'s bit pattern, concatenated.
+pub fn encode_f32s(xs: &[f32]) -> String {
+    let mut out = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.push_str(&format!("{:08x}", x.to_bits()));
+    }
+    out
+}
+
+/// Inverse of [`encode_f32s`]; the payload must hold exactly `expect`
+/// values.
+pub fn decode_f32s(field: &str, s: &str, expect: usize) -> Result<Vec<f32>, FrameError> {
+    Ok(decode_u32s(field, s, expect)?.into_iter().map(f32::from_bits).collect())
+}
+
+/// Fixed-width hex of each `u32`, concatenated.
+pub fn encode_u32s(xs: &[u32]) -> String {
+    let mut out = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.push_str(&format!("{x:08x}"));
+    }
+    out
+}
+
+/// Inverse of [`encode_u32s`]; length-checked against `expect`.
+pub fn decode_u32s(field: &str, s: &str, expect: usize) -> Result<Vec<u32>, FrameError> {
+    if s.len() != expect * 8 {
+        return Err(FrameError::new(
+            ErrorTag::BadLength,
+            format!("field {field}: {} hex chars, expected {}", s.len(), expect * 8),
+        ));
+    }
+    let mut out = Vec::with_capacity(expect);
+    for chunk in s.as_bytes().chunks(8) {
+        let txt = std::str::from_utf8(chunk)
+            .map_err(|_| FrameError::new(ErrorTag::BadField, format!("field {field}: not hex")))?;
+        let v = u32::from_str_radix(txt, 16).map_err(|_| {
+            FrameError::new(ErrorTag::BadField, format!("field {field}: bad hex {txt:?}"))
+        })?;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+fn encode_f64(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn decode_f64(field: &str, s: &str) -> Result<f64, FrameError> {
+    if s.len() != 16 {
+        return Err(FrameError::new(
+            ErrorTag::BadLength,
+            format!("field {field}: {} hex chars, expected 16", s.len()),
+        ));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| FrameError::new(ErrorTag::BadField, format!("field {field}: bad hex {s:?}")))
+}
+
+fn encode_ranges(ranges: &[(u64, u64)]) -> String {
+    if ranges.is_empty() {
+        return "-".to_string();
+    }
+    ranges.iter().map(|(a, b)| format!("{a}:{b}")).collect::<Vec<_>>().join("+")
+}
+
+fn decode_ranges(s: &str) -> Result<Vec<(u64, u64)>, FrameError> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::new();
+    for part in s.split('+') {
+        let (a, b) = part.split_once(':').ok_or_else(|| {
+            FrameError::new(ErrorTag::BadField, format!("range {part:?}: expected A:B"))
+        })?;
+        let a = parse_u64("ranges", a)?;
+        let b = parse_u64("ranges", b)?;
+        if b < a {
+            return Err(FrameError::new(ErrorTag::BadField, format!("range {part:?}: B < A")));
+        }
+        out.push((a, b));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// frame encode / parse
+// ---------------------------------------------------------------------------
+
+fn encode_update_body(set: &UpdateSet, k: usize) -> String {
+    format!(
+        "seq={} n={} k={} loss={} labels={} gw={} gb={}",
+        set.seq,
+        set.labels.len(),
+        k,
+        encode_f64(set.loss),
+        encode_u32s(&set.labels),
+        encode_f32s(&set.gw),
+        encode_f32s(&set.gb),
+    )
+}
+
+impl Frame {
+    /// Render the frame as one protocol line. `feat_dim` is the row width
+    /// update/apply payloads are length-checked against.
+    pub fn encode(&self, feat_dim: usize) -> String {
+        match self {
+            Frame::Join { name } => format!("{PROTO_VERSION} join name={name}"),
+            Frame::Ready { client, round } => {
+                format!("{PROTO_VERSION} ready client={client} round={round}")
+            }
+            Frame::Heartbeat { client, round } => {
+                format!("{PROTO_VERSION} hb client={client} round={round}")
+            }
+            Frame::Update { client, round, set } => format!(
+                "{PROTO_VERSION} update client={client} round={round} {}",
+                encode_update_body(set, feat_dim)
+            ),
+            Frame::Resync { client } => format!("{PROTO_VERSION} resync client={client}"),
+            Frame::Welcome { client, round, seed, c, k, batch, lr } => format!(
+                "{PROTO_VERSION} welcome client={client} round={round} seed={seed} \
+                 c={c} k={k} batch={batch} lr={:08x}",
+                lr.to_bits()
+            ),
+            Frame::Snap { round, part, data } => format!(
+                "{PROTO_VERSION} snap round={round} part={} n={} data={}",
+                part.name(),
+                data.len(),
+                encode_f32s(data)
+            ),
+            Frame::Begin { round, ranges, csum } => format!(
+                "{PROTO_VERSION} begin round={round} ranges={} csum={csum:016x}",
+                encode_ranges(ranges)
+            ),
+            Frame::Ack { round, seq } => format!("{PROTO_VERSION} ack round={round} seq={seq}"),
+            Frame::Apply { round, set } => format!(
+                "{PROTO_VERSION} apply round={round} {}",
+                encode_update_body(set, feat_dim)
+            ),
+            Frame::Error { tag, detail } => {
+                format!("{PROTO_VERSION} error tag={} detail={detail}", tag.name())
+            }
+            Frame::Shutdown => format!("{PROTO_VERSION} shutdown"),
+        }
+    }
+
+    /// Parse one protocol line. Rejections are typed: wrong version, an
+    /// unknown type, a missing/bad field, or a payload whose length
+    /// disagrees with its declared count.
+    pub fn parse(line: &str) -> Result<Frame, FrameError> {
+        let line = line.trim();
+        let (version, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+        if version != PROTO_VERSION {
+            return Err(FrameError::new(
+                ErrorTag::BadVersion,
+                format!("version token {version:?}, expected {PROTO_VERSION:?}"),
+            ));
+        }
+        let (kind, body) = rest.split_once(char::is_whitespace).unwrap_or((rest, ""));
+        let fields = Fields::scan(body);
+        match kind {
+            "join" => Ok(Frame::Join { name: fields.get("name")?.to_string() }),
+            "ready" => Ok(Frame::Ready {
+                client: fields.u64("client")?,
+                round: fields.u64("round")?,
+            }),
+            "hb" => Ok(Frame::Heartbeat {
+                client: fields.u64("client")?,
+                round: fields.u64("round")?,
+            }),
+            "update" => Ok(Frame::Update {
+                client: fields.u64("client")?,
+                round: fields.u64("round")?,
+                set: fields.update_set()?,
+            }),
+            "resync" => Ok(Frame::Resync { client: fields.u64("client")? }),
+            "welcome" => Ok(Frame::Welcome {
+                client: fields.u64("client")?,
+                round: fields.u64("round")?,
+                seed: fields.u64("seed")?,
+                c: fields.u64("c")?,
+                k: fields.u64("k")?,
+                batch: fields.u64("batch")?,
+                lr: f32::from_bits(fields.hex_u32("lr")?),
+            }),
+            "snap" => {
+                let part = fields.get("part").and_then(|p| {
+                    SnapPart::from_name(p).ok_or_else(|| {
+                        FrameError::new(ErrorTag::BadField, format!("unknown snap part {p:?}"))
+                    })
+                })?;
+                let n = fields.u64("n")? as usize;
+                let data = decode_f32s("data", fields.get("data")?, n)?;
+                Ok(Frame::Snap { round: fields.u64("round")?, part, data })
+            }
+            "begin" => Ok(Frame::Begin {
+                round: fields.u64("round")?,
+                ranges: decode_ranges(fields.get("ranges")?)?,
+                csum: fields.hex_u64("csum")?,
+            }),
+            "ack" => Ok(Frame::Ack { round: fields.u64("round")?, seq: fields.u64("seq")? }),
+            "apply" => {
+                Ok(Frame::Apply { round: fields.u64("round")?, set: fields.update_set()? })
+            }
+            "error" => {
+                let tag = fields.get("tag").and_then(|t| {
+                    ErrorTag::from_name(t).ok_or_else(|| {
+                        FrameError::new(ErrorTag::BadField, format!("unknown error tag {t:?}"))
+                    })
+                })?;
+                // the detail is free text: everything after "detail="
+                let detail = body
+                    .split_once("detail=")
+                    .map(|(_, d)| d.to_string())
+                    .unwrap_or_default();
+                Ok(Frame::Error { tag, detail })
+            }
+            "shutdown" => Ok(Frame::Shutdown),
+            other => {
+                Err(FrameError::new(ErrorTag::BadFrame, format!("unknown frame type {other:?}")))
+            }
+        }
+    }
+}
+
+/// Whitespace-separated `key=value` tokens of a frame body.
+struct Fields<'a> {
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Fields<'a> {
+    fn scan(body: &'a str) -> Self {
+        let pairs = body.split_whitespace().filter_map(|tok| tok.split_once('=')).collect();
+        Self { pairs }
+    }
+
+    fn get(&self, key: &str) -> Result<&'a str, FrameError> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| FrameError::new(ErrorTag::BadField, format!("missing field {key}")))
+    }
+
+    fn u64(&self, key: &str) -> Result<u64, FrameError> {
+        parse_u64(key, self.get(key)?)
+    }
+
+    fn hex_u32(&self, key: &str) -> Result<u32, FrameError> {
+        let v = self.get(key)?;
+        u32::from_str_radix(v, 16).map_err(|_| {
+            FrameError::new(ErrorTag::BadField, format!("field {key}: bad hex {v:?}"))
+        })
+    }
+
+    fn hex_u64(&self, key: &str) -> Result<u64, FrameError> {
+        let v = self.get(key)?;
+        u64::from_str_radix(v, 16).map_err(|_| {
+            FrameError::new(ErrorTag::BadField, format!("field {key}: bad hex {v:?}"))
+        })
+    }
+
+    /// The shared `seq/n/k/loss/labels/gw/gb` body of update and apply
+    /// frames, length-checked: `labels` holds `n` rows, `gw` holds `n*k`
+    /// values, `gb` holds `n`.
+    fn update_set(&self) -> Result<UpdateSet, FrameError> {
+        let n = self.u64("n")? as usize;
+        let k = self.u64("k")? as usize;
+        let labels = decode_u32s("labels", self.get("labels")?, n)?;
+        let gw = decode_f32s("gw", self.get("gw")?, n * k)?;
+        let gb = decode_f32s("gb", self.get("gb")?, n)?;
+        Ok(UpdateSet {
+            seq: self.u64("seq")?,
+            labels,
+            gw,
+            gb,
+            loss: decode_f64("loss", self.get("loss")?)?,
+        })
+    }
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64, FrameError> {
+    v.parse()
+        .map_err(|_| FrameError::new(ErrorTag::BadField, format!("field {key}: bad number {v:?}")))
+}
+
+// ---------------------------------------------------------------------------
+// parameter checksum
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over a parameter store's full bit pattern (dims, weights,
+/// biases, both Adagrad accumulators). Replicas compare this against the
+/// coordinator's value in every `begin` frame; any divergence — a dropped
+/// or duplicated apply frame, a missed snapshot part — is caught before
+/// the replica computes a single gradient against wrong parameters.
+pub fn params_checksum(params: &ParamStore) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            h ^= (v >> shift) & 0xff;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(params.num_classes as u64);
+    mix(params.feat_dim as u64);
+    for x in &params.w {
+        mix(x.to_bits() as u64);
+    }
+    for x in &params.b {
+        mix(x.to_bits() as u64);
+    }
+    let (gw2, gb2) = params.opt.accumulators();
+    for x in gw2 {
+        mix(x.to_bits() as u64);
+    }
+    for x in gb2 {
+        mix(x.to_bits() as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_set() -> UpdateSet {
+        UpdateSet {
+            seq: 42,
+            labels: vec![3, 1, 7, 1],
+            gw: (0..8).map(|i| i as f32 * 0.25 - 1.0).collect(),
+            gb: vec![0.5, -0.5, 1.5e-8, -0.0],
+            loss: 0.6931471805599453,
+        }
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        let k = 2; // gw rows are 2 wide in sample_set
+        let frames = vec![
+            Frame::Join { name: "worker-a".into() },
+            Frame::Ready { client: 3, round: 9 },
+            Frame::Heartbeat { client: 0, round: 0 },
+            Frame::Update { client: 1, round: 4, set: sample_set() },
+            Frame::Resync { client: 2 },
+            Frame::Welcome { client: 5, round: 1, seed: 99, c: 64, k: 2, batch: 16, lr: 0.05 },
+            Frame::Snap { round: 2, part: SnapPart::Gw2, data: vec![0.0, -1.5, 3.25e-7] },
+            Frame::Begin { round: 7, ranges: vec![(56, 60), (62, 64)], csum: 0xdead_beef },
+            Frame::Begin { round: 7, ranges: vec![], csum: 1 },
+            Frame::Ack { round: 7, seq: 58 },
+            Frame::Apply { round: 7, set: sample_set() },
+            Frame::Error { tag: ErrorTag::StaleRound, detail: "round 3 already committed".into() },
+            Frame::Shutdown,
+        ];
+        for frame in frames {
+            let line = frame.encode(k);
+            let back = Frame::parse(&line).unwrap_or_else(|e| panic!("parse {line:?}: {e}"));
+            assert_eq!(back, frame, "round-trip failed for {line:?}");
+        }
+    }
+
+    #[test]
+    fn float_payloads_are_bit_exact() {
+        // values that decimal formatting would mangle survive the hex wire
+        let xs = vec![f32::MIN_POSITIVE, -0.0, 1.0 + f32::EPSILON, 3.1415927];
+        let back = decode_f32s("x", &encode_f32s(&xs), xs.len()).unwrap();
+        let bits: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+        let back_bits: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, back_bits);
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let err = Frame::parse("dist2 shutdown").unwrap_err();
+        assert_eq!(err.tag, ErrorTag::BadVersion);
+        let err = Frame::parse("garbage").unwrap_err();
+        assert_eq!(err.tag, ErrorTag::BadVersion);
+    }
+
+    #[test]
+    fn unknown_type_and_missing_fields_are_typed() {
+        assert_eq!(Frame::parse("dist1 frobnicate").unwrap_err().tag, ErrorTag::BadFrame);
+        assert_eq!(Frame::parse("dist1 ready client=1").unwrap_err().tag, ErrorTag::BadField);
+        assert_eq!(Frame::parse("dist1 ack round=x seq=0").unwrap_err().tag, ErrorTag::BadField);
+    }
+
+    #[test]
+    fn length_mismatch_is_typed() {
+        let mut line = Frame::Update { client: 0, round: 0, set: sample_set() }.encode(2);
+        // claim one more row than the payload carries
+        line = line.replace("n=4", "n=5");
+        assert_eq!(Frame::parse(&line).unwrap_err().tag, ErrorTag::BadLength);
+        // truncated payload (a corrupted frame) is caught the same way
+        let snap = Frame::Snap { round: 0, part: SnapPart::W, data: vec![1.0, 2.0] }.encode(2);
+        let cut = &snap[..snap.len() - 3];
+        let err = Frame::parse(cut).unwrap_err();
+        assert!(matches!(err.tag, ErrorTag::BadLength | ErrorTag::BadField), "{err}");
+    }
+
+    #[test]
+    fn error_tags_name_round_trip() {
+        for tag in [
+            ErrorTag::BadVersion,
+            ErrorTag::BadFrame,
+            ErrorTag::BadField,
+            ErrorTag::BadLength,
+            ErrorTag::StaleRound,
+            ErrorTag::UnknownClient,
+        ] {
+            assert_eq!(ErrorTag::from_name(tag.name()), Some(tag));
+        }
+        assert_eq!(ErrorTag::from_name("nope"), None);
+    }
+
+    #[test]
+    fn checksum_sees_every_component() {
+        let base = ParamStore::zeros(4, 3, 0.1);
+        let h0 = params_checksum(&base);
+        assert_eq!(h0, params_checksum(&ParamStore::zeros(4, 3, 0.1)), "deterministic");
+        let mut w = ParamStore::zeros(4, 3, 0.1);
+        w.w[5] = 1.0e-30; // a single flipped bit anywhere must change the sum
+        assert_ne!(params_checksum(&w), h0);
+        let mut b = ParamStore::zeros(4, 3, 0.1);
+        b.b[2] = -0.0; // -0.0 != +0.0 bitwise
+        assert_ne!(params_checksum(&b), h0);
+        let mut acc = ParamStore::zeros(4, 3, 0.1);
+        acc.apply_sparse(&[1], &[0.5, 0.5, 0.5], &[0.5]);
+        assert_ne!(params_checksum(&acc), h0);
+    }
+}

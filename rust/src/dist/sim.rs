@@ -1,0 +1,304 @@
+//! In-memory network simulation for the distributed round protocol: one
+//! [`Coordinator`] plus M [`DistClient`]s wired through [`FaultGate`]s on
+//! a shared [`ManualClock`].
+//!
+//! The sim is fully deterministic: virtual time advances in fixed ticks,
+//! frames are delivered from a FIFO queue (delayed frames re-enter at
+//! their due time from a `BTreeMap` keyed `(due_ms, arrival_counter)`),
+//! and every fault decision is a counter-based draw from the
+//! [`FaultPlan`]. Re-running the same `(config, M, plan)` replays the
+//! exact same [`SimNet::trace`] — the chaos tests assert this, and it is
+//! what makes any distributed-protocol failure reproducible from its
+//! seed. Used by `tests/dist_parity.rs`, `tests/dist_chaos.rs` and the
+//! `dist_round` hot-path benchmark.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::DistConfig;
+use crate::dist::client::DistClient;
+use crate::dist::coordinator::Coordinator;
+use crate::utils::faults::{FaultGate, FaultPlan};
+use crate::utils::timer::ManualClock;
+use anyhow::{bail, Result};
+
+/// Upper bound on deliveries within one tick; a synchronous message
+/// cascade longer than this means the protocol is ping-ponging.
+const MAX_DELIVERIES_PER_STEP: usize = 100_000;
+
+#[derive(Clone, Debug)]
+enum Dest {
+    /// To the coordinator, from the client on connection `conn`.
+    Coord { conn: usize },
+    /// To the client currently bound to connection `conn`.
+    Client { conn: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Envelope {
+    dest: Dest,
+    line: String,
+}
+
+/// One coordinator + M clients over a simulated faulty transport.
+pub struct SimNet {
+    clock: ManualClock,
+    coord: Coordinator,
+    /// Slot -> live client (None while killed).
+    clients: Vec<Option<DistClient>>,
+    /// Slot -> its current connection id (changes on rejoin).
+    conn_of_slot: Vec<usize>,
+    /// Rejoin generation per slot (for deterministic worker names).
+    generation: Vec<u64>,
+    next_conn: usize,
+    /// client -> coordinator gate.
+    c2s: FaultGate,
+    /// coordinator -> client gate.
+    s2c: FaultGate,
+    delayed: BTreeMap<(u64, u64), Envelope>,
+    delay_seq: u64,
+    queue: VecDeque<Envelope>,
+    trace: Vec<String>,
+    tick_ms: u64,
+    cfg: DistConfig,
+}
+
+impl SimNet {
+    /// Build a net with `m` clients. `plan` gates both directions
+    /// independently (stages `"c2s"` and `"s2c"`); `None` is a perfect
+    /// network.
+    pub fn new(cfg: DistConfig, m: usize, plan: Option<FaultPlan>) -> Result<Self> {
+        let clock = ManualClock::new();
+        let coord = Coordinator::new(cfg.clone(), Box::new(clock.clone()))?;
+        let mut net = Self {
+            clock,
+            coord,
+            clients: Vec::new(),
+            conn_of_slot: Vec::new(),
+            generation: Vec::new(),
+            next_conn: 0,
+            c2s: FaultGate::new(plan.clone(), "c2s"),
+            s2c: FaultGate::new(plan, "s2c"),
+            delayed: BTreeMap::new(),
+            delay_seq: 0,
+            queue: VecDeque::new(),
+            trace: Vec::new(),
+            tick_ms: 50,
+            cfg,
+        };
+        for slot in 0..m {
+            let client = net.make_client(slot, 0);
+            net.clients.push(Some(client));
+            net.conn_of_slot.push(net.next_conn);
+            net.generation.push(0);
+            net.next_conn += 1;
+        }
+        Ok(net)
+    }
+
+    /// Virtual milliseconds advanced per [`SimNet::step`] (default 50).
+    pub fn set_tick_ms(&mut self, ms: u64) {
+        self.tick_ms = ms.max(1);
+    }
+
+    fn make_client(&self, slot: usize, generation: u64) -> DistClient {
+        DistClient::new(
+            format!("w{slot}.{generation}"),
+            Box::new(self.clock.clone()),
+            self.cfg.heartbeat_ms(),
+            self.cfg.resend_ms,
+        )
+    }
+
+    pub fn coord(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    pub fn clock(&self) -> &ManualClock {
+        &self.clock
+    }
+
+    /// Chronological record of every delivered frame.
+    pub fn trace(&self) -> &[String] {
+        &self.trace
+    }
+
+    pub fn client(&self, slot: usize) -> Option<&DistClient> {
+        self.clients[slot].as_ref()
+    }
+
+    /// Kill a client process: it stops ticking and answering. The
+    /// coordinator is *not* told — only the missed heartbeats are.
+    pub fn kill(&mut self, slot: usize) {
+        self.clients[slot] = None;
+    }
+
+    /// Restart a killed client as a fresh process on a new connection; it
+    /// re-enters through Join/Warmup and inherits whatever seqs are
+    /// orphaned.
+    pub fn rejoin(&mut self, slot: usize) {
+        self.generation[slot] += 1;
+        self.clients[slot] = Some(self.make_client(slot, self.generation[slot]));
+        self.conn_of_slot[slot] = self.next_conn;
+        self.next_conn += 1;
+    }
+
+    fn slot_of_conn(&self, conn: usize) -> Option<usize> {
+        self.conn_of_slot.iter().position(|&c| c == conn)
+    }
+
+    /// Route one outbound frame through its direction's gate, queueing
+    /// (or delaying) the surviving copies.
+    fn post(&mut self, dest: Dest, line: &str) {
+        let gate = match dest {
+            Dest::Coord { .. } => &mut self.c2s,
+            Dest::Client { .. } => &mut self.s2c,
+        };
+        let gated = gate.pass(line);
+        for delivered in gated.lines {
+            let env = Envelope { dest: dest.clone(), line: delivered };
+            if gated.delay_ms == 0 {
+                self.queue.push_back(env);
+            } else {
+                let due = self.clock.now_ms() + gated.delay_ms;
+                self.delayed.insert((due, self.delay_seq), env);
+                self.delay_seq += 1;
+            }
+        }
+    }
+
+    fn post_from_coord(&mut self, frames: Vec<(usize, String)>) {
+        for (conn, line) in frames {
+            self.post(Dest::Client { conn }, &line);
+        }
+    }
+
+    fn post_from_client(&mut self, conn: usize, lines: Vec<String>) {
+        for line in lines {
+            self.post(Dest::Coord { conn }, &line);
+        }
+    }
+
+    /// One tick: advance virtual time, release due delayed frames, tick
+    /// the coordinator and every live client, then drain the delivery
+    /// queue to quiescence.
+    pub fn step(&mut self) -> Result<()> {
+        self.clock.advance(self.tick_ms);
+        let now = self.clock.now_ms();
+        // release delayed frames whose due time has arrived, in (due,
+        // arrival) order
+        let due: Vec<(u64, u64)> = self
+            .delayed
+            .range(..=(now, u64::MAX))
+            .map(|(&key, _)| key)
+            .collect();
+        for key in due {
+            if let Some(env) = self.delayed.remove(&key) {
+                self.queue.push_back(env);
+            }
+        }
+        let out = self.coord.tick();
+        self.post_from_coord(out);
+        for slot in 0..self.clients.len() {
+            let conn = self.conn_of_slot[slot];
+            if let Some(client) = self.clients[slot].as_mut() {
+                let lines = client.tick();
+                self.post_from_client(conn, lines);
+            }
+        }
+        let mut delivered = 0usize;
+        while let Some(env) = self.queue.pop_front() {
+            delivered += 1;
+            if delivered > MAX_DELIVERIES_PER_STEP {
+                bail!("delivery cascade exceeded {MAX_DELIVERIES_PER_STEP} frames in one tick");
+            }
+            match env.dest {
+                Dest::Coord { conn } => {
+                    self.trace.push(format!("t={now} c{conn}->coord {}", env.line));
+                    let replies = self.coord.on_line(conn, &env.line);
+                    self.post_from_coord(replies);
+                }
+                Dest::Client { conn } => {
+                    let Some(slot) = self.slot_of_conn(conn) else {
+                        continue; // connection retired by a rejoin
+                    };
+                    let Some(client) = self.clients[slot].as_mut() else {
+                        continue; // killed: frames to it fall on the floor
+                    };
+                    self.trace.push(format!("t={now} coord->c{conn} {}", env.line));
+                    let replies = client.on_line(&env.line);
+                    self.post_from_client(conn, replies);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Step until the coordinator finishes all rounds; `false` if it did
+    /// not finish within `max_steps`.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<bool> {
+        for _ in 0..max_steps {
+            if self.coord.is_done() {
+                return Ok(true);
+            }
+            self.step()?;
+        }
+        Ok(self.coord.is_done())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::coordinator::Phase;
+
+    fn small_cfg(clients: usize) -> DistConfig {
+        DistConfig {
+            clients,
+            rounds: 3,
+            batches_per_round: 4,
+            batch_size: 2,
+            num_classes: 16,
+            feat_dim: 4,
+            lr: 0.1,
+            seed: 42,
+            lease_ms: 1000,
+            resend_ms: 200,
+        }
+    }
+
+    #[test]
+    fn clean_run_completes_all_rounds() {
+        let mut net = SimNet::new(small_cfg(2), 2, None).unwrap();
+        assert!(net.run_to_completion(200).unwrap());
+        assert_eq!(net.coord().round_stats().len(), 3);
+        assert!(net.coord().round_stats().iter().all(|r| r.accounted()));
+        assert_eq!(net.coord().stats().evictions, 0);
+        assert!(net.coord().params().w.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn kill_mid_run_reassigns_and_completes() {
+        let mut net = SimNet::new(small_cfg(2), 2, None).unwrap();
+        // run until training is underway, then kill slot 1
+        while net.coord().phase() != Phase::Train {
+            net.step().unwrap();
+        }
+        net.kill(1);
+        assert!(net.run_to_completion(500).unwrap(), "survivor finishes alone");
+        assert!(net.coord().round_stats().iter().all(|r| r.accounted()));
+        assert_eq!(net.coord().stats().evictions, 1);
+    }
+
+    #[test]
+    fn trace_is_identical_across_reruns() {
+        let run = || {
+            let mut net = SimNet::new(small_cfg(2), 2, None).unwrap();
+            net.run_to_completion(200).unwrap();
+            net.trace().to_vec()
+        };
+        let a = run();
+        let b = run();
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+    }
+}

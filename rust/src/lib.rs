@@ -12,7 +12,9 @@
 //!   over the shared scoring core ([`score`]), the serving subsystem
 //!   ([`serve`]: tree-guided beam top-k + batched predict pipeline + the
 //!   fault-tolerant [`serve::daemon`] with deterministic fault injection
-//!   via [`serve::faults`]), the
+//!   via [`utils::faults`]), the distributed training-round protocol
+//!   ([`dist`]: tick-driven coordinator, leased clients, bit-exact
+//!   aggregation), the
 //!   PJRT runtime ([`runtime`]), datasets ([`data`]) and the experiment
 //!   harness ([`exp`]) that regenerates every table and figure of the
 //!   paper.
@@ -32,6 +34,7 @@
 
 pub mod config;
 pub mod data;
+pub mod dist;
 pub mod eval;
 pub mod exp;
 pub mod linalg;
@@ -48,10 +51,11 @@ pub mod utils;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::config::{
-        DaemonConfig, DatasetPreset, Hyper, Method, OverlapMode, RunConfig, ServeConfig,
-        SyntheticConfig, TreeConfig,
+        DaemonConfig, DatasetPreset, DistConfig, Hyper, Method, OverlapMode, RunConfig,
+        ServeConfig, SyntheticConfig, TreeConfig,
     };
     pub use crate::data::{Dataset, Splits};
+    pub use crate::dist::{Coordinator, DistClient, RoundStats};
     pub use crate::eval::{EvalResult, Evaluator};
     pub use crate::model::ParamStore;
     pub use crate::runtime::Registry;

@@ -35,6 +35,22 @@
 //!                    [--beam 64] [--exact] [--parallelism N]
 //!                    (one-at-a-time submission through the request
 //!                    batcher; results bit-identical to one big batch)
+//! repro coord        [--socket /path.sock] [--clients 2] [--rounds 8]
+//!                    [--batches-per-round 8] [--batch 64] [--classes 256]
+//!                    [--feat-dim 32] [--lr 0.05] [--seed 1]
+//!                    [--lease-ms 1000] [--resend-ms 200]
+//!                    [--faults seed=7,drop=0.05,delay=0.05:3,dup=0.03,corrupt=0.02]
+//!                    (distributed training rounds: waits for --clients
+//!                    workers, assigns each round's batch seqs, applies
+//!                    update sets at Witness in seq order — final params
+//!                    are bit-identical for any worker count, kill/rejoin
+//!                    included; the fault plan — also via REPRO_FAULTS —
+//!                    gates inbound frames for chaos testing)
+//! repro worker       --connect /path.sock [--name w0]
+//!                    [--heartbeat-ms 250] [--resend-ms 200]
+//!                    (one training client: joins, mirrors the parameter
+//!                    snapshot, computes assigned batches, resends until
+//!                    acked; rejoins through Warmup after a lease loss)
 //! repro exp table1
 //! repro exp figure1  --dataset wiki-sim --seconds 60 [--methods adv,uniform]
 //! repro exp appendix-a2 --seconds 60
@@ -63,11 +79,29 @@
 //!                                       cancelled past its latency budget
 //! <idx> error <message>                 malformed request / worker crash
 //! ```
+//!
+//! # Distributed round protocol (coord/worker)
+//!
+//! One frame per line, every frame prefixed with the protocol version
+//! `dist1`; float payloads travel as fixed-width hex bit patterns so
+//! parameters survive the wire bit-exactly (see `dist::protocol`).
+//! Malformed or misaddressed frames are answered with a typed error
+//! frame, `dist1 error tag=<tag> detail=...`, where `<tag>` is one of:
+//!
+//! ```text
+//! bad-version     version token is not dist1
+//! bad-frame       unknown frame type / wrong structure / bad payload
+//! bad-field       a field is missing or fails to parse
+//! bad-length      a vector payload disagrees with its declared count
+//! stale-round     frame addresses an already-committed round
+//! unknown-client  sender's lease expired (or id never issued) — rejoin
+//! ```
 
 use adv_softmax::config::{
-    DaemonConfig, DatasetPreset, Method, RunConfig, ServeConfig, SyntheticConfig,
+    DaemonConfig, DatasetPreset, DistConfig, Method, RunConfig, ServeConfig, SyntheticConfig,
 };
 use adv_softmax::data::Splits;
+use adv_softmax::dist;
 use adv_softmax::exp;
 use adv_softmax::runtime::Registry;
 use adv_softmax::sampler::AdversarialSampler;
@@ -81,7 +115,8 @@ use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-const USAGE: &str = "usage: repro <data-stats|tree-fit|train|serve|predict|exp> [options]
+const USAGE: &str =
+    "usage: repro <data-stats|tree-fit|train|serve|predict|coord|worker|exp> [options]
   global: --artifacts <dir>
   run `repro help` for the full command list (also in rust/src/main.rs)";
 
@@ -100,6 +135,8 @@ fn main() -> Result<()> {
         Some("train") => train(&args),
         Some("serve") => serve(&args),
         Some("predict") => predict(&args),
+        Some("coord") => coord(&args),
+        Some("worker") => worker(&args),
         Some("exp") => run_exp(&args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -430,6 +467,84 @@ fn predict(args: &Args) -> Result<()> {
     for t in batcher.flush_with(&pool) {
         println!("{}", format_topk(&t));
     }
+    Ok(())
+}
+
+/// `repro coord`: serve distributed training rounds over a Unix socket.
+/// Progress goes to stderr; the per-round learning curve and the final
+/// parameter checksum (the cross-worker-count parity witness) to stdout.
+fn coord(args: &Args) -> Result<()> {
+    let d = DistConfig::default();
+    let cfg = DistConfig {
+        clients: args.get("clients", d.clients)?,
+        rounds: args.get("rounds", d.rounds)?,
+        batches_per_round: args.get("batches-per-round", d.batches_per_round)?,
+        batch_size: args.get("batch", d.batch_size)?,
+        num_classes: args.get("classes", d.num_classes)?,
+        feat_dim: args.get("feat-dim", d.feat_dim)?,
+        lr: args.get("lr", d.lr)?,
+        seed: args.get("seed", d.seed)?,
+        lease_ms: args.get("lease-ms", d.lease_ms)?,
+        resend_ms: args.get("resend-ms", d.resend_ms)?,
+    };
+    cfg.validate()?;
+    let faults = match args.get_opt::<String>("faults")? {
+        Some(spec) => Some(FaultPlan::parse(&spec)?),
+        None => FaultPlan::from_env()?,
+    };
+    let socket: PathBuf = args
+        .get_opt("socket")?
+        .unwrap_or_else(|| PathBuf::from("/tmp/repro-dist.sock"));
+    args.finish()?;
+
+    eprintln!(
+        "coord: listening on {socket:?} — waiting for {} clients \
+         ({} rounds x {} batches of {}, C={} K={} lr={} seed={})",
+        cfg.clients,
+        cfg.rounds,
+        cfg.batches_per_round,
+        cfg.batch_size,
+        cfg.num_classes,
+        cfg.feat_dim,
+        cfg.lr,
+        cfg.seed,
+    );
+    if let Some(plan) = &faults {
+        eprintln!("coord: fault injection active ({})", plan.describe());
+    }
+    let coord = dist::run_coord_socket(&cfg, &socket, faults)?;
+    println!("round       loss  applied  reassigned  evictions");
+    for r in coord.round_stats() {
+        println!(
+            "{:>5} {:>10.6} {:>8} {:>11} {:>10}",
+            r.round,
+            r.loss(),
+            r.applied,
+            r.reassigned,
+            r.evictions
+        );
+    }
+    println!("params_checksum {:016x}", dist::params_checksum(coord.params()));
+    eprintln!("coord: {}", coord.stats().summary());
+    anyhow::ensure!(
+        coord.round_stats().iter().all(|r| r.accounted()),
+        "round accounting failed: some update was lost or double-applied"
+    );
+    Ok(())
+}
+
+/// `repro worker`: one training client against a coordinator socket.
+fn worker(args: &Args) -> Result<()> {
+    let socket: PathBuf = args.require("connect")?;
+    let name: String = args.get("name", "w0".to_string())?;
+    let heartbeat_ms: u64 = args.get("heartbeat-ms", 250)?;
+    let resend_ms: u64 = args.get("resend-ms", 200)?;
+    args.finish()?;
+    let stats = dist::run_worker_socket(&socket, &name, heartbeat_ms, resend_ms)?;
+    eprintln!(
+        "worker {name}: computed={} resent={} acked={} applies={} resyncs={} rejoins={}",
+        stats.computed, stats.resent, stats.acked, stats.applies, stats.resyncs, stats.rejoins,
+    );
     Ok(())
 }
 

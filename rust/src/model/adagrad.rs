@@ -57,6 +57,12 @@ impl Adagrad {
         (&mut self.gw2, &mut self.gb2)
     }
 
+    /// Read-only view of the (weight, bias) accumulators, for the dist
+    /// layer's bit-exact parameter snapshots and checksums.
+    pub(crate) fn accumulators(&self) -> (&[f32], &[f32]) {
+        (&self.gw2, &self.gb2)
+    }
+
     /// Reset all accumulators (e.g. between experiment repetitions).
     pub fn reset(&mut self) {
         self.gw2.iter_mut().for_each(|v| *v = 0.0);

@@ -54,13 +54,14 @@ use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use crate::utils::pool::spawn_named;
+#[cfg(unix)]
+use crate::utils::transport::LineServer;
 
 // The daemon never reads the wall clock directly: all deadline and
 // coalescing decisions go through the injectable `Clock` from the
@@ -596,11 +597,10 @@ impl Daemon {
     }
 }
 
-/// One unit of transport input for [`run_loop`].
-pub enum Inbound {
-    Line { client: usize, line: String },
-    Shutdown,
-}
+// One unit of transport input for [`run_loop`] — shared with the dist
+// coordinator's socket glue, so it lives in the transport layer now
+// (re-exported here for existing importers).
+pub use crate::utils::transport::Inbound;
 
 /// Render a response in the line protocol (`idx` is the per-client
 /// request index).
@@ -724,65 +724,11 @@ pub fn run_stdin_daemon(daemon: &mut Daemon) -> Result<DaemonStats> {
 /// request indices; responses go back on the connection that asked.
 #[cfg(unix)]
 pub fn run_socket_daemon(daemon: &mut Daemon, path: &Path) -> Result<DaemonStats> {
-    use std::io::BufReader;
-    use std::os::unix::net::{UnixListener, UnixStream};
-
-    if path.exists() {
-        std::fs::remove_file(path).with_context(|| format!("remove stale socket {path:?}"))?;
-    }
-    let listener =
-        UnixListener::bind(path).with_context(|| format!("bind unix socket {path:?}"))?;
-    listener
-        .set_nonblocking(true)
-        .context("set socket listener non-blocking")?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let writers: Arc<Mutex<HashMap<usize, UnixStream>>> = Arc::new(Mutex::new(HashMap::new()));
-    let (tx, rx) = mpsc::channel();
-    let acceptor = {
-        let stop = stop.clone();
-        let writers = writers.clone();
-        spawn_named("socket-accept", move || {
-            let mut next_client = 0usize;
-            while !stop.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let client = next_client;
-                        next_client += 1;
-                        if let Ok(writer) = stream.try_clone() {
-                            writers.lock().unwrap().insert(client, writer);
-                        }
-                        let tx = tx.clone();
-                        let writers = writers.clone();
-                        let _ = spawn_named(&format!("socket-client-{client}"), move || {
-                            for line in BufReader::new(stream).lines() {
-                                let Ok(line) = line else { break };
-                                if tx.send(Inbound::Line { client, line }).is_err() {
-                                    break;
-                                }
-                            }
-                            writers.lock().unwrap().remove(&client);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        thread::sleep(Duration::from_millis(20));
-                    }
-                    Err(_) => break,
-                }
-            }
-        })
-        .context("spawn socket acceptor")?
-    };
-    let stats = {
-        let writers = writers.clone();
-        run_loop(daemon, &rx, move |client, idx, kind| {
-            if let Some(w) = writers.lock().unwrap().get_mut(&client) {
-                let _ = writeln!(w, "{}", format_line(idx, kind));
-            }
-        })
-    };
-    stop.store(true, Ordering::SeqCst);
-    let _ = acceptor.join();
-    std::fs::remove_file(path).ok();
+    let server = LineServer::bind(path)?;
+    let stats = run_loop(daemon, server.rx(), |client, idx, kind| {
+        server.send(client, &format_line(idx, kind));
+    });
+    server.shutdown();
     Ok(stats)
 }
 

@@ -1,254 +1,7 @@
-//! Deterministic fault injection for the serving daemon.
-//!
-//! Chaos testing is only useful when a failure reproduces: a fault plan is
-//! a **pure function of (seed, request id)**, so the same plan over the
-//! same request stream injects exactly the same faults no matter how the
-//! daemon's threads interleave. Decisions are drawn from counter-based RNG
-//! streams ([`crate::utils::Rng::stream`]) — the same keystone the
-//! pipelined trainer uses for batch determinism — with one domain salt per
-//! fault kind so the panic/slow/malform decisions for a request are
-//! independent.
-//!
-//! Three fault kinds, matching the daemon's failure surfaces:
-//!
-//! * **worker panic** — the predict worker panics while serving the batch
-//!   that contains the poisoned request (exercises supervision/respawn).
-//! * **slow stage** — the predict worker sleeps before serving the batch
-//!   (exercises deadline cancellation, backpressure and degradation).
-//! * **malformed request** — the request line is corrupted before parsing
-//!   (exercises the typed `error` response path).
-//!
-//! A plan comes from the `REPRO_FAULTS` environment variable (the CI chaos
-//! job sets it) or a `--faults` spec:
-//!
-//! ```text
-//! seed=7,panic=0.02,slow=0.05:3,malform=0.05
-//! ```
-//!
-//! `panic`/`malform` are per-request probabilities; `slow=RATE:MS` sleeps
-//! `MS` milliseconds on batches containing a selected request. Omitted
-//! keys default to zero (fault disabled).
+//! Re-export shim: the fault-injection plan moved to [`crate::utils::faults`]
+//! when the distributed-training layer started sharing it (one
+//! `REPRO_FAULTS` spec drives both the daemon's request faults and the
+//! dist protocol's frame faults). Existing `serve::faults::FaultPlan`
+//! importers keep working through this path.
 
-use crate::utils::Rng;
-use anyhow::{bail, Context, Result};
-
-/// Domain salts separating the per-kind decision streams.
-const SALT_PANIC: u64 = 0x70_61_6e; // "pan"
-const SALT_SLOW: u64 = 0x73_6c_6f; // "slo"
-const SALT_MALFORM: u64 = 0x6d_61_6c; // "mal"
-
-/// A seeded, reproducible fault-injection plan (see module docs).
-#[derive(Clone, Debug, PartialEq)]
-pub struct FaultPlan {
-    pub seed: u64,
-    /// Per-request probability of panicking the predict worker.
-    pub panic_rate: f64,
-    /// Per-request probability of a slow stage.
-    pub slow_rate: f64,
-    /// Sleep injected when a slow stage fires (milliseconds).
-    pub slow_ms: u64,
-    /// Per-request probability of corrupting the request line.
-    pub malform_rate: f64,
-}
-
-impl FaultPlan {
-    /// A plan with every fault disabled (useful as a parse base).
-    pub fn disabled(seed: u64) -> Self {
-        Self { seed, panic_rate: 0.0, slow_rate: 0.0, slow_ms: 0, malform_rate: 0.0 }
-    }
-
-    /// Parse a `key=value,...` spec (see module docs for the grammar).
-    pub fn parse(spec: &str) -> Result<Self> {
-        let mut plan = Self::disabled(0);
-        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-            let (key, value) = part
-                .split_once('=')
-                .with_context(|| format!("fault spec {part:?}: expected key=value"))?;
-            match key.trim() {
-                "seed" => {
-                    plan.seed = value
-                        .trim()
-                        .parse()
-                        .with_context(|| format!("fault spec seed {value:?}"))?;
-                }
-                "panic" => {
-                    plan.panic_rate = parse_rate("panic", value)?;
-                }
-                "malform" => {
-                    plan.malform_rate = parse_rate("malform", value)?;
-                }
-                "slow" => {
-                    // RATE:MS, e.g. slow=0.05:3
-                    let (rate, ms) = value
-                        .split_once(':')
-                        .with_context(|| format!("fault spec slow {value:?}: expected RATE:MS"))?;
-                    plan.slow_rate = parse_rate("slow", rate)?;
-                    plan.slow_ms = ms
-                        .trim()
-                        .parse()
-                        .with_context(|| format!("fault spec slow duration {ms:?}"))?;
-                }
-                other => bail!("unknown fault spec key {other:?} (seed|panic|slow|malform)"),
-            }
-        }
-        if plan.slow_rate > 0.0 && plan.slow_ms == 0 {
-            bail!("fault spec: slow rate set but duration is 0 ms");
-        }
-        Ok(plan)
-    }
-
-    /// The `REPRO_FAULTS` plan, if the variable is set. An unparsable value
-    /// is a hard error rather than a silent no-fault fallback — a CI chaos
-    /// leg meant to inject faults must never quietly run clean.
-    pub fn from_env() -> Result<Option<Self>> {
-        match std::env::var("REPRO_FAULTS") {
-            Ok(spec) => Ok(Some(
-                Self::parse(&spec).with_context(|| format!("invalid REPRO_FAULTS={spec:?}"))?,
-            )),
-            Err(_) => Ok(None),
-        }
-    }
-
-    /// True when at least one fault kind can fire.
-    pub fn is_active(&self) -> bool {
-        self.panic_rate > 0.0 || self.slow_rate > 0.0 || self.malform_rate > 0.0
-    }
-
-    /// Uniform [0,1) draw for `(kind, request id)` — pure, order-free.
-    fn draw(&self, salt: u64, request_id: u64) -> f64 {
-        Rng::new(self.seed).stream(salt, request_id).next_f64()
-    }
-
-    /// Should the worker panic while serving the batch containing this
-    /// request?
-    pub fn worker_panic(&self, request_id: u64) -> bool {
-        self.panic_rate > 0.0 && self.draw(SALT_PANIC, request_id) < self.panic_rate
-    }
-
-    /// Injected sleep for the batch containing this request, if any.
-    pub fn slow_stage(&self, request_id: u64) -> Option<u64> {
-        (self.slow_rate > 0.0 && self.draw(SALT_SLOW, request_id) < self.slow_rate)
-            .then_some(self.slow_ms)
-    }
-
-    /// Should this request's line be corrupted before parsing?
-    pub fn malform(&self, request_id: u64) -> bool {
-        self.malform_rate > 0.0 && self.draw(SALT_MALFORM, request_id) < self.malform_rate
-    }
-
-    /// Corrupt a request line the way a broken client would: truncate and
-    /// append a non-numeric token, so parsing fails with a typed error.
-    pub fn corrupt_line(&self, line: &str) -> String {
-        let keep = line.len() / 2;
-        format!("{}<corrupt>", &line[..keep.min(line.len())])
-    }
-
-    /// Human-readable one-liner for startup banners.
-    pub fn describe(&self) -> String {
-        format!(
-            "seed={} panic={} slow={}:{}ms malform={}",
-            self.seed, self.panic_rate, self.slow_rate, self.slow_ms, self.malform_rate
-        )
-    }
-}
-
-fn parse_rate(key: &str, value: &str) -> Result<f64> {
-    let rate: f64 = value
-        .trim()
-        .parse()
-        .with_context(|| format!("fault spec {key} rate {value:?}"))?;
-    if !(0.0..=1.0).contains(&rate) {
-        bail!("fault spec {key} rate {rate} not in [0, 1]");
-    }
-    Ok(rate)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn parses_full_spec() {
-        let plan = FaultPlan::parse("seed=7,panic=0.02,slow=0.05:3,malform=0.1").unwrap();
-        assert_eq!(plan.seed, 7);
-        assert_eq!(plan.panic_rate, 0.02);
-        assert_eq!(plan.slow_rate, 0.05);
-        assert_eq!(plan.slow_ms, 3);
-        assert_eq!(plan.malform_rate, 0.1);
-        assert!(plan.is_active());
-    }
-
-    #[test]
-    fn omitted_keys_disable_faults() {
-        let plan = FaultPlan::parse("seed=3").unwrap();
-        assert_eq!(plan, FaultPlan::disabled(3));
-        assert!(!plan.is_active());
-        for id in 0..100 {
-            assert!(!plan.worker_panic(id));
-            assert!(plan.slow_stage(id).is_none());
-            assert!(!plan.malform(id));
-        }
-    }
-
-    #[test]
-    fn rejects_bad_specs() {
-        assert!(FaultPlan::parse("panic").is_err(), "missing =");
-        assert!(FaultPlan::parse("panic=2.0").is_err(), "rate > 1");
-        assert!(FaultPlan::parse("panic=-0.1").is_err(), "rate < 0");
-        assert!(FaultPlan::parse("slow=0.5").is_err(), "slow missing :MS");
-        assert!(FaultPlan::parse("slow=0.5:0").is_err(), "slow with 0 ms");
-        assert!(FaultPlan::parse("bogus=1").is_err(), "unknown key");
-        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
-    }
-
-    #[test]
-    fn decisions_are_pure_functions_of_seed_and_id() {
-        let a = FaultPlan::parse("seed=11,panic=0.3,slow=0.3:2,malform=0.3").unwrap();
-        let b = a.clone();
-        for id in 0..500 {
-            assert_eq!(a.worker_panic(id), b.worker_panic(id));
-            assert_eq!(a.slow_stage(id), b.slow_stage(id));
-            assert_eq!(a.malform(id), b.malform(id));
-        }
-        // query order must not matter
-        let forward: Vec<bool> = (0..500).map(|id| a.worker_panic(id)).collect();
-        let backward: Vec<bool> = (0..500).rev().map(|id| a.worker_panic(id)).collect();
-        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn rates_are_roughly_respected_and_kinds_independent() {
-        let plan = FaultPlan::parse("seed=5,panic=0.2,slow=0.2:1,malform=0.2").unwrap();
-        let n = 20_000u64;
-        let panics = (0..n).filter(|&id| plan.worker_panic(id)).count() as f64;
-        let slows = (0..n).filter(|&id| plan.slow_stage(id).is_some()).count() as f64;
-        let malforms = (0..n).filter(|&id| plan.malform(id)).count() as f64;
-        for (kind, count) in [("panic", panics), ("slow", slows), ("malform", malforms)] {
-            let frac = count / n as f64;
-            assert!((frac - 0.2).abs() < 0.02, "{kind} rate {frac} far from 0.2");
-        }
-        // kinds do not fire in lockstep (independent streams)
-        let both = (0..n)
-            .filter(|&id| plan.worker_panic(id) && plan.malform(id))
-            .count() as f64;
-        let frac = both / n as f64;
-        assert!((frac - 0.04).abs() < 0.02, "panic∧malform rate {frac} far from 0.04");
-    }
-
-    #[test]
-    fn different_seeds_give_different_plans() {
-        let a = FaultPlan::parse("seed=1,panic=0.5").unwrap();
-        let b = FaultPlan::parse("seed=2,panic=0.5").unwrap();
-        let same = (0..256).filter(|&id| a.worker_panic(id) == b.worker_panic(id)).count();
-        assert!(same < 200, "seeds 1 and 2 agree on {same}/256 decisions");
-    }
-
-    #[test]
-    fn corrupt_line_breaks_float_parsing() {
-        let plan = FaultPlan::disabled(0);
-        let line = "0.5 1.5 2.5 3.5";
-        let bad = plan.corrupt_line(line);
-        assert!(bad.contains("<corrupt>"));
-        assert!(bad.split_whitespace().any(|t| t.parse::<f32>().is_err()));
-    }
-}
+pub use crate::utils::faults::*;

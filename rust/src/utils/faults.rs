@@ -1,0 +1,512 @@
+//! Deterministic fault injection shared by the serving daemon and the
+//! distributed-training layer.
+//!
+//! Chaos testing is only useful when a failure reproduces: a fault plan is
+//! a **pure function of (seed, stage, id)**, so the same plan over the
+//! same event stream injects exactly the same faults no matter how the
+//! process's threads interleave. Decisions are drawn from counter-based RNG
+//! streams ([`crate::utils::Rng::stream`]) — the same keystone the
+//! pipelined trainer uses for batch determinism — with one domain salt per
+//! fault kind (mixed with an FNV hash of the stage name) so the decisions
+//! for an event are independent across kinds and across stages.
+//!
+//! Fault kinds, matching the two consumers' failure surfaces:
+//!
+//! * **worker panic** — the daemon's predict worker panics while serving
+//!   the batch that contains the poisoned request (supervision/respawn).
+//! * **slow stage** — the predict worker sleeps before serving the batch
+//!   (deadline cancellation, backpressure and degradation).
+//! * **malformed request** — the request line is corrupted before parsing
+//!   (the typed `error` response path).
+//! * **drop / delay / duplicate / corrupt frame** — transport-level faults
+//!   for the dist round protocol (`dist::`): a frame is dropped, held for
+//!   `MS` milliseconds, delivered twice, or corrupted in flight
+//!   (retransmission, lease expiry, duplicate suppression, typed frame
+//!   errors).
+//!
+//! A plan comes from the `REPRO_FAULTS` environment variable (the CI chaos
+//! jobs set it) or a `--faults` spec:
+//!
+//! ```text
+//! seed=7,panic=0.02,slow=0.05:3,malform=0.05,drop=0.1,delay=0.05:4,dup=0.05,corrupt=0.02
+//! ```
+//!
+//! `panic`/`malform`/`drop`/`dup`/`corrupt` are per-event probabilities;
+//! `slow=RATE:MS` and `delay=RATE:MS` carry a duration. Omitted keys
+//! default to zero (fault disabled), so the daemon's original spec syntax
+//! parses unchanged and both subsystems can share one variable — each
+//! reads only the kinds that apply to it. [`FaultPlan::describe`] emits
+//! the canonical spec, so `parse ∘ describe` is the identity.
+
+use crate::utils::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Domain salts separating the per-kind decision streams.
+const SALT_PANIC: u64 = 0x70_61_6e; // "pan"
+const SALT_SLOW: u64 = 0x73_6c_6f; // "slo"
+const SALT_MALFORM: u64 = 0x6d_61_6c; // "mal"
+const SALT_DROP: u64 = 0x64_72_6f; // "dro"
+const SALT_DELAY: u64 = 0x64_65_6c; // "del"
+const SALT_DUP: u64 = 0x64_75_70; // "dup"
+const SALT_CORRUPT: u64 = 0x63_6f_72; // "cor"
+
+/// FNV-1a over the stage name: folds the stage into the stream domain so
+/// the same event id draws independently at different pipeline stages.
+fn stage_salt(stage: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in stage.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A seeded, reproducible fault-injection plan (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-request probability of panicking the predict worker.
+    pub panic_rate: f64,
+    /// Per-request probability of a slow stage.
+    pub slow_rate: f64,
+    /// Sleep injected when a slow stage fires (milliseconds).
+    pub slow_ms: u64,
+    /// Per-request probability of corrupting the request line.
+    pub malform_rate: f64,
+    /// Per-frame probability of dropping a dist frame in flight.
+    pub drop_rate: f64,
+    /// Per-frame probability of delaying a dist frame.
+    pub delay_rate: f64,
+    /// Hold applied when a delay fires (milliseconds).
+    pub delay_ms: u64,
+    /// Per-frame probability of delivering a dist frame twice.
+    pub dup_rate: f64,
+    /// Per-frame probability of corrupting a dist frame in flight.
+    pub corrupt_rate: f64,
+}
+
+impl FaultPlan {
+    /// A plan with every fault disabled (useful as a parse base).
+    pub fn disabled(seed: u64) -> Self {
+        Self {
+            seed,
+            panic_rate: 0.0,
+            slow_rate: 0.0,
+            slow_ms: 0,
+            malform_rate: 0.0,
+            drop_rate: 0.0,
+            delay_rate: 0.0,
+            delay_ms: 0,
+            dup_rate: 0.0,
+            corrupt_rate: 0.0,
+        }
+    }
+
+    /// Parse a `key=value,...` spec (see module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::disabled(0);
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("fault spec {part:?}: expected key=value"))?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed = value
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("fault spec seed {value:?}"))?;
+                }
+                "panic" => {
+                    plan.panic_rate = parse_rate("panic", value)?;
+                }
+                "malform" => {
+                    plan.malform_rate = parse_rate("malform", value)?;
+                }
+                "slow" => {
+                    let (rate, ms) = parse_rate_ms("slow", value)?;
+                    plan.slow_rate = rate;
+                    plan.slow_ms = ms;
+                }
+                "drop" => {
+                    plan.drop_rate = parse_rate("drop", value)?;
+                }
+                "delay" => {
+                    let (rate, ms) = parse_rate_ms("delay", value)?;
+                    plan.delay_rate = rate;
+                    plan.delay_ms = ms;
+                }
+                "dup" => {
+                    plan.dup_rate = parse_rate("dup", value)?;
+                }
+                "corrupt" => {
+                    plan.corrupt_rate = parse_rate("corrupt", value)?;
+                }
+                other => bail!(
+                    "unknown fault spec key {other:?} \
+                     (seed|panic|slow|malform|drop|delay|dup|corrupt)"
+                ),
+            }
+        }
+        if plan.slow_rate > 0.0 && plan.slow_ms == 0 {
+            bail!("fault spec: slow rate set but duration is 0 ms");
+        }
+        if plan.delay_rate > 0.0 && plan.delay_ms == 0 {
+            bail!("fault spec: delay rate set but duration is 0 ms");
+        }
+        Ok(plan)
+    }
+
+    /// The `REPRO_FAULTS` plan, if the variable is set. An unparsable value
+    /// is a hard error rather than a silent no-fault fallback — a CI chaos
+    /// leg meant to inject faults must never quietly run clean.
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var("REPRO_FAULTS") {
+            Ok(spec) => Ok(Some(
+                Self::parse(&spec).with_context(|| format!("invalid REPRO_FAULTS={spec:?}"))?,
+            )),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// True when at least one fault kind can fire.
+    pub fn is_active(&self) -> bool {
+        self.panic_rate > 0.0
+            || self.slow_rate > 0.0
+            || self.malform_rate > 0.0
+            || self.drop_rate > 0.0
+            || self.delay_rate > 0.0
+            || self.dup_rate > 0.0
+            || self.corrupt_rate > 0.0
+    }
+
+    /// Uniform [0,1) draw for `(kind, id)` — pure, order-free.
+    fn draw(&self, salt: u64, id: u64) -> f64 {
+        Rng::new(self.seed).stream(salt, id).next_f64()
+    }
+
+    /// Uniform [0,1) draw for `(kind, stage, id)` — pure, order-free. The
+    /// same id draws independently at different stages, so e.g. a frame
+    /// dropped client→coordinator is not also dropped on the way back.
+    fn stage_draw(&self, salt: u64, stage: &str, id: u64) -> f64 {
+        self.draw(salt ^ stage_salt(stage), id)
+    }
+
+    /// Should the worker panic while serving the batch containing this
+    /// request?
+    pub fn worker_panic(&self, request_id: u64) -> bool {
+        self.panic_rate > 0.0 && self.draw(SALT_PANIC, request_id) < self.panic_rate
+    }
+
+    /// Injected sleep for the batch containing this request, if any.
+    pub fn slow_stage(&self, request_id: u64) -> Option<u64> {
+        (self.slow_rate > 0.0 && self.draw(SALT_SLOW, request_id) < self.slow_rate)
+            .then_some(self.slow_ms)
+    }
+
+    /// Should this request's line be corrupted before parsing?
+    pub fn malform(&self, request_id: u64) -> bool {
+        self.malform_rate > 0.0 && self.draw(SALT_MALFORM, request_id) < self.malform_rate
+    }
+
+    /// Should this frame be dropped in flight at `stage`?
+    pub fn drop_frame(&self, stage: &str, id: u64) -> bool {
+        self.drop_rate > 0.0 && self.stage_draw(SALT_DROP, stage, id) < self.drop_rate
+    }
+
+    /// Hold for this frame at `stage`, if a delay fires (milliseconds).
+    pub fn delay_frame(&self, stage: &str, id: u64) -> Option<u64> {
+        (self.delay_rate > 0.0 && self.stage_draw(SALT_DELAY, stage, id) < self.delay_rate)
+            .then_some(self.delay_ms)
+    }
+
+    /// Should this frame be delivered twice at `stage`?
+    pub fn dup_frame(&self, stage: &str, id: u64) -> bool {
+        self.dup_rate > 0.0 && self.stage_draw(SALT_DUP, stage, id) < self.dup_rate
+    }
+
+    /// Should this frame be corrupted in flight at `stage`?
+    pub fn corrupt_frame(&self, stage: &str, id: u64) -> bool {
+        self.corrupt_rate > 0.0 && self.stage_draw(SALT_CORRUPT, stage, id) < self.corrupt_rate
+    }
+
+    /// Corrupt a line the way a broken peer would: truncate and append a
+    /// non-numeric token, so parsing fails with a typed error.
+    pub fn corrupt_line(&self, line: &str) -> String {
+        let keep = line.len() / 2;
+        format!("{}<corrupt>", &line[..keep.min(line.len())])
+    }
+
+    /// The canonical spec for this plan: used in startup banners, and
+    /// [`FaultPlan::parse`] round-trips it (`parse(describe(p)) == p`).
+    pub fn describe(&self) -> String {
+        format!(
+            "seed={},panic={},slow={}:{},malform={},drop={},delay={}:{},dup={},corrupt={}",
+            self.seed,
+            self.panic_rate,
+            self.slow_rate,
+            self.slow_ms,
+            self.malform_rate,
+            self.drop_rate,
+            self.delay_rate,
+            self.delay_ms,
+            self.dup_rate,
+            self.corrupt_rate
+        )
+    }
+}
+
+fn parse_rate(key: &str, value: &str) -> Result<f64> {
+    let rate: f64 = value
+        .trim()
+        .parse()
+        .with_context(|| format!("fault spec {key} rate {value:?}"))?;
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("fault spec {key} rate {rate} not in [0, 1]");
+    }
+    Ok(rate)
+}
+
+/// Parse a `RATE:MS` value, e.g. `slow=0.05:3`.
+fn parse_rate_ms(key: &str, value: &str) -> Result<(f64, u64)> {
+    let (rate, ms) = value
+        .split_once(':')
+        .with_context(|| format!("fault spec {key} {value:?}: expected RATE:MS"))?;
+    let rate = parse_rate(key, rate)?;
+    let ms = ms
+        .trim()
+        .parse()
+        .with_context(|| format!("fault spec {key} duration {ms:?}"))?;
+    Ok((rate, ms))
+}
+
+/// The decision for one frame routed through a [`FaultGate`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct GatedFrame {
+    /// Hold before delivery (0 = deliver now).
+    pub delay_ms: u64,
+    /// The deliveries: empty = dropped, two entries = duplicated; entries
+    /// may be corrupted copies of the input.
+    pub lines: Vec<String>,
+}
+
+/// Frame-level fault application shared by the dist in-memory harness and
+/// the socket glue: each frame passing through gets a monotonically
+/// increasing id, so retransmissions draw fresh decisions (a resent frame
+/// is not deterministically re-dropped forever) while the whole sequence
+/// stays a pure function of (plan, stage, delivery order).
+#[derive(Clone, Debug)]
+pub struct FaultGate {
+    plan: Option<FaultPlan>,
+    stage: &'static str,
+    counter: u64,
+}
+
+impl FaultGate {
+    pub fn new(plan: Option<FaultPlan>, stage: &'static str) -> Self {
+        Self { plan, stage, counter: 0 }
+    }
+
+    /// Route one frame through the gate.
+    pub fn pass(&mut self, line: &str) -> GatedFrame {
+        let id = self.counter;
+        self.counter += 1;
+        let Some(plan) = &self.plan else {
+            return GatedFrame { delay_ms: 0, lines: vec![line.to_string()] };
+        };
+        if plan.drop_frame(self.stage, id) {
+            return GatedFrame { delay_ms: 0, lines: Vec::new() };
+        }
+        let delivered = if plan.corrupt_frame(self.stage, id) {
+            plan.corrupt_line(line)
+        } else {
+            line.to_string()
+        };
+        let mut lines = vec![delivered];
+        if plan.dup_frame(self.stage, id) {
+            lines.push(lines[0].clone());
+        }
+        let delay_ms = plan.delay_frame(self.stage, id).unwrap_or(0);
+        GatedFrame { delay_ms, lines }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let plan = FaultPlan::parse("seed=7,panic=0.02,slow=0.05:3,malform=0.1").unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.panic_rate, 0.02);
+        assert_eq!(plan.slow_rate, 0.05);
+        assert_eq!(plan.slow_ms, 3);
+        assert_eq!(plan.malform_rate, 0.1);
+        assert!(plan.is_active());
+    }
+
+    /// The daemon's original spec grammar (pre-dist) must keep parsing
+    /// byte-for-byte as before: old keys only, new fields all zero.
+    #[test]
+    fn daemon_spec_syntax_is_back_compatible() {
+        let plan = FaultPlan::parse("seed=20260807,panic=0.05,slow=0.03:5,malform=0.05").unwrap();
+        assert_eq!(plan.seed, 20260807);
+        assert_eq!(plan.panic_rate, 0.05);
+        assert_eq!(plan.slow_rate, 0.03);
+        assert_eq!(plan.slow_ms, 5);
+        assert_eq!(plan.malform_rate, 0.05);
+        assert_eq!(plan.drop_rate, 0.0);
+        assert_eq!(plan.delay_rate, 0.0);
+        assert_eq!(plan.delay_ms, 0);
+        assert_eq!(plan.dup_rate, 0.0);
+        assert_eq!(plan.corrupt_rate, 0.0);
+        // old-kind decisions must be reachable without any new-kind key
+        for id in 0..50 {
+            let _ = (plan.worker_panic(id), plan.slow_stage(id), plan.malform(id));
+            assert!(!plan.drop_frame("c2s", id));
+            assert!(plan.delay_frame("c2s", id).is_none());
+        }
+    }
+
+    #[test]
+    fn parses_frame_fault_keys() {
+        let plan = FaultPlan::parse("seed=9,drop=0.1,delay=0.05:4,dup=0.02,corrupt=0.01").unwrap();
+        assert_eq!(plan.drop_rate, 0.1);
+        assert_eq!(plan.delay_rate, 0.05);
+        assert_eq!(plan.delay_ms, 4);
+        assert_eq!(plan.dup_rate, 0.02);
+        assert_eq!(plan.corrupt_rate, 0.01);
+        assert!(plan.is_active());
+    }
+
+    #[test]
+    fn omitted_keys_disable_faults() {
+        let plan = FaultPlan::parse("seed=3").unwrap();
+        assert_eq!(plan, FaultPlan::disabled(3));
+        assert!(!plan.is_active());
+        for id in 0..100 {
+            assert!(!plan.worker_panic(id));
+            assert!(plan.slow_stage(id).is_none());
+            assert!(!plan.malform(id));
+            assert!(!plan.drop_frame("x", id));
+            assert!(plan.delay_frame("x", id).is_none());
+            assert!(!plan.dup_frame("x", id));
+            assert!(!plan.corrupt_frame("x", id));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FaultPlan::parse("panic").is_err(), "missing =");
+        assert!(FaultPlan::parse("panic=2.0").is_err(), "rate > 1");
+        assert!(FaultPlan::parse("panic=-0.1").is_err(), "rate < 0");
+        assert!(FaultPlan::parse("slow=0.5").is_err(), "slow missing :MS");
+        assert!(FaultPlan::parse("slow=0.5:0").is_err(), "slow with 0 ms");
+        assert!(FaultPlan::parse("delay=0.5").is_err(), "delay missing :MS");
+        assert!(FaultPlan::parse("delay=0.5:0").is_err(), "delay with 0 ms");
+        assert!(FaultPlan::parse("drop=7").is_err(), "drop rate > 1");
+        assert!(FaultPlan::parse("bogus=1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("seed=x").is_err(), "bad seed");
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_seed_and_id() {
+        let a = FaultPlan::parse("seed=11,panic=0.3,slow=0.3:2,malform=0.3,drop=0.3").unwrap();
+        let b = a.clone();
+        for id in 0..500 {
+            assert_eq!(a.worker_panic(id), b.worker_panic(id));
+            assert_eq!(a.slow_stage(id), b.slow_stage(id));
+            assert_eq!(a.malform(id), b.malform(id));
+            assert_eq!(a.drop_frame("c2s", id), b.drop_frame("c2s", id));
+        }
+        // query order must not matter
+        let forward: Vec<bool> = (0..500).map(|id| a.worker_panic(id)).collect();
+        let backward: Vec<bool> = (0..500).rev().map(|id| a.worker_panic(id)).collect();
+        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stages_draw_independently() {
+        let plan = FaultPlan::parse("seed=13,drop=0.5").unwrap();
+        let a: Vec<bool> = (0..2000).map(|id| plan.drop_frame("c2s", id)).collect();
+        let b: Vec<bool> = (0..2000).map(|id| plan.drop_frame("s2c", id)).collect();
+        let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        // independent fair coins agree ~50% of the time, never ~100%
+        assert!(agree < 1200, "stages c2s/s2c agree on {agree}/2000 draws");
+    }
+
+    #[test]
+    fn rates_are_roughly_respected_and_kinds_independent() {
+        let plan = FaultPlan::parse("seed=5,panic=0.2,slow=0.2:1,malform=0.2,drop=0.2").unwrap();
+        let n = 20_000u64;
+        let panics = (0..n).filter(|&id| plan.worker_panic(id)).count() as f64;
+        let slows = (0..n).filter(|&id| plan.slow_stage(id).is_some()).count() as f64;
+        let malforms = (0..n).filter(|&id| plan.malform(id)).count() as f64;
+        let drops = (0..n).filter(|&id| plan.drop_frame("net", id)).count() as f64;
+        for (kind, count) in
+            [("panic", panics), ("slow", slows), ("malform", malforms), ("drop", drops)]
+        {
+            let frac = count / n as f64;
+            assert!((frac - 0.2).abs() < 0.02, "{kind} rate {frac} far from 0.2");
+        }
+        // kinds do not fire in lockstep (independent streams)
+        let both = (0..n)
+            .filter(|&id| plan.worker_panic(id) && plan.malform(id))
+            .count() as f64;
+        let frac = both / n as f64;
+        assert!((frac - 0.04).abs() < 0.02, "panic∧malform rate {frac} far from 0.04");
+    }
+
+    #[test]
+    fn different_seeds_give_different_plans() {
+        let a = FaultPlan::parse("seed=1,panic=0.5").unwrap();
+        let b = FaultPlan::parse("seed=2,panic=0.5").unwrap();
+        let same = (0..256).filter(|&id| a.worker_panic(id) == b.worker_panic(id)).count();
+        assert!(same < 200, "seeds 1 and 2 agree on {same}/256 decisions");
+    }
+
+    #[test]
+    fn corrupt_line_breaks_float_parsing() {
+        let plan = FaultPlan::disabled(0);
+        let line = "0.5 1.5 2.5 3.5";
+        let bad = plan.corrupt_line(line);
+        assert!(bad.contains("<corrupt>"));
+        assert!(bad.split_whitespace().any(|t| t.parse::<f32>().is_err()));
+    }
+
+    #[test]
+    fn describe_emits_canonical_parseable_spec() {
+        let plan =
+            FaultPlan::parse("seed=7,panic=0.02,slow=0.05:3,malform=0.1,drop=0.25,delay=0.5:9")
+                .unwrap();
+        let reparsed = FaultPlan::parse(&plan.describe()).unwrap();
+        assert_eq!(reparsed, plan);
+        let disabled = FaultPlan::disabled(42);
+        assert_eq!(FaultPlan::parse(&disabled.describe()).unwrap(), disabled);
+    }
+
+    #[test]
+    fn gate_is_reproducible_and_respects_plan() {
+        let plan = FaultPlan::parse("seed=17,drop=0.3,delay=0.2:5,dup=0.2,corrupt=0.2").unwrap();
+        let run = |stage: &'static str| -> Vec<GatedFrame> {
+            let mut gate = FaultGate::new(Some(plan.clone()), stage);
+            (0..200).map(|i| gate.pass(&format!("frame {i}"))).collect()
+        };
+        assert_eq!(run("c2s"), run("c2s"), "gate must replay identically");
+        assert_ne!(run("c2s"), run("s2c"), "stages must draw independently");
+        let frames = run("c2s");
+        assert!(frames.iter().any(|f| f.lines.is_empty()), "some frames dropped");
+        assert!(frames.iter().any(|f| f.lines.len() == 2), "some frames duplicated");
+        assert!(frames.iter().any(|f| f.delay_ms == 5), "some frames delayed");
+        assert!(
+            frames.iter().any(|f| f.lines.first().is_some_and(|l| l.contains("<corrupt>"))),
+            "some frames corrupted"
+        );
+        // a disabled gate is a pass-through
+        let mut clean = FaultGate::new(None, "c2s");
+        assert_eq!(
+            clean.pass("hello"),
+            GatedFrame { delay_ms: 0, lines: vec!["hello".to_string()] }
+        );
+    }
+}

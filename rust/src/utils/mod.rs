@@ -1,13 +1,15 @@
 //! Small shared utilities: deterministic RNG, alias tables, the scoped
-//! worker pool, timing helpers.
+//! worker pool, timing helpers, fault injection, and the line transport.
 
 pub mod alias;
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod timer;
+pub mod transport;
 
 pub use alias::AliasTable;
 pub use pool::{spawn_named, Pool, SharedMut, PAR_MIN_MERGE_ROWS};

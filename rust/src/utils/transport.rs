@@ -1,0 +1,297 @@
+//! Unix-socket line transport shared by the serving daemon and the
+//! distributed-training coordinator.
+//!
+//! Both subsystems speak newline-delimited text over a Unix socket with
+//! the same shape: one acceptor thread hands each connection an integer
+//! id, a named reader thread per connection pumps its lines into one
+//! channel, and a writer registry (keyed by connection id, ordered so
+//! iteration is deterministic) routes responses back to the connection
+//! that asked. [`LineServer`] packages that plumbing; [`LineClient`] is
+//! the matching client side. Writers are removed on EOF, and the socket
+//! file is removed on [`LineServer::shutdown`].
+
+use std::sync::mpsc::Receiver;
+
+/// One unit of transport input: a line from a connected client, or a
+/// shutdown request (e.g. stdin EOF in the daemon's stdin mode).
+#[derive(Clone, Debug)]
+pub enum Inbound {
+    Line { client: usize, line: String },
+    Shutdown,
+}
+
+/// One receive attempt on a [`LineClient`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Recv {
+    Line(String),
+    Timeout,
+    /// The server hung up (reader thread saw EOF and exited).
+    Closed,
+}
+
+#[cfg(unix)]
+pub use unix_impl::{LineClient, LineServer};
+
+#[cfg(unix)]
+mod unix_impl {
+    use super::{Inbound, Recv};
+    use crate::utils::pool::spawn_named;
+    use anyhow::{Context, Result};
+    use std::collections::BTreeMap;
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::{UnixListener, UnixStream};
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::Duration;
+
+    /// A line-protocol Unix-socket server: accepts connections on a named
+    /// acceptor thread, reads each connection on its own named thread into
+    /// one [`Inbound`] channel, and writes responses back through a
+    /// per-connection writer registry (removed on EOF).
+    pub struct LineServer {
+        rx: Receiver<Inbound>,
+        writers: Arc<Mutex<BTreeMap<usize, UnixStream>>>,
+        stop: Arc<AtomicBool>,
+        acceptor: Option<JoinHandle<()>>,
+        path: PathBuf,
+    }
+
+    impl LineServer {
+        /// Bind `path` (removing a stale socket file first) and start the
+        /// acceptor. Connection ids count up from 0 in accept order.
+        pub fn bind(path: &Path) -> Result<Self> {
+            if path.exists() {
+                std::fs::remove_file(path)
+                    .with_context(|| format!("remove stale socket {path:?}"))?;
+            }
+            let listener =
+                UnixListener::bind(path).with_context(|| format!("bind unix socket {path:?}"))?;
+            listener
+                .set_nonblocking(true)
+                .context("set socket listener non-blocking")?;
+            let stop = Arc::new(AtomicBool::new(false));
+            let writers: Arc<Mutex<BTreeMap<usize, UnixStream>>> =
+                Arc::new(Mutex::new(BTreeMap::new()));
+            let (tx, rx) = mpsc::channel();
+            let acceptor = {
+                let stop = stop.clone();
+                let writers = writers.clone();
+                spawn_named("socket-accept", move || {
+                    let mut next_client = 0usize;
+                    while !stop.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let client = next_client;
+                                next_client += 1;
+                                if let Ok(writer) = stream.try_clone() {
+                                    writers.lock().unwrap().insert(client, writer);
+                                }
+                                let tx = tx.clone();
+                                let writers = writers.clone();
+                                let _ =
+                                    spawn_named(&format!("socket-client-{client}"), move || {
+                                        for line in BufReader::new(stream).lines() {
+                                            let Ok(line) = line else { break };
+                                            let msg = Inbound::Line { client, line };
+                                            if tx.send(msg).is_err() {
+                                                break;
+                                            }
+                                        }
+                                        writers.lock().unwrap().remove(&client);
+                                    });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(20));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .context("spawn socket acceptor")?
+            };
+            Ok(Self { rx, writers, stop, acceptor: Some(acceptor), path: path.to_path_buf() })
+        }
+
+        /// The inbound line channel (one [`Inbound::Line`] per received
+        /// line, across all connections).
+        pub fn rx(&self) -> &Receiver<Inbound> {
+            &self.rx
+        }
+
+        /// Write one response line to a connection. Returns `false` when
+        /// the connection is gone (EOF removed its writer) or the write
+        /// failed.
+        pub fn send(&self, client: usize, line: &str) -> bool {
+            let mut writers = self.writers.lock().unwrap();
+            match writers.get_mut(&client) {
+                Some(w) => writeln!(w, "{line}").is_ok(),
+                None => false,
+            }
+        }
+
+        /// Connected client ids, ascending (deterministic broadcast order).
+        pub fn clients(&self) -> Vec<usize> {
+            self.writers.lock().unwrap().keys().copied().collect()
+        }
+
+        /// Stop accepting, reap the acceptor, and remove the socket file.
+        /// Per-connection reader threads exit on their own at EOF.
+        pub fn shutdown(mut self) {
+            self.stop.store(true, Ordering::SeqCst);
+            if let Some(h) = self.acceptor.take() {
+                let _ = h.join();
+            }
+            std::fs::remove_file(&self.path).ok();
+        }
+    }
+
+    impl Drop for LineServer {
+        fn drop(&mut self) {
+            // best-effort: unblocks the acceptor if shutdown() was skipped
+            self.stop.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// A line-protocol Unix-socket client: writes lines synchronously,
+    /// receives on a named reader thread feeding a channel.
+    pub struct LineClient {
+        stream: UnixStream,
+        rx: Receiver<String>,
+    }
+
+    impl LineClient {
+        pub fn connect(path: &Path) -> Result<Self> {
+            let stream = UnixStream::connect(path)
+                .with_context(|| format!("connect unix socket {path:?}"))?;
+            let reader = stream.try_clone().context("clone socket for reading")?;
+            let (tx, rx) = mpsc::channel();
+            spawn_named("socket-line-reader", move || {
+                for line in BufReader::new(reader).lines() {
+                    let Ok(line) = line else { break };
+                    if tx.send(line).is_err() {
+                        break;
+                    }
+                }
+            })
+            .context("spawn socket line reader")?;
+            Ok(Self { stream, rx })
+        }
+
+        /// Poll-connect until the server binds (it may still be starting):
+        /// up to `attempts` tries, `sleep_ms` apart.
+        pub fn connect_retry(path: &Path, attempts: usize, sleep_ms: u64) -> Result<Self> {
+            for _ in 1..attempts.max(1) {
+                if let Ok(client) = Self::connect(path) {
+                    return Ok(client);
+                }
+                std::thread::sleep(Duration::from_millis(sleep_ms));
+            }
+            Self::connect(path)
+        }
+
+        /// Write one line (newline appended) and flush.
+        pub fn send(&mut self, line: &str) -> Result<()> {
+            writeln!(self.stream, "{line}").context("write line to socket")?;
+            self.stream.flush().context("flush socket line")
+        }
+
+        /// Wait up to `ms` milliseconds for the next line.
+        pub fn recv_timeout(&self, ms: u64) -> Recv {
+            match self.rx.recv_timeout(Duration::from_millis(ms)) {
+                Ok(line) => Recv::Line(line),
+                Err(RecvTimeoutError::Timeout) => Recv::Timeout,
+                Err(RecvTimeoutError::Disconnected) => Recv::Closed,
+            }
+        }
+
+        /// Drain any already-received line without waiting.
+        pub fn try_recv(&self) -> Option<String> {
+            self.rx.try_recv().ok()
+        }
+    }
+}
+
+/// Drain every immediately available message from an inbound channel
+/// (non-blocking). Shared by transports that batch their reads.
+pub fn drain_ready(rx: &Receiver<Inbound>) -> Vec<Inbound> {
+    let mut out = Vec::new();
+    while let Ok(msg) = rx.try_recv() {
+        out.push(msg);
+    }
+    out
+}
+
+/// Round-trip smoke coverage lives in `serve/daemon.rs` (the socket
+/// daemon test) and `tests/dist_parity.rs` (the coordinator socket
+/// test); this module's unit tests cover only what needs no socket.
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_socket(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("repro-transport-{tag}-{}.sock", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn server_binds_reaps_and_removes_socket_file() {
+        let path = tmp_socket("bind");
+        let server = LineServer::bind(&path).unwrap();
+        assert!(path.exists(), "socket file must exist while bound");
+        assert!(server.clients().is_empty());
+        assert!(!server.send(0, "nobody home"), "send to absent client is false");
+        server.shutdown();
+        assert!(!path.exists(), "socket file must be removed on shutdown");
+    }
+
+    #[test]
+    fn stale_socket_file_is_replaced_on_bind() {
+        let path = tmp_socket("stale");
+        std::fs::write(&path, b"stale").unwrap();
+        let server = LineServer::bind(&path).unwrap();
+        server.shutdown();
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn client_line_round_trip() {
+        let path = tmp_socket("echo");
+        let server = LineServer::bind(&path).unwrap();
+        let mut client = LineClient::connect_retry(&path, 50, 10).unwrap();
+        client.send("ping").unwrap();
+        let got = server
+            .rx()
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("server receives the line");
+        match got {
+            Inbound::Line { client: id, line } => {
+                assert_eq!(line, "ping");
+                // the writer registry routes the reply back
+                let mut ok = false;
+                for _ in 0..100 {
+                    if server.send(id, "pong") {
+                        ok = true;
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                assert!(ok, "writer registered for the connection");
+            }
+            other => panic!("expected a line, got {other:?}"),
+        }
+        assert_eq!(client.recv_timeout(5000), Recv::Line("pong".to_string()));
+        server.shutdown();
+        // server side gone: the reader thread sees EOF and hangs up
+        for _ in 0..200 {
+            if client.recv_timeout(10) == Recv::Closed {
+                return;
+            }
+        }
+        panic!("client never observed the hangup");
+    }
+}

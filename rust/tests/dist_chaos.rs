@@ -1,0 +1,121 @@
+//! Seeded chaos for the distributed round protocol: a lossy, delaying,
+//! duplicating, corrupting network must slow training down, never change
+//! it. Every round still commits exactly once (`RoundStats::accounted`),
+//! the final parameters stay bit-identical to a fault-free run, and the
+//! whole delivered-frame trace replays identically from the seed.
+//!
+//! CI's `dist-chaos` job sets `REPRO_FAULTS` to sweep other mixes; without
+//! it, a representative built-in plan runs.
+
+use adv_softmax::config::DistConfig;
+use adv_softmax::dist::{params_checksum, SimNet};
+use adv_softmax::utils::faults::FaultPlan;
+
+/// The mix CI uses when `REPRO_FAULTS` is unset: every frame-level fault
+/// kind active at once.
+const DEFAULT_PLAN: &str = "seed=20260808,drop=0.08,delay=0.05:120,dup=0.05,corrupt=0.04";
+
+fn plan() -> FaultPlan {
+    FaultPlan::from_env()
+        .expect("REPRO_FAULTS must parse")
+        .unwrap_or_else(|| FaultPlan::parse(DEFAULT_PLAN).unwrap())
+}
+
+fn cfg(clients: usize) -> DistConfig {
+    DistConfig {
+        clients,
+        rounds: 3,
+        batches_per_round: 6,
+        batch_size: 4,
+        num_classes: 32,
+        feat_dim: 8,
+        lr: 0.1,
+        seed: 20260808,
+        lease_ms: 1000,
+        resend_ms: 200,
+    }
+}
+
+fn run_chaos(m: usize, plan: Option<FaultPlan>) -> SimNet {
+    let mut net = SimNet::new(cfg(m), m, plan).unwrap();
+    assert!(net.run_to_completion(5000).unwrap(), "chaos run wedged (M={m})");
+    net
+}
+
+#[test]
+fn every_round_commits_exactly_once_under_chaos() {
+    let net = run_chaos(2, Some(plan()));
+    let stats = net.coord().round_stats();
+    assert_eq!(stats.len(), 3, "rounds lost or skipped");
+    for r in stats {
+        assert!(
+            r.accounted(),
+            "round {} unaccounted: assigned={} applied={} received={} dup={}",
+            r.round,
+            r.assigned,
+            r.applied,
+            r.received,
+            r.duplicates
+        );
+    }
+}
+
+#[test]
+fn chaos_does_not_change_the_learning_curve() {
+    let clean = run_chaos(2, None);
+    let chaotic = run_chaos(2, Some(plan()));
+    assert_eq!(
+        chaotic.coord().loss_bits(),
+        clean.coord().loss_bits(),
+        "faults changed the loss curve"
+    );
+    assert_eq!(
+        params_checksum(chaotic.coord().params()),
+        params_checksum(clean.coord().params()),
+        "faults changed the final parameters"
+    );
+}
+
+#[test]
+fn chaos_trace_replays_identically_from_the_seed() {
+    let a = run_chaos(2, Some(plan()));
+    let b = run_chaos(2, Some(plan()));
+    assert!(!a.trace().is_empty());
+    assert_eq!(a.trace(), b.trace(), "chaos run is not reproducible");
+    assert_eq!(a.coord().stats(), b.coord().stats());
+}
+
+#[test]
+fn corruption_surfaces_as_typed_errors_not_divergence() {
+    // crank corruption up so the typed-error path definitely fires
+    let hot = FaultPlan::parse("seed=7,corrupt=0.3").unwrap();
+    let net = run_chaos(2, Some(hot));
+    assert!(net.coord().round_stats().iter().all(|r| r.accounted()));
+    assert!(
+        net.coord().stats().malformed > 0 || net.coord().stats().errors_sent > 0,
+        "0.3 corruption rate never hit the error path"
+    );
+    let clean = run_chaos(2, None);
+    assert_eq!(net.coord().loss_bits(), clean.coord().loss_bits());
+}
+
+#[test]
+fn kill_rejoin_under_chaos_still_converges_bit_exactly() {
+    let clean = run_chaos(2, None);
+    let mut net = SimNet::new(cfg(2), 2, Some(plan())).unwrap();
+    // let the run get going, then lose a client and bring it back
+    for _ in 0..10 {
+        net.step().unwrap();
+    }
+    net.kill(1);
+    // bring it back as a fresh process before the lease lapses, so the
+    // rejoin happens while the run is still in flight
+    for _ in 0..10 {
+        net.step().unwrap();
+    }
+    net.rejoin(1);
+    assert!(net.run_to_completion(5000).unwrap(), "chaos+rejoin run wedged");
+    assert!(net.coord().round_stats().iter().all(|r| r.accounted()));
+    assert_eq!(net.coord().loss_bits(), clean.coord().loss_bits());
+    assert_eq!(params_checksum(net.coord().params()), params_checksum(clean.coord().params()));
+}

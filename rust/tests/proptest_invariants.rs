@@ -526,3 +526,61 @@ fn prop_json_roundtrip() {
         assert_eq!(back, v, "text was {text:?}");
     });
 }
+
+/// Fault-plan spec roundtrip: for any valid plan, `parse ∘ describe` is
+/// the identity — the banner line a chaos run prints is always enough to
+/// replay it exactly.
+#[test]
+fn prop_fault_plan_parse_describe_roundtrip() {
+    use adv_softmax::utils::faults::FaultPlan;
+    fn gen_rate(rng: &mut Rng) -> f64 {
+        rng.below(101) as f64 / 100.0
+    }
+    for_all_seeds(200, |rng| {
+        let mut plan = FaultPlan::disabled(rng.below(1 << 20) as u64);
+        plan.panic_rate = gen_rate(rng);
+        plan.slow_rate = gen_rate(rng);
+        plan.slow_ms = if plan.slow_rate > 0.0 { 1 + rng.below(50) as u64 } else { 0 };
+        plan.malform_rate = gen_rate(rng);
+        plan.drop_rate = gen_rate(rng);
+        plan.delay_rate = gen_rate(rng);
+        plan.delay_ms = if plan.delay_rate > 0.0 { 1 + rng.below(50) as u64 } else { 0 };
+        plan.dup_rate = gen_rate(rng);
+        plan.corrupt_rate = gen_rate(rng);
+        let spec = plan.describe();
+        let back = FaultPlan::parse(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        assert_eq!(back, plan, "spec was {spec:?}");
+    });
+}
+
+/// Seq reassignment invariants: for any orphaned seq set and any survivor
+/// set, reassignment is a partition (no seq lost, none double-assigned),
+/// every assignee is a survivor, and per-survivor load is balanced to
+/// within one seq.
+#[test]
+fn prop_reassignment_partitions_orphans() {
+    use adv_softmax::dist::reassign_seqs;
+    use std::collections::BTreeSet;
+    for_all_seeds(200, |rng| {
+        let seqs: BTreeSet<u64> = (0..rng.below(30)).map(|_| rng.below(100) as u64).collect();
+        let survivors: BTreeSet<u64> = (0..rng.below(6)).map(|_| rng.below(10) as u64).collect();
+        let seqs: Vec<u64> = seqs.into_iter().collect();
+        let survivors: Vec<u64> = survivors.into_iter().collect();
+        let out = reassign_seqs(&seqs, &survivors);
+        if survivors.is_empty() {
+            assert!(out.is_empty());
+            return;
+        }
+        assert_eq!(out.iter().map(|&(s, _)| s).collect::<Vec<_>>(), seqs, "seqs lost/reordered");
+        let mut load = std::collections::BTreeMap::new();
+        for &(_, who) in &out {
+            assert!(survivors.contains(&who), "assigned to non-survivor {who}");
+            *load.entry(who).or_insert(0usize) += 1;
+        }
+        if !seqs.is_empty() && seqs.len() >= survivors.len() {
+            let min = load.values().min().copied().unwrap_or(0);
+            let max = load.values().max().copied().unwrap_or(0);
+            assert!(max - min <= 1, "unbalanced: {load:?}");
+        }
+    });
+}
