@@ -11,8 +11,8 @@
 //! the real xla runtime) are unavailable; all host-side cases always run.
 
 use adv_softmax::config::{
-    DaemonConfig, DatasetPreset, Method, OverlapMode, RunConfig, ServeConfig, SyntheticConfig,
-    TreeConfig,
+    DaemonConfig, DatasetPreset, Method, OverlapMode, QuantMode, RunConfig, ServeConfig,
+    SyntheticConfig, TreeConfig,
 };
 use adv_softmax::data::Splits;
 use adv_softmax::eval::LpnCache;
@@ -26,7 +26,7 @@ use adv_softmax::train::{
     BatchGen, BatchMode, BatchSource, SamplerKind, StepEngine, StepExecutor, TrainRun,
 };
 use adv_softmax::tree::fit::{fit_tree, fit_tree_with};
-use adv_softmax::tree::{Tree, TreeKernel};
+use adv_softmax::tree::{BeamScratch, Tree, TreeKernel};
 use adv_softmax::utils::bench::{black_box, Bench, BenchStats};
 use adv_softmax::utils::json::Json;
 use adv_softmax::utils::{Pool, Rng};
@@ -66,6 +66,24 @@ const OVERLAP_PAIRS: [(&str, &str, &str); 1] =
 /// at C ≥ 10k; diffed against the committed baseline like the rest).
 const SERVE_PAIRS: [(&str, &str, &str); 1] =
     [("serve_beam", "serve/topk(exact)", "serve/topk(beam)")];
+
+/// (summary key, sequential-RNG kernel, counter-mode kernel) for the
+/// lane-RNG descent sampler (PR 9 acceptance bar: ≥ 1.3× — the serial
+/// per-lane xoshiro advance was the last sequential dependency in the
+/// sample kernel's inner loop).
+const RNG_PAIRS: [(&str, &str, &str); 1] =
+    [("lane_rng", "tree/descents(serial_rng)", "tree/descents(batch8)")];
+
+/// (summary key, per-prefix descent, 8-lane descent) for the beam search
+/// (PR 9 acceptance bar: ≥ 1.5× at the default serving beam width).
+const BEAM8_PAIRS: [(&str, &str, &str); 1] =
+    [("beam8", "serve/beam_topk(scalar)", "serve/beam_topk(lane8)")];
+
+/// (summary key, f32-row sweep, f16-row sweep) for quantized serving
+/// (PR 9 acceptance bar: ≥ 1.5× on the exact O(C) scoring sweep at
+/// C = 16384, where the row bytes dominate — the sweep is memory-bound).
+const QUANT_PAIRS: [(&str, &str, &str); 1] =
+    [("quant_f16", "serve/topk(exact)", "serve/topk(exact,f16)")];
 
 #[derive(Default)]
 struct Report {
@@ -141,6 +159,16 @@ impl Report {
                 })
                 .collect(),
         );
+        let pair_section = |pairs: &[(&str, &str, &str)]| {
+            Json::Obj(
+                pairs
+                    .iter()
+                    .filter_map(|&(key, s, p)| {
+                        self.speedup(s, p).map(|x| (key.to_string(), Json::Num(x)))
+                    })
+                    .collect(),
+            )
+        };
         Json::obj(vec![
             ("bench", Json::Str("hot_path".into())),
             ("parallel_workers", Json::Num(PAR as f64)),
@@ -149,6 +177,9 @@ impl Report {
             ("speedups_scalar_over_kernel", kernel_speedups),
             ("speedups_step_overlap", overlap_speedups),
             ("speedups_serve", serve_speedups),
+            ("speedups_rng", pair_section(&RNG_PAIRS)),
+            ("speedups_beam8", pair_section(&BEAM8_PAIRS)),
+            ("speedups_quant", pair_section(&QUANT_PAIRS)),
         ])
     }
 }
@@ -232,6 +263,14 @@ fn main() -> anyhow::Result<()> {
             black_box(&labels);
         });
         report.record("tree/descents(batch8)", s);
+        // the retained sequential-xoshiro lane kernel: same dots and
+        // sigmoid lanes, but each level's uniforms advance 8 private RNG
+        // states serially — the speedup over this is the lane-RNG floor
+        let s = bench.run("tree/descents(serial_rng)", || {
+            kern.sample_batch_serial_rng(&xk, &mut rngs, &mut labels, &mut logps);
+            black_box(&labels);
+        });
+        report.record("tree/descents(serial_rng)", s);
 
         let nn = kc - 1;
         let mut acts = vec![0f32; ktile * nn];
@@ -346,6 +385,41 @@ fn main() -> anyhow::Result<()> {
             leaf_of_label: (0..sc as u32).collect(),
         };
         let skern = TreeKernel::build(&stree);
+
+        // --- 8-lane beam descent vs the per-prefix scalar oracle (PR 9),
+        // at the default serving beam width on the same C = 16384 tree.
+        // Proptest pins the two bit-identical; this measures the win.
+        {
+            let beam_w = ServeConfig::default().beam;
+            let projs: Vec<f32> = (0..sq * saux).map(|_| srng2.normal()).collect();
+            let mut cands: Vec<(u32, f32)> = Vec::new();
+            let mut bscr = BeamScratch::default();
+            let s = bench.run("serve/beam_topk(scalar)", || {
+                for t in 0..sq {
+                    skern.beam_topk_scalar(
+                        &projs[t * saux..(t + 1) * saux],
+                        beam_w,
+                        &mut cands,
+                        &mut bscr,
+                    );
+                }
+                black_box(&cands);
+            });
+            report.record("serve/beam_topk(scalar)", s);
+            let s = bench.run("serve/beam_topk(lane8)", || {
+                for t in 0..sq {
+                    skern.beam_topk(
+                        &projs[t * saux..(t + 1) * saux],
+                        beam_w,
+                        &mut cands,
+                        &mut bscr,
+                    );
+                }
+                black_box(&cands);
+            });
+            report.record("serve/beam_topk(lane8)", s);
+        }
+
         let spca = Pca {
             mean: vec![0.0; sk],
             components: (0..saux)
@@ -370,9 +444,17 @@ fn main() -> anyhow::Result<()> {
         });
         let queries: Vec<f32> = (0..sq * sk).map(|_| srng2.normal()).collect();
         let serve_pool = Pool::serial();
-        let exact_pred =
-            Predictor::new(&model, ServeConfig { exact: true, ..Default::default() }).unwrap();
-        let beam_pred = Predictor::new(&model, ServeConfig::default()).unwrap();
+        // quantize pinned per case (not env-defaulted): the serve_beam
+        // pair stays an f32-vs-f32 comparison even under REPRO_QUANTIZE,
+        // and the quant_f16 pair isolates the row-storage change alone
+        let exact_pred = Predictor::new(
+            &model,
+            ServeConfig { exact: true, quantize: QuantMode::Off, ..Default::default() },
+        )
+        .unwrap();
+        let beam_pred =
+            Predictor::new(&model, ServeConfig { quantize: QuantMode::Off, ..Default::default() })
+                .unwrap();
         let s = bench.run("serve/topk(exact)", || {
             black_box(exact_pred.predict_batch_with(black_box(&queries), sq, &serve_pool));
         });
@@ -381,6 +463,18 @@ fn main() -> anyhow::Result<()> {
             black_box(beam_pred.predict_batch_with(black_box(&queries), sq, &serve_pool));
         });
         report.record("serve/topk(beam)", s);
+
+        // --- f16-row exact sweep (PR 9): half the bytes through the
+        // memory-bound O(C·K) scoring loop, f32 accumulation unchanged.
+        let f16_pred = Predictor::new(
+            &model,
+            ServeConfig { exact: true, quantize: QuantMode::F16, ..Default::default() },
+        )
+        .unwrap();
+        let s = bench.run("serve/topk(exact,f16)", || {
+            black_box(f16_pred.predict_batch_with(black_box(&queries), sq, &serve_pool));
+        });
+        report.record("serve/topk(exact,f16)", s);
 
         // --- serving daemon load generator (PR 6, same C = 16384 model).
         // Closed loop: 32 virtual clients with one outstanding request
@@ -742,6 +836,21 @@ fn main() -> anyhow::Result<()> {
     for (key, exact, beamed) in SERVE_PAIRS {
         if let Some(x) = report.speedup(exact, beamed) {
             println!("speedup {key:<16} {x:>6.2}x  (exact O(C) sweep vs beam top-k)");
+        }
+    }
+    for (key, serial, lane) in RNG_PAIRS {
+        if let Some(x) = report.speedup(serial, lane) {
+            println!("speedup {key:<16} {x:>6.2}x  (sequential-RNG vs counter-mode descents)");
+        }
+    }
+    for (key, scalar, lane) in BEAM8_PAIRS {
+        if let Some(x) = report.speedup(scalar, lane) {
+            println!("speedup {key:<16} {x:>6.2}x  (per-prefix vs 8-lane beam descent)");
+        }
+    }
+    for (key, f32c, f16c) in QUANT_PAIRS {
+        if let Some(x) = report.speedup(f32c, f16c) {
+            println!("speedup {key:<16} {x:>6.2}x  (f32 vs f16 rows, exact sweep)");
         }
     }
     let out = "BENCH_hot_path.json";

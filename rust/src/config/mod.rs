@@ -222,9 +222,67 @@ impl TreeConfig {
     }
 }
 
+/// Quantized classifier-row storage for serving (`ServeConfig.quantize`):
+/// serving carries no optimizer state, so rows can be stored at reduced
+/// precision — half the memory-bound bytes per scoring sweep for f16, a
+/// quarter for i8 — with f32 accumulation and deterministic decode
+/// (see `score::RowStore`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Full-precision f32 rows (the reference path).
+    Off,
+    /// IEEE binary16 rows, round-to-nearest-even at model load.
+    F16,
+    /// Symmetric i8 rows + one f32 scale per row.
+    I8,
+}
+
+impl QuantMode {
+    /// Default for newly constructed configs: the `REPRO_QUANTIZE` env var
+    /// (`off|f16|i8`, used by CI to run the serving suite under a
+    /// quantized leg) or [`QuantMode::Off`]. An unparsable value panics
+    /// with a clear message rather than silently falling back — a CI leg
+    /// meant to force one format must never quietly run another.
+    pub fn env_default() -> Self {
+        match std::env::var("REPRO_QUANTIZE") {
+            Ok(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid REPRO_QUANTIZE={v:?}: {e:#}")),
+            Err(_) => QuantMode::Off,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::F16 => "f16",
+            QuantMode::I8 => "i8",
+        }
+    }
+}
+
+impl fmt::Display for QuantMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for QuantMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "off" | "f32" | "none" => QuantMode::Off,
+            "f16" | "half" => QuantMode::F16,
+            "i8" | "int8" => QuantMode::I8,
+            other => anyhow::bail!("unknown quantize mode {other:?} (off|f16|i8)"),
+        })
+    }
+}
+
 /// Serving knobs for `repro serve` / `repro predict` (the serving twin of
 /// [`RunConfig`]): beam width of the tree-guided candidate retrieval,
-/// predictions returned per query, and the exact-oracle toggle.
+/// predictions returned per query, the exact-oracle toggle, and the
+/// classifier-row storage format.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Beam width B of the tree descent: frontier nodes kept per level.
@@ -236,11 +294,16 @@ pub struct ServeConfig {
     /// Score all C classes (the O(C) oracle sweep) instead of beam
     /// retrieval. Exact but ~C/(B·log C) times more work per query.
     pub exact: bool,
+    /// Classifier-row storage format (`repro serve --quantize`). Changes
+    /// which scores are computed (quantized rows score slightly
+    /// differently), but every mode is itself bit-deterministic across
+    /// worker counts and batching.
+    pub quantize: QuantMode,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { beam: 64, k: 5, exact: false }
+        Self { beam: 64, k: 5, exact: false, quantize: QuantMode::env_default() }
     }
 }
 
@@ -257,15 +320,21 @@ impl ServeConfig {
             ("beam", Json::Num(self.beam as f64)),
             ("k", Json::Num(self.k as f64)),
             ("exact", Json::Bool(self.exact)),
+            ("quantize", Json::Str(self.quantize.to_string())),
         ])
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
-        let cfg = Self {
+        let mut cfg = Self {
             beam: v.get("beam")?.as_usize()?,
             k: v.get("k")?.as_usize()?,
             exact: v.get("exact")?.as_bool()?,
+            ..Self::default()
         };
+        // optional for configs saved before the quantize knob existed
+        if let Some(q) = v.opt("quantize") {
+            cfg.quantize = q.as_str()?.parse()?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -845,6 +914,31 @@ mod tests {
         assert_eq!(back, cfg);
         assert!(ServeConfig { beam: 0, ..cfg }.validate().is_err());
         assert!(ServeConfig { k: 0, ..cfg }.validate().is_err());
+    }
+
+    #[test]
+    fn quant_mode_parses_and_defaults_when_absent_from_json() {
+        assert_eq!("off".parse::<QuantMode>().unwrap(), QuantMode::Off);
+        assert_eq!("f16".parse::<QuantMode>().unwrap(), QuantMode::F16);
+        assert_eq!("i8".parse::<QuantMode>().unwrap(), QuantMode::I8);
+        assert_eq!("F16".parse::<QuantMode>().unwrap(), QuantMode::F16, "case-insensitive");
+        assert!("fp8".parse::<QuantMode>().is_err());
+        for q in [QuantMode::Off, QuantMode::F16, QuantMode::I8] {
+            assert_eq!(q.name().parse::<QuantMode>().unwrap(), q);
+        }
+        // quantize round-trips through JSON
+        let cfg = ServeConfig { quantize: QuantMode::I8, ..ServeConfig::default() };
+        let back =
+            ServeConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.quantize, QuantMode::I8);
+        // configs saved before the knob existed must still load
+        let mut v = cfg.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.remove("quantize");
+        }
+        let back = ServeConfig::from_json(&v).unwrap();
+        // absent key falls back to the constructor default (env or Off)
+        assert_eq!(back.quantize, QuantMode::env_default());
     }
 
     #[test]

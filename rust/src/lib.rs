@@ -64,7 +64,7 @@ pub mod prelude {
     };
     pub use crate::score::Scorer;
     pub use crate::serve::daemon::{Daemon, DaemonStats};
-    pub use crate::serve::faults::FaultPlan;
+    pub use crate::utils::faults::FaultPlan;
     pub use crate::serve::{Predictor, RequestBatcher, ServingModel};
     pub use crate::train::{LearningCurve, TrainRun};
     pub use crate::tree::Tree;

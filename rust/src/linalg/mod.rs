@@ -145,6 +145,222 @@ pub fn affine_dots_tile(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Quantized row storage (serving hot path)
+// ---------------------------------------------------------------------------
+//
+// Serving carries no optimizer state, so classifier rows can be stored at
+// reduced precision and decoded on the fly: half the (memory-bound) bytes
+// per O(kC) scoring sweep for f16, a quarter for i8 + per-row scale.
+// Accumulation stays f32 in the canonical [`dot`] order.
+//
+// Determinism contract: the decode-inline kernels below are **bit-identical
+// to dequantize-then-score** — `dot_f16(q, x) == dot(decode(q), x)` and
+// `dot_i8(q, s, x) == dot(dequant(q, s), x)` exactly, because the decoded
+// value enters the identical IEEE operation sequence. The quantize step
+// itself (f32 → f16 round-to-nearest-even, f32 → i8 symmetric per-row
+// scale) is the only place precision is spent, and it is deterministic and
+// platform-independent. `score::Scorer` pins quantize-then-score scalar
+// oracles on top of this contract.
+
+/// Decode IEEE 754 binary16 bits to f32. Exact for zeros, subnormals, and
+/// normals (the payload shift plus the 2¹¹² magic multiply are power-of-two
+/// rescales with no rounding). f16 infinities/NaNs — which
+/// [`f16_from_f32`] never produces — decode to large finite values, so the
+/// serving path is total on finite rows.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let mag = f32::from_bits(((h & 0x7fff) as u32) << 13) * f32::from_bits(0x7780_0000);
+    f32::from_bits(mag.to_bits() | sign)
+}
+
+/// Encode f32 as IEEE 754 binary16 bits, round-to-nearest-even. Overflow
+/// saturates to ±65504 (f16 max) instead of infinity and NaN maps to the
+/// canonical quiet NaN, so `f16_to_f32 ∘ f16_from_f32` is total and
+/// monotone on finite inputs. Cold path: runs once per row at model load,
+/// never inside a scoring sweep.
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let man = bits & 0x007f_ffff;
+    if exp == 128 {
+        // NaN → canonical quiet NaN; ±inf saturates like overflow
+        return if man != 0 { sign | 0x7e00 } else { sign | 0x7bff };
+    }
+    if exp > 15 {
+        return sign | 0x7bff; // |x| ≥ 2^16: saturate to f16 max
+    }
+    if exp >= -14 {
+        // f16 normal range: drop 13 mantissa bits with round-to-nearest-even
+        let mant = man >> 13;
+        let rest = man & 0x1fff;
+        let mut h = (sign as u32) | (((exp + 15) as u32) << 10) | mant;
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            h += 1; // mantissa carry may bump the exponent — correct RNE
+            if (h & 0x7fff) >= 0x7c00 {
+                h = (sign as u32) | 0x7bff; // rounded past max: saturate
+            }
+        }
+        h as u16
+    } else if exp >= -25 {
+        // f16 subnormal range (including values that round up to the
+        // smallest subnormal): shift out the implicit bit too
+        let man = man | 0x0080_0000;
+        let shift = (13 - 14 - exp) as u32;
+        let mant = man >> shift;
+        let rest = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = (sign as u32) | mant;
+        if rest > halfway || (rest == halfway && (mant & 1) == 1) {
+            h += 1; // may carry into the normal range — still correct
+        }
+        h as u16
+    } else {
+        sign // underflow to signed zero
+    }
+}
+
+/// Symmetric per-row i8 quantization: `scale = max|row| / 127`, elements
+/// round to nearest (ties away from zero, `f32::round`), so
+/// `dequant(q, scale) = q as f32 * scale` covers the row's full range.
+/// Returns the scale (0.0 for an all-zero row — every element quantizes
+/// to 0 and dequantizes exactly). Cold path, once per row at model load.
+pub fn quantize_row_i8(row: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), q.len());
+    let max_abs = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        q.iter_mut().for_each(|v| *v = 0);
+        return 0.0;
+    }
+    let scale = max_abs / 127.0;
+    let inv = 127.0 / max_abs;
+    for (qi, &v) in q.iter_mut().zip(row.iter()) {
+        *qi = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// [`dot`] with on-the-fly f16 decode of `a`: identical 4-accumulator
+/// reduction, each term `f16_to_f32(a[t]) * b[t]`. Bit-identical to
+/// `dot(decoded_a, b)`.
+#[inline]
+pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 += f16_to_f32(x[0]) * y[0];
+        s1 += f16_to_f32(x[1]) * y[1];
+        s2 += f16_to_f32(x[2]) * y[2];
+        s3 += f16_to_f32(x[3]) * y[3];
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += f16_to_f32(*x) * y;
+    }
+    s
+}
+
+/// [`dot`] with on-the-fly i8 dequantization of `a` at per-row `scale`:
+/// each term `(a[t] as f32 * scale) * b[t]`, so the result is bit-identical
+/// to `dot(dequantized_a, b)`.
+#[inline]
+pub fn dot_i8(a: &[i8], scale: f32, b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 += (x[0] as f32 * scale) * y[0];
+        s1 += (x[1] as f32 * scale) * y[1];
+        s2 += (x[2] as f32 * scale) * y[2];
+        s3 += (x[3] as f32 * scale) * y[3];
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += (*x as f32 * scale) * y;
+    }
+    s
+}
+
+/// [`affine_dots_tile`] over f16-stored rows: same example tiling, with
+/// each weight row decoded once per tile into a scratch buffer (one Vec
+/// allocation per call) and the inner loop running the canonical [`dot`]
+/// on the decoded row — bit-identical to `affine_dots_tile` over a fully
+/// decoded matrix, at half the bytes streamed per sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn affine_dots_tile_f16(
+    w: &[u16],
+    b: &[f32],
+    k: usize,
+    xs: &[f32],
+    m: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_offset: usize,
+) {
+    let rows = b.len();
+    debug_assert_eq!(w.len(), rows * k);
+    debug_assert_eq!(xs.len(), m * k);
+    const EXAMPLE_TILE: usize = 8;
+    let mut rowbuf = vec![0f32; k];
+    let mut jt = 0;
+    while jt < m {
+        let jhi = (jt + EXAMPLE_TILE).min(m);
+        for (i, (wr, &bi)) in w.chunks_exact(k).zip(b.iter()).enumerate() {
+            for (d, &h) in rowbuf.iter_mut().zip(wr.iter()) {
+                *d = f16_to_f32(h);
+            }
+            for j in jt..jhi {
+                out[j * out_stride + out_offset + i] =
+                    dot(&rowbuf, &xs[j * k..(j + 1) * k]) + bi;
+            }
+        }
+        jt = jhi;
+    }
+}
+
+/// [`affine_dots_tile`] over i8-stored rows with per-row scales; same
+/// structure as [`affine_dots_tile_f16`], bit-identical to the dequantized
+/// f32 sweep at a quarter of the bytes.
+#[allow(clippy::too_many_arguments)]
+pub fn affine_dots_tile_i8(
+    w: &[i8],
+    scales: &[f32],
+    b: &[f32],
+    k: usize,
+    xs: &[f32],
+    m: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_offset: usize,
+) {
+    let rows = b.len();
+    debug_assert_eq!(w.len(), rows * k);
+    debug_assert_eq!(scales.len(), rows);
+    debug_assert_eq!(xs.len(), m * k);
+    const EXAMPLE_TILE: usize = 8;
+    let mut rowbuf = vec![0f32; k];
+    let mut jt = 0;
+    while jt < m {
+        let jhi = (jt + EXAMPLE_TILE).min(m);
+        for (i, (wr, &bi)) in w.chunks_exact(k).zip(b.iter()).enumerate() {
+            let scale = scales[i];
+            for (d, &qv) in rowbuf.iter_mut().zip(wr.iter()) {
+                *d = qv as f32 * scale;
+            }
+            for j in jt..jhi {
+                out[j * out_stride + out_offset + i] =
+                    dot(&rowbuf, &xs[j * k..(j + 1) * k]) + bi;
+            }
+        }
+        jt = jhi;
+    }
+}
+
 /// y += alpha * x
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {

@@ -16,10 +16,15 @@
 //!                    classifier rows + aux tree, no optimizer state)
 //! repro serve        --model model.json (--input queries.txt | --eval
 //!                    --dataset tiny) [--k 5] [--beam 64] [--exact]
-//!                    [--parallelism N] [--out preds.txt]
+//!                    [--quantize off|f16|i8] [--parallelism N]
+//!                    [--out preds.txt]
 //!                    (batched top-k: tree-guided beam retrieval + exact
 //!                    re-rank; --exact runs the O(C) oracle sweep; --eval
-//!                    reports P@1 / recall@k on the held-out test split)
+//!                    reports P@1 / recall@k on the held-out test split;
+//!                    --quantize — also via REPRO_QUANTIZE — stores the
+//!                    classifier rows f16/i8 inside the predictor and
+//!                    scores with f32 accumulation, bit-identical to
+//!                    quantize-then-score at every worker count)
 //! repro serve        --model model.json --daemon [--socket /path.sock]
 //!                    [--deadline-ms 50] [--queue 1024] [--max-batch 64]
 //!                    [--tiers 16,4] [--worker-timeout-ms 2000]
@@ -32,7 +37,8 @@
 //!                    reproducible worker panics / slow stages / malformed
 //!                    requests for chaos testing)
 //! repro predict      --model model.json --input queries.txt [--k 5]
-//!                    [--beam 64] [--exact] [--parallelism N]
+//!                    [--beam 64] [--exact] [--quantize off|f16|i8]
+//!                    [--parallelism N]
 //!                    (one-at-a-time submission through the request
 //!                    batcher; results bit-identical to one big batch)
 //! repro coord        [--socket /path.sock] [--clients 2] [--rounds 8]
@@ -106,10 +112,10 @@ use adv_softmax::exp;
 use adv_softmax::runtime::Registry;
 use adv_softmax::sampler::AdversarialSampler;
 use adv_softmax::serve::daemon::{self, Daemon, RealClock};
-use adv_softmax::serve::faults::FaultPlan;
 use adv_softmax::serve::{evaluate_serving, Predictor, RequestBatcher, ServingModel, TopK};
 use adv_softmax::train::TrainRun;
 use adv_softmax::utils::cli::Args;
+use adv_softmax::utils::faults::FaultPlan;
 use adv_softmax::utils::{Pool, StopWatch};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -295,6 +301,7 @@ fn serve_config_from(args: &Args) -> Result<ServeConfig> {
         beam: args.get("beam", defaults.beam)?,
         k: args.get("k", defaults.k)?,
         exact: args.flag("exact")?,
+        quantize: args.get("quantize", defaults.quantize)?,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -321,13 +328,14 @@ fn serve(args: &Args) -> Result<()> {
     let pred = Predictor::new(&model, cfg)?;
     let pool = Pool::from_parallelism(parallelism);
     println!(
-        "model: C={} K={} aux={} correction={}  mode={}  k={}",
+        "model: C={} K={} aux={} correction={}  mode={}  k={}  quantize={}",
         model.num_classes,
         model.feat_dim,
         model.aux.is_some(),
         model.correct_bias,
         if cfg.exact { "exact".to_string() } else { format!("beam={}", cfg.beam) },
         pred.k(),
+        cfg.quantize,
     );
 
     if do_eval {

@@ -21,9 +21,41 @@
 //! the exact oracle's ranking whenever the candidate set covers it.
 
 use crate::data::Dataset;
-use crate::linalg::{affine_dots_tile, dot};
+use crate::linalg::{
+    affine_dots_tile, affine_dots_tile_f16, affine_dots_tile_i8, dot, dot_f16, dot_i8,
+};
 use crate::model::ParamStore;
 use crate::sampler::{AdversarialSampler, LpnBlockScratch, NoiseSampler};
+
+/// Classifier row storage for the ξ sweep: full-precision rows, or a
+/// quantized serving format decoded on the fly with f32 accumulation.
+///
+/// Determinism: every variant scores through the canonical [`dot`]
+/// operation sequence (the quantized kernels decode inline, documented
+/// bit-identical to dequantize-then-[`dot`] in `linalg`), so a candidate
+/// re-rank and a dense sweep over the same storage agree bit for bit, and
+/// results do not depend on worker count or batching. Quantization itself
+/// (`f32 → f16` round-to-nearest-even, `f32 → i8` symmetric per-row
+/// scale) happens once at model load, never per query.
+#[derive(Clone, Copy)]
+pub enum RowStore<'a> {
+    /// Row-major `[C, K]` f32 rows (training params, f32 serving).
+    F32(&'a [f32]),
+    /// IEEE binary16 bit patterns, same layout, half the bytes.
+    F16(&'a [u16]),
+    /// Symmetric i8 rows with one f32 scale per row, a quarter the bytes.
+    I8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+impl RowStore<'_> {
+    fn len(&self) -> usize {
+        match self {
+            RowStore::F32(w) => w.len(),
+            RowStore::F16(w) => w.len(),
+            RowStore::I8 { q, .. } => q.len(),
+        }
+    }
+}
 
 /// Reusable buffers for [`Scorer`] sweeps: the correction block (`m · C`
 /// floats, grown once) plus the sampler's projection/activation scratch
@@ -43,7 +75,7 @@ pub struct ScoreScratch {
 /// [`ParamStore`] ([`Scorer::from_params`]) and the optimizer-free
 /// [`crate::serve::ServingModel`] snapshot.
 pub struct Scorer<'a> {
-    w: &'a [f32],
+    rows: RowStore<'a>,
     b: &'a [f32],
     pub num_classes: usize,
     pub feat_dim: usize,
@@ -51,7 +83,7 @@ pub struct Scorer<'a> {
 }
 
 impl<'a> Scorer<'a> {
-    /// Scorer over raw row-major `[C, K]` weights and `[C]` biases.
+    /// Scorer over raw row-major `[C, K]` f32 weights and `[C]` biases.
     /// `corrector = Some` applies the Eq. 5 correction to every score.
     pub fn new(
         w: &'a [f32],
@@ -59,8 +91,21 @@ impl<'a> Scorer<'a> {
         feat_dim: usize,
         corrector: Option<&'a AdversarialSampler>,
     ) -> Self {
+        Self::over_rows(RowStore::F32(w), b, feat_dim, corrector)
+    }
+
+    /// Scorer over any [`RowStore`] — the quantized-serving entry point.
+    pub fn over_rows(
+        rows: RowStore<'a>,
+        b: &'a [f32],
+        feat_dim: usize,
+        corrector: Option<&'a AdversarialSampler>,
+    ) -> Self {
         assert!(feat_dim > 0, "scorer needs a positive feature dim");
-        assert_eq!(w.len(), b.len() * feat_dim, "weight/bias shape mismatch");
+        assert_eq!(rows.len(), b.len() * feat_dim, "weight/bias shape mismatch");
+        if let RowStore::I8 { scales, .. } = rows {
+            assert_eq!(scales.len(), b.len(), "one i8 scale per row");
+        }
         if let Some(adv) = corrector {
             assert_eq!(
                 adv.tree.num_classes,
@@ -72,7 +117,7 @@ impl<'a> Scorer<'a> {
                 "corrector PCA input dim must match the classifier feature dim"
             );
         }
-        Self { w, b, num_classes: b.len(), feat_dim, corrector }
+        Self { rows, b, num_classes: b.len(), feat_dim, corrector }
     }
 
     /// Scorer over a training parameter store.
@@ -107,7 +152,13 @@ impl<'a> Scorer<'a> {
         let k = self.feat_dim;
         debug_assert_eq!(xs.len(), m * k);
         debug_assert_eq!(out.len(), m * c);
-        affine_dots_tile(self.w, self.b, k, xs, m, out, c, 0);
+        match self.rows {
+            RowStore::F32(w) => affine_dots_tile(w, self.b, k, xs, m, out, c, 0),
+            RowStore::F16(w) => affine_dots_tile_f16(w, self.b, k, xs, m, out, c, 0),
+            RowStore::I8 { q, scales } => {
+                affine_dots_tile_i8(q, scales, self.b, k, xs, m, out, c, 0)
+            }
+        }
         if let Some(adv) = self.corrector {
             if scratch.lpn.len() < m * c {
                 scratch.lpn.resize(m * c, 0.0);
@@ -168,7 +219,12 @@ impl<'a> Scorer<'a> {
         for (o, &y) in out.iter_mut().zip(labels.iter()) {
             let yu = y as usize;
             debug_assert!(yu < self.num_classes);
-            *o = dot(&self.w[yu * k..(yu + 1) * k], x) + self.b[yu];
+            let xi = match self.rows {
+                RowStore::F32(w) => dot(&w[yu * k..(yu + 1) * k], x),
+                RowStore::F16(w) => dot_f16(&w[yu * k..(yu + 1) * k], x),
+                RowStore::I8 { q, scales } => dot_i8(&q[yu * k..(yu + 1) * k], scales[yu], x),
+            };
+            *o = xi + self.b[yu];
         }
         if let Some(adv) = self.corrector {
             debug_assert_eq!(proj.len(), adv.aux_dim());
@@ -341,6 +397,78 @@ mod tests {
                     "row {j} label {y}"
                 );
             }
+        }
+    }
+
+    /// The pinned quantize-then-score oracle: scoring through a quantized
+    /// [`RowStore`] must equal quantize → dequantize to f32 → score with
+    /// the full-precision path, bit for bit, for both storage formats and
+    /// both the dense sweep and the candidate re-rank. This is the whole
+    /// quantized-serving determinism contract in one test.
+    #[test]
+    fn quantized_scoring_matches_dequantize_then_score_bitwise() {
+        use crate::linalg::{f16_from_f32, f16_to_f32, quantize_row_i8};
+        let (c, k, m) = (33, 13, 11); // ragged vs tiles and dot chunks
+        let p = toy_params(c, k, 7);
+        let mut rng = Rng::new(8);
+        let xs: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        // f16 storage and its dequantized f32 oracle
+        let w16: Vec<u16> = p.w.iter().map(|&v| f16_from_f32(v)).collect();
+        let w16_deq: Vec<f32> = w16.iter().map(|&h| f16_to_f32(h)).collect();
+        // i8 storage and its dequantized f32 oracle
+        let mut q8 = vec![0i8; c * k];
+        let mut scales = vec![0f32; c];
+        for y in 0..c {
+            scales[y] = quantize_row_i8(&p.w[y * k..(y + 1) * k], &mut q8[y * k..(y + 1) * k]);
+        }
+        let q8_deq: Vec<f32> =
+            q8.iter().enumerate().map(|(t, &q)| q as f32 * scales[t / k]).collect();
+        let cases: [(RowStore, &[f32]); 2] = [
+            (RowStore::F16(&w16), &w16_deq),
+            (RowStore::I8 { q: &q8, scales: &scales }, &q8_deq),
+        ];
+        let labels: Vec<u32> = (0..c as u32).step_by(3).collect();
+        for (rows, deq) in cases {
+            let quant = Scorer::over_rows(rows, &p.b, k, None);
+            let oracle = Scorer::new(deq, &p.b, k, None);
+            let mut got = vec![0f32; m * c];
+            let mut want = vec![0f32; m * c];
+            quant.score_block_with(&xs, m, &mut got, &mut ScoreScratch::default());
+            oracle.score_block_with(&xs, m, &mut want, &mut ScoreScratch::default());
+            for t in 0..m * c {
+                assert_eq!(got[t].to_bits(), want[t].to_bits(), "sweep entry {t}");
+            }
+            // candidate re-rank agrees with the dense sweep's entries
+            let mut sparse = vec![0f32; labels.len()];
+            quant.score_candidates_projected(&xs[..k], &[], &labels, &mut sparse);
+            for (s, &y) in sparse.iter().zip(labels.iter()) {
+                assert_eq!(s.to_bits(), got[y as usize].to_bits(), "label {y}");
+            }
+        }
+    }
+
+    /// Quantization error is bounded: f16 scores stay close to f32 scores
+    /// on unit-scale rows (relative f16 step is 2⁻¹¹ per element).
+    #[test]
+    fn f16_scores_stay_close_to_f32() {
+        use crate::linalg::f16_from_f32;
+        let (c, k) = (64, 32);
+        let p = toy_params(c, k, 11);
+        let mut rng = Rng::new(12);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let w16: Vec<u16> = p.w.iter().map(|&v| f16_from_f32(v)).collect();
+        let exact = Scorer::new(&p.w, &p.b, k, None);
+        let quant = Scorer::over_rows(RowStore::F16(&w16), &p.b, k, None);
+        let (mut se, mut sq) = (vec![0f32; c], vec![0f32; c]);
+        exact.score_all_with(&x, &mut se, &mut ScoreScratch::default());
+        quant.score_all_with(&x, &mut sq, &mut ScoreScratch::default());
+        for y in 0..c {
+            assert!(
+                (se[y] - sq[y]).abs() < 0.05,
+                "label {y}: f32 {} vs f16 {}",
+                se[y],
+                sq[y]
+            );
         }
     }
 

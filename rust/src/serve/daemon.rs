@@ -47,7 +47,7 @@
 //! ignored; the line `shutdown` drains the queue and exits the loop.
 
 use crate::config::{DaemonConfig, ServeConfig};
-use crate::serve::faults::FaultPlan;
+use crate::utils::faults::FaultPlan;
 use crate::serve::{Predictor, ServingModel, TopK};
 use crate::utils::Pool;
 use anyhow::{Context, Result};

@@ -37,17 +37,26 @@
 //! * [`daemon`] — the fault-tolerant long-lived request loop
 //!   (`repro serve --daemon`): bounded admission, deadline-aware
 //!   micro-batching, graceful beam degradation, supervised workers.
-//! * [`faults`] — seeded, reproducible fault injection for chaos tests
-//!   (`REPRO_FAULTS`).
+//!
+//! # Quantized serving
+//!
+//! [`ServeConfig::quantize`] (`repro serve --quantize`, `REPRO_QUANTIZE`)
+//! stores the classifier rows as f16 (or i8 + per-row scale) inside the
+//! predictor, halving (quartering) the bytes the re-rank sweep streams.
+//! Quantization happens **once at [`Predictor::new`]** — prediction
+//! decodes rows inline and accumulates in f32 through the same canonical
+//! [`Scorer`] kernels, so quantized serving is bit-identical to
+//! quantize-then-score with f32 rows, at every worker count. The f32
+//! checkpoint itself is never modified.
 
 pub mod daemon;
-pub mod faults;
 
-use crate::config::ServeConfig;
+use crate::config::{QuantMode, ServeConfig};
 use crate::data::Dataset;
+use crate::linalg::{f16_from_f32, quantize_row_i8};
 use crate::model::ParamStore;
 use crate::sampler::AdversarialSampler;
-use crate::score::{self, ScoreScratch, Scorer};
+use crate::score::{self, RowStore, ScoreScratch, Scorer};
 use crate::tree::{BeamScratch, LANES};
 use crate::utils::json::Json;
 use crate::utils::{Pool, SharedMut, PAR_MIN_MERGE_ROWS};
@@ -240,14 +249,24 @@ impl PredictScratch {
     }
 }
 
+/// Owned quantized copies of the classifier rows, built once per
+/// predictor when [`ServeConfig::quantize`] asks for them.
+enum QuantRows {
+    None,
+    F16(Vec<u16>),
+    I8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
 /// Top-k predictor over an immutable [`ServingModel`] under a
-/// [`ServeConfig`]. Cheap to construct; holds no mutable state, so one
-/// predictor is shared read-only by every pool worker.
+/// [`ServeConfig`]. Cheap to construct (quantized modes pay one encode
+/// pass over the rows); holds no mutable state, so one predictor is
+/// shared read-only by every pool worker.
 pub struct Predictor<'a> {
     model: &'a ServingModel,
     cfg: ServeConfig,
     /// Effective k (requested k clamped to C).
     k: usize,
+    quant: QuantRows,
 }
 
 impl<'a> Predictor<'a> {
@@ -260,7 +279,35 @@ impl<'a> Predictor<'a> {
                  for models without one"
             );
         }
-        Ok(Self { model, cfg, k: cfg.k.min(model.num_classes) })
+        let quant = match cfg.quantize {
+            QuantMode::Off => QuantRows::None,
+            QuantMode::F16 => QuantRows::F16(model.w.iter().map(|&v| f16_from_f32(v)).collect()),
+            QuantMode::I8 => {
+                let k = model.feat_dim;
+                let mut q = vec![0i8; model.w.len()];
+                let scales = model
+                    .w
+                    .chunks_exact(k)
+                    .zip(q.chunks_exact_mut(k))
+                    .map(|(row, qrow)| quantize_row_i8(row, qrow))
+                    .collect();
+                QuantRows::I8 { q, scales }
+            }
+        };
+        Ok(Self { model, cfg, k: cfg.k.min(model.num_classes), quant })
+    }
+
+    /// The predictor's scorer: the model's rows in the configured storage
+    /// format (corrected iff the model corrects bias). `QuantMode::Off`
+    /// is exactly [`ServingModel::scorer`].
+    fn scorer(&self) -> Scorer<'_> {
+        let rows = match &self.quant {
+            QuantRows::None => return self.model.scorer(),
+            QuantRows::F16(w) => RowStore::F16(w),
+            QuantRows::I8 { q, scales } => RowStore::I8 { q, scales },
+        };
+        let corrector = if self.model.correct_bias { self.model.aux.as_ref() } else { None };
+        Scorer::over_rows(rows, &self.model.b, self.model.feat_dim, corrector)
     }
 
     /// Predictions per query (requested k clamped to C).
@@ -337,7 +384,7 @@ impl<'a> Predictor<'a> {
         debug_assert_eq!(xs.len(), rows * kf);
         debug_assert_eq!(labels.len(), rows * kk);
         debug_assert_eq!(scores.len(), rows * kk);
-        let scorer = self.model.scorer();
+        let scorer = self.scorer();
         let mut scratch = PredictScratch::new();
         if self.cfg.exact {
             self.fill_span_exact(&scorer, xs, rows, labels, scores, &mut scratch);
@@ -737,6 +784,47 @@ mod tests {
         let mut bad = m.clone();
         bad.b.push(0.0);
         assert!(ServingModel::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn quantized_predictor_matches_dequantized_oracle_bitwise() {
+        // random (not exactly representable) weights: the quantized
+        // predictor must predict exactly like an f32 model holding the
+        // dequantized rows — decode-inline scoring is quantize-then-score
+        let mut m = onehot_model();
+        let mut rng = Rng::new(11);
+        for v in m.w.iter_mut() {
+            *v = rng.normal();
+        }
+        let n = 9;
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.normal()).collect();
+        for mode in [QuantMode::F16, QuantMode::I8] {
+            let cfg = ServeConfig { exact: true, k: 3, quantize: mode, ..Default::default() };
+            let pred = Predictor::new(&m, cfg).unwrap();
+            // dequantize through the same codec, then serve in plain f32
+            let mut deq = m.clone();
+            match &pred.quant {
+                QuantRows::F16(w) => {
+                    deq.w = w.iter().map(|&h| crate::linalg::f16_to_f32(h)).collect();
+                }
+                QuantRows::I8 { q, scales } => {
+                    deq.w = q
+                        .iter()
+                        .enumerate()
+                        .map(|(t, &qv)| qv as f32 * scales[t / 4])
+                        .collect();
+                }
+                QuantRows::None => unreachable!("quantized cfg built no rows"),
+            }
+            let off =
+                ServeConfig { exact: true, k: 3, quantize: QuantMode::Off, ..Default::default() };
+            let oracle = Predictor::new(&deq, off).unwrap();
+            assert_eq!(
+                pred.predict_batch_with(&xs, n, &Pool::serial()),
+                oracle.predict_batch_with(&xs, n, &Pool::serial()),
+                "{mode:?} must match its dequantized oracle bitwise"
+            );
+        }
     }
 
     #[test]

@@ -8,14 +8,26 @@
 //! (or 8 examples) per inner loop**:
 //!
 //! * [`TreeKernel::sample_batch`] / [`TreeKernel::log_prob_batch`] walk a
-//!   whole block of descents one level at a time in lane groups of 8: the
-//!   group's 8 activations are gathered with the canonical
-//!   [`crate::linalg::dot`] order, the fused sigmoid/log-sigmoid terms for
-//!   all 8 lanes run through the vectorizable structure-of-arrays kernels
+//!   whole block of descents in lane groups of 8: the group's 8
+//!   activations are gathered with the canonical [`crate::linalg::dot`]
+//!   order, the fused sigmoid/log-sigmoid terms for all 8 lanes run
+//!   through the vectorizable structure-of-arrays kernels
 //!   ([`crate::linalg::sig_terms8`] / [`crate::linalg::log_sigmoid_pair8`]),
-//!   and only the per-lane RNG draw stays scalar. Levels whose `any_forced`
-//!   mask is clear skip forced-flag handling entirely — the common case for
-//!   every level above the padding fringe — instead of branching per draw.
+//!   and the per-lane uniforms come from the counter-mode
+//!   [`crate::utils::rng::LaneRng`] — pure functions of stack-held
+//!   (key, counter) pairs, so the draw stage is branch-free with no
+//!   sequential RNG state (the stage that used to serialize the loop; the
+//!   retained xoshiro-draw kernel [`TreeKernel::sample_batch_serial_rng`]
+//!   is the `speedups_rng` bench reference). Levels whose `any_forced`
+//!   mask is clear skip forced-flag handling entirely — the common case
+//!   for every level above the padding fringe — instead of branching per
+//!   draw.
+//! * [`TreeKernel::beam_topk`] stages the whole frontier's activations and
+//!   log-sigmoid terms lane-major in [`BeamScratch`] and runs them through
+//!   the 8-lane kernels, 8 beam prefixes per inner loop; forced levels and
+//!   ragged frontier tails take the scalar per-prefix path
+//!   ([`TreeKernel::beam_topk_scalar`] keeps the one-prefix-at-a-time
+//!   descent as the parity oracle and `speedups_beam8` bench reference).
 //! * [`TreeKernel::node_activations_batch`] runs the O(kC) activation
 //!   sweep as a tiled nodes×k · k×m kernel
 //!   ([`crate::linalg::affine_dots_tile`]): the node-row loop sits outside
@@ -48,6 +60,7 @@ use super::{Forced, Tree, PADDING};
 use crate::linalg::{
     affine_dots_tile, dot, log_sigmoid_pair, log_sigmoid_pair8, sig_terms, sig_terms8,
 };
+use crate::utils::rng::LaneRng;
 use crate::utils::Rng;
 
 /// Lane width of the blocked kernels: descents/examples per inner loop.
@@ -119,11 +132,134 @@ impl TreeKernel {
 
     /// Blocked ancestral sampling, 8 descents per inner loop. `x_projs` is
     /// `[m, k]` row-major and `rngs[j]` is draw `j`'s private stream,
-    /// consumed exactly as scalar [`Tree::sample`] would consume it;
-    /// results are bit-identical to per-draw scalar sampling under the
-    /// same streams. `labels` doubles as the descent state, so the call is
+    /// consumed exactly as scalar [`Tree::sample`] would consume it (one
+    /// `next_u64` per descent, keying a counter-mode [`LaneRng`]); results
+    /// are bit-identical to per-draw scalar sampling under the same
+    /// streams. `labels` doubles as the descent state, so the call is
     /// allocation-free.
+    ///
+    /// Structure: group-outer, level-inner — each lane group's 8 descent
+    /// keys and draw counters live in stack arrays for the whole
+    /// root→leaf walk, so the fast path's uniform stage is a branch-free
+    /// loop over pure `(key, counter)` mixes with no sequential RNG state
+    /// (the stage that serialized the xoshiro-draw kernel, retained as
+    /// [`TreeKernel::sample_batch_serial_rng`]).
     pub fn sample_batch(
+        &self,
+        x_projs: &[f32],
+        rngs: &mut [Rng],
+        labels: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let m = labels.len();
+        let k = self.aux_dim;
+        debug_assert_eq!(x_projs.len(), m * k);
+        debug_assert_eq!(rngs.len(), m);
+        debug_assert_eq!(logps.len(), m);
+        labels.iter_mut().for_each(|n| *n = 0);
+        logps.iter_mut().for_each(|v| *v = 0.0);
+        let mut g = 0;
+        while g < m {
+            let hi = (g + LANES).min(m);
+            let mut keys = [0u64; LANES];
+            let mut ctrs = [0u64; LANES];
+            for (l, r) in rngs[g..hi].iter_mut().enumerate() {
+                keys[l] = LaneRng::from_rng(r).key();
+            }
+            let x = &x_projs[g * k..hi * k];
+            let nodes = &mut labels[g..hi];
+            let lps = &mut logps[g..hi];
+            for level in &self.levels {
+                if hi - g == LANES && !level.any_forced {
+                    self.sample_level_fast(level, x, &keys, &mut ctrs, nodes, lps);
+                } else {
+                    self.sample_level_scalar(level, x, &keys, &mut ctrs, nodes, lps);
+                }
+            }
+            g = hi;
+        }
+        for label in labels.iter_mut() {
+            let leaf = *label as usize - (self.num_leaves - 1);
+            *label = self.label_of_leaf[leaf];
+            debug_assert_ne!(*label, PADDING, "sampled a padding leaf");
+        }
+    }
+
+    /// Branch-free lane group for one level: 8 gathered canonical dots,
+    /// staged 8-lane sigmoid terms, and 8 counter-mode uniforms computed
+    /// in a dependency-free loop from the stack-held keys/counters.
+    fn sample_level_fast(
+        &self,
+        level: &Level,
+        x: &[f32],
+        keys: &[u64; LANES],
+        ctrs: &mut [u64; LANES],
+        nodes: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let k = self.aux_dim;
+        let mut acts = [0f32; LANES];
+        for l in 0..LANES {
+            let local = nodes[l] as usize - level.first;
+            acts[l] = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
+                + level.b[local];
+        }
+        let (mut p, mut lsr, mut lsl) = ([0f32; LANES], [0f32; LANES], [0f32; LANES]);
+        sig_terms8(&acts, &mut p, &mut lsr, &mut lsl);
+        let mut u = [0f32; LANES];
+        for l in 0..LANES {
+            u[l] = LaneRng::uniform_at(keys[l], ctrs[l]);
+        }
+        for l in 0..LANES {
+            ctrs[l] += 1;
+            let right = u[l] < p[l];
+            logps[l] += if right { lsr[l] } else { lsl[l] };
+            nodes[l] = (2 * nodes[l] as usize + 1 + usize::from(right)) as u32;
+        }
+    }
+
+    /// Per-lane fallback for levels with forced nodes and for the block's
+    /// ragged tail group. Same canonical math and draw sequence, scalar
+    /// shape: a lane's counter advances only on non-forced draws, exactly
+    /// like [`Tree::sample`].
+    fn sample_level_scalar(
+        &self,
+        level: &Level,
+        x: &[f32],
+        keys: &[u64; LANES],
+        ctrs: &mut [u64; LANES],
+        nodes: &mut [u32],
+        logps: &mut [f32],
+    ) {
+        let k = self.aux_dim;
+        for l in 0..nodes.len() {
+            let node = nodes[l] as usize;
+            let local = node - level.first;
+            let go_right = match level.forced[local] {
+                1 => true,
+                -1 => false,
+                _ => {
+                    let a = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
+                        + level.b[local];
+                    let (p, lsr, lsl) = sig_terms(a);
+                    let right = LaneRng::uniform_at(keys[l], ctrs[l]) < p;
+                    ctrs[l] += 1;
+                    logps[l] += if right { lsr } else { lsl };
+                    right
+                }
+            };
+            nodes[l] = (2 * node + 1 + usize::from(go_right)) as u32;
+        }
+    }
+
+    /// The pre-lane-RNG blocked sampler: identical level-blocked structure,
+    /// but each lane's uniform comes from a serial per-lane xoshiro draw
+    /// (`rngs[l].next_f32()`), so the draw stage carries a sequential
+    /// state dependency through every level. Retained **only** as the
+    /// measured reference for the `speedups_rng` bench floor — its stream
+    /// format predates [`LaneRng`] and is *not* bit-compatible with
+    /// [`Tree::sample`] or [`TreeKernel::sample_batch`].
+    pub fn sample_batch_serial_rng(
         &self,
         x_projs: &[f32],
         rngs: &mut [Rng],
@@ -146,9 +282,42 @@ impl TreeKernel {
                 let lps = &mut logps[g..hi];
                 let rs = &mut rngs[g..hi];
                 if hi - g == LANES && !level.any_forced {
-                    self.sample_group_fast(level, x, rs, nodes, lps);
+                    let mut acts = [0f32; LANES];
+                    for l in 0..LANES {
+                        let local = nodes[l] as usize - level.first;
+                        acts[l] = dot(
+                            &level.w[local * k..(local + 1) * k],
+                            &x[l * k..(l + 1) * k],
+                        ) + level.b[local];
+                    }
+                    let (mut p, mut lsr, mut lsl) =
+                        ([0f32; LANES], [0f32; LANES], [0f32; LANES]);
+                    sig_terms8(&acts, &mut p, &mut lsr, &mut lsl);
+                    for l in 0..LANES {
+                        let right = rs[l].next_f32() < p[l];
+                        lps[l] += if right { lsr[l] } else { lsl[l] };
+                        nodes[l] = (2 * nodes[l] as usize + 1 + usize::from(right)) as u32;
+                    }
                 } else {
-                    self.sample_group_scalar(level, x, rs, nodes, lps);
+                    for l in 0..nodes.len() {
+                        let node = nodes[l] as usize;
+                        let local = node - level.first;
+                        let go_right = match level.forced[local] {
+                            1 => true,
+                            -1 => false,
+                            _ => {
+                                let a = dot(
+                                    &level.w[local * k..(local + 1) * k],
+                                    &x[l * k..(l + 1) * k],
+                                ) + level.b[local];
+                                let (p, lsr, lsl) = sig_terms(a);
+                                let right = rs[l].next_f32() < p;
+                                lps[l] += if right { lsr } else { lsl };
+                                right
+                            }
+                        };
+                        nodes[l] = (2 * node + 1 + usize::from(go_right)) as u32;
+                    }
                 }
                 g = hi;
             }
@@ -157,62 +326,6 @@ impl TreeKernel {
             let leaf = *label as usize - (self.num_leaves - 1);
             *label = self.label_of_leaf[leaf];
             debug_assert_ne!(*label, PADDING, "sampled a padding leaf");
-        }
-    }
-
-    /// Branch-free lane group: 8 gathered canonical dots, staged 8-lane
-    /// sigmoid terms, scalar RNG draws.
-    fn sample_group_fast(
-        &self,
-        level: &Level,
-        x: &[f32],
-        rngs: &mut [Rng],
-        nodes: &mut [u32],
-        logps: &mut [f32],
-    ) {
-        let k = self.aux_dim;
-        let mut acts = [0f32; LANES];
-        for l in 0..LANES {
-            let local = nodes[l] as usize - level.first;
-            acts[l] = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
-                + level.b[local];
-        }
-        let (mut p, mut lsr, mut lsl) = ([0f32; LANES], [0f32; LANES], [0f32; LANES]);
-        sig_terms8(&acts, &mut p, &mut lsr, &mut lsl);
-        for l in 0..LANES {
-            let right = rngs[l].next_f32() < p[l];
-            logps[l] += if right { lsr[l] } else { lsl[l] };
-            nodes[l] = (2 * nodes[l] as usize + 1 + usize::from(right)) as u32;
-        }
-    }
-
-    /// Per-lane fallback for levels with forced nodes and for the block's
-    /// ragged tail group. Same canonical math, scalar shape.
-    fn sample_group_scalar(
-        &self,
-        level: &Level,
-        x: &[f32],
-        rngs: &mut [Rng],
-        nodes: &mut [u32],
-        logps: &mut [f32],
-    ) {
-        let k = self.aux_dim;
-        for l in 0..nodes.len() {
-            let node = nodes[l] as usize;
-            let local = node - level.first;
-            let go_right = match level.forced[local] {
-                1 => true,
-                -1 => false,
-                _ => {
-                    let a = dot(&level.w[local * k..(local + 1) * k], &x[l * k..(l + 1) * k])
-                        + level.b[local];
-                    let (p, lsr, lsl) = sig_terms(a);
-                    let right = rngs[l].next_f32() < p;
-                    logps[l] += if right { lsr } else { lsl };
-                    right
-                }
-            };
-            nodes[l] = (2 * node + 1 + usize::from(go_right)) as u32;
         }
     }
 
@@ -342,6 +455,15 @@ impl TreeKernel {
     /// for batched vs one-at-a-time submission. A candidate's log q is
     /// accumulated root→leaf exactly like scalar [`Tree::log_prob`], so
     /// the two agree bit for bit (pinned in tests).
+    ///
+    /// Structure: on forced-free levels the frontier's activations and
+    /// log-sigmoid terms are staged lane-major in [`BeamScratch`] and run
+    /// through the 8-lane kernels, 8 beam prefixes per inner loop; the
+    /// staged ragged tail and forced levels take the per-prefix scalar
+    /// body. Child push order matches the per-prefix descent
+    /// ([`TreeKernel::beam_topk_scalar`], the retained oracle and
+    /// `speedups_beam8` bench reference) exactly, so the two are
+    /// bit-identical (pinned by proptest).
     pub fn beam_topk(
         &self,
         x_proj: &[f32],
@@ -360,6 +482,90 @@ impl TreeKernel {
             if frontier.len() > beam {
                 // (log q desc, node asc): a total order, so the kept set is
                 // a pure function of the prefix probabilities
+                frontier.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                frontier.truncate(beam);
+            }
+            next.clear();
+            if !level.any_forced && frontier.len() >= LANES {
+                // lane-major staging: all frontier activations, then the
+                // 8-lane fused log-sigmoid over full lane groups
+                let n = frontier.len();
+                scratch.acts.clear();
+                scratch.acts.extend(frontier.iter().map(|&(_, node)| {
+                    let local = node as usize - level.first;
+                    dot(&level.w[local * k..(local + 1) * k], x_proj) + level.b[local]
+                }));
+                scratch.lsr.resize(n, 0.0);
+                scratch.lsl.resize(n, 0.0);
+                let mut i = 0;
+                while i + LANES <= n {
+                    let mut a8 = [0f32; LANES];
+                    a8.copy_from_slice(&scratch.acts[i..i + LANES]);
+                    let (mut lsr8, mut lsl8) = ([0f32; LANES], [0f32; LANES]);
+                    log_sigmoid_pair8(&a8, &mut lsr8, &mut lsl8);
+                    scratch.lsr[i..i + LANES].copy_from_slice(&lsr8);
+                    scratch.lsl[i..i + LANES].copy_from_slice(&lsl8);
+                    i += LANES;
+                }
+                for j in i..n {
+                    let (lsr, lsl) = log_sigmoid_pair(scratch.acts[j]);
+                    scratch.lsr[j] = lsr;
+                    scratch.lsl[j] = lsl;
+                }
+                for (j, &(lp, node)) in frontier.iter().enumerate() {
+                    next.push((lp + scratch.lsl[j], 2 * node + 1));
+                    next.push((lp + scratch.lsr[j], 2 * node + 2));
+                }
+            } else {
+                for &(lp, node) in frontier.iter() {
+                    let local = node as usize - level.first;
+                    match level.forced[local] {
+                        1 => next.push((lp, 2 * node + 2)),
+                        -1 => next.push((lp, 2 * node + 1)),
+                        _ => {
+                            let a = dot(&level.w[local * k..(local + 1) * k], x_proj)
+                                + level.b[local];
+                            let (lsr, lsl) = log_sigmoid_pair(a);
+                            next.push((lp + lsl, 2 * node + 1));
+                            next.push((lp + lsr, 2 * node + 2));
+                        }
+                    }
+                }
+            }
+            std::mem::swap(frontier, next);
+        }
+        out.clear();
+        let base = self.num_leaves - 1;
+        for &(lp, node) in frontier.iter() {
+            let label = self.label_of_leaf[node as usize - base];
+            if label != PADDING {
+                out.push((label, lp));
+            }
+        }
+        out.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    }
+
+    /// The one-prefix-at-a-time beam descent: same pruning, same child
+    /// push order, no lane staging. Retained as the bit-parity oracle for
+    /// the lane-group [`TreeKernel::beam_topk`] (pinned by proptest across
+    /// beam widths × padding shapes) and as the measured reference for the
+    /// `speedups_beam8` bench floor.
+    pub fn beam_topk_scalar(
+        &self,
+        x_proj: &[f32],
+        beam: usize,
+        out: &mut Vec<(u32, f32)>,
+        scratch: &mut BeamScratch,
+    ) {
+        let k = self.aux_dim;
+        debug_assert_eq!(x_proj.len(), k);
+        assert!(beam >= 1, "beam width must be at least 1");
+        let frontier = &mut scratch.frontier;
+        let next = &mut scratch.next;
+        frontier.clear();
+        frontier.push((0.0, 0u32));
+        for level in &self.levels {
+            if frontier.len() > beam {
                 frontier.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
                 frontier.truncate(beam);
             }
@@ -392,12 +598,17 @@ impl TreeKernel {
     }
 }
 
-/// Reusable frontier buffers for [`TreeKernel::beam_topk`] (grown once,
-/// fully rewritten per query — per-query descents are allocation-free).
+/// Reusable buffers for [`TreeKernel::beam_topk`] (grown once, fully
+/// rewritten per query — per-query descents are allocation-free): the
+/// frontier double buffer plus the lane-major activation / log-sigmoid
+/// staging the 8-lane level body writes.
 #[derive(Default)]
 pub struct BeamScratch {
     frontier: Vec<(f32, u32)>,
     next: Vec<(f32, u32)>,
+    acts: Vec<f32>,
+    lsr: Vec<f32>,
+    lsl: Vec<f32>,
 }
 
 #[cfg(test)]

@@ -40,6 +40,7 @@ pub use kernel::{BeamScratch, TreeKernel, LANES};
 
 use crate::linalg::{dot, log_sigmoid_pair, sig_terms};
 use crate::utils::json::Json;
+use crate::utils::rng::LaneRng;
 use crate::utils::Rng;
 use std::path::Path;
 
@@ -93,8 +94,14 @@ impl Tree {
     /// Ancestral sampling: draw y' ~ p_n(·|x), returning (label, log p_n).
     /// O(k log C). Scalar walker; bit-identical to the blocked
     /// [`TreeKernel::sample_batch`] under the same RNG stream.
+    ///
+    /// Stream format: one `next_u64` is consumed from `rng` as the descent
+    /// key of a counter-mode [`LaneRng`]; the per-level uniforms (one per
+    /// non-forced node on the path) are pure functions of that key, which
+    /// is what lets the kernel draw eight lanes branch-free.
     pub fn sample(&self, x_proj: &[f32], rng: &mut Rng) -> (u32, f32) {
         debug_assert_eq!(x_proj.len(), self.aux_dim);
+        let mut lane = LaneRng::from_rng(rng);
         let mut node = 0usize;
         let mut logp = 0f32;
         for _ in 0..self.depth {
@@ -104,7 +111,7 @@ impl Tree {
                 _ => {
                     let a = self.activation(node, x_proj);
                     let (p_right, lsr, lsl) = sig_terms(a);
-                    let right = rng.next_f32() < p_right;
+                    let right = lane.next_f32() < p_right;
                     logp += if right { lsr } else { lsl };
                     right
                 }

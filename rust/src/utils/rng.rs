@@ -140,6 +140,94 @@ impl Rng {
     }
 }
 
+/// Counter-based per-descent RNG (splitmix64 in counter mode).
+///
+/// A tree descent draws one uniform per non-forced level. The xoshiro
+/// [`Rng`] serializes those draws through 256 bits of mutable state, which
+/// is exactly the stage that kept `TreeKernel::sample_batch`'s inner loop
+/// scalar: lane `l`'s next state depends on lane `l`'s previous draw.
+/// `LaneRng` replaces the sequential state with a pure function of
+/// `(key, counter)` — draw `i` of a descent is `lane_mix(key, i)` — so
+/// eight lanes can produce their level-`d` uniforms branch-free from
+/// stack arrays of keys and counters with no cross-iteration dependency.
+///
+/// The key is derived by consuming exactly **one** `next_u64` from the
+/// caller's [`Rng`] at descent start ([`LaneRng::from_rng`]), so stream
+/// bookkeeping (one parent draw per descent) stays with the existing
+/// generator and callers' stream layouts are unchanged. This *is* a
+/// deliberate stream-format change for the descent draws themselves —
+/// see `DETERMINISM.md` for the re-pin policy.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneRng {
+    key: u64,
+    ctr: u64,
+}
+
+/// Golden-ratio increment shared with [`splitmix64`].
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// splitmix64 finalizer of `key + ctr·GOLDEN`: the counter walks the same
+/// state sequence splitmix64 itself would, so draws inherit its diffusion
+/// quality while staying a pure (key, ctr) function.
+#[inline]
+fn lane_mix(key: u64, ctr: u64) -> u64 {
+    let mut z = key.wrapping_add(ctr.wrapping_mul(GOLDEN)).wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl LaneRng {
+    /// Counter mode keyed directly; draw `i` is `uniform_at(key, i)`.
+    #[inline]
+    pub fn new(key: u64) -> Self {
+        Self { key, ctr: 0 }
+    }
+
+    /// Derive a descent key, consuming exactly one draw from `rng`.
+    #[inline]
+    pub fn from_rng(rng: &mut Rng) -> Self {
+        Self::new(rng.next_u64())
+    }
+
+    /// The key this generator was built with (lane staging in the kernel
+    /// carries keys/counters in stack arrays rather than `LaneRng`s).
+    #[inline]
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// Draws consumed so far.
+    #[inline]
+    pub fn counter(&self) -> u64 {
+        self.ctr
+    }
+
+    /// Next raw draw; advances the counter.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let v = lane_mix(self.key, self.ctr);
+        self.ctr += 1;
+        v
+    }
+
+    /// Uniform in [0, 1); advances the counter. Same 24-bit mantissa
+    /// construction as [`Rng::next_f32`].
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Pure draw at an explicit counter: what `next_f32` would return on
+    /// draw `ctr` of a generator keyed with `key`. The kernel's fast path
+    /// calls this per lane from stack-held keys/counters — no state
+    /// load/store, no cross-lane dependency.
+    #[inline]
+    pub fn uniform_at(key: u64, ctr: u64) -> f32 {
+        (lane_mix(key, ctr) >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +317,65 @@ mod tests {
         for _ in 0..10_000 {
             let v = rng.next_f32();
             assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    /// Pin the counter-mode draw sequence for a fixed (seed, stream).
+    /// These constants define the descent stream format shipped with the
+    /// lane-RNG change; if they move, every pinned sampling artifact moves
+    /// with them (see the stream-format-change policy in DETERMINISM.md).
+    #[test]
+    fn lane_rng_spec_sequence_is_pinned() {
+        let base = Rng::new(0xDE_C0DE);
+        let mut parent = base.stream(1, 2);
+        let mut lane = LaneRng::from_rng(&mut parent);
+        assert_eq!(lane.key(), 0x4AE2_68F1_52C0_BD63);
+        let expect_u64: [u64; 4] = [
+            0x3224_AB69_0D28_762C,
+            0x425C_24BB_BBDC_A5D8,
+            0x2A41_0A57_957A_910A,
+            0x4615_3038_5163_6479,
+        ];
+        for (i, &e) in expect_u64.iter().enumerate() {
+            assert_eq!(lane.counter(), i as u64);
+            assert_eq!(lane.next_u64(), e, "draw {i}");
+        }
+        // f32 construction matches Rng::next_f32's 24-bit mantissa path
+        let expect_f32_bits: [u32; 2] = [0x3D9A_2DE0, 0x3E85_6A32];
+        for (i, &e) in expect_f32_bits.iter().enumerate() {
+            assert_eq!(lane.next_f32().to_bits(), e, "f32 draw {}", i + 4);
+        }
+    }
+
+    #[test]
+    fn lane_rng_uniform_at_is_pure_and_matches_sequential() {
+        let mut parent = Rng::new(21);
+        for _ in 0..16 {
+            let key = parent.next_u64();
+            let mut seq = LaneRng::new(key);
+            for ctr in 0..32u64 {
+                let v = seq.next_f32();
+                assert_eq!(v.to_bits(), LaneRng::uniform_at(key, ctr).to_bits());
+                assert!((0.0..1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn lane_rng_keys_decorrelate_lanes() {
+        // eight keys drawn from one parent give eight distinct streams
+        let mut parent = Rng::new(23);
+        let keys: Vec<u64> = (0..8).map(|_| parent.next_u64()).collect();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                let same = (0..64)
+                    .filter(|&c| {
+                        LaneRng::uniform_at(keys[i], c).to_bits()
+                            == LaneRng::uniform_at(keys[j], c).to_bits()
+                    })
+                    .count();
+                assert!(same <= 1, "lanes {i},{j} collide {same}/64 draws");
+            }
         }
     }
 

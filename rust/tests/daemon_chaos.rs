@@ -12,7 +12,7 @@ use adv_softmax::config::{DaemonConfig, DatasetPreset, ServeConfig, SyntheticCon
 use adv_softmax::data::{Dataset, Splits};
 use adv_softmax::sampler::AdversarialSampler;
 use adv_softmax::serve::daemon::{self, Daemon, ManualClock, RealClock, ResponseKind};
-use adv_softmax::serve::faults::FaultPlan;
+use adv_softmax::utils::faults::FaultPlan;
 use adv_softmax::serve::{Predictor, ServingModel, TopK};
 use std::sync::{Arc, OnceLock};
 

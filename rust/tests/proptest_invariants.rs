@@ -11,7 +11,7 @@ use adv_softmax::linalg::{lse_merge, solve_spd};
 use adv_softmax::model::ParamStore;
 use adv_softmax::sampler::{FrequencySampler, NoiseSampler, UniformSampler};
 use adv_softmax::tree::fit::fit_tree;
-use adv_softmax::tree::{Tree, TreeKernel, PADDING};
+use adv_softmax::tree::{BeamScratch, Tree, TreeKernel, PADDING};
 use adv_softmax::utils::json::Json;
 use adv_softmax::utils::{AliasTable, Pool, Rng};
 
@@ -188,6 +188,43 @@ fn prop_kernel_parity_k_grid() {
             assert_kernel_parity(&tree, k, c, &mut rng);
         }
     }
+}
+
+/// Serving-retrieval invariant: the lane-group beam descent
+/// (`beam_topk`) equals the per-prefix scalar oracle (`beam_topk_scalar`)
+/// bit for bit — for arbitrary fitted trees (forced chains and padding
+/// included), beam widths below/at/above the lane width (ragged staged
+/// tails), and the full-coverage beam.
+#[test]
+fn prop_beam_topk_matches_scalar_oracle() {
+    for_all_seeds(8, |rng| {
+        let (x, y, n, k, c) = random_tree_data(rng);
+        let cfg = TreeConfig { aux_dim: k, ..Default::default() };
+        let (tree, _) = fit_tree(&x, &y, n, k, c, &cfg, rng);
+        let kern = TreeKernel::build(&tree);
+        let (mut s_lane, mut s_scalar) = (BeamScratch::default(), BeamScratch::default());
+        let (mut out_lane, mut out_scalar) = (Vec::new(), Vec::new());
+        for q in 0..4 {
+            let x_proj: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            for &beam in &[1usize, 2, 3, 7, 8, 9, 17, c] {
+                kern.beam_topk(&x_proj, beam, &mut out_lane, &mut s_lane);
+                kern.beam_topk_scalar(&x_proj, beam, &mut out_scalar, &mut s_scalar);
+                assert_eq!(
+                    out_lane.len(),
+                    out_scalar.len(),
+                    "C={c} k={k} beam={beam} query {q}: candidate count"
+                );
+                for (i, (a, b)) in out_lane.iter().zip(out_scalar.iter()).enumerate() {
+                    assert_eq!(a.0, b.0, "C={c} k={k} beam={beam} query {q}: label of cand {i}");
+                    assert_eq!(
+                        a.1.to_bits(),
+                        b.1.to_bits(),
+                        "C={c} k={k} beam={beam} query {q}: log q bits of cand {i}"
+                    );
+                }
+            }
+        }
+    });
 }
 
 /// Sharded-scatter invariant: `apply_sparse_par` is bit-identical to the

@@ -2,7 +2,7 @@
 //! bit-determinism across worker counts and submission patterns, and
 //! checkpoint roundtrips. Pure host path — no PJRT artifacts needed.
 
-use adv_softmax::config::{DatasetPreset, ServeConfig, SyntheticConfig, TreeConfig};
+use adv_softmax::config::{DatasetPreset, QuantMode, ServeConfig, SyntheticConfig, TreeConfig};
 use adv_softmax::data::{Dataset, Splits};
 use adv_softmax::sampler::AdversarialSampler;
 use adv_softmax::serve::{evaluate_serving, Predictor, RequestBatcher, ServingModel, TopK};
@@ -202,6 +202,94 @@ fn serving_model_checkpoint_roundtrip() {
             .unwrap()
             .predict_batch_with(xs, n, &Pool::serial());
         assert_preds_bit_eq(&a, &b, if exact { "exact" } else { "beam" });
+    }
+}
+
+/// Acceptance bar for quantized serving: on the full held-out split and
+/// the production beam path, f16 rows cost at most 0.005 of recall@k
+/// (and P@1) vs the f32 reference; i8 + per-row scale stays within a
+/// looser 0.03.
+#[test]
+fn quantized_recall_stays_within_bound_of_f32() {
+    let (model, test) = centroid_model();
+    let pool = Pool::serial();
+    let base = Predictor::new(
+        model,
+        ServeConfig { quantize: QuantMode::Off, ..Default::default() },
+    )
+    .unwrap();
+    let mf = evaluate_serving(&base, test, &pool);
+    for (mode, bound) in [(QuantMode::F16, 0.005), (QuantMode::I8, 0.03)] {
+        let pred =
+            Predictor::new(model, ServeConfig { quantize: mode, ..Default::default() }).unwrap();
+        let mq = evaluate_serving(&pred, test, &pool);
+        assert_eq!(mq.n, mf.n);
+        assert!(
+            (mf.recall_at_k - mq.recall_at_k).abs() <= bound,
+            "{mode}: recall@{} {:.4} drifted more than {bound} from f32 {:.4}",
+            mq.k,
+            mq.recall_at_k,
+            mf.recall_at_k
+        );
+        assert!(
+            (mf.p_at_1 - mq.p_at_1).abs() <= bound,
+            "{mode}: P@1 {:.4} drifted more than {bound} from f32 {:.4}",
+            mq.p_at_1,
+            mf.p_at_1
+        );
+    }
+}
+
+/// Quantized predictions are bit-identical across worker counts and for
+/// batcher-coalesced vs direct submission — quantization changes *which*
+/// scores are computed, never their determinism.
+#[test]
+fn quantized_predictions_bit_identical_across_worker_counts() {
+    let (model, test) = centroid_model();
+    let kf = test.feat_dim;
+    let n = 131; // ragged vs every lane/span boundary
+    let xs = &test.features[..n * kf];
+    for mode in [QuantMode::F16, QuantMode::I8] {
+        let pred =
+            Predictor::new(model, ServeConfig { quantize: mode, ..Default::default() }).unwrap();
+        let base = pred.predict_batch_with(xs, n, &Pool::new(1));
+        for workers in [2usize, 7] {
+            let par = pred.predict_batch_with(xs, n, &Pool::new(workers));
+            assert_preds_bit_eq(&base, &par, &format!("{mode}, workers={workers}"));
+        }
+        let mut batcher = RequestBatcher::new(&pred);
+        for i in 0..n {
+            batcher.submit(&xs[i * kf..(i + 1) * kf]);
+        }
+        let flushed = batcher.flush_with(&Pool::new(3));
+        assert_preds_bit_eq(&base, &flushed, &format!("{mode}, batcher"));
+    }
+}
+
+/// The quantize-then-score contract end to end: with the beam covering
+/// every leaf, the quantized re-rank must equal the quantized exact sweep
+/// bit for bit — candidate scoring and the dense sweep decode rows through
+/// the same kernels.
+#[test]
+fn full_beam_equals_exact_oracle_bitwise_quantized() {
+    let (model, test) = centroid_model();
+    let kf = test.feat_dim;
+    let n = 64;
+    let xs = &test.features[..n * kf];
+    for mode in [QuantMode::F16, QuantMode::I8] {
+        let exact = Predictor::new(
+            model,
+            ServeConfig { exact: true, quantize: mode, ..Default::default() },
+        )
+        .unwrap();
+        let full = Predictor::new(
+            model,
+            ServeConfig { beam: model.num_classes, quantize: mode, ..Default::default() },
+        )
+        .unwrap();
+        let po = exact.predict_batch_with(xs, n, &Pool::serial());
+        let pf = full.predict_batch_with(xs, n, &Pool::serial());
+        assert_preds_bit_eq(&po, &pf, &format!("quantize={mode}"));
     }
 }
 
