@@ -61,6 +61,13 @@ const KERNEL_PAIRS: [(&str, &str, &str); 2] = [
 const OVERLAP_PAIRS: [(&str, &str, &str); 1] =
     [("step_overlap", "train/step(serial)", "train/step(overlapped)")];
 
+/// (summary key, double-buffered case, three-deep pipelined case) for the
+/// dedicated-execute-thread step engine (PR 10 acceptance bar: ≥ 1.15×
+/// over the depth-2 protocol at parallelism ≥ 2; diffed against the
+/// committed baseline like the rest).
+const PIPELINE_PAIRS: [(&str, &str, &str); 1] =
+    [("step_pipeline", "train/step(overlapped)", "train/step(pipelined)")];
+
 /// (summary key, exact-oracle case, beam-retrieval case) for the serving
 /// top-k path (PR 5 acceptance bar: beam ≥ 2× over the exact O(C) sweep
 /// at C ≥ 10k; diffed against the committed baseline like the rest).
@@ -176,6 +183,7 @@ impl Report {
             ("speedups_serial_over_parallel", speedups),
             ("speedups_scalar_over_kernel", kernel_speedups),
             ("speedups_step_overlap", overlap_speedups),
+            ("speedups_step_pipeline", pair_section(&PIPELINE_PAIRS)),
             ("speedups_serve", serve_speedups),
             ("speedups_rng", pair_section(&RNG_PAIRS)),
             ("speedups_beam8", pair_section(&BEAM8_PAIRS)),
@@ -662,18 +670,20 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- step engine: serial protocol vs double-buffered overlap (PR 4).
-    // The PJRT execute is gated in this environment, so the device half is
-    // a deterministic host mock: the logistic-NS row gradients recomputed
-    // DEVICE_PASSES times, putting the emulated kernel latency on the same
-    // order as the host stages the engine must hide (the overlap win is
-    // measured where it matters — device time ≈ prefetchable host time;
-    // with a much slower device both protocols converge to device-bound).
-    // When artifacts are available the real TrainRun is measured under
-    // both settings as well (below). The gradient math is a hand-synced
-    // copy of MockNsGrad in tests/overlap_parity.rs (bench targets can't
-    // import test modules without shipping test support in the lib);
-    // change the NS input layout in both places.
+    // --- step engine: serial vs double-buffered (PR 4) vs the three-deep
+    // execute pipeline (PR 10). The PJRT execute is gated in this
+    // environment, so the device half is a deterministic host mock: the
+    // logistic-NS row gradients recomputed DEVICE_PASSES times, putting
+    // the emulated kernel latency on the same order as the host stages
+    // the engine must hide (the overlap win is measured where it matters
+    // — device time ≈ prefetchable host time; with a much slower device
+    // all protocols converge to device-bound). When artifacts are
+    // available the real TrainRun is measured under all settings as well
+    // (below). The gradient math is a hand-synced copy of MockNsGrad in
+    // tests/overlap_parity.rs (bench targets can't import test modules
+    // without shipping test support in the lib); change the NS input
+    // layout in both places.
+    let step_stage_json: Json;
     {
         struct MockNsExec {
             b: usize,
@@ -736,18 +746,37 @@ fn main() -> anyhow::Result<()> {
         }
 
         let exec = MockNsExec { b, k };
-        for (name, overlap) in
-            [("train/step(serial)", false), ("train/step(overlapped)", true)]
-        {
+        let mut stage_rows = Vec::new();
+        for (name, key, depth) in [
+            ("train/step(serial)", "serial", 1usize),
+            ("train/step(overlapped)", "overlapped", 2),
+            ("train/step(pipelined)", "pipelined", 3),
+        ] {
             let gen = make_gen(5);
             let mut src = BatchSource::pipelined(&gen, PAR);
             let mut step_params = ParamStore::zeros(c, k, 0.05);
-            let mut engine = StepEngine::new(BatchMode::NsLike, b, k, 1e-3, overlap);
+            let mut engine = StepEngine::new(BatchMode::NsLike, b, k, 1e-3, depth);
             let s = bench.run(name, || {
                 black_box(engine.step(&exec, &mut step_params, &pool, &mut src).unwrap());
             });
             report.record(name, s);
+            // per-stage coordinator breakdown + execute occupancy (how
+            // well the host stages hide behind the emulated device)
+            let t = engine.times();
+            println!("{name} {}", t.report());
+            stage_rows.push((
+                key.to_string(),
+                Json::obj(vec![
+                    ("execute_occupancy", Json::Num(t.execute_occupancy())),
+                    ("gather_s", Json::Num(t.gather_s)),
+                    ("pack_s", Json::Num(t.pack_s)),
+                    ("execute_s", Json::Num(t.execute_s)),
+                    ("readback_s", Json::Num(t.readback_s)),
+                    ("scatter_s", Json::Num(t.scatter_s)),
+                ]),
+            ));
         }
+        step_stage_json = Json::Obj(stage_rows.into_iter().collect());
     }
 
     // --- aux-model fit stages (the paper's one-off cost): PCA covariance
@@ -801,6 +830,7 @@ fn main() -> anyhow::Result<()> {
             for (name, mode) in [
                 ("train/step_once(adversarial,serial)", OverlapMode::Off),
                 ("train/step_once(adversarial,overlapped)", OverlapMode::On),
+                ("train/step_once(adversarial,pipelined)", OverlapMode::Pipeline),
             ] {
                 let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Adversarial);
                 cfg.parallelism = PAR;
@@ -833,6 +863,11 @@ fn main() -> anyhow::Result<()> {
             println!("speedup {key:<16} {x:>6.2}x  (serial vs double-buffered step)");
         }
     }
+    for (key, overlapped, pipelined) in PIPELINE_PAIRS {
+        if let Some(x) = report.speedup(overlapped, pipelined) {
+            println!("speedup {key:<16} {x:>6.2}x  (double-buffered vs three-deep pipeline)");
+        }
+    }
     for (key, exact, beamed) in SERVE_PAIRS {
         if let Some(x) = report.speedup(exact, beamed) {
             println!("speedup {key:<16} {x:>6.2}x  (exact O(C) sweep vs beam top-k)");
@@ -858,6 +893,7 @@ fn main() -> anyhow::Result<()> {
     if let Json::Obj(m) = &mut json {
         m.insert("serve_daemon".to_string(), daemon_json);
         m.insert("dist_round".to_string(), dist_round_json);
+        m.insert("step_stage_times".to_string(), step_stage_json);
     }
     std::fs::write(out, json.to_string())?;
     println!("wrote {out}");

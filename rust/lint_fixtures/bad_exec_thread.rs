@@ -1,0 +1,27 @@
+// repro-lint fixture: a hand-rolled execute thread. The step engine's
+// dedicated execute thread (pipeline depth 3) must come from the
+// sanctioned utils::spawn_named path — naming, panic propagation and
+// join discipline stay centralized in the pool layer. A raw spawn that
+// ships executes over a channel dodges all of that.
+
+use std::sync::mpsc;
+use std::thread;
+
+pub struct BadExecThread {
+    pub req_tx: mpsc::SyncSender<Vec<u8>>,
+    pub handle: thread::JoinHandle<()>,
+}
+
+pub fn spawn_exec_thread() -> BadExecThread {
+    let (req_tx, req_rx) = mpsc::sync_channel::<Vec<u8>>(1);
+    let handle = thread::spawn(move || { //~ ERROR thread-spawn
+        while let Ok(_req) = req_rx.recv() {}
+    });
+    BadExecThread { req_tx, handle }
+}
+
+pub fn spawn_exec_thread_named() -> thread::JoinHandle<()> {
+    // hand-naming the thread does not make it sanctioned either
+    let builder = thread::Builder::new().name("step-exec".into()); //~ ERROR thread-spawn
+    builder.spawn(|| {}).expect("spawn")
+}

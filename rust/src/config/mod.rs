@@ -107,11 +107,12 @@ impl Default for Hyper {
     }
 }
 
-/// Double-buffered step overlap (PR 4): run step t+1's host stages —
-/// parameter gather, literal packing — on the worker pool while step t
-/// executes on the PJRT runtime, with conflict-aware row leasing keeping
-/// the learning curve bit-identical to the serial protocol (see
-/// `train` / `model` module docs).
+/// Step-overlap protocol (PR 4 double buffering, PR 10 three-deep
+/// pipeline): run step t+1's host stages — parameter gather, literal
+/// packing — on the worker pool while step t executes on the PJRT
+/// runtime, with conflict-aware row leasing keeping the learning curve
+/// bit-identical to the serial protocol (see `train` / `model` module
+/// docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OverlapMode {
     /// Overlap whenever it can help: pool has background workers and the
@@ -124,12 +125,17 @@ pub enum OverlapMode {
     /// Strictly serial gather → execute → scatter (the reference
     /// protocol; bit-identical results either way).
     Off,
+    /// Three-slot pipeline: executes run back-to-back on a dedicated
+    /// thread while the coordinator drains readback→scatter for step t
+    /// and the pool builds step t+2's gather/literals (still a no-op for
+    /// softmax; bit-identical results at every depth).
+    Pipeline,
 }
 
 impl OverlapMode {
     /// Default for newly constructed configs: the `REPRO_OVERLAP` env var
-    /// (`auto|on|off`, used by CI to run the test suite under both
-    /// protocols) or [`OverlapMode::Auto`]. An unparsable value panics
+    /// (`auto|on|off|pipeline`, used by CI to run the test suite under
+    /// every protocol) or [`OverlapMode::Auto`]. An unparsable value panics
     /// with a clear message rather than silently falling back — a CI leg
     /// meant to force one protocol must never quietly run the other.
     pub fn env_default() -> Self {
@@ -146,6 +152,7 @@ impl OverlapMode {
             OverlapMode::Auto => "auto",
             OverlapMode::On => "on",
             OverlapMode::Off => "off",
+            OverlapMode::Pipeline => "pipeline",
         }
     }
 }
@@ -163,7 +170,8 @@ impl FromStr for OverlapMode {
             "auto" => OverlapMode::Auto,
             "on" | "true" | "1" => OverlapMode::On,
             "off" | "false" | "0" => OverlapMode::Off,
-            other => anyhow::bail!("unknown overlap mode {other:?} (auto|on|off)"),
+            "pipeline" | "3" => OverlapMode::Pipeline,
+            other => anyhow::bail!("unknown overlap mode {other:?} (auto|on|off|pipeline)"),
         })
     }
 }
@@ -722,9 +730,10 @@ pub struct RunConfig {
     /// hardware, 1 = fully serial. Learning curves are bit-identical at
     /// every setting; only wallclock changes.
     pub parallelism: usize,
-    /// Double-buffered step overlap (gather/literal-build of step t+1
-    /// behind the execute of step t). Learning curves are bit-identical
-    /// at every setting; only wallclock changes.
+    /// Step-overlap protocol: serial, double-buffered (gather/literal-
+    /// build of step t+1 behind the execute of step t), or the three-deep
+    /// pipeline with a dedicated execute thread. Learning curves are
+    /// bit-identical at every setting; only wallclock changes.
     pub overlap: OverlapMode,
 }
 
@@ -865,8 +874,16 @@ mod tests {
         assert_eq!("auto".parse::<OverlapMode>().unwrap(), OverlapMode::Auto);
         assert_eq!("on".parse::<OverlapMode>().unwrap(), OverlapMode::On);
         assert_eq!("off".parse::<OverlapMode>().unwrap(), OverlapMode::Off);
+        assert_eq!("pipeline".parse::<OverlapMode>().unwrap(), OverlapMode::Pipeline);
+        assert_eq!("3".parse::<OverlapMode>().unwrap(), OverlapMode::Pipeline, "depth alias");
         assert_eq!("ON".parse::<OverlapMode>().unwrap(), OverlapMode::On, "case-insensitive");
         assert!("sideways".parse::<OverlapMode>().is_err());
+        // the pipeline mode survives a config JSON roundtrip
+        let mut pcfg = RunConfig::new(DatasetPreset::Tiny, Method::Uniform);
+        pcfg.overlap = OverlapMode::Pipeline;
+        let back =
+            RunConfig::from_json(&Json::parse(&pcfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.overlap, OverlapMode::Pipeline);
         // configs saved before the knob existed must still load
         let mut cfg = RunConfig::new(DatasetPreset::Tiny, Method::Uniform);
         cfg.overlap = OverlapMode::Off;

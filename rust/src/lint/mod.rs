@@ -271,6 +271,7 @@ mod tests {
             ("bad_hash_iter.rs", true),
             ("bad_float_reduce.rs", true),
             ("bad_thread_spawn.rs", true),
+            ("bad_exec_thread.rs", true),
             ("bad_pragma.rs", true),
             ("clean.rs", false),
         ] {

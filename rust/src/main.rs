@@ -10,8 +10,11 @@
 //! repro train        --dataset tiny --method adversarial --seconds 30
 //!                    [--parallelism N]  (0 = auto; curves are identical
 //!                    at every setting, only wallclock changes)
-//!                    [--overlap auto|on|off]  (double-buffered step
-//!                    engine; curves identical either way)
+//!                    [--overlap auto|on|off|pipeline]  (step engine
+//!                    depth: double-buffered or the three-deep execute
+//!                    pipeline; curves identical at every setting)
+//!                    [--timing]  (one-line per-stage wall-time report:
+//!                    gather/pack/execute/readback/scatter + occupancy)
 //!                    [--save-model model.json]  (serving checkpoint:
 //!                    classifier rows + aux tree, no optimizer state)
 //! repro serve        --model model.json (--input queries.txt | --eval
@@ -232,11 +235,15 @@ fn train(args: &Args) -> Result<()> {
     };
     let out: Option<PathBuf> = args.get_opt("out")?;
     let save_model: Option<PathBuf> = args.get_opt("save-model")?;
+    let timing = args.flag("timing")?;
     args.finish()?;
 
     let splits = Splits::synthetic(&SyntheticConfig::preset(cfg.dataset));
     let mut run = TrainRun::prepare(&registry, &splits, &cfg)?;
     let curve = run.train()?;
+    if timing {
+        println!("{}", run.engine().times().report());
+    }
     println!("step      wall_s   train_loss   test_loglik   test_acc");
     for p in &curve.points {
         println!(

@@ -63,6 +63,16 @@ impl RowLeases {
     pub fn is_leased(&self, y: usize, id: u64) -> bool {
         self.stamp[y] == id
     }
+
+    /// Is row `y` covered by `since` or any newer lease? Ids are handed
+    /// out monotonically, so with several steps in flight (pipeline depth
+    /// 3: one scatter draining, one execute running) the set of rows an
+    /// eager gather must skip is exactly `stamp >= since` for `since` =
+    /// the oldest still-live lease — no per-lease bookkeeping needed.
+    #[inline]
+    pub fn leased_since(&self, y: usize, since: u64) -> bool {
+        self.stamp[y] >= since
+    }
 }
 
 /// Dense parameter matrix (W, b) with per-coordinate Adagrad accumulators.
@@ -226,8 +236,8 @@ impl ParamStore {
 
     /// One shard of the conflict-aware eager gather: copy batch slot `i`
     /// (for every `i` with `labels[i] % num_shards == shard`) into the
-    /// output views, **skipping** rows currently covered by `lease` —
-    /// those rows are about to be rewritten by the in-flight step's
+    /// output views, **skipping** rows covered by `lease` or any newer
+    /// lease — those rows are about to be rewritten by an in-flight step's
     /// scatter and are patched afterwards. Runs concurrently with the
     /// device execute via [`Pool::submit_sharded`]; nothing writes the
     /// parameters during that window, so the reads are race-free.
@@ -250,7 +260,7 @@ impl ParamStore {
         let k = self.feat_dim;
         for (i, &y) in labels.iter().enumerate() {
             let yu = y as usize;
-            if yu % num_shards != shard || self.leases.is_leased(yu, lease) {
+            if yu % num_shards != shard || self.leases.leased_since(yu, lease) {
                 continue;
             }
             // SAFETY: slot i has exactly one writer (the shard owning
@@ -263,10 +273,10 @@ impl ParamStore {
     }
 
     /// Complete an eager gather after the conflicting scatter has landed:
-    /// re-copy every batch slot whose row is covered by `lease` (exactly
-    /// the slots [`ParamStore::gather_leased_shard`] skipped). Returns the
-    /// number of patched slots. After this, the output buffers are
-    /// bit-identical to a serial gather performed after the scatter.
+    /// re-copy every batch slot whose row is covered by `lease` or newer
+    /// (exactly the slots [`ParamStore::gather_leased_shard`] skipped).
+    /// Returns the number of patched slots. After this, the output buffers
+    /// are bit-identical to a serial gather performed after the scatter.
     pub fn patch_leased(
         &self,
         labels: &[u32],
@@ -280,13 +290,114 @@ impl ParamStore {
         let mut patched = 0;
         for (i, &y) in labels.iter().enumerate() {
             let yu = y as usize;
-            if self.leases.is_leased(yu, lease) {
+            if self.leases.leased_since(yu, lease) {
                 w_out[i * k..(i + 1) * k].copy_from_slice(self.row(y));
                 b_out[i] = self.b[yu];
                 patched += 1;
             }
         }
         patched
+    }
+
+    /// Two-phase patch for pipeline depth 3. With two steps still in
+    /// flight, a gathered batch's skipped slots split by lease epoch:
+    /// rows stamped in `[since, below)` belong to leases whose scatter has
+    /// fully landed — patch them now — while rows stamped `>= below` (the
+    /// executing step's lease) still await that step's conflict scatter;
+    /// their slot indices are pushed onto `deferred` for a later
+    /// [`ParamStore::patch_slots`]. Returns the number patched now.
+    pub fn patch_leased_range(
+        &self,
+        labels: &[u32],
+        since: u64,
+        below: u64,
+        w_out: &mut [f32],
+        b_out: &mut [f32],
+        deferred: &mut Vec<u32>,
+    ) -> usize {
+        debug_assert_eq!(w_out.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(b_out.len(), labels.len());
+        let k = self.feat_dim;
+        let mut patched = 0;
+        for (i, &y) in labels.iter().enumerate() {
+            let yu = y as usize;
+            let stamp = self.leases.stamp[yu];
+            if stamp >= below {
+                deferred.push(i as u32);
+            } else if stamp >= since {
+                w_out[i * k..(i + 1) * k].copy_from_slice(self.row(y));
+                b_out[i] = self.b[yu];
+                patched += 1;
+            }
+        }
+        patched
+    }
+
+    /// Patch the recorded `slots` of a gathered batch from the current
+    /// parameters (the deferred half of [`ParamStore::patch_leased_range`],
+    /// run once the executing step's conflict scatter has landed).
+    pub fn patch_slots(&self, labels: &[u32], slots: &[u32], w_out: &mut [f32], b_out: &mut [f32]) {
+        let k = self.feat_dim;
+        for &i in slots {
+            let i = i as usize;
+            let yu = labels[i] as usize;
+            w_out[i * k..(i + 1) * k].copy_from_slice(self.row(labels[i]));
+            b_out[i] = self.b[yu];
+        }
+    }
+
+    /// The conflict half of a split scatter (pipeline depth 3): apply, in
+    /// batch order, exactly the updates whose row is stamped `lease_eq` —
+    /// the rows the *next* step's gather skipped and must read
+    /// post-update. The remainder (rows stamped with the step's own,
+    /// older lease) is applied concurrently with the next execute via
+    /// [`ParamStageViews::scatter_shard`]. The split is by row, so every
+    /// row sees its updates in the exact serial sequence. Returns the
+    /// number of updates applied.
+    pub fn apply_sparse_stamped(
+        &mut self,
+        labels: &[u32],
+        gw: &[f32],
+        gb: &[f32],
+        lease_eq: u64,
+    ) -> usize {
+        debug_assert_eq!(gw.len(), labels.len() * self.feat_dim);
+        debug_assert_eq!(gb.len(), labels.len());
+        let k = self.feat_dim;
+        let mut applied = 0;
+        for (i, &y) in labels.iter().enumerate() {
+            let yu = y as usize;
+            if self.leases.stamp[yu] != lease_eq {
+                continue;
+            }
+            self.opt.update_row(yu, &gw[i * k..(i + 1) * k], gb[i], &mut self.w, &mut self.b);
+            applied += 1;
+        }
+        applied
+    }
+
+    /// Disjoint raw views over the parameter/optimizer/lease state for the
+    /// pipelined engine's combined background stage, which both scatters
+    /// step *t*'s non-conflict rows and eagerly gathers step *t+2*'s
+    /// unleased rows while step *t+1* executes on the device thread. The
+    /// combination is race-free by construction: the scatter writes only
+    /// rows stamped with *t*'s lease, the gather reads only rows below the
+    /// oldest live lease, and both shard rows by `label % num_shards` so
+    /// every row has exactly one owner (checked under `shared_mut_audit`).
+    pub fn stage_views(&mut self) -> ParamStageViews<'_> {
+        let (lr, eps) = (self.opt.lr, self.opt.eps);
+        let k = self.feat_dim;
+        let (gw2, gb2) = self.opt.accumulators_mut();
+        ParamStageViews {
+            w: SharedMut::new(&mut self.w),
+            b: SharedMut::new(&mut self.b),
+            gw2: SharedMut::new(gw2),
+            gb2: SharedMut::new(gb2),
+            stamp: &self.leases.stamp,
+            lr,
+            eps,
+            k,
+        }
     }
 
     /// Dense update over all rows (full-softmax baseline).
@@ -341,6 +452,105 @@ impl ParamStore {
                 }
             }
         });
+    }
+}
+
+/// Borrowed views for the depth-3 engine's combined background stage
+/// (see [`ParamStore::stage_views`]). The coordinator cannot hold
+/// `&ParamStore` inside a [`Pool::submit_sharded`] closure while it also
+/// needs `&mut ParamStore` for the serial conflict scatter, so the stage
+/// captures these raw views instead; lease stamps are snapshotted as a
+/// plain shared borrow (nothing restamps rows while a stage is in
+/// flight).
+pub struct ParamStageViews<'a> {
+    w: SharedMut<'a, f32>,
+    b: SharedMut<'a, f32>,
+    gw2: SharedMut<'a, f32>,
+    gb2: SharedMut<'a, f32>,
+    stamp: &'a [u64],
+    lr: f32,
+    eps: f32,
+    k: usize,
+}
+
+impl ParamStageViews<'_> {
+    /// View-based [`ParamStore::gather_leased_shard`]: copy batch slot `i`
+    /// (for every `i` with `labels[i] % num_shards == shard`) into the
+    /// output views, skipping rows stamped `>= since` (covered by any
+    /// still-live lease; their scatters have not all landed).
+    ///
+    /// Safety contract (as in [`ParamStore::gather_leased_shard`]): batch
+    /// slot `i` is written only by the shard owning `labels[i]`, and the
+    /// gathered rows are disjoint from every row a concurrent
+    /// [`ParamStageViews::scatter_shard`] writes (`stamp < since` here vs
+    /// `stamp == lease_eq >= since` there).
+    pub fn gather_shard(
+        &self,
+        labels: &[u32],
+        since: u64,
+        num_shards: usize,
+        shard: usize,
+        w_out: &SharedMut<'_, f32>,
+        b_out: &SharedMut<'_, f32>,
+    ) {
+        debug_assert_eq!(w_out.len(), labels.len() * self.k);
+        debug_assert_eq!(b_out.len(), labels.len());
+        let k = self.k;
+        for (i, &y) in labels.iter().enumerate() {
+            let yu = y as usize;
+            if yu % num_shards != shard || self.stamp[yu] >= since {
+                continue;
+            }
+            // SAFETY: slot i has one writer (the shard owning labels[i]);
+            // row yu is unleased, so no concurrent scatter_shard writes it
+            // (see the method's safety contract).
+            unsafe {
+                w_out.slice_mut(i * k, k).copy_from_slice(self.w.slice_mut(yu * k, k));
+                *b_out.get_mut(i) = *self.b.get_mut(yu);
+            }
+        }
+    }
+
+    /// View-based remainder scatter: apply, in batch order, the updates
+    /// whose row is stamped exactly `lease_eq` (the executing step's own
+    /// lease) and owned by this shard (`label % num_shards == shard`).
+    /// Together with the serial [`ParamStore::apply_sparse_stamped`]
+    /// conflict pass this applies every update of the batch exactly once,
+    /// each row's updates in serial batch order.
+    pub fn scatter_shard(
+        &self,
+        labels: &[u32],
+        gw: &[f32],
+        gb: &[f32],
+        lease_eq: u64,
+        num_shards: usize,
+        shard: usize,
+    ) {
+        debug_assert_eq!(gw.len(), labels.len() * self.k);
+        debug_assert_eq!(gb.len(), labels.len());
+        let k = self.k;
+        for (i, &y) in labels.iter().enumerate() {
+            let yu = y as usize;
+            if yu % num_shards != shard || self.stamp[yu] != lease_eq {
+                continue;
+            }
+            // SAFETY: row yu (weights, bias, both accumulators) is written
+            // only by shard yu % num_shards, in batch order within the
+            // shard; concurrent gather_shard calls skip leased rows, so
+            // nothing reads row yu while it is updated.
+            unsafe {
+                adagrad::update_row_kernel(
+                    self.lr,
+                    self.eps,
+                    &gw[i * k..(i + 1) * k],
+                    gb[i],
+                    self.gw2.slice_mut(yu * k, k),
+                    self.w.slice_mut(yu * k, k),
+                    self.gb2.get_mut(yu),
+                    self.b.get_mut(yu),
+                );
+            }
+        }
     }
 }
 
@@ -484,6 +694,120 @@ mod tests {
             assert_eq!(patched, expect_patched, "workers={workers}");
             assert_eq!(w_out, w_ref, "workers={workers}");
             assert_eq!(b_out, b_ref, "workers={workers}");
+        }
+    }
+
+    /// Depth-3 protocol at the store level: two consecutive scatters are
+    /// each split into a serial conflict pass (rows the next batch reads,
+    /// restamped to the next lease) and a sharded remainder pass that runs
+    /// concurrently with the following eager gather. Buffers and params
+    /// must come out bit-identical to the fully serial
+    /// scatter/scatter/gather sequence at every worker count.
+    #[test]
+    fn split_scatter_with_two_live_leases_matches_serial() {
+        let mut rng = Rng::new(47);
+        let (c, k, b) = (23, 6, 120);
+        let mut p = ParamStore::zeros(c, k, 0.1);
+        p.w.iter_mut().for_each(|v| *v = rng.normal());
+        p.b.iter_mut().for_each(|v| *v = rng.normal());
+        // three consecutive batches, overlapping heavily (b >> c)
+        let b1: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let gw1: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb1: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let b2: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+        let gw2: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let gb2: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let b3: Vec<u32> = (0..b).map(|_| rng.below(c) as u32).collect();
+
+        // serial protocol: scatter(b1); gather(b2); scatter(b2); gather(b3)
+        let mut serial = p.clone();
+        serial.apply_sparse(&b1, &gw1, &gb1);
+        let mut w2_ref = vec![0f32; b * k];
+        let mut b2_ref = vec![0f32; b];
+        serial.gather(&b2, &mut w2_ref, &mut b2_ref);
+        serial.apply_sparse(&b2, &gw2, &gb2);
+        let mut w3_ref = vec![0f32; b * k];
+        let mut b3_ref = vec![0f32; b];
+        serial.gather(&b3, &mut w3_ref, &mut b3_ref);
+
+        for workers in [1usize, 2, 3, 5] {
+            let pool = Pool::new(workers);
+            let shards = pool.stage_shards();
+            let mut par = p.clone();
+
+            // step 1 launches: lease b1, eager-gather b2 while it "executes"
+            let l1 = par.lease_rows(&[&b1]);
+            let mut w2_out = vec![f32::NAN; b * k]; // poisoned: every slot must be written
+            let mut b2_out = vec![f32::NAN; b];
+            {
+                let views = par.stage_views();
+                let views_ref = &views;
+                let w_view = SharedMut::new(&mut w2_out);
+                let b_view = SharedMut::new(&mut b2_out);
+                let b2_ref2 = &b2;
+                let handle = pool.submit_sharded(move |shard| {
+                    views_ref.gather_shard(b2_ref2, l1, shards, shard, &w_view, &b_view);
+                });
+                handle.join();
+            }
+
+            // step 1 joins: phase-A patch on b2 has nothing landed yet
+            // ([l1, l1) is empty) — every conflicting slot defers
+            let mut deferred = Vec::new();
+            let patched =
+                par.patch_leased_range(&b2, l1, l1, &mut w2_out, &mut b2_out, &mut deferred);
+            assert_eq!(patched, 0, "no lease below l1 has landed");
+            assert_eq!(
+                deferred.len(),
+                b2.iter().filter(|y| b1.contains(y)).count(),
+                "deferred slots are exactly b2's rows still under b1's lease"
+            );
+            let l2 = par.lease_rows(&[&b2]);
+            // conflict half of scatter(b1): rows b2 re-leased (b1 ∩ b2)
+            par.apply_sparse_stamped(&b1, &gw1, &gb1, l2);
+            par.patch_slots(&b2, &deferred, &mut w2_out, &mut b2_out);
+            assert_eq!(w2_out, w2_ref, "workers={workers}: b2 gather diverged");
+            assert_eq!(b2_out, b2_ref, "workers={workers}: b2 bias gather diverged");
+
+            // step 2 executes: remainder of scatter(b1) (rows still stamped
+            // l1) runs concurrently with b3's eager gather, one pool stage
+            let mut w3_out = vec![f32::NAN; b * k];
+            let mut b3_out = vec![f32::NAN; b];
+            {
+                let views = par.stage_views();
+                let views_ref = &views;
+                let w_view = SharedMut::new(&mut w3_out);
+                let b_view = SharedMut::new(&mut b3_out);
+                let (b1_r, gw1_r, gb1_r, b3_r) = (&b1, &gw1, &gb1, &b3);
+                let handle = pool.submit_sharded(move |shard| {
+                    views_ref.scatter_shard(b1_r, gw1_r, gb1_r, l1, shards, shard);
+                    views_ref.gather_shard(b3_r, l1, shards, shard, &w_view, &b_view);
+                });
+                handle.join();
+            }
+
+            // step 2 joins: rows in [l1, l2) have fully landed, rows still
+            // under l2 (b2's lease) defer until b2's conflict scatter
+            let mut deferred3 = Vec::new();
+            par.patch_leased_range(&b3, l1, l2, &mut w3_out, &mut b3_out, &mut deferred3);
+            let l3 = par.lease_rows(&[&b3]);
+            par.apply_sparse_stamped(&b2, &gw2, &gb2, l3);
+            par.patch_slots(&b3, &deferred3, &mut w3_out, &mut b3_out);
+            assert_eq!(w3_out, w3_ref, "workers={workers}: b3 gather diverged");
+            assert_eq!(b3_out, b3_ref, "workers={workers}: b3 bias gather diverged");
+
+            // drain: remainder of scatter(b2) — params now fully caught up
+            {
+                let views = par.stage_views();
+                let views_ref = &views;
+                let (b2_r, gw2_r, gb2_r) = (&b2, &gw2, &gb2);
+                let handle = pool.submit_sharded(move |shard| {
+                    views_ref.scatter_shard(b2_r, gw2_r, gb2_r, l2, shards, shard);
+                });
+                handle.join();
+            }
+            assert_eq!(par.w, serial.w, "workers={workers}: weights diverged");
+            assert_eq!(par.b, serial.b, "workers={workers}: biases diverged");
         }
     }
 

@@ -64,11 +64,16 @@ pub fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
 #[derive(Default)]
 pub struct LitScratch {
     free: Vec<xla::Literal>,
+    /// Fresh literal allocations (the fallback when no retired literal of
+    /// the right byte size is available). The pipelined step engine's
+    /// zero-allocation claim is asserted against this counter: after
+    /// warmup, steady-state steps must not advance it.
+    created: u64,
 }
 
 impl LitScratch {
     pub fn new() -> Self {
-        Self { free: Vec::new() }
+        Self { free: Vec::new(), created: 0 }
     }
 
     /// f32 literal with the given dims, reusing retired storage if a
@@ -90,9 +95,21 @@ impl LitScratch {
         self.free.push(lit);
     }
 
+    /// Bulk-recycle a donated input set (the literals an
+    /// `execute_donated`-style call hands back after the device is done
+    /// with them); the next step's refills reuse their storage in place.
+    pub fn donate(&mut self, lits: impl IntoIterator<Item = xla::Literal>) {
+        self.free.extend(lits);
+    }
+
     /// Retired literals currently available for reuse.
     pub fn free_count(&self) -> usize {
         self.free.len()
+    }
+
+    /// Fresh literal allocations performed so far (refills excluded).
+    pub fn created_count(&self) -> u64 {
+        self.created
     }
 
     fn refill(
@@ -113,8 +130,11 @@ impl LitScratch {
                 lit.refill_untyped(ty, dims, bytes).context("refill literal")?;
                 Ok(lit)
             }
-            None => xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
-                .context("create literal"),
+            None => {
+                self.created += 1;
+                xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+                    .context("create literal")
+            }
         }
     }
 }
@@ -190,5 +210,39 @@ mod tests {
         let mut scratch = LitScratch::new();
         assert!(scratch.lit_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(scratch.lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scratch_counts_only_fresh_creations() {
+        let mut scratch = LitScratch::new();
+        let a = scratch.lit_f32(&[1.0, 2.0], &[2]).unwrap();
+        assert_eq!(scratch.created_count(), 1);
+        scratch.recycle(a);
+        let b = scratch.lit_f32(&[3.0, 4.0], &[2]).unwrap();
+        assert_eq!(scratch.created_count(), 1, "refill must not count as a creation");
+        scratch.recycle(b);
+        let _c = scratch.lit_f32(&[1.0; 5], &[5]).unwrap();
+        assert_eq!(scratch.created_count(), 2, "size miss falls back to creation");
+    }
+
+    #[test]
+    fn donated_then_refilled_matches_fresh_bitwise() {
+        // A literal that went through donate -> refill must be
+        // byte-identical to one created fresh from the same data.
+        let mut scratch = LitScratch::new();
+        let step1 = vec![scratch.lit_f32(&[0.5f32; 4], &[4]).unwrap()];
+        scratch.donate(step1); // execute(t) hands its inputs back
+        assert_eq!(scratch.free_count(), 1);
+        let data = vec![1.25f32, -2.5, 3.75, 0.0625];
+        let refilled = scratch.lit_f32(&data, &[2, 2]).unwrap();
+        assert_eq!(scratch.free_count(), 0, "refill must consume the donated literal");
+        assert_eq!(scratch.created_count(), 1, "only the warmup literal was allocated");
+        let fresh = lit_f32(&data, &[2, 2]).unwrap();
+        assert_eq!(refilled.element_type(), fresh.element_type());
+        assert_eq!(refilled.dims(), fresh.dims());
+        assert_eq!(
+            read_f32(&refilled).unwrap().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            read_f32(&fresh).unwrap().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
     }
 }

@@ -69,6 +69,49 @@ impl Executable {
         }
         Ok(outs)
     }
+
+    /// Donation-aware [`Executable::run`]: the inputs are handed to the
+    /// runtime by value (`PjRtLoadedExecutable::execute_donated`), letting
+    /// the device alias their allocations for the outputs instead of
+    /// round-tripping fresh buffers. Returns `(outputs, donated)` where
+    /// `donated` holds any input literals the runtime handed back for
+    /// host-side reuse (empty when the device consumed them — real PJRT
+    /// aliases them into the outputs). On an execute error the inputs are
+    /// consumed; callers refill their scratch from fresh allocations on
+    /// the (non-steady-state) failure path.
+    pub fn run_donated(
+        &self,
+        inputs: Vec<xla::Literal>,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let bufs = self
+            .exe
+            .execute_donated(inputs)
+            .map_err(|(e, _donated)| anyhow::Error::new(e))
+            .with_context(|| format!("execute (donated) {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        let outs = result
+            .to_tuple()
+            .with_context(|| format!("untuple result of {}", self.name))?;
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name,
+                outs.len(),
+                self.meta.outputs.len()
+            );
+        }
+        Ok((outs, Vec::new()))
+    }
 }
 
 /// Loads the manifest, compiles all artifacts once, and serves handles.

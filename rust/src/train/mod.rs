@@ -1,8 +1,8 @@
 //! Training coordinator: per-method update rules over the AOT HLO step
 //! artifacts, with a host-parallel, deterministic step pipeline and a
-//! double-buffered step engine.
+//! ring-buffered step engine running at pipeline depth 1, 2 or 3.
 //!
-//! # Step protocol: a stage graph over two slots
+//! # Step protocol: a stage graph over a ring of slots
 //!
 //! A sampling-method step is a graph of five stages: **gather** the 2B
 //! touched parameter rows, **pack** them (plus the batch's features and
@@ -12,34 +12,66 @@
 //! on the host plus the kernel, independent of C — the property that
 //! makes negative sampling scale (Sec. 2.1).
 //!
-//! [`StepEngine`] runs that graph over **two in-flight step slots**
+//! [`StepEngine`] runs that graph over a ring of in-flight step slots
 //! ([`StepSlot`]: own gather/readback scratch + reusable literal
-//! buffers). With overlap enabled, while step *t* executes on the
-//! coordinator thread (PJRT handles are not `Send`), step *t+1*'s host
-//! work — parameter gather, `lpn` literal packing, and the x-literal
-//! build — runs concurrently on the background workers
-//! ([`Pool::submit_sharded`]):
+//! buffers) at a configurable depth (`RunConfig::overlap`):
 //!
-//! ```text
-//!   coordinator:  …execute(t)─────────┐ readback(t) scatter(t) patch(t+1)
-//!   pool workers: gather(t+1) lits(t+1)┘        (join before scatter)
-//! ```
+//! * **Depth 1** — strictly serial gather → pack → execute → readback →
+//!   scatter on the calling thread (the reference protocol).
+//! * **Depth 2** — double-buffered: while step *t* executes on the
+//!   coordinator thread, step *t+1*'s host work — parameter gather,
+//!   `lpn` literal packing, and the x-literal build — runs concurrently
+//!   on the background workers ([`Pool::submit_sharded`]):
 //!
-//! **Conflict-aware row leasing** keeps this bit-exact: before the stage
-//! launches, the rows step *t* will update are leased
-//! ([`ParamStore::lease_rows`]); the eager gather skips leased rows and
-//! [`ParamStore::patch_leased`] re-gathers exactly those slots after
-//! *t*'s scatter lands. Every gathered buffer therefore holds precisely
-//! what the serial gather-after-scatter would have read — the learning
-//! curve is bit-identical to the serial protocol at every `parallelism`
-//! setting and with overlap on or off (`RunConfig::overlap`, default
-//! auto). The dense softmax baseline always runs the serial protocol:
-//! its "gather" is the whole parameter matrix, so every row conflicts.
+//!   ```text
+//!     coordinator:  …execute(t)─────────┐ readback(t) scatter(t) patch(t+1)
+//!     pool workers: gather(t+1) lits(t+1)┘        (join before scatter)
+//!   ```
+//!
+//! * **Depth 3** — a three-slot ring with a **dedicated execute thread**
+//!   (spawned through the sanctioned [`crate::utils::spawn_named`] path):
+//!   executes run back-to-back on their own thread, the coordinator
+//!   drains readback → conflict-scatter for step *t*, and the pool runs
+//!   the *remainder* of *t*'s scatter concurrently with step *t+2*'s
+//!   eager gather and batch-literal build — in steady state the device
+//!   never waits on the host:
+//!
+//!   ```text
+//!     exec thread:  …execute(t)──────────────┐ execute(t+1)──────────────…
+//!     coordinator:  wait · readback(t) patch(t+1) conflict-scatter(t) seal(t+1)
+//!     pool workers: [ remainder-scatter(t) ∥ gather(t+2) ∥ lits(t+2) ]
+//!   ```
+//!
+//!   Step *t*'s input literals are **donated** to the execute
+//!   ([`StepExecutor::run_step_donated`]): the runtime hands their
+//!   storage back (or, on real PJRT, aliases it into the outputs) and the
+//!   slot's scratch refills it in place for step *t+3*, so steady-state
+//!   execute performs zero literal allocations (pinned by a
+//!   scratch-counter test over [`StepEngine::lit_allocs`]).
+//!
+//! **Conflict-aware row leasing** keeps every depth bit-exact: before a
+//! step executes, the rows it will update are leased under a fresh
+//! monotonic id ([`ParamStore::lease_rows`]); eager gathers skip every
+//! row stamped at or above the oldest live lease, and the skipped slots
+//! are re-read once the covering scatters land ([`ParamStore::patch_leased`]
+//! at depth 2, the two-phase [`ParamStore::patch_leased_range`] /
+//! [`ParamStore::patch_slots`] pair at depth 3). At depth 3 two leases
+//! are live at once, so a scatter is split *by row*: updates to rows the
+//! next step reads (re-stamped by its lease) apply serially before its
+//! literals seal ([`ParamStore::apply_sparse_stamped`]), and the
+//! remainder applies on the pool concurrently with the next execute
+//! ([`crate::model::ParamStageViews::scatter_shard`]). Each row still
+//! sees its updates in exact serial order, so losses and parameters are
+//! bit-identical across depth {1,2,3} × any worker count
+//! (`tests/overlap_parity.rs`). The dense softmax baseline always runs
+//! the serial protocol: its "gather" is the whole parameter matrix, so
+//! every row conflicts.
 //!
 //! Step-input literals recycle through a per-slot
 //! [`crate::runtime::LitScratch`]: after execute(t), t's input literals
-//! retire into the slot's scratch and step t+2 refills them in place —
-//! steady-state literal creation allocates nothing.
+//! retire (or are donated back) into the slot's scratch and a later step
+//! refills them in place — steady-state literal creation allocates
+//! nothing at every depth.
 //!
 //! # Performance architecture: pipeline, sharding, determinism
 //!
@@ -85,11 +117,21 @@
 //!   polling the buffer-return channel) observes disconnection and exits;
 //!   there is no drain-then-join race and no stop flag.
 //!
-//! PJRT execution itself stays on the coordinator thread (the runtime
-//! handles are not `Send`); the batch pipeline overlaps batch generation
-//! with it, the double-buffered engine overlaps the *next step's*
-//! gather/literal stages with it, and the pool parallelizes the remaining
-//! host stages around it.
+//! At depth ≤ 2, PJRT execution stays on the coordinator thread; depth 3
+//! moves it to the dedicated execute thread — executors are `Sync` (the
+//! [`StepExecutor`] supertrait), the vendored runtime's handles are plain
+//! `Send + Sync` data, and the real PJRT client is thread-safe. At every
+//! depth the batch pipeline overlaps batch generation with the execute,
+//! and the pool parallelizes the remaining host stages around it.
+//!
+//! Per-stage wall time accumulates into [`StageTimes`] through the
+//! sanctioned [`StopWatch`] clock: gather / pack / execute / readback /
+//! scatter buckets plus an execute-occupancy ratio, surfaced by
+//! `repro train --timing` and the hot-path bench's `step_pipeline`
+//! section. Buckets are attributed by what the coordinator waits on, so
+//! background work concurrent with an execute lands in the bucket whose
+//! join exposed it (at depth 3 the remainder-scatter ∥ gather stage banks
+//! under `scatter`).
 
 pub mod batcher;
 pub mod curve;
@@ -253,13 +295,149 @@ impl Drop for Pipeline {
 /// [`Executable`] is the production implementation; tests and benches
 /// drive the engine with deterministic host mocks (the vendored `xla`
 /// stub cannot execute HLO).
-pub trait StepExecutor {
+///
+/// Executors must be `Sync`: at pipeline depth 3 the engine calls them
+/// from its dedicated execute thread while the coordinator still holds
+/// the same reference.
+pub trait StepExecutor: Sync {
     fn run_step(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>>;
+
+    /// Donation-aware execute: takes the inputs by value so the runtime
+    /// can alias their storage into the outputs, and returns
+    /// `(outputs, donated)` where `donated` are input literals handed
+    /// back for host-side refill ([`LitScratch::donate`]). The default
+    /// recycles every input after a borrowed [`StepExecutor::run_step`],
+    /// so host mocks get donation for free. On an error the inputs are
+    /// consumed — the failure path refills from fresh allocations.
+    fn run_step_donated(
+        &self,
+        inputs: Vec<xla::Literal>,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let outs = self.run_step(&inputs)?;
+        Ok((outs, inputs))
+    }
 }
 
 impl StepExecutor for Executable {
     fn run_step(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.run(inputs)
+    }
+
+    fn run_step_donated(
+        &self,
+        inputs: Vec<xla::Literal>,
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+        self.run_donated(inputs)
+    }
+}
+
+/// One execute queued to the dedicated thread: a lifetime-erased pointer
+/// to the caller's executor plus the sealed input literals.
+struct ExecReq {
+    exec: ExecPtr,
+    inputs: Vec<xla::Literal>,
+}
+
+/// `(outputs, donated-back inputs)` or the execute error.
+type ExecResp = Result<(Vec<xla::Literal>, Vec<xla::Literal>)>;
+
+/// Lifetime-erased executor pointer shipped to the execute thread.
+struct ExecPtr(*const (dyn StepExecutor + 'static));
+
+// SAFETY: the pointee is `Sync` (a `StepExecutor` supertrait), so calling
+// it from the execute thread while the coordinator holds shared
+// references is sound. The erased lifetime is upheld by the engine:
+// every queued request is resolved — received or drained by
+// [`ExecTicket`]'s drop — before `step()` returns, and the caller's
+// executor borrow outlives that call.
+unsafe impl Send for ExecPtr {}
+
+/// The dedicated execute thread (pipeline depth 3): executes run
+/// back-to-back here while the coordinator drains the previous step and
+/// the pool prepares the next one. Spawned through the sanctioned
+/// [`crate::utils::spawn_named`] path; at most one request is in flight
+/// at a time (the ring has a single sealed slot).
+struct ExecThread {
+    /// `None` only during drop (taking it disconnects the thread's recv).
+    req_tx: Option<SyncSender<ExecReq>>,
+    resp_rx: Receiver<ExecResp>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ExecThread {
+    fn spawn() -> Result<Self> {
+        let (req_tx, req_rx) = sync_channel::<ExecReq>(1);
+        let (resp_tx, resp_rx) = sync_channel::<ExecResp>(1);
+        let handle = crate::utils::spawn_named("step-exec", move || {
+            while let Ok(req) = req_rx.recv() {
+                // SAFETY: the coordinator keeps the executor borrow alive
+                // until this request's response is consumed (the
+                // `ExecTicket` contract), so the erased pointer is valid
+                // for the whole call.
+                let exec = unsafe { &*req.exec.0 };
+                let resp = exec.run_step_donated(req.inputs);
+                if resp_tx.send(resp).is_err() {
+                    break; // engine dropped; exit
+                }
+            }
+        })
+        .context("spawn execute thread")?;
+        Ok(Self { req_tx: Some(req_tx), resp_rx, handle: Some(handle) })
+    }
+
+    /// Queue one execute. The returned ticket must be resolved (received
+    /// or dropped) before `exec`'s borrow ends — the engine resolves it
+    /// before `step()` returns on every path, including unwinds.
+    fn submit<'t>(&'t self, exec: &dyn StepExecutor, inputs: Vec<xla::Literal>) -> ExecTicket<'t> {
+        let trait_obj: &dyn StepExecutor = exec;
+        // SAFETY (lifetime erasure): see `ExecPtr` — the ticket is
+        // resolved before the borrow ends.
+        let ptr = ExecPtr(unsafe {
+            std::mem::transmute::<&dyn StepExecutor, &'static dyn StepExecutor>(trait_obj)
+        });
+        self.req_tx
+            .as_ref()
+            .expect("execute thread channel open")
+            .send(ExecReq { exec: ptr, inputs })
+            .expect("execute thread died");
+        ExecTicket { rx: &self.resp_rx, received: false }
+    }
+}
+
+impl Drop for ExecThread {
+    fn drop(&mut self) {
+        // Disconnect the request channel so the thread's recv errors out,
+        // then join. No request can be in flight here (ticket contract).
+        self.req_tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Receipt for an in-flight execute. Dropping an unresolved ticket waits
+/// out the response and discards it (the failure/unwind paths), so the
+/// executor borrow and the donated literals are never touched after the
+/// coordinator abandons the step — the same drop-waits discipline as the
+/// pool's `StageHandle`.
+struct ExecTicket<'t> {
+    rx: &'t Receiver<ExecResp>,
+    received: bool,
+}
+
+impl ExecTicket<'_> {
+    /// Block until the queued execute's response arrives.
+    fn recv(mut self) -> ExecResp {
+        self.received = true;
+        self.rx.recv().expect("execute thread died")
+    }
+}
+
+impl Drop for ExecTicket<'_> {
+    fn drop(&mut self) {
+        if !self.received {
+            let _ = self.rx.recv();
+        }
     }
 }
 
@@ -282,25 +460,86 @@ fn num_inputs(mode: BatchMode) -> usize {
     }
 }
 
-/// One of the two in-flight step slots of the double-buffered engine: the
-/// step being executed and the step being prepared each own a full set of
+/// A slot's executable-input literal set plus its recycling scratch: the
+/// single home of the seal / take / retire plumbing shared by every
+/// protocol depth (serial recycling, depth-2 retirement after the
+/// coordinator-side execute, depth-3 donation through the execute
+/// thread).
+struct SlotLits {
+    /// Inputs by position, sealed in two stages: batch-derived literals
+    /// first, parameter-row literals after the gather is final.
+    slots: Vec<Option<xla::Literal>>,
+    /// Recycler for retired step-input literals (allocation-free refills).
+    scratch: LitScratch,
+}
+
+impl SlotLits {
+    fn new(n_inputs: usize) -> Self {
+        Self { slots: (0..n_inputs).map(|_| None).collect(), scratch: LitScratch::new() }
+    }
+
+    /// Seal input `pos` from an f32 host slice (a scratch refill — no
+    /// allocation once the scratch is warm).
+    fn set_f32(&mut self, pos: usize, data: &[f32], dims: &[usize]) -> Result<()> {
+        self.slots[pos] = Some(self.scratch.lit_f32(data, dims)?);
+        Ok(())
+    }
+
+    /// Seal input `pos` from an i32 host slice.
+    fn set_i32(&mut self, pos: usize, data: &[i32], dims: &[usize]) -> Result<()> {
+        self.slots[pos] = Some(self.scratch.lit_i32(data, dims)?);
+        Ok(())
+    }
+
+    /// Move the sealed literals out for the execute call.
+    fn take_sealed(&mut self) -> Vec<xla::Literal> {
+        self.slots
+            .iter_mut()
+            .map(|s| s.take().expect("slot literals sealed before execute"))
+            .collect()
+    }
+
+    /// Retire one executed input literal for reuse.
+    fn recycle(&mut self, lit: xla::Literal) {
+        self.scratch.recycle(lit);
+    }
+
+    /// Bulk-retire a donated input set ([`StepExecutor::run_step_donated`]).
+    fn donate(&mut self, lits: Vec<xla::Literal>) {
+        self.scratch.donate(lits);
+    }
+
+    /// Retire any still-sealed literals (invalidation / failure paths).
+    fn recycle_all(&mut self) {
+        for s in self.slots.iter_mut() {
+            if let Some(lit) = s.take() {
+                self.scratch.recycle(lit);
+            }
+        }
+    }
+
+    /// Fresh literal allocations this slot has performed so far.
+    fn created_count(&self) -> u64 {
+        self.scratch.created_count()
+    }
+}
+
+/// One in-flight step slot of the ring: the step being executed, the step
+/// being drained, and the step being prepared each own a full set of
 /// gather/readback scratch and literal buffers, so the stages of
 /// consecutive steps never contend (module docs).
 struct StepSlot {
     /// The slot's assembled batch (present from fetch until the step's
     /// scatter has landed and the buffers return to the pipeline).
     batch: Option<RawBatch>,
-    /// Executable inputs by position, sealed in two stages: batch-derived
-    /// literals during the background stage, parameter-row literals after
-    /// the patch.
-    lits: Vec<Option<xla::Literal>>,
+    /// Executable-input literals plus their recycling scratch.
+    lits: SlotLits,
     /// Error raised by the background literal build (single-writer cell;
     /// surfaced on the coordinator at the join point).
     lit_err: Option<anyhow::Error>,
-    /// Recycler for retired step-input literals (allocation-free refills).
-    scratch: LitScratch,
     /// Gather buffers for the positive/negative rows; after execute they
-    /// double as the gradient readback buffers.
+    /// double as the gradient readback buffers (and, at depth 3, hold the
+    /// gradients until the remainder scatter lands one call later).
     wp: Vec<f32>,
     bp: Vec<f32>,
     wn: Vec<f32>,
@@ -313,7 +552,7 @@ struct StepSlot {
 impl StepSlot {
     /// `with_gather` sizes the row scratch: false for slots that never
     /// gather (softmax — the dense path reads the whole matrix — and the
-    /// second slot of a serial-protocol engine, which is never prepared).
+    /// ring slots a shallower protocol never prepares).
     fn new(batch_size: usize, feat_dim: usize, n_inputs: usize, with_gather: bool) -> Self {
         let (wlen, blen) = if with_gather {
             (batch_size * feat_dim, batch_size)
@@ -322,9 +561,8 @@ impl StepSlot {
         };
         Self {
             batch: None,
-            lits: (0..n_inputs).map(|_| None).collect(),
+            lits: SlotLits::new(n_inputs),
             lit_err: None,
-            scratch: LitScratch::new(),
             wp: vec![0f32; wlen],
             bp: vec![0f32; blen],
             wn: vec![0f32; wlen],
@@ -335,73 +573,168 @@ impl StepSlot {
 
     /// Retire any sealed literals back into the slot's scratch.
     fn recycle_lits(&mut self) {
-        for s in self.lits.iter_mut() {
-            if let Some(lit) = s.take() {
-                self.scratch.recycle(lit);
-            }
-        }
+        self.lits.recycle_all();
+    }
+
+    /// Seal the parameter-row literals from the (final) gather buffers.
+    fn seal_param_lits(&mut self, b: usize, k: usize) -> Result<()> {
+        self.lits.set_f32(IN_WP, &self.wp, &[b, k])?;
+        self.lits.set_f32(IN_BP, &self.bp, &[b])?;
+        self.lits.set_f32(IN_WN, &self.wn, &[b, k])?;
+        self.lits.set_f32(IN_BN, &self.bn, &[b])?;
+        Ok(())
     }
 }
 
-/// Move a sealed slot's literals out for the execute call.
-fn take_inputs(lits: &mut [Option<xla::Literal>]) -> Vec<xla::Literal> {
-    lits.iter_mut()
-        .map(|s| s.take().expect("slot literals sealed before execute"))
-        .collect()
+/// Disjoint mutable references to two ring slots.
+fn slot_pair_mut(slots: &mut [StepSlot; 3], a: usize, b: usize) -> (&mut StepSlot, &mut StepSlot) {
+    assert_ne!(a, b, "slot pair must be disjoint");
+    if a < b {
+        let (lo, hi) = slots.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = slots.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
 }
 
 /// Build the batch-derived inputs (x, lpn/scale, lam) for a slot. The
-/// parameter-row literals are built separately, after the gathered rows
-/// are final ([`build_param_lits`]). Runs either inline (serial protocol)
-/// or on stage shard 0 of the background stage.
+/// parameter-row literals are sealed separately, after the gathered rows
+/// are final ([`StepSlot::seal_param_lits`]). Runs either inline (serial
+/// protocol) or on stage shard 0 of the background stage.
 fn build_batch_lits(
-    scratch: &mut LitScratch,
-    lits: &mut [Option<xla::Literal>],
+    lits: &mut SlotLits,
     batch: &RawBatch,
     mode: BatchMode,
     b: usize,
     k: usize,
     lam: f32,
 ) -> Result<()> {
-    lits[IN_X] = Some(scratch.lit_f32(&batch.x, &[b, k])?);
+    lits.set_f32(IN_X, &batch.x, &[b, k])?;
     match mode {
         BatchMode::NsLike => {
-            lits[5] = Some(scratch.lit_f32(&batch.lpn_p, &[b])?);
-            lits[6] = Some(scratch.lit_f32(&batch.lpn_n, &[b])?);
-            lits[7] = Some(scratch.lit_f32(&[lam], &[1])?);
+            lits.set_f32(5, &batch.lpn_p, &[b])?;
+            lits.set_f32(6, &batch.lpn_n, &[b])?;
+            lits.set_f32(7, &[lam], &[1])?;
         }
         BatchMode::Pairwise => {
-            lits[5] = Some(scratch.lit_f32(&batch.lpn_n, &[b])?);
-            lits[6] = Some(scratch.lit_f32(&[lam], &[1])?);
+            lits.set_f32(5, &batch.lpn_n, &[b])?;
+            lits.set_f32(6, &[lam], &[1])?;
         }
         BatchMode::Softmax => unreachable!("softmax inputs are assembled inline"),
     }
     Ok(())
 }
 
-/// Seal a slot's parameter-row literals from its (final) gather buffers.
-fn build_param_lits(slot: &mut StepSlot, b: usize, k: usize) -> Result<()> {
-    slot.lits[IN_WP] = Some(slot.scratch.lit_f32(&slot.wp, &[b, k])?);
-    slot.lits[IN_BP] = Some(slot.scratch.lit_f32(&slot.bp, &[b])?);
-    slot.lits[IN_WN] = Some(slot.scratch.lit_f32(&slot.wn, &[b, k])?);
-    slot.lits[IN_BN] = Some(slot.scratch.lit_f32(&slot.bn, &[b])?);
-    Ok(())
+/// Cumulative coordinator wall time per pipeline stage, measured with the
+/// sanctioned [`StopWatch`] clock (`repro train --timing`, hot-path
+/// bench). Attribution is by what the coordinator waits on: host work
+/// running concurrently with an execute lands in the bucket whose join
+/// exposed it — at depth 2 background-gather overshoot banks under
+/// `gather`, at depth 3 the remainder-scatter ∥ gather stage banks under
+/// `scatter` and the wait for the execute thread under `execute`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    pub gather_s: f64,
+    pub pack_s: f64,
+    pub execute_s: f64,
+    pub readback_s: f64,
+    pub scatter_s: f64,
+    /// Steps that completed successfully under this engine.
+    pub steps: u64,
 }
 
-/// The double-buffered step engine (module docs): owns the two step slots
-/// and runs the stage graph either strictly serially or with step t+1's
-/// host stages overlapped behind step t's execute. Parameters, pool and
-/// batch source stay with the caller so tests and benches can drive the
-/// engine with mock executors.
+impl StageTimes {
+    /// Total timed coordinator wall clock across the five buckets.
+    pub fn total_s(&self) -> f64 {
+        self.gather_s + self.pack_s + self.execute_s + self.readback_s + self.scatter_s
+    }
+
+    /// Fraction of the timed wall clock spent inside (or waiting on) the
+    /// execute stage — the pipeline's device-occupancy proxy: higher
+    /// means the host stages hide better behind the device.
+    pub fn execute_occupancy(&self) -> f64 {
+        let t = self.total_s();
+        if t > 0.0 {
+            self.execute_s / t
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line stage report (`repro train --timing`).
+    pub fn report(&self) -> String {
+        format!(
+            "stages over {} steps: gather {:.3}s | pack {:.3}s | execute {:.3}s | \
+             readback {:.3}s | scatter {:.3}s | execute occupancy {:.1}%",
+            self.steps,
+            self.gather_s,
+            self.pack_s,
+            self.execute_s,
+            self.readback_s,
+            self.scatter_s,
+            self.execute_occupancy() * 100.0
+        )
+    }
+}
+
+/// Successive-mark stage timer: each `bank` call adds the wall time since
+/// the previous mark to one [`StageTimes`] bucket.
+struct StageMarks {
+    sw: StopWatch,
+    last: f64,
+}
+
+impl StageMarks {
+    fn start() -> Self {
+        Self { sw: StopWatch::started(), last: 0.0 }
+    }
+
+    fn bank(&mut self, acc: &mut f64) {
+        let now = self.sw.elapsed_secs();
+        *acc += now - self.last;
+        self.last = now;
+    }
+}
+
+/// Where the three-slot ring stands between pipelined calls (depth 3).
+struct RingState {
+    /// Slot sealed and ready for the next execute.
+    exec_idx: usize,
+    /// Lease id live on the sealed slot's rows.
+    exec_lease: u64,
+    /// Slot whose remainder scatter is still pending: `(slot, lease)`.
+    /// Its gather buffers hold the step's gradients; the rows of its
+    /// batch still stamped with the lease apply on the next call's
+    /// background stage.
+    drain: Option<(usize, u64)>,
+}
+
+/// The ring-buffered step engine (module docs): owns the step slots and
+/// runs the stage graph serially (depth 1), double-buffered (depth 2) or
+/// through the three-deep execute pipeline (depth 3). Parameters, pool
+/// and batch source stay with the caller so tests and benches can drive
+/// the engine with mock executors.
 pub struct StepEngine {
     mode: BatchMode,
     batch_size: usize,
     feat_dim: usize,
     lambda: f32,
-    overlap: bool,
-    slots: [StepSlot; 2],
-    /// Slot holding the fully prepared next step, if any.
+    /// Pipeline depth: 1 serial, 2 double-buffered, 3 ring + dedicated
+    /// execute thread (clamped to [1, 3] at construction).
+    depth: usize,
+    slots: [StepSlot; 3],
+    /// Slot holding the fetched next step, if any (depth 2: fully
+    /// prepared; depth 3 failure paths: batch only, unprepared).
     pending: Option<usize>,
+    /// Depth-3 ring state across calls (`None` = cold start next call).
+    ring: Option<RingState>,
+    /// Dedicated execute thread (depth 3; spawned on first use).
+    exec_thread: Option<ExecThread>,
+    // deferred-slot scratch for the two-phase patch (depth 3; reused
+    // across steps instead of per-step allocations)
+    deferred_pos: Vec<u32>,
+    deferred_neg: Vec<u32>,
     // softmax scratch: labels as i32 + dense gradient readback (reused
     // across steps instead of per-step allocations)
     y_i32: Vec<i32>,
@@ -409,8 +742,12 @@ pub struct StepEngine {
     gb_dense: Vec<f32>,
     /// Batch slots re-gathered by the post-scatter patch (engine lifetime).
     pub rows_patched: u64,
-    /// Steps that ran the overlapped protocol.
+    /// Steps that ran the depth-2 overlapped protocol.
     pub steps_overlapped: u64,
+    /// Steps that ran the depth-3 pipelined protocol.
+    pub steps_pipelined: u64,
+    /// Per-stage coordinator wall time (all depths).
+    times: StageTimes,
 }
 
 impl StepEngine {
@@ -419,43 +756,94 @@ impl StepEngine {
         batch_size: usize,
         feat_dim: usize,
         lambda: f32,
-        overlap: bool,
+        depth: usize,
     ) -> Self {
+        let depth = depth.clamp(1, 3);
         let n = num_inputs(mode);
         let gather0 = mode != BatchMode::Softmax;
-        let gather1 = gather0 && overlap; // slot 1 exists only for overlap
+        // ring slots beyond the protocol's reach are never prepared and
+        // skip the row scratch
+        let gather1 = gather0 && depth >= 2;
+        let gather2 = gather0 && depth >= 3;
         Self {
             mode,
             batch_size,
             feat_dim,
             lambda,
-            overlap,
+            depth,
             slots: [
                 StepSlot::new(batch_size, feat_dim, n, gather0),
                 StepSlot::new(batch_size, feat_dim, n, gather1),
+                StepSlot::new(batch_size, feat_dim, n, gather2),
             ],
             pending: None,
+            ring: None,
+            exec_thread: None,
+            deferred_pos: Vec::new(),
+            deferred_neg: Vec::new(),
             y_i32: Vec::new(),
             gw_dense: Vec::new(),
             gb_dense: Vec::new(),
             rows_patched: 0,
             steps_overlapped: 0,
+            steps_pipelined: 0,
+            times: StageTimes::default(),
         }
     }
 
-    /// Does this engine run the overlapped protocol? (Softmax always runs
-    /// serially: its dense update conflicts with every row.)
+    /// Configured pipeline depth (1, 2 or 3).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Does this engine run an overlapped protocol (depth ≥ 2)? Softmax
+    /// always runs serially: its dense update conflicts with every row.
     pub fn overlap_enabled(&self) -> bool {
-        self.overlap && self.mode != BatchMode::Softmax
+        self.depth >= 2 && self.mode != BatchMode::Softmax
+    }
+
+    /// Does this engine run the three-deep execute pipeline?
+    pub fn pipeline_enabled(&self) -> bool {
+        self.depth >= 3 && self.mode != BatchMode::Softmax
+    }
+
+    /// Per-stage coordinator wall-time breakdown.
+    pub fn times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    /// Fresh literal allocations across all slots. Steady-state stepping
+    /// refills retired/donated literals in place, so after a warmup of
+    /// `depth` steps this counter must stop advancing (pinned by
+    /// `tests/overlap_parity.rs`).
+    pub fn lit_allocs(&self) -> u64 {
+        self.slots.iter().map(|s| s.lits.created_count()).sum()
     }
 
     /// Drop any prefetched step state. Call after mutating the parameters
     /// outside the engine (e.g. [`StepEngine::apply_batch`] does this
     /// internally): the prefetched gather would otherwise be stale against
-    /// the serial protocol. The prefetched batch itself is kept — it is
-    /// the next batch of the deterministic stream — and is re-gathered on
-    /// the next step.
-    pub fn invalidate_prefetch(&mut self) {
+    /// the serial protocol. At depth 3 this first lands the previous
+    /// step's pending remainder scatter serially, so the parameters are
+    /// fully serial-consistent when the caller reads or edits them; the
+    /// drained slot's batch buffers are dropped (there is no source here
+    /// to recycle into). The prefetched batch itself is kept — it is the
+    /// next batch of the deterministic stream — and is re-gathered on the
+    /// next step.
+    pub fn invalidate_prefetch(&mut self, params: &mut ParamStore) {
+        if let Some(ring) = self.ring.take() {
+            if let Some((didx, dlease)) = ring.drain {
+                let d = &self.slots[didx];
+                if let Some(batch) = d.batch.as_ref() {
+                    params.apply_sparse_stamped(&batch.pos, &d.wp, &d.bp, dlease);
+                    params.apply_sparse_stamped(&batch.neg, &d.wn, &d.bn, dlease);
+                }
+                self.slots[didx].batch = None;
+            }
+            // the sealed slot's batch is next in the stream: hand it back
+            // as (unprepared) pending
+            self.pending = Some(ring.exec_idx);
+        }
         for slot in self.slots.iter_mut() {
             slot.prepared = false;
             slot.recycle_lits();
@@ -463,7 +851,7 @@ impl StepEngine {
     }
 
     /// Run one full step of the configured protocol; returns the mean
-    /// per-example loss. Bit-identical results with overlap on or off.
+    /// per-example loss. Bit-identical results at every depth.
     pub fn step(
         &mut self,
         exec: &dyn StepExecutor,
@@ -477,6 +865,9 @@ impl StepEngine {
             source.recycle(batch);
             return result;
         }
+        if self.pipeline_enabled() {
+            return self.step_pipelined(exec, params, pool, source);
+        }
         self.step_overlapped(exec, params, pool, source)
     }
 
@@ -489,7 +880,7 @@ impl StepEngine {
         pool: &Pool,
         batch: &RawBatch,
     ) -> Result<f64> {
-        self.invalidate_prefetch();
+        self.invalidate_prefetch(params);
         self.run_serial(exec, params, pool, batch)
     }
 
@@ -506,21 +897,25 @@ impl StepEngine {
         let b = self.batch_size;
         let k = self.feat_dim;
         let lam = self.lambda;
-        match self.mode {
+        let mut marks = StageMarks::start();
+        let mean_loss = match self.mode {
             BatchMode::NsLike | BatchMode::Pairwise => {
                 let mode = self.mode;
                 let slot = &mut self.slots[0];
                 params.gather_par(pool, &batch.pos, &mut slot.wp, &mut slot.bp);
                 params.gather_par(pool, &batch.neg, &mut slot.wn, &mut slot.bn);
-                build_batch_lits(&mut slot.scratch, &mut slot.lits, batch, mode, b, k, lam)?;
-                build_param_lits(slot, b, k)?;
-                let inputs = take_inputs(&mut slot.lits);
+                marks.bank(&mut self.times.gather_s);
+                build_batch_lits(&mut slot.lits, batch, mode, b, k, lam)?;
+                slot.seal_param_lits(b, k)?;
+                let inputs = slot.lits.take_sealed();
+                marks.bank(&mut self.times.pack_s);
                 let result = exec.run_step(&inputs).context(match mode {
                     BatchMode::NsLike => "ns/nce step",
                     _ => "ove step",
                 });
+                marks.bank(&mut self.times.execute_s);
                 for lit in inputs {
-                    slot.scratch.recycle(lit);
+                    slot.lits.recycle(lit);
                 }
                 let outs = result?;
                 let loss = read_f32(&outs[0])?;
@@ -530,9 +925,11 @@ impl StepEngine {
                 read_f32_into(&outs[2], &mut slot.bp)?;
                 read_f32_into(&outs[3], &mut slot.wn)?;
                 read_f32_into(&outs[4], &mut slot.bn)?;
+                marks.bank(&mut self.times.readback_s);
                 params.apply_sparse_par(pool, &batch.pos, &slot.wp, &slot.bp);
                 params.apply_sparse_par(pool, &batch.neg, &slot.wn, &slot.bn);
-                Ok(crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64)
+                marks.bank(&mut self.times.scatter_s);
+                crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64
             }
             BatchMode::Softmax => {
                 let c = params.num_classes;
@@ -543,24 +940,30 @@ impl StepEngine {
                 self.gw_dense.resize(c * k, 0.0);
                 self.gb_dense.resize(c, 0.0);
                 let slot = &mut self.slots[0];
-                slot.lits[0] = Some(slot.scratch.lit_f32(&batch.x, &[b, k])?);
-                slot.lits[1] = Some(slot.scratch.lit_f32(&params.w, &[c, k])?);
-                slot.lits[2] = Some(slot.scratch.lit_f32(&params.b, &[c])?);
-                slot.lits[3] = Some(slot.scratch.lit_i32(&self.y_i32, &[b])?);
-                slot.lits[4] = Some(slot.scratch.lit_f32(&[lam], &[1])?);
-                let inputs = take_inputs(&mut slot.lits);
+                slot.lits.set_f32(0, &batch.x, &[b, k])?;
+                slot.lits.set_f32(1, &params.w, &[c, k])?;
+                slot.lits.set_f32(2, &params.b, &[c])?;
+                slot.lits.set_i32(3, &self.y_i32, &[b])?;
+                slot.lits.set_f32(4, &[lam], &[1])?;
+                let inputs = slot.lits.take_sealed();
+                marks.bank(&mut self.times.pack_s);
                 let result = exec.run_step(&inputs).context("softmax step");
+                marks.bank(&mut self.times.execute_s);
                 for lit in inputs {
-                    slot.scratch.recycle(lit);
+                    slot.lits.recycle(lit);
                 }
                 let outs = result?;
                 let loss = read_f32(&outs[0])?;
                 read_f32_into(&outs[1], &mut self.gw_dense)?;
                 read_f32_into(&outs[2], &mut self.gb_dense)?;
+                marks.bank(&mut self.times.readback_s);
                 params.apply_dense_par(pool, &self.gw_dense, &self.gb_dense);
-                Ok(crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64)
+                marks.bank(&mut self.times.scatter_s);
+                crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64
             }
-        }
+        };
+        self.times.steps += 1;
+        Ok(mean_loss)
     }
 
     /// Bring `idx`'s slot to "prepared" through the serial stages (cold
@@ -575,8 +978,8 @@ impl StepEngine {
         let batch = slot.batch.as_ref().expect("prepare_slot needs a fetched batch");
         params.gather_par(pool, &batch.pos, &mut slot.wp, &mut slot.bp);
         params.gather_par(pool, &batch.neg, &mut slot.wn, &mut slot.bn);
-        build_batch_lits(&mut slot.scratch, &mut slot.lits, batch, mode, b, k, lam)?;
-        build_param_lits(slot, b, k)?;
+        build_batch_lits(&mut slot.lits, batch, mode, b, k, lam)?;
+        slot.seal_param_lits(b, k)?;
         slot.prepared = true;
         Ok(())
     }
@@ -595,6 +998,7 @@ impl StepEngine {
         let k = self.feat_dim;
         let lam = self.lambda;
         let mode = self.mode;
+        let mut marks = StageMarks::start();
 
         // Current step's slot: the prepared pending slot, or a cold start
         // (first step, or the step after an aborted one — residue from an
@@ -622,15 +1026,9 @@ impl StepEngine {
             nxt.batch = Some(source.next());
             nxt.lit_err = None;
         }
+        marks.bank(&mut self.times.gather_s);
 
-        let (cur, nxt) = {
-            let (a, z) = self.slots.split_at_mut(1);
-            if cur_idx == 0 {
-                (&mut a[0], &mut z[0])
-            } else {
-                (&mut z[0], &mut a[0])
-            }
-        };
+        let (cur, nxt) = slot_pair_mut(&mut self.slots, cur_idx, nxt_idx);
 
         // Lease step t's update set, then launch t+1's host stages on the
         // background workers while t executes here. Nothing writes the
@@ -646,24 +1044,18 @@ impl StepEngine {
             let bp_view = SharedMut::new(&mut nxt.bp);
             let wn_view = SharedMut::new(&mut nxt.wn);
             let bn_view = SharedMut::new(&mut nxt.bn);
-            let lits_view = SharedMut::new(nxt.lits.as_mut_slice());
-            let scratch_view = SharedMut::new(std::slice::from_mut(&mut nxt.scratch));
+            let lits_view = SharedMut::new(std::slice::from_mut(&mut nxt.lits));
             let err_view = SharedMut::new(std::slice::from_mut(&mut nxt.lit_err));
             let params_ref: &ParamStore = params;
             let shards = pool.stage_shards();
             let stage = pool.submit_sharded(move |shard| {
                 if shard == 0 {
                     // SAFETY: stage shard 0 is the only writer of the
-                    // literal array, the scratch and the error cell.
-                    let (scratch, lits, err) = unsafe {
-                        (
-                            &mut scratch_view.slice_mut(0, 1)[0],
-                            lits_view.slice_mut(0, lits_view.len()),
-                            &mut err_view.slice_mut(0, 1)[0],
-                        )
+                    // literal set and the error cell.
+                    let (lits, err) = unsafe {
+                        (&mut lits_view.slice_mut(0, 1)[0], &mut err_view.slice_mut(0, 1)[0])
                     };
-                    if let Err(e) = build_batch_lits(scratch, lits, nxt_batch, mode, b, k, lam)
-                    {
+                    if let Err(e) = build_batch_lits(lits, nxt_batch, mode, b, k, lam) {
                         *err = Some(e);
                     }
                 }
@@ -675,12 +1067,14 @@ impl StepEngine {
 
             // Device half of step t: the coordinator blocks here — this is
             // the latency the background stage hides.
-            let inputs = take_inputs(&mut cur.lits);
+            let inputs = cur.lits.take_sealed();
             exec_result = exec.run_step(&inputs);
+            marks.bank(&mut self.times.execute_s);
             stage.join();
+            marks.bank(&mut self.times.gather_s);
             // retire t's inputs for reuse by step t+2 in this slot
             for lit in inputs {
-                cur.scratch.recycle(lit);
+                cur.lits.recycle(lit);
             }
         }
         cur.prepared = false;
@@ -721,8 +1115,10 @@ impl StepEngine {
         read_f32_into(&outs[2], &mut cur.bp)?;
         read_f32_into(&outs[3], &mut cur.wn)?;
         read_f32_into(&outs[4], &mut cur.bn)?;
+        marks.bank(&mut self.times.readback_s);
         params.apply_sparse_par(pool, &cur_batch.pos, &cur.wp, &cur.bp);
         params.apply_sparse_par(pool, &cur_batch.neg, &cur.wn, &cur.bn);
+        marks.bank(&mut self.times.scatter_s);
         let mean_loss = crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64;
 
         // Patch t+1's leased rows now that t's scatter has landed, then
@@ -734,13 +1130,298 @@ impl StepEngine {
             self.rows_patched +=
                 params.patch_leased(&nxt_batch.neg, lease, &mut nxt.wn, &mut nxt.bn) as u64;
         }
-        build_param_lits(nxt, b, k)?;
+        marks.bank(&mut self.times.gather_s);
+        nxt.seal_param_lits(b, k)?;
         nxt.prepared = true;
+        marks.bank(&mut self.times.pack_s);
         self.steps_overlapped += 1;
+        self.times.steps += 1;
 
         // Retire step t's batch buffers to the pipeline and hand over.
         source.recycle(cur.batch.take().expect("current slot holds its batch"));
         self.pending = Some(nxt_idx);
+        Ok(mean_loss)
+    }
+
+    /// The three-deep pipelined protocol (module docs). Per call, with
+    /// `t` the step whose loss this call returns:
+    ///
+    /// 1. queue execute(t) on the dedicated thread (sealed slot, donated
+    ///    inputs);
+    /// 2. fetch batch t+1 into the free slot;
+    /// 3. run one background stage: remainder-scatter(t−1) ∥ eager
+    ///    gather(t+1) ∥ batch-literal build(t+1), then join it;
+    /// 4. recycle batch t−1 — its scatter is fully landed;
+    /// 5. phase-A patch of t+1's rows (stamps in `[lease(t−1), lease(t))`
+    ///    re-read; stamps ≥ lease(t) deferred);
+    /// 6. receive execute(t): read back loss + gradients, donate the
+    ///    inputs back to the slot's scratch;
+    /// 7. lease t+1's rows, apply the conflict half of t's scatter (rows
+    ///    re-stamped by the new lease) serially, phase-B patch the
+    ///    deferred slots, seal t+1's parameter literals;
+    /// 8. rotate the ring: t+1 becomes the sealed slot, t the drain slot.
+    ///
+    /// Every row still sees its updates in exact serial order (the split
+    /// scatter applies each update exactly once, before any read of the
+    /// row), so the protocol is bit-identical to the serial one.
+    fn step_pipelined(
+        &mut self,
+        exec: &dyn StepExecutor,
+        params: &mut ParamStore,
+        pool: &Pool,
+        source: &mut BatchSource,
+    ) -> Result<f64> {
+        let b = self.batch_size;
+        let k = self.feat_dim;
+        let lam = self.lambda;
+        let mode = self.mode;
+        let mut marks = StageMarks::start();
+
+        // The slot about to execute: the ring's sealed slot, or a cold
+        // start (first step, after a failure, or after an invalidation —
+        // residue from an abort is dropped; the pipeline tolerates
+        // unreturned buffers). A cold start runs the serial preparation
+        // and takes the lease itself; in steady state the previous call
+        // already did both.
+        let (exec_idx, exec_lease, drain) = match self.ring.take() {
+            Some(r) => (r.exec_idx, r.exec_lease, r.drain),
+            None => {
+                let idx = match self.pending.take() {
+                    Some(i) => i,
+                    None => {
+                        for slot in self.slots.iter_mut() {
+                            slot.batch = None;
+                            slot.recycle_lits();
+                            slot.prepared = false;
+                        }
+                        self.slots[0].batch = Some(source.next());
+                        0
+                    }
+                };
+                if !self.slots[idx].prepared {
+                    self.prepare_slot(idx, params, pool)?;
+                }
+                let batch =
+                    self.slots[idx].batch.as_ref().expect("prepared slot holds its batch");
+                let lease = params.lease_rows(&[&batch.pos, &batch.neg]);
+                (idx, lease, None)
+            }
+        };
+        marks.bank(&mut self.times.gather_s);
+
+        // 1. Queue execute(t): it runs on the dedicated thread from here
+        // until the ticket is received in step 6.
+        if self.exec_thread.is_none() {
+            self.exec_thread = Some(ExecThread::spawn()?);
+        }
+        let ticket = {
+            let inputs = {
+                let eslot = &mut self.slots[exec_idx];
+                debug_assert!(eslot.prepared);
+                eslot.prepared = false;
+                eslot.lits.take_sealed()
+            };
+            self.exec_thread
+                .as_ref()
+                .expect("execute thread spawned above")
+                .submit(exec, inputs)
+        };
+        marks.bank(&mut self.times.pack_s);
+
+        // 2. Fetch batch t+1 into the free slot (deterministic pick: the
+        // lowest index that is neither executing nor draining).
+        let gather_idx = (0..3)
+            .find(|&i| i != exec_idx && Some(i) != drain.map(|(d, _)| d))
+            .expect("three slots, at most two busy");
+        {
+            let g = &mut self.slots[gather_idx];
+            debug_assert!(g.batch.is_none() && !g.prepared);
+            g.batch = Some(source.next());
+            g.lit_err = None;
+        }
+        marks.bank(&mut self.times.gather_s);
+
+        // 3. One background stage: the remainder of step t−1's scatter
+        // (rows still stamped with its lease), the eager gather of batch
+        // t+1 (skipping rows stamped at or above the oldest live lease)
+        // and the batch-literal build. Scatter and gather are disjoint by
+        // stamp — a row is either still leased to t−1 (scattered, not
+        // gathered) or free (gathered, not scattered) — so the stage is
+        // race-free, and the execute thread touches only literals.
+        let since = drain.map(|(_, l)| l).unwrap_or(exec_lease);
+        {
+            let (gslot, dslot) = match drain {
+                Some((didx, _)) => {
+                    let (g, d) = slot_pair_mut(&mut self.slots, gather_idx, didx);
+                    (g, Some(&*d))
+                }
+                None => (&mut self.slots[gather_idx], None),
+            };
+            let g_batch: &RawBatch = gslot.batch.as_ref().unwrap();
+            let wp_view = SharedMut::new(&mut gslot.wp);
+            let bp_view = SharedMut::new(&mut gslot.bp);
+            let wn_view = SharedMut::new(&mut gslot.wn);
+            let bn_view = SharedMut::new(&mut gslot.bn);
+            let lits_view = SharedMut::new(std::slice::from_mut(&mut gslot.lits));
+            let err_view = SharedMut::new(std::slice::from_mut(&mut gslot.lit_err));
+            let drain_ref = dslot.map(|d| {
+                let batch = d.batch.as_ref().expect("drain slot holds its batch");
+                (batch, &d.wp, &d.bp, &d.wn, &d.bn)
+            });
+            let dlease = drain.map(|(_, l)| l).unwrap_or(0);
+            let views = params.stage_views();
+            let shards = pool.stage_shards();
+            let stage = pool.submit_sharded(move |shard| {
+                if shard == 0 {
+                    // SAFETY: stage shard 0 is the only writer of the
+                    // literal set and the error cell.
+                    let (lits, err) = unsafe {
+                        (&mut lits_view.slice_mut(0, 1)[0], &mut err_view.slice_mut(0, 1)[0])
+                    };
+                    if let Err(e) = build_batch_lits(lits, g_batch, mode, b, k, lam) {
+                        *err = Some(e);
+                    }
+                }
+                if let Some((dbatch, gwp, gbp, gwn, gbn)) = drain_ref {
+                    views.scatter_shard(&dbatch.pos, gwp, gbp, dlease, shards, shard);
+                    views.scatter_shard(&dbatch.neg, gwn, gbn, dlease, shards, shard);
+                }
+                views.gather_shard(&g_batch.pos, since, shards, shard, &wp_view, &bp_view);
+                views.gather_shard(&g_batch.neg, since, shards, shard, &wn_view, &bn_view);
+            });
+            stage.join();
+        }
+        marks.bank(&mut self.times.scatter_s);
+
+        // 4. Batch t−1 is fully scattered: its buffers go home.
+        if let Some((didx, _)) = drain {
+            let batch = self.slots[didx].batch.take().expect("drain slot holds its batch");
+            source.recycle(batch);
+        }
+
+        // Background literal-build failure: discard execute(t) — dropping
+        // the ticket drains the response, so batch t is lost exactly as
+        // under an execute failure below (its remainder-less scatter
+        // never applies) — but salvage batch t+1 as unprepared pending.
+        if let Some(e) = self.slots[gather_idx].lit_err.take() {
+            drop(ticket);
+            self.slots[gather_idx].recycle_lits();
+            self.pending = Some(gather_idx);
+            let eb = self.slots[exec_idx].batch.take().expect("exec slot holds its batch");
+            source.recycle(eb);
+            return Err(e.context("background literal build"));
+        }
+
+        // 5. Phase-A patch of batch t+1: rows whose covering scatter has
+        // landed (stamped in [since, lease(t))) are re-read now; rows the
+        // in-flight step t will update (stamped ≥ lease(t)) are deferred
+        // to phase B.
+        self.deferred_pos.clear();
+        self.deferred_neg.clear();
+        {
+            let g = &mut self.slots[gather_idx];
+            let batch = g.batch.as_ref().unwrap();
+            self.rows_patched += params.patch_leased_range(
+                &batch.pos,
+                since,
+                exec_lease,
+                &mut g.wp,
+                &mut g.bp,
+                &mut self.deferred_pos,
+            ) as u64;
+            self.rows_patched += params.patch_leased_range(
+                &batch.neg,
+                since,
+                exec_lease,
+                &mut g.wn,
+                &mut g.bn,
+                &mut self.deferred_neg,
+            ) as u64;
+        }
+        marks.bank(&mut self.times.gather_s);
+
+        // 6. Receive execute(t).
+        let (outs, donated) = match ticket.recv() {
+            Ok(v) => v,
+            Err(e) => {
+                // Transient-failure contract (module docs): batch t is
+                // lost — its conflict scatter never applies, while the
+                // remainder scatter of t−1 landed in the stage above, so
+                // the parameters hold the exact serial state through step
+                // t−1. Batch t+1 is handed back as unprepared pending;
+                // the next call cold-starts on the serial stream.
+                self.slots[gather_idx].recycle_lits();
+                self.pending = Some(gather_idx);
+                let eb = self.slots[exec_idx].batch.take().expect("exec slot holds its batch");
+                source.recycle(eb);
+                return Err(e.context(match mode {
+                    BatchMode::NsLike => "ns/nce step",
+                    _ => "ove step",
+                }));
+            }
+        };
+        marks.bank(&mut self.times.execute_s);
+
+        // Readback into the exec slot's gather buffers — they hold step
+        // t's gradients from here until the remainder scatter lands on
+        // the next call's stage. The donated inputs refill in place for
+        // step t+3 (zero-allocation steady state).
+        let loss;
+        {
+            let eslot = &mut self.slots[exec_idx];
+            eslot.lits.donate(donated);
+            loss = read_f32(&outs[0])?;
+            read_f32_into(&outs[1], &mut eslot.wp)?;
+            read_f32_into(&outs[2], &mut eslot.bp)?;
+            read_f32_into(&outs[3], &mut eslot.wn)?;
+            read_f32_into(&outs[4], &mut eslot.bn)?;
+        }
+        let mean_loss = crate::linalg::sum_f64(loss.iter().map(|&l| l as f64)) / b as f64;
+        marks.bank(&mut self.times.readback_s);
+
+        // 7. Lease t+1's rows — re-stamping every row the sealed step
+        // reads — then apply the conflict half of t's scatter: exactly
+        // the rows t+1 will read, serially, before its literals seal. The
+        // rows of batch t left stamped with lease(t) are the remainder,
+        // applied on the next call's stage.
+        let next_lease = {
+            let g = &self.slots[gather_idx];
+            let batch = g.batch.as_ref().unwrap();
+            params.lease_rows(&[&batch.pos, &batch.neg])
+        };
+        {
+            let e = &self.slots[exec_idx];
+            let batch = e.batch.as_ref().expect("exec slot holds its batch");
+            params.apply_sparse_stamped(&batch.pos, &e.wp, &e.bp, next_lease);
+            params.apply_sparse_stamped(&batch.neg, &e.wn, &e.bn, next_lease);
+        }
+        marks.bank(&mut self.times.scatter_s);
+
+        // Phase-B patch: the deferred rows are final for this step now
+        // that the conflict scatter has landed; re-read them and seal.
+        {
+            let g = &mut self.slots[gather_idx];
+            let batch = g.batch.as_ref().unwrap();
+            params.patch_slots(&batch.pos, &self.deferred_pos, &mut g.wp, &mut g.bp);
+            params.patch_slots(&batch.neg, &self.deferred_neg, &mut g.wn, &mut g.bn);
+        }
+        self.rows_patched += (self.deferred_pos.len() + self.deferred_neg.len()) as u64;
+        marks.bank(&mut self.times.gather_s);
+        {
+            let g = &mut self.slots[gather_idx];
+            g.seal_param_lits(b, k)?;
+            g.prepared = true;
+        }
+        marks.bank(&mut self.times.pack_s);
+
+        // 8. Rotate the ring: t+1 executes next, t drains next call.
+        self.steps_pipelined += 1;
+        self.times.steps += 1;
+        self.ring = Some(RingState {
+            exec_idx: gather_idx,
+            exec_lease: next_lease,
+            drain: Some((exec_idx, exec_lease)),
+        });
         Ok(mean_loss)
     }
 }
@@ -873,13 +1554,22 @@ impl TrainRun {
         let k = data.feat_dim;
         // Overlap needs at least one background worker to hide the stage
         // behind the execute; on a serial pool (or single hardware thread)
-        // the protocol degrades to inline calls, so auto turns it off.
-        let overlap = match cfg.overlap {
-            OverlapMode::On => true,
-            OverlapMode::Off => false,
-            OverlapMode::Auto => multi_core && pool.num_workers() > 1,
+        // the protocol degrades to inline calls, so auto drops to depth 1.
+        // Depth 3 (the dedicated execute thread) is opt-in via
+        // `--overlap pipeline` / `REPRO_OVERLAP=pipeline`.
+        let depth = match cfg.overlap {
+            OverlapMode::Pipeline => 3,
+            OverlapMode::On => 2,
+            OverlapMode::Off => 1,
+            OverlapMode::Auto => {
+                if multi_core && pool.num_workers() > 1 {
+                    2
+                } else {
+                    1
+                }
+            }
         };
-        let engine = StepEngine::new(mode, b, k, cfg.hyper.lambda, overlap);
+        let engine = StepEngine::new(mode, b, k, cfg.hyper.lambda, depth);
         Ok(Self {
             cfg: cfg.clone(),
             params: ParamStore::zeros(c, k, cfg.hyper.lr),
@@ -946,7 +1636,7 @@ impl TrainRun {
     /// external parameter edit between overlapped steps would train the
     /// next step on pre-edit rows.
     pub fn invalidate_prefetch(&mut self) {
-        self.engine.invalidate_prefetch();
+        self.engine.invalidate_prefetch(&mut self.params);
     }
 
     /// Immutable serving snapshot of the current parameters plus the

@@ -1,11 +1,14 @@
-//! Bit-exact parity of the double-buffered step engine (PR 4).
+//! Bit-exact parity of the ring-buffered step engine across pipeline
+//! depths (PR 4: double buffering; PR 10: the three-deep execute
+//! pipeline).
 //!
-//! The overlapped protocol — step t+1's gather and batch-literal stages
-//! running behind step t's execute, with conflict-aware row leasing — must
+//! The overlapped protocols — step t+1's gather and batch-literal stages
+//! running behind step t's execute at depth 2, plus the dedicated execute
+//! thread and the split remainder/conflict scatter at depth 3 — must
 //! produce **the same bits** as the strictly serial gather → execute →
 //! scatter protocol: identical per-step losses and identical parameters
-//! (weights, biases, Adagrad accumulators) at every `parallelism` setting,
-//! for every batch mode.
+//! (weights, biases, Adagrad accumulators) at every `parallelism`
+//! setting, for every batch mode.
 //!
 //! The PJRT runtime is gated in this environment (vendored host stub), so
 //! the device half runs through deterministic host mocks implementing
@@ -25,6 +28,7 @@ use adv_softmax::train::{
 };
 use adv_softmax::utils::{Pool, Rng};
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 fn sigmoid(x: f32) -> f32 {
@@ -152,7 +156,9 @@ fn tiny_data() -> Arc<Dataset> {
     Arc::new(Splits::synthetic(&cfg).train)
 }
 
-/// Run `steps` engine steps and return (losses, final params).
+/// Run `steps` engine steps at the given pipeline depth and return
+/// (losses, final params). Asserts the requested protocol actually
+/// engaged (every step counted under the depth's counter).
 #[allow(clippy::too_many_arguments)]
 fn run_engine(
     data: &Arc<Dataset>,
@@ -161,24 +167,37 @@ fn run_engine(
     exec: &dyn StepExecutor,
     steps: usize,
     workers: usize,
-    overlap: bool,
-    pipelined: bool,
+    depth: usize,
+    pipelined_source: bool,
 ) -> (Vec<f64>, ParamStore) {
     let pool = Pool::new(workers);
     let gen = BatchGen::new(data.clone(), sampler, mode, B, 1.0, Rng::new(11));
-    let mut source = if pipelined && mode != BatchMode::Softmax {
+    let mut source = if pipelined_source && mode != BatchMode::Softmax {
         BatchSource::pipelined(&gen, workers.min(4))
     } else {
         BatchSource::inline(gen)
     };
     let mut params = ParamStore::zeros(data.num_classes, data.feat_dim, 0.05);
-    let mut engine = StepEngine::new(mode, B, data.feat_dim, 1e-3, overlap);
+    let mut engine = StepEngine::new(mode, B, data.feat_dim, 1e-3, depth);
     let mut losses = Vec::with_capacity(steps);
     for _ in 0..steps {
         losses.push(engine.step(exec, &mut params, &pool, &mut source).unwrap());
     }
-    if overlap && mode != BatchMode::Softmax {
-        assert_eq!(engine.steps_overlapped, steps as u64, "overlap must actually engage");
+    if mode != BatchMode::Softmax {
+        match depth {
+            2 => assert_eq!(
+                engine.steps_overlapped, steps as u64,
+                "depth 2 must actually engage"
+            ),
+            3 => assert_eq!(
+                engine.steps_pipelined, steps as u64,
+                "depth 3 must actually engage"
+            ),
+            _ => {
+                assert_eq!(engine.steps_overlapped, 0);
+                assert_eq!(engine.steps_pipelined, 0);
+            }
+        }
     }
     (losses, params)
 }
@@ -187,20 +206,20 @@ fn uniform_sampler(data: &Arc<Dataset>) -> SamplerKind {
     SamplerKind::Uniform(UniformSampler::new(data.num_classes))
 }
 
-/// The PR 4 acceptance bar, host-side: losses and parameters bit-identical
-/// across {overlap on, off} × workers {1, 2, 7} for the uniform sampler.
+/// The acceptance bar, host-side: losses and parameters bit-identical
+/// across depth {1, 2, 3} × workers {1, 2, 7} for the uniform sampler.
 #[test]
-fn ns_learning_curve_bit_identical_overlap_x_workers() {
+fn ns_learning_curve_bit_identical_depth_x_workers() {
     let data = tiny_data();
     let exec = MockNsGrad { b: B, k: data.feat_dim };
     let steps = 40;
     let (ref_losses, ref_params) =
-        run_engine(&data, uniform_sampler(&data), BatchMode::NsLike, &exec, steps, 1, false, false);
+        run_engine(&data, uniform_sampler(&data), BatchMode::NsLike, &exec, steps, 1, 1, false);
     // sanity: the engine actually trains under the mock gradient
     let head: f64 = ref_losses[..5].iter().sum();
     let tail: f64 = ref_losses[steps - 5..].iter().sum();
     assert!(tail < head, "loss should decrease: head {head} tail {tail}");
-    for overlap in [false, true] {
+    for depth in [1usize, 2, 3] {
         for workers in [1usize, 2, 7] {
             let (losses, params) = run_engine(
                 &data,
@@ -209,21 +228,22 @@ fn ns_learning_curve_bit_identical_overlap_x_workers() {
                 &exec,
                 steps,
                 workers,
-                overlap,
+                depth,
                 true,
             );
-            assert_eq!(losses, ref_losses, "overlap={overlap} workers={workers}");
-            assert_eq!(params.w, ref_params.w, "overlap={overlap} workers={workers}");
-            assert_eq!(params.b, ref_params.b, "overlap={overlap} workers={workers}");
+            assert_eq!(losses, ref_losses, "depth={depth} workers={workers}");
+            assert_eq!(params.w, ref_params.w, "depth={depth} workers={workers}");
+            assert_eq!(params.b, ref_params.b, "depth={depth} workers={workers}");
         }
     }
 }
 
 /// Same bar for the adversarial sampler: tree-descent negatives mean
 /// pos/neg label sets that collide across consecutive batches (the lease
-/// map earns its keep), and the lpn literals ride the background stage.
+/// map — and at depth 3 the two-lease split scatter — earns its keep),
+/// and the lpn literals ride the background stage.
 #[test]
-fn adversarial_learning_curve_bit_identical_overlap_x_workers() {
+fn adversarial_learning_curve_bit_identical_depth_x_workers() {
     let data = tiny_data();
     let tcfg = TreeConfig { aux_dim: 8, ..Default::default() };
     let (adv, _) = AdversarialSampler::fit(&data, &tcfg, 3);
@@ -234,9 +254,9 @@ fn adversarial_learning_curve_bit_identical_overlap_x_workers() {
     let exec = MockNsGrad { b: B, k: data.feat_dim };
     let steps = 30;
     let (ref_losses, ref_params) =
-        run_engine(&data, make_sampler(), BatchMode::NsLike, &exec, steps, 1, false, false);
-    for overlap in [false, true] {
-        for workers in [2usize, 7] {
+        run_engine(&data, make_sampler(), BatchMode::NsLike, &exec, steps, 1, 1, false);
+    for depth in [2usize, 3] {
+        for workers in [1usize, 2, 7] {
             let (losses, params) = run_engine(
                 &data,
                 make_sampler(),
@@ -244,20 +264,20 @@ fn adversarial_learning_curve_bit_identical_overlap_x_workers() {
                 &exec,
                 steps,
                 workers,
-                overlap,
+                depth,
                 true,
             );
-            assert_eq!(losses, ref_losses, "overlap={overlap} workers={workers}");
-            assert_eq!(params.w, ref_params.w, "overlap={overlap} workers={workers}");
-            assert_eq!(params.b, ref_params.b, "overlap={overlap} workers={workers}");
+            assert_eq!(losses, ref_losses, "depth={depth} workers={workers}");
+            assert_eq!(params.w, ref_params.w, "depth={depth} workers={workers}");
+            assert_eq!(params.b, ref_params.b, "depth={depth} workers={workers}");
         }
     }
 }
 
 /// Softmax always runs the serial protocol (every row conflicts with the
-/// dense update); requesting overlap must be a byte-level no-op.
+/// dense update); requesting depth 2 or 3 must be a byte-level no-op.
 #[test]
-fn softmax_ignores_overlap_bit_identically() {
+fn softmax_ignores_depth_bit_identically() {
     let data = tiny_data();
     let exec = MockSoftmaxGrad { b: B, k: data.feat_dim, c: data.num_classes };
     let steps = 15;
@@ -268,38 +288,40 @@ fn softmax_ignores_overlap_bit_identically() {
         &exec,
         steps,
         1,
-        false,
+        1,
         false,
     );
-    for workers in [2usize, 7] {
-        let (losses, params) = run_engine(
-            &data,
-            uniform_sampler(&data),
-            BatchMode::Softmax,
-            &exec,
-            steps,
-            workers,
-            true,
-            false,
-        );
-        assert_eq!(losses, ref_losses, "workers={workers}");
-        assert_eq!(params.w, ref_params.w, "workers={workers}");
-        assert_eq!(params.b, ref_params.b, "workers={workers}");
+    for depth in [2usize, 3] {
+        for workers in [2usize, 7] {
+            let (losses, params) = run_engine(
+                &data,
+                uniform_sampler(&data),
+                BatchMode::Softmax,
+                &exec,
+                steps,
+                workers,
+                depth,
+                false,
+            );
+            assert_eq!(losses, ref_losses, "depth={depth} workers={workers}");
+            assert_eq!(params.w, ref_params.w, "depth={depth} workers={workers}");
+            assert_eq!(params.b, ref_params.b, "depth={depth} workers={workers}");
+        }
     }
 }
 
-/// Executor wrapper that fails exactly one call (coordinator-thread only,
-/// hence the plain `Cell` counter).
+/// Executor wrapper that fails exactly one call. Atomic counter: at depth
+/// 3 the engine calls the executor from its dedicated execute thread
+/// (`StepExecutor` is `Sync`).
 struct FailOnce<'a> {
     inner: &'a dyn StepExecutor,
     fail_call: usize,
-    calls: std::cell::Cell<usize>,
+    calls: AtomicUsize,
 }
 
 impl StepExecutor for FailOnce<'_> {
     fn run_step(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let n = self.calls.get();
-        self.calls.set(n + 1);
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
         if n == self.fail_call {
             anyhow::bail!("injected transient executor failure");
         }
@@ -308,16 +330,19 @@ impl StepExecutor for FailOnce<'_> {
 }
 
 /// Transient-failure contract: an executor error at step t loses batch t
-/// (serial semantics) and the overlapped engine hands its prefetched
-/// batch t+1 back as pending — a caller that swallows the error and
-/// keeps stepping gets the exact serial-resume stream, losses and bits.
+/// (serial semantics) and the engine hands its prefetched batch t+1 back
+/// as pending — a caller that swallows the error and keeps stepping gets
+/// the exact serial-resume stream, losses and bits. At depth 3 this
+/// additionally pins that the failed step's conflict scatter never lands
+/// while the *previous* step's remainder scatter does: a failed step
+/// loses only its own batch.
 #[test]
 fn transient_executor_error_resumes_on_serial_stream() {
     let data = tiny_data();
     let ns = MockNsGrad { b: B, k: data.feat_dim };
     let steps = 12;
-    let run = |overlap: bool, workers: usize| -> (Vec<f64>, ParamStore) {
-        let exec = FailOnce { inner: &ns, fail_call: 5, calls: std::cell::Cell::new(0) };
+    let run = |depth: usize, workers: usize| -> (Vec<f64>, ParamStore) {
+        let exec = FailOnce { inner: &ns, fail_call: 5, calls: AtomicUsize::new(0) };
         let pool = Pool::new(workers);
         let gen = BatchGen::new(
             data.clone(),
@@ -329,7 +354,7 @@ fn transient_executor_error_resumes_on_serial_stream() {
         );
         let mut source = BatchSource::inline(gen);
         let mut params = ParamStore::zeros(data.num_classes, data.feat_dim, 0.05);
-        let mut engine = StepEngine::new(BatchMode::NsLike, B, data.feat_dim, 1e-3, overlap);
+        let mut engine = StepEngine::new(BatchMode::NsLike, B, data.feat_dim, 1e-3, depth);
         let mut losses = Vec::new();
         let mut errors = 0usize;
         for _ in 0..steps {
@@ -341,27 +366,30 @@ fn transient_executor_error_resumes_on_serial_stream() {
         assert_eq!(errors, 1, "exactly one injected failure must surface");
         (losses, params)
     };
-    let (ref_losses, ref_params) = run(false, 1);
-    for workers in [2usize, 7] {
-        let (losses, params) = run(true, workers);
-        assert_eq!(losses, ref_losses, "workers={workers}");
-        assert_eq!(params.w, ref_params.w, "workers={workers}");
-        assert_eq!(params.b, ref_params.b, "workers={workers}");
+    let (ref_losses, ref_params) = run(1, 1);
+    for depth in [2usize, 3] {
+        for workers in [2usize, 7] {
+            let (losses, params) = run(depth, workers);
+            assert_eq!(losses, ref_losses, "depth={depth} workers={workers}");
+            assert_eq!(params.w, ref_params.w, "depth={depth} workers={workers}");
+            assert_eq!(params.b, ref_params.b, "depth={depth} workers={workers}");
+        }
     }
 }
 
 /// The invalidation contract: editing the parameters out-of-band between
-/// overlapped steps and calling `invalidate_prefetch` forces the engine to
-/// re-gather the prefetched slot, reproducing the serial protocol (which
-/// naturally gathers after the edit) bit for bit. Without the invalidation
-/// the prefetched rows would be pre-edit — this is the staleness hazard
-/// the API documents.
+/// steps and calling `invalidate_prefetch` forces the engine to re-gather
+/// the prefetched slot, reproducing the serial protocol (which naturally
+/// gathers after the edit) bit for bit. At depth 3 the invalidation must
+/// additionally land the drained step's pending remainder scatter *before*
+/// the caller's edit is observed — without it the parameters would not
+/// even be serial-consistent at the edit point.
 #[test]
 fn external_param_edit_with_invalidate_is_bit_exact() {
     let data = tiny_data();
     let exec = MockNsGrad { b: B, k: data.feat_dim };
     let steps = 14;
-    let run = |overlap: bool, workers: usize| -> (Vec<f64>, ParamStore) {
+    let run = |depth: usize, workers: usize| -> (Vec<f64>, ParamStore) {
         let pool = Pool::new(workers);
         let gen = BatchGen::new(
             data.clone(),
@@ -373,27 +401,67 @@ fn external_param_edit_with_invalidate_is_bit_exact() {
         );
         let mut source = BatchSource::inline(gen);
         let mut params = ParamStore::zeros(data.num_classes, data.feat_dim, 0.05);
-        let mut engine = StepEngine::new(BatchMode::NsLike, B, data.feat_dim, 1e-3, overlap);
+        let mut engine = StepEngine::new(BatchMode::NsLike, B, data.feat_dim, 1e-3, depth);
         let mut losses = Vec::new();
         for t in 0..steps {
             losses.push(engine.step(&exec, &mut params, &pool, &mut source).unwrap());
             if t == 5 {
+                engine.invalidate_prefetch(&mut params);
                 // out-of-band parameter surgery between steps; every row
                 // is a candidate for the next batches' gathers
                 for v in params.w.iter_mut().step_by(17) {
                     *v += 0.25;
                 }
                 params.b[1] -= 0.5;
-                engine.invalidate_prefetch();
             }
         }
         (losses, params)
     };
-    let (ref_losses, ref_params) = run(false, 1);
-    for workers in [2usize, 7] {
-        let (losses, params) = run(true, workers);
-        assert_eq!(losses, ref_losses, "workers={workers}");
-        assert_eq!(params.w, ref_params.w, "workers={workers}");
-        assert_eq!(params.b, ref_params.b, "workers={workers}");
+    let (ref_losses, ref_params) = run(1, 1);
+    for depth in [2usize, 3] {
+        for workers in [2usize, 7] {
+            let (losses, params) = run(depth, workers);
+            assert_eq!(losses, ref_losses, "depth={depth} workers={workers}");
+            assert_eq!(params.w, ref_params.w, "depth={depth} workers={workers}");
+            assert_eq!(params.b, ref_params.b, "depth={depth} workers={workers}");
+        }
+    }
+}
+
+/// The buffer-donation claim: once the three-slot ring is warm, pipelined
+/// steps refill donated literals in place — the fresh-allocation counter
+/// must freeze. (The depth-2 path shares the plumbing and is covered by
+/// the same assertion.)
+#[test]
+fn steady_state_execute_is_literal_allocation_free() {
+    let data = tiny_data();
+    let exec = MockNsGrad { b: B, k: data.feat_dim };
+    for depth in [2usize, 3] {
+        let pool = Pool::new(2);
+        let gen = BatchGen::new(
+            data.clone(),
+            uniform_sampler(&data),
+            BatchMode::NsLike,
+            B,
+            1.0,
+            Rng::new(7),
+        );
+        let mut source = BatchSource::inline(gen);
+        let mut params = ParamStore::zeros(data.num_classes, data.feat_dim, 0.05);
+        let mut engine = StepEngine::new(BatchMode::NsLike, B, data.feat_dim, 1e-3, depth);
+        // warmup: every ring slot seals its first literal set fresh
+        for _ in 0..depth + 1 {
+            engine.step(&exec, &mut params, &pool, &mut source).unwrap();
+        }
+        let warm = engine.lit_allocs();
+        assert!(warm > 0, "warmup must have allocated the ring's literals");
+        for _ in 0..10 {
+            engine.step(&exec, &mut params, &pool, &mut source).unwrap();
+        }
+        assert_eq!(
+            engine.lit_allocs(),
+            warm,
+            "depth={depth}: steady-state steps must refill, not allocate"
+        );
     }
 }

@@ -232,6 +232,22 @@ impl PjRtLoadedExecutable {
     pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error(STUB_MSG.into()))
     }
+
+    /// **Host-stub extension**: execute with input-buffer donation — the
+    /// caller hands over its input literals by value and the runtime may
+    /// reuse their device allocations for the outputs (PJRT
+    /// `ExecuteOptions::untuple_result` + donated-input aliasing). The
+    /// pipelined step engine routes steady-state executes through this so
+    /// step t's inputs come back as t's readback storage instead of
+    /// round-tripping through an allocator. Gated like [`Self::execute`]:
+    /// the stub cannot run HLO, so the donated literals are returned
+    /// untouched alongside the error for the caller's recycler.
+    pub fn execute_donated(
+        &self,
+        args: Vec<Literal>,
+    ) -> std::result::Result<Vec<Vec<PjRtBuffer>>, (Error, Vec<Literal>)> {
+        Err((Error(STUB_MSG.into()), args))
+    }
 }
 
 /// Device buffer handle (unreachable in the stub build).
@@ -295,5 +311,47 @@ mod tests {
         lit.refill_untyped(ElementType::S32, &[1], &ibytes).unwrap();
         assert_eq!(lit.to_vec::<i32>().unwrap(), ints);
         assert_eq!(lit.dims(), &[1]);
+    }
+
+    fn f32_lit(data: &[f32], dims: &[usize]) -> Literal {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, &bytes).unwrap()
+    }
+
+    #[test]
+    fn refill_growth_forces_clean_realloc() {
+        let mut lit = f32_lit(&[1.0, 2.0], &[2]);
+        let grown = [5.0f32, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let bytes: Vec<u8> = grown.iter().flat_map(|v| v.to_le_bytes()).collect();
+        lit.refill_untyped(ElementType::F32, &[2, 3], &bytes).unwrap();
+        assert_eq!(lit.dims(), &[2, 3]);
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), grown);
+        // the grown buffer holds exactly the new bytes, no stale tail
+        assert_eq!(lit.data.len(), 24);
+    }
+
+    #[test]
+    fn refill_shrink_reuses_capacity() {
+        let mut lit = f32_lit(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[6]);
+        let before = lit.data.as_ptr();
+        let cap = lit.data.capacity();
+        let small = [9.5f32, -8.5];
+        let bytes: Vec<u8> = small.iter().flat_map(|v| v.to_le_bytes()).collect();
+        lit.refill_untyped(ElementType::F32, &[2], &bytes).unwrap();
+        assert_eq!(lit.data.as_ptr(), before, "shrink must keep the allocation");
+        assert_eq!(lit.data.capacity(), cap);
+        assert_eq!(lit.element_count(), 2);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), small);
+    }
+
+    #[test]
+    fn execute_donated_is_gated_and_returns_inputs() {
+        let exe = PjRtLoadedExecutable;
+        let args = vec![f32_lit(&[1.0], &[1]), f32_lit(&[2.0, 3.0], &[2])];
+        let (err, back) = exe.execute_donated(args).unwrap_err();
+        assert!(err.0.contains("PJRT runtime unavailable"));
+        assert_eq!(back.len(), 2, "donated inputs must come back for recycling");
+        assert_eq!(back[1].to_vec::<f32>().unwrap(), vec![2.0, 3.0]);
     }
 }
